@@ -1,0 +1,59 @@
+//! Fig. 13 scenario: the unified framework beyond binary/ternary.
+//!
+//! The discrete spaces of weights (N1) and activations (N2) are free
+//! knobs: Z_0 (binary, BNN territory), Z_1 (ternary, GXNOR), up to
+//! Z_6 x Z_4 — the paper's reported optimum on MNIST. This example trains
+//! a small grid and prints an accuracy map plus the per-point weight
+//! memory cost (bits/weight), showing the accuracy-vs-hardware trade the
+//! paper's Section 3.D uses to pick a space for a given platform.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example multilevel
+//! ```
+
+use gxnor::coordinator::trainer::TrainConfig;
+use gxnor::runtime::client::Runtime;
+use gxnor::runtime::manifest::Manifest;
+use gxnor::sweep;
+use gxnor::ternary::DiscreteSpace;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts").map_err(anyhow::Error::msg)?;
+    let mut rt = Runtime::new()?;
+    let base = TrainConfig {
+        train_len: 3000,
+        test_len: 800,
+        epochs: 3,
+        verbose: false,
+        ..Default::default()
+    };
+    // a diagonal + the paper's sweet spot (N1=6, N2=4)
+    let grid: Vec<(u32, u32)> = vec![(1, 1), (2, 2), (3, 3), (4, 4), (6, 4)];
+    println!("training the (N1, N2) grid {grid:?} (3 epochs each)…\n");
+    let points = sweep::sweep_levels(&mut rt, &manifest, &base, &grid)?;
+
+    println!(
+        "{:<12} {:>10} {:>12} {:>12} {:>14}",
+        "space", "test_acc", "bits/weight", "w states", "act levels"
+    );
+    for (p, &(n1, n2)) in points.iter().zip(&grid) {
+        let ws = DiscreteSpace::new(n1);
+        let as_ = DiscreteSpace::new(n2);
+        println!(
+            "{:<12} {:>9.2}% {:>12} {:>12} {:>14}",
+            p.label,
+            100.0 * p.test_acc,
+            ws.bits_per_state(),
+            ws.n_states(),
+            as_.n_states(),
+        );
+    }
+    if let Some(best) = sweep::best(&points) {
+        println!(
+            "\nbest: {} — finer spaces help up to a point (Fig. 13's interior \
+             optimum), at the cost of bits/weight",
+            best.label
+        );
+    }
+    Ok(())
+}

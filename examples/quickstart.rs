@@ -1,0 +1,70 @@
+//! Quickstart: train a GXNOR-Net (ternary weights *and* activations, no
+//! full-precision hidden weights) on the procedural digit dataset and
+//! verify the paper's core invariants from the public API.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use gxnor::coordinator::method::Method;
+use gxnor::coordinator::trainer::{TrainConfig, Trainer};
+use gxnor::data;
+use gxnor::nn::params::ParamKind;
+use gxnor::runtime::client::Runtime;
+use gxnor::runtime::manifest::Manifest;
+use gxnor::ternary::DiscreteSpace;
+
+fn main() -> anyhow::Result<()> {
+    // 1. the artifact manifest describes every lowered graph
+    let manifest = Manifest::load("artifacts").map_err(anyhow::Error::msg)?;
+    let mut rt = Runtime::new()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // 2. configure the paper's headline method: GXNOR (N1 = N2 = 1)
+    let cfg = TrainConfig {
+        arch: "mlp".into(),
+        method: Method::Gxnor,
+        dataset: "synth_mnist".into(),
+        train_len: 4000,
+        test_len: 1000,
+        epochs: 4,
+        verbose: true,
+        ..Default::default()
+    };
+
+    let train = data::open(&cfg.dataset, true, cfg.train_len).map_err(anyhow::Error::msg)?;
+    let test = data::open(&cfg.dataset, false, cfg.test_len).map_err(anyhow::Error::msg)?;
+
+    // 3. train: fwd/bwd runs as one AOT-compiled XLA graph; the DST weight
+    //    update (eqs. 13-20) runs in Rust, weights never leave {-1, 0, 1}
+    let mut trainer = Trainer::new(&mut rt, &manifest, cfg)?;
+    let report = trainer.run(train.as_ref(), test.as_ref())?;
+
+    println!("\n— results —");
+    println!("test accuracy         : {:.2}%", 100.0 * report.test_acc);
+    println!(
+        "activation sparsity   : {:.3} (zero fraction; r controls this)",
+        report.mean_act_sparsity
+    );
+    println!("weight zero fraction  : {:.3}", report.weight_zero_fraction);
+    println!(
+        "weight memory         : {} B packed / {} B fp32 ({:.1}x)",
+        report.packed_bytes,
+        report.fp32_bytes,
+        report.fp32_bytes as f64 / report.packed_bytes as f64
+    );
+
+    // 4. verify the paper's invariant: every weight is exactly ternary
+    let space = DiscreteSpace::TERNARY;
+    let mut checked = 0usize;
+    for (d, v) in trainer.model.descs.iter().zip(&trainer.model.values) {
+        if d.kind == ParamKind::Weight {
+            for w in v.to_f32() {
+                assert!(space.contains(w), "off-grid weight {w}");
+                checked += 1;
+            }
+        }
+    }
+    println!("verified {checked} weights ∈ {{-1, 0, 1}} — no hidden fp weights anywhere");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Fig. 10 scenario: the zero window `r` controls the fraction of resting
+//! activations. Sweep r, measure the *actual* zero-activation fraction and
+//! test accuracy, and feed the measured sparsity into the hardware
+//! simulator to show the accuracy/energy trade-off the paper's Section 3.B
+//! discusses ("a sparser network can be more hardware friendly").
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example sparsity_sweep
+//! ```
+
+use gxnor::coordinator::trainer::TrainConfig;
+use gxnor::hwsim::{expected_counts, EnergyModel, NetArch};
+use gxnor::runtime::client::Runtime;
+use gxnor::runtime::manifest::Manifest;
+use gxnor::sweep;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts").map_err(anyhow::Error::msg)?;
+    let mut rt = Runtime::new()?;
+    let base = TrainConfig {
+        train_len: 3000,
+        test_len: 800,
+        epochs: 3,
+        verbose: false,
+        ..Default::default()
+    };
+    let rs = [0.05, 0.2, 0.35, 0.5, 0.65, 0.8, 0.95];
+    println!("sweeping zero-window r over {rs:?} (3 epochs each)…\n");
+    let points = sweep::sweep_scalar(&mut rt, &manifest, &base, "r", &rs)?;
+    let energy = EnergyModel::default();
+    let m = 1000u64;
+    let fp_base = expected_counts(NetArch::FullPrecision, m, 0.0, 0.0);
+
+    println!(
+        "{:>6} {:>10} {:>14} {:>12} {:>12}",
+        "r", "test_acc", "act_sparsity", "resting_p", "rel_energy"
+    );
+    for p in &points {
+        // feed measured sparsity into the Table-2 machinery
+        let counts = expected_counts(
+            NetArch::Gxnor,
+            m,
+            p.weight_zero_fraction,
+            p.act_sparsity,
+        );
+        println!(
+            "{:>6.2} {:>9.2}% {:>14.3} {:>11.1}% {:>12.5}",
+            p.value,
+            100.0 * p.test_acc,
+            p.act_sparsity,
+            100.0 * counts.resting_probability(),
+            energy.relative(&counts, &fp_base),
+        );
+    }
+    if let Some(best) = sweep::best(&points) {
+        println!(
+            "\nbest accuracy at {} — an interior sparsity, as in Fig. 10 \
+             (too sparse starves the network, too dense loses the regularizer)",
+            best.label
+        );
+    }
+    Ok(())
+}

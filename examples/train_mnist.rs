@@ -1,0 +1,88 @@
+//! End-to-end driver (EXPERIMENTS.md §End-to-end): trains the paper's
+//! MNIST CNN "32C5-MP2-64C5-MP2-512FC-SVM" with the full GXNOR stack —
+//! AOT-lowered JAX/Pallas forward/backward graph executed via PJRT from
+//! Rust, DST weight updates in Rust, ternary weights end to end — for a
+//! few hundred steps, logging the loss curve, then evaluates, checkpoints,
+//! reloads and re-verifies.
+//!
+//! Uses real MNIST if `data/mnist/` holds the IDX files, otherwise the
+//! procedural digit dataset (same code path; DESIGN.md §6).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example train_mnist
+//! ```
+
+use gxnor::coordinator::checkpoint;
+use gxnor::coordinator::method::Method;
+use gxnor::coordinator::trainer::{TrainConfig, Trainer};
+use gxnor::data;
+use gxnor::runtime::client::Runtime;
+use gxnor::runtime::manifest::Manifest;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts").map_err(anyhow::Error::msg)?;
+    let mut rt = Runtime::new()?;
+
+    // prefer real MNIST when present
+    let dataset = if std::path::Path::new("data/mnist/train-images-idx3-ubyte").exists() {
+        "mnist"
+    } else {
+        "synth_mnist"
+    };
+    let cfg = TrainConfig {
+        arch: "cnn_mnist".into(),
+        method: Method::Gxnor,
+        dataset: dataset.into(),
+        train_len: 6000,
+        test_len: 1000,
+        epochs: 5,
+        r: 0.5,
+        a: 0.5,
+        m: 3.0, // the paper's Section-3 hyper-parameters
+        verbose: true,
+        ..Default::default()
+    };
+    println!(
+        "end-to-end: {} on {} ({} epochs, graph batch from manifest)",
+        cfg.arch, cfg.dataset, cfg.epochs
+    );
+    let train = data::open(&cfg.dataset, true, cfg.train_len).map_err(anyhow::Error::msg)?;
+    let test = data::open(&cfg.dataset, false, cfg.test_len).map_err(anyhow::Error::msg)?;
+
+    let mut trainer = Trainer::new(&mut rt, &manifest, cfg.clone())?;
+    println!(
+        "graph {} | {} weights | batch {}",
+        trainer.graph_name(),
+        trainer.model.n_weights(),
+        trainer.batch_size()
+    );
+    let report = trainer.run(train.as_ref(), test.as_ref())?;
+
+    println!("\nloss curve    : {}", report.recorder.sparkline("loss", 72));
+    println!("test-err curve: {}", report.recorder.sparkline("test_err", 24));
+    println!("final test acc: {:.2}%", 100.0 * report.test_acc);
+    println!(
+        "per-step      : {:.0} ms ({:.0} ms graph, {:.1} ms DST)",
+        report.step_time_ms, report.exec_time_ms, report.dst_time_ms
+    );
+    println!(
+        "weight memory : {:.1} KiB packed vs {:.1} KiB fp32",
+        report.packed_bytes as f64 / 1024.0,
+        report.fp32_bytes as f64 / 1024.0
+    );
+
+    // checkpoint round-trip: accuracy must be bit-identical
+    let path = "target/train_mnist.ckpt";
+    checkpoint::save(&trainer.model, path).map_err(anyhow::Error::msg)?;
+    let acc1 = trainer.evaluate(test.as_ref())?;
+    let mut restored = Trainer::new(&mut rt, &manifest, cfg)?;
+    checkpoint::load(&mut restored.model, path).map_err(anyhow::Error::msg)?;
+    let acc2 = restored.evaluate(test.as_ref())?;
+    assert_eq!(acc1, acc2, "checkpoint round-trip changed accuracy");
+    println!("checkpoint    : {path} (round-trip verified, {:.2}%)", 100.0 * acc2);
+
+    // dump the curve for EXPERIMENTS.md
+    report.recorder.save_csv("target/train_mnist_curve.csv")?;
+    println!("curve CSV     : target/train_mnist_curve.csv");
+    Ok(())
+}

@@ -1,0 +1,238 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts + manifest.json.
+
+Run once at build time (``make artifacts``); the Rust coordinator then loads
+and executes the artifacts on the PJRT CPU client, and Python never appears
+on the training path again.
+
+HLO text (NOT ``lowered.compiler_ir().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Graph catalogue (``--list`` to print):
+
+* ``mlp_{fp,bin,multi}_b100_{train,infer}``   — Table 1 baselines + sweeps
+* ``mlp_multi_b16_{train,infer}``             — fast graphs for cargo tests
+* ``cnn_mnist_{fp,multi}_b100_{train,infer}`` — paper MNIST net (Fig. 7, T1)
+* ``cnn_cifar_multi_b50_{train,infer}``       — width-reduced CIFAR/SVHN net
+* ``cnn_cifar_full_multi_b50_train``          — paper-width CIFAR net,
+  emitted only with ``--full`` (compile-scale validation; not used by the
+  default training flow)
+
+``multi`` graphs take r, a and the positive-level count hl = 2^{N2-1} as
+*runtime scalars*: every point of the Fig. 8/9/10/13 sweeps reuses one
+artifact. GXNOR-Net is hl = 1 (ternary); N2 > 1 is the multilevel space.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-clean interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def graph_catalogue(full: bool) -> List[Dict]:
+    gs: List[Dict] = []
+
+    def add(arch, mode, batch, width=1.0, kinds=("train", "infer")):
+        for kind in kinds:
+            gs.append(
+                dict(arch=arch, mode=mode, batch=batch, width=width, kind=kind)
+            )
+
+    for mode in ("fp", "bin", "multi"):
+        add("mlp", mode, 100)
+    add("mlp", "multi", 16)
+    add("cnn_mnist", "multi", 100)
+    add("cnn_mnist", "fp", 100)
+    add("cnn_cifar", "multi", 50, width=0.25)
+    if full:
+        add("cnn_cifar_full", "multi", 50, width=1.0, kinds=("train",))
+    return gs
+
+
+def graph_name(g: Dict) -> str:
+    return f"{g['arch']}_{g['mode']}_b{g['batch']}_{g['kind']}"
+
+
+def lower_graph(g: Dict, use_pallas: bool):
+    arch_name = g["arch"].replace("_full", "")
+    arch = model.build_arch(arch_name, width=g["width"])
+    pds, sds_ = model.param_descs(arch)
+    b = g["batch"]
+    x_sds = _sds((b, *arch.input_shape))
+    scalar = _sds(())
+    param_sds = [_sds(pd.shape) for pd in pds]
+    state_sds = [_sds(sd.shape) for sd in sds_]
+
+    if g["kind"] == "train":
+        fn = model.make_train_step(arch, g["mode"], use_pallas=use_pallas)
+        args = (
+            x_sds,
+            _sds((b,), jnp.int32),
+            scalar,
+            scalar,
+            scalar,
+            *param_sds,
+            *state_sds,
+        )
+        inputs = (
+            [
+                {"name": "x", "shape": [b, *arch.input_shape], "dtype": "f32"},
+                {"name": "labels", "shape": [b], "dtype": "i32"},
+                {"name": "r", "shape": [], "dtype": "f32"},
+                {"name": "a", "shape": [], "dtype": "f32"},
+                {"name": "hl", "shape": [], "dtype": "f32"},
+            ]
+            + [
+                {"name": pd.name, "shape": list(pd.shape), "dtype": "f32"}
+                for pd in pds
+            ]
+            + [
+                {"name": sd.name, "shape": list(sd.shape), "dtype": "f32"}
+                for sd in sds_
+            ]
+        )
+        n_hidden = len(sds_) // 2
+        outputs = (
+            [
+                {"name": "loss", "shape": [], "dtype": "f32"},
+                {"name": "ncorrect", "shape": [], "dtype": "f32"},
+                {"name": "sparsity", "shape": [n_hidden], "dtype": "f32"},
+            ]
+            + [
+                {"name": f"g_{pd.name}", "shape": list(pd.shape), "dtype": "f32"}
+                for pd in pds
+            ]
+            + [
+                {"name": f"new_{sd.name}", "shape": list(sd.shape), "dtype": "f32"}
+                for sd in sds_
+            ]
+        )
+    else:
+        fn = model.make_infer(arch, g["mode"], use_pallas=use_pallas)
+        args = (x_sds, scalar, scalar, *param_sds, *state_sds)
+        n_hidden = len(sds_) // 2
+        inputs = (
+            [
+                {"name": "x", "shape": [b, *arch.input_shape], "dtype": "f32"},
+                {"name": "r", "shape": [], "dtype": "f32"},
+                {"name": "hl", "shape": [], "dtype": "f32"},
+            ]
+            + [
+                {"name": pd.name, "shape": list(pd.shape), "dtype": "f32"}
+                for pd in pds
+            ]
+            + [
+                {"name": sd.name, "shape": list(sd.shape), "dtype": "f32"}
+                for sd in sds_
+            ]
+        )
+        outputs = [
+            {"name": "logits", "shape": [b, arch.n_classes], "dtype": "f32"},
+            {"name": "sparsity", "shape": [n_hidden], "dtype": "f32"},
+        ]
+
+    # keep_unused=True: fp/bin graphs ignore r/a/hl, but the manifest's
+    # calling convention must stay uniform across modes (the Rust side
+    # always passes them).
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    meta = {
+        "arch": arch_name,
+        "mode": g["mode"],
+        "batch": b,
+        "width": g["width"],
+        "kind": g["kind"],
+        "input_shape": list(arch.input_shape),
+        "n_classes": arch.n_classes,
+        "params": [
+            {
+                "name": pd.name,
+                "shape": list(pd.shape),
+                "kind": pd.kind,
+                "layer": pd.layer,
+            }
+            for pd in pds
+        ],
+        "bn_state": [
+            {
+                "name": sd.name,
+                "shape": list(sd.shape),
+                "kind": sd.kind,
+                "layer": sd.layer,
+            }
+            for sd in sds_
+        ],
+        "inputs": inputs,
+        "outputs": outputs,
+    }
+    return to_hlo_text(lowered), meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="", help="comma-separated name filter")
+    ap.add_argument("--full", action="store_true", help="also emit paper-width CIFAR graph")
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="swap pallas kernels for the jnp oracle (debug only)",
+    )
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    gs = graph_catalogue(args.full)
+    if args.list:
+        for g in gs:
+            print(graph_name(g))
+        return
+    only = {s for s in args.only.split(",") if s}
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format": 1, "graphs": {}}
+    for g in gs:
+        name = graph_name(g)
+        if only and name not in only:
+            continue
+        hlo, meta = lower_graph(g, use_pallas=not args.no_pallas)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(hlo)
+        meta["file"] = fname
+        manifest["graphs"][name] = meta
+        print(f"lowered {name}: {len(hlo)/1e6:.2f} MB")
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    # merge with an existing manifest so --only refreshes incrementally
+    if only and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        old["graphs"].update(manifest["graphs"])
+        manifest = old
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath} ({len(manifest['graphs'])} graphs)")
+
+
+if __name__ == "__main__":
+    main()

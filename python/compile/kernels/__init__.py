@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels (build-time) + pure-jnp oracle (`ref`)."""
+
+from . import bn_quant, dst, gxnor_matmul, quantize, ref  # noqa: F401

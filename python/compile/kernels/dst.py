@@ -1,0 +1,64 @@
+"""Pallas kernel for the Discrete State Transition update (eqs. 13-20).
+
+This is the *build-time twin* of the Rust runtime implementation
+(`rust/src/ternary/dst.rs`): the production hot path applies DST in Rust
+(it owns the RNG and the packed weight store), and pytest cross-checks the
+two against the pure-jnp oracle so the semantics cannot drift.
+
+Uniform random numbers are an explicit operand — the kernel is pure, which
+is what makes the Rust/JAX equivalence testable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BLOCK = 65536
+
+
+def _dst_kernel(w_ref, dw_ref, u_ref, dz_ref, m_ref, o_ref):
+    w = w_ref[...]
+    dw = dw_ref[...]
+    u = u_ref[...]
+    dz = dz_ref[0, 0]
+    m = m_ref[0, 0]
+    # eq. 13: boundary restriction rho keeps w + rho inside [-1, 1]
+    rho = jnp.where(dw >= 0, jnp.minimum(1.0 - w, dw), jnp.maximum(-1.0 - w, dw))
+    kappa = jnp.trunc(rho / dz)                 # eq. 15
+    nu = rho - kappa * dz                       # eq. 16
+    tau = jnp.tanh(m * jnp.abs(nu) / dz)        # eq. 20
+    sgn = jnp.where(rho >= 0, 1.0, -1.0)        # eq. 19
+    hop = jnp.where(u < tau, sgn, 0.0)          # eq. 18
+    o_ref[...] = jnp.clip(w + (kappa + hop) * dz, -1.0, 1.0)
+
+
+def dst_update(w, dw, u, dz, m):
+    """Vectorized DST over arbitrary-shaped weight tensors."""
+    shape = w.shape
+    flat = w.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % _BLOCK
+    def prep(t):
+        t = t.reshape(-1).astype(jnp.float32)
+        if pad:
+            t = jnp.pad(t, (0, pad))
+        return t.reshape(-1, _BLOCK)
+    scalar = lambda v: jnp.asarray(v, jnp.float32).reshape(1, 1)
+    rows = (n + pad) // _BLOCK
+    out = pl.pallas_call(
+        _dst_kernel,
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, _BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, _BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, _BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, _BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, _BLOCK), jnp.float32),
+        interpret=True,
+    )(prep(w), prep(dw), prep(u), scalar(dz), scalar(m))
+    return out.reshape(-1)[:n].reshape(shape)

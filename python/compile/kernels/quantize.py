@@ -1,0 +1,102 @@
+"""Pallas kernels for the multi-step quantizer and its derivative window.
+
+These are the elementwise hot spots of the paper's forward/backward passes
+(eqs. 5/22 and 7/8). On a real TPU they run on the VPU over VMEM-resident
+tiles; here they are lowered with ``interpret=True`` so the emitted HLO runs
+on the CPU PJRT client (the repo-wide rule — Mosaic custom-calls cannot
+execute on CPU).
+
+Scalars (``r``, ``a``, ``hl``) are passed as ``(1, 1)`` f32 operands so the
+same compiled artifact serves every point of the parameter sweeps (Figs.
+8/9/10/13) without recompilation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row tile for elementwise kernels: one VPU-friendly (8, 128) multiple.
+_BLOCK = 65536
+
+
+def _fwd_kernel(x_ref, r_ref, hl_ref, o_ref):
+    """phi_r over one tile (eq. 22)."""
+    x = x_ref[...]
+    r = r_ref[0, 0]
+    hl = hl_ref[0, 0]
+    step = (1.0 - r) / hl
+    mag = jnp.clip(jnp.ceil((jnp.abs(x) - r) / step), 0.0, hl) / hl
+    o_ref[...] = jnp.sign(x) * mag
+
+
+def _bwd_kernel(x_ref, r_ref, a_ref, hl_ref, o_ref, *, window: str):
+    """Derivative pulse of phi_r over one tile (eq. 7 rect / eq. 8 tri)."""
+    x = x_ref[...]
+    r = r_ref[0, 0]
+    a = a_ref[0, 0]
+    hl = hl_ref[0, 0]
+    step = (1.0 - r) / hl
+    u = jnp.abs(x) - r
+    k = jnp.clip(jnp.round(u / step), 0.0, hl - 1.0)
+    dist = jnp.abs(u - k * step)
+    if window == "rect":
+        o_ref[...] = (dist <= a).astype(x.dtype) / (2.0 * a)
+    else:
+        o_ref[...] = jnp.maximum(0.0, a - dist) / (a * a)
+
+
+def _pad_flat(x):
+    """Flatten to 1D and zero-pad to a _BLOCK multiple; return (flat, n)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % _BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, n
+
+
+def _scalar(v):
+    return jnp.asarray(v, jnp.float32).reshape(1, 1)
+
+
+def quantize_fwd(x, r, hl):
+    """Pallas phi_r (eq. 22). ``r``/``hl`` may be traced scalars."""
+    flat, n = _pad_flat(x.astype(jnp.float32))
+    rows = flat.shape[0] // _BLOCK
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, _BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, _BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, _BLOCK), jnp.float32),
+        interpret=True,
+    )(flat.reshape(rows, _BLOCK), _scalar(r), _scalar(hl))
+    return out.reshape(-1)[:n].reshape(x.shape)
+
+
+def quantize_bwd(x, r, a, hl, window: str = "rect"):
+    """Pallas derivative window (eqs. 7/8). ``window`` is static."""
+    flat, n = _pad_flat(x.astype(jnp.float32))
+    rows = flat.shape[0] // _BLOCK
+    out = pl.pallas_call(
+        functools.partial(_bwd_kernel, window=window),
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, _BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, _BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, _BLOCK), jnp.float32),
+        interpret=True,
+    )(flat.reshape(rows, _BLOCK), _scalar(r), _scalar(a), _scalar(hl))
+    return out.reshape(-1)[:n].reshape(x.shape)

@@ -1,0 +1,116 @@
+"""Pure-jnp oracle for every Pallas kernel (L1 correctness ground truth).
+
+Implements the paper's discretization framework exactly:
+
+* ``Z_N`` space (eq. 1): states ``n/2^{N-1} - 1``, ``n = 0..2^N``,
+  spacing ``dz = 1/2^{N-1}``.
+* Multi-step activation quantization ``phi_r`` (eqs. 5, 22).
+* Rectangular / triangular derivative approximations (eqs. 7, 8, Figs. 2/5).
+* DST probabilistic projection (eqs. 13-20, 23-26).
+
+All functions are shape-polymorphic and used by pytest/hypothesis as the
+reference the Pallas kernels must match bit-for-bit (quantizers) or to
+float tolerance (matmul).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def half_levels(n: int) -> float:
+    """``2^{N-1}`` as a float (0.5 for the binary space N=0)."""
+    return float(2 ** (n - 1)) if n >= 1 else 0.5
+
+
+def delta_z(n: int) -> float:
+    """State spacing ``dz_N = 1/2^{N-1}`` of Z_N (eq. 1). N=0 -> 2."""
+    return 1.0 / half_levels(n)
+
+
+def quantize_fwd(x, r, hl, mode: str = "multi"):
+    """Multi-step quantizer ``phi_r`` (eq. 22; eq. 5 when ``hl == 1``).
+
+    Args:
+      x:    pre-activations (already batch-normalized), any shape.
+      r:    zero-window half width, ``0 <= r < 1`` (scalar, traced).
+      hl:   ``2^{N-1}`` — number of positive levels (scalar, traced).
+      mode: ``multi``/``ter`` -> phi_r; ``bin`` -> sign; ``fp`` -> identity.
+
+    Returns values on the Z_N grid in ``[-1, 1]`` (H = 1).
+    """
+    if mode == "fp":
+        return x
+    if mode == "bin":
+        # Binary space Z_0 = {-1, 1}: sign with sign(0) := +1 (paper eq. 19).
+        return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+    step = (1.0 - r) / hl
+    mag = jnp.clip(jnp.ceil((jnp.abs(x) - r) / step), 0.0, hl) / hl
+    return jnp.sign(x) * mag
+
+
+def quantize_bwd(x, r, a, hl, window: str = "rect", mode: str = "multi"):
+    """Approximate derivative of ``phi_r`` at ``x`` (eqs. 7/8, Figs. 2/5).
+
+    A pulse of half-width ``a`` is centred on every discontinuity of
+    ``phi_r``: ``|x| = r + k*step`` for ``k = 0..hl-1``.
+
+    ``rect``:     1/(2a) inside the pulse (eq. 7).
+    ``tri``:      peak 1/a at the jump, linear to 0 at distance a (eq. 8).
+    ``bin`` mode: straight-through hardtanh window ``1_{|x|<=1}`` (BNN [19]).
+    ``fp`` mode:  identity derivative (1 everywhere).
+    """
+    if mode == "fp":
+        return jnp.ones_like(x)
+    if mode == "bin":
+        return (jnp.abs(x) <= 1.0).astype(x.dtype)
+    step = (1.0 - r) / hl
+    u = jnp.abs(x) - r
+    k = jnp.clip(jnp.round(u / step), 0.0, hl - 1.0)
+    dist = jnp.abs(u - k * step)
+    if window == "rect":
+        return (dist <= a).astype(x.dtype) / (2.0 * a)
+    # triangular
+    return jnp.maximum(0.0, a - dist) / (a * a)
+
+
+def matmul(x, w):
+    """f32 reference for the gated-XNOR matmul kernel: plain ``x @ w``."""
+    return jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def dst_rho(w, dw):
+    """Boundary restriction ``rho`` (eq. 13): keep ``w + rho`` in [-1, 1]."""
+    return jnp.where(dw >= 0, jnp.minimum(1.0 - w, dw), jnp.maximum(-1.0 - w, dw))
+
+
+def dst_update(w, dw, u, dz, m):
+    """Discrete State Transition update (eqs. 13-20 / 23-26).
+
+    Args:
+      w:  current weights, exactly on the Z_N grid, in [-1, 1].
+      dw: real-valued gradient increments (already -lr * grad, possibly
+          Adam-preconditioned).
+      u:  iid uniforms in [0, 1), same shape as ``w``.
+      dz: grid spacing ``Delta z_N``.
+      m:  nonlinear transition factor (paper uses m = 3).
+
+    Returns the next weights, exactly on the grid, in [-1, 1].
+    """
+    rho = dst_rho(w, dw)
+    kappa = jnp.trunc(rho / dz)                      # eq. 15 (fix = trunc)
+    nu = rho - kappa * dz                            # eq. 16 (rem, sign of rho)
+    tau = jnp.tanh(m * jnp.abs(nu) / dz)             # eq. 20
+    sgn = jnp.where(rho >= 0, 1.0, -1.0)             # eq. 19
+    hop = jnp.where(u < tau, sgn, 0.0)               # eq. 18
+    w_next = w + (kappa + hop) * dz
+    # Probability-0 overshoot can appear at float precision; clamp to H = 1.
+    return jnp.clip(w_next, -1.0, 1.0)
+
+
+def project_to_grid(x, dz):
+    """Deterministic nearest-state projection onto Z_N (used for init)."""
+    return jnp.clip(jnp.round(x / dz) * dz, -1.0, 1.0)

@@ -1,0 +1,421 @@
+"""Layer-2: the paper's networks as JAX forward/backward graphs.
+
+Everything here is *build-time only*: `aot.py` lowers the functions built by
+:func:`make_train_step` / :func:`make_infer` to HLO text once; the Rust
+coordinator executes the artifacts on the PJRT CPU client at run time.
+
+Paper topologies (Section 3):
+
+* MNIST CNN ......... ``32C5-MP2-64C5-MP2-512FC-SVM``
+* CIFAR10/SVHN CNN .. ``2x(128C3)-MP2-2x(256C3)-MP2-2x(512C3)-MP2-1024FC-SVM``
+* MLP ............... ``784-512-512-10`` (the Table-1 MLP family of
+  BWNs [16] / BNNs [19]; our fast vehicle for the parameter sweeps)
+
+The quantizer is tied to its approximate derivative (eqs. 7/8) with a
+``jax.custom_vjp`` — the straight-through machinery of Section 2.C. Hidden
+layers are BatchNorm-ed before quantization (BNN [19] lineage; see
+DESIGN.md §6). The output layer feeds an L2-SVM squared hinge loss [23].
+
+Activation modes (static per artifact):
+  ``fp``    full-precision activations (baseline "full-precision NNs")
+  ``bin``   sign(x), straight-through hardtanh derivative (BNN/BWN family)
+  ``ter``   phi_r with runtime scalars r, a  (GXNOR: N2 = 1, hl = 1)
+  ``multi`` phi_r with runtime scalars r, a, hl (Fig. 13 sweeps, N2 >= 1)
+
+Weight discreteness is entirely the Rust side's business: weights arrive as
+f32 tensors already holding exact Z_N grid values, and gradients leave the
+graph for the Rust DST update. That is precisely the paper's point — there
+is no full-precision weight copy anywhere in the training loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gxnor_matmul, quantize as qk, ref
+
+# ---------------------------------------------------------------------------
+# Architecture description
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    """2D convolution, NHWC x HWIO -> NHWC."""
+
+    cin: int
+    cout: int
+    k: int
+    padding: str  # "SAME" | "VALID"
+
+
+@dataclasses.dataclass(frozen=True)
+class Pool:
+    """Max-pool size x size, stride = size."""
+
+    size: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Flatten:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    din: int
+    dout: int
+
+
+Layer = object  # Conv | Pool | Flatten | Dense
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    name: str
+    input_shape: Tuple[int, ...]  # per-sample, NHWC or (features,)
+    layers: Tuple[Layer, ...]
+    n_classes: int = 10
+
+    def weighted(self) -> List[Layer]:
+        return [l for l in self.layers if isinstance(l, (Conv, Dense))]
+
+
+def build_arch(name: str, width: float = 1.0) -> Arch:
+    """Construct a named architecture; ``width`` scales channel counts.
+
+    ``width=1.0`` is the paper's exact topology; the CIFAR net is emitted at
+    reduced width for CPU-PJRT training (DESIGN.md §6) and at full width for
+    compile-validation.
+    """
+    c = lambda v: max(8, int(round(v * width)))
+    if name == "mlp":
+        h = c(512)
+        return Arch(
+            "mlp",
+            (784,),
+            (Dense(784, h), Dense(h, h), Dense(h, 10)),
+        )
+    if name == "cnn_mnist":
+        c1, c2, fc = c(32), c(64), c(512)
+        return Arch(
+            "cnn_mnist",
+            (28, 28, 1),
+            (
+                Conv(1, c1, 5, "VALID"),   # 28 -> 24
+                Pool(2),                   # -> 12
+                Conv(c1, c2, 5, "VALID"),  # -> 8
+                Pool(2),                   # -> 4
+                Flatten(),
+                Dense(c2 * 4 * 4, fc),
+                Dense(fc, 10),
+            ),
+        )
+    if name == "cnn_cifar":
+        c1, c2, c3, fc = c(128), c(256), c(512), c(1024)
+        return Arch(
+            "cnn_cifar",
+            (32, 32, 3),
+            (
+                Conv(3, c1, 3, "SAME"),
+                Conv(c1, c1, 3, "SAME"),
+                Pool(2),                   # -> 16
+                Conv(c1, c2, 3, "SAME"),
+                Conv(c2, c2, 3, "SAME"),
+                Pool(2),                   # -> 8
+                Conv(c2, c3, 3, "SAME"),
+                Conv(c3, c3, 3, "SAME"),
+                Pool(2),                   # -> 4
+                Flatten(),
+                Dense(c3 * 4 * 4, fc),
+                Dense(fc, 10),
+            ),
+        )
+    raise ValueError(f"unknown arch {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Parameter bookkeeping — flat, ordered, manifest-friendly
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDesc:
+    name: str
+    shape: Tuple[int, ...]
+    kind: str  # "weight" | "gamma" | "beta" | "rmean" | "rvar"
+    layer: int  # index among weighted layers
+
+
+def weight_shape(l: Layer) -> Tuple[int, ...]:
+    if isinstance(l, Conv):
+        return (l.k, l.k, l.cin, l.cout)
+    assert isinstance(l, Dense)
+    return (l.din, l.dout)
+
+
+def param_descs(arch: Arch) -> Tuple[List[ParamDesc], List[ParamDesc]]:
+    """Returns (trainable param descriptors, BN running-state descriptors).
+
+    Trainable order per hidden weighted layer: W_i, gamma_i, beta_i; the
+    final layer has only W. BN state order: rmean_i, rvar_i.
+    """
+    ws = [l for l in arch.layers if isinstance(l, (Conv, Dense))]
+    params, state = [], []
+    for i, l in enumerate(ws):
+        params.append(ParamDesc(f"W{i}", weight_shape(l), "weight", i))
+        if i < len(ws) - 1:  # hidden layers carry BN
+            ch = l.cout if isinstance(l, Conv) else l.dout
+            params.append(ParamDesc(f"gamma{i}", (ch,), "gamma", i))
+            params.append(ParamDesc(f"beta{i}", (ch,), "beta", i))
+            state.append(ParamDesc(f"rmean{i}", (ch,), "rmean", i))
+            state.append(ParamDesc(f"rvar{i}", (ch,), "rvar", i))
+    return params, state
+
+
+def init_params(arch: Arch, key, n1: int = 1):
+    """Discrete weight init: uniform over the states of Z_N1.
+
+    A nearest-grid projection of a Glorot init collapses to all-zeros for
+    coarse grids (|w| << dz), so discrete nets start from uniformly random
+    states instead — BatchNorm absorbs the resulting scale. Mirrors the
+    Rust-side initializer (`nn::init`); used by the python tests and by
+    `aot.py` to produce example arguments for lowering.
+    """
+    pds, sds = param_descs(arch)
+    dz = ref.delta_z(n1)
+    n_states = 2 ** max(n1, 1) + (1 if n1 >= 1 else 0)  # 2^N + 1 (N>=1); 2 (N=0)
+    out_p, out_s = [], []
+    for pd in pds:
+        key, sub = jax.random.split(key)
+        if pd.kind == "weight":
+            n = jax.random.randint(sub, pd.shape, 0, n_states)
+            out_p.append((n.astype(jnp.float32) * dz - 1.0))
+        elif pd.kind == "gamma":
+            out_p.append(jnp.ones(pd.shape, jnp.float32))
+        else:
+            out_p.append(jnp.zeros(pd.shape, jnp.float32))
+    for sd in sds:
+        out_s.append(
+            jnp.zeros(sd.shape, jnp.float32)
+            if sd.kind == "rmean"
+            else jnp.ones(sd.shape, jnp.float32)
+        )
+    return out_p, out_s
+
+
+# ---------------------------------------------------------------------------
+# Quantizer with approximate derivative (custom_vjp; Section 2.B/2.C)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def make_quantizer(mode: str, window: str, use_pallas: bool):
+    """phi_r tied to its derivative pulse via custom_vjp.
+
+    fwd: eq. (22) (Pallas kernel or oracle); bwd: multiply the cotangent by
+    the rectangular (eq. 7) or triangular (eq. 8) window evaluated at the
+    saved pre-activation.
+    """
+
+    if mode == "fp":
+        return lambda x, r, a, hl: x
+
+    @jax.custom_vjp
+    def quant(x, r, a, hl):
+        if mode == "bin":
+            return ref.quantize_fwd(x, r, hl, mode="bin")
+        if use_pallas:
+            return qk.quantize_fwd(x, r, hl)
+        return ref.quantize_fwd(x, r, hl)
+
+    def fwd(x, r, a, hl):
+        return quant(x, r, a, hl), (x, r, a, hl)
+
+    def bwd(res, g):
+        x, r, a, hl = res
+        if mode == "bin":
+            d = ref.quantize_bwd(x, r, a, hl, mode="bin")
+        elif use_pallas:
+            d = qk.quantize_bwd(x, r, a, hl, window=window)
+        else:
+            d = ref.quantize_bwd(x, r, a, hl, window=window)
+        return (g * d, None, None, None)
+
+    quant.defvjp(fwd, bwd)
+    return quant
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+BN_MOMENTUM = 0.9
+BN_EPS = 1e-4
+
+
+def _batch_norm(z, gamma, beta, rmean, rvar, train: bool):
+    """Standard BN over batch (+spatial) axes; returns (y, stats-or-None)."""
+    axes = tuple(range(z.ndim - 1))
+    if train:
+        mean = jnp.mean(z, axes)
+        var = jnp.var(z, axes)
+        stats = (jax.lax.stop_gradient(mean), jax.lax.stop_gradient(var))
+    else:
+        mean, var = rmean, rvar
+        stats = None
+    y = (z - mean) * jax.lax.rsqrt(var + BN_EPS) * gamma + beta
+    return y, stats
+
+
+def _apply_linear(l: Layer, h, w, use_pallas: bool):
+    if isinstance(l, Conv):
+        return jax.lax.conv_general_dilated(
+            h, w, window_strides=(1, 1), padding=l.padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+    assert isinstance(l, Dense)
+    if use_pallas:
+        return gxnor_matmul.matmul_vjp(h, w)
+    return ref.matmul(h, w)
+
+
+def _max_pool(h, size: int):
+    return jax.lax.reduce_window(
+        h, -jnp.inf, jax.lax.max,
+        window_dimensions=(1, size, size, 1),
+        window_strides=(1, size, size, 1),
+        padding="VALID",
+    )
+
+
+def forward(
+    arch: Arch,
+    params: Sequence,
+    bn_state: Sequence,
+    x,
+    r,
+    a,
+    hl,
+    *,
+    mode: str,
+    window: str = "rect",
+    train: bool = True,
+    use_pallas: bool = True,
+):
+    """Runs the network; returns (logits, new_bn_state, sparsity_per_layer).
+
+    ``sparsity`` is the fraction of exactly-zero quantized activations per
+    hidden layer — the quantity Fig. 10 sweeps and the hwsim consumes.
+    """
+    quant = make_quantizer(mode, window, use_pallas)
+    pds, _ = param_descs(arch)
+    n_w = len([l for l in arch.layers if isinstance(l, (Conv, Dense))])
+    pi = 0  # cursor into params
+    si = 0  # cursor into bn_state
+    wi = 0  # weighted-layer index
+    h = x
+    new_state = []
+    sparsity = []
+    for l in arch.layers:
+        if isinstance(l, Pool):
+            h = _max_pool(h, l.size)
+            continue
+        if isinstance(l, Flatten):
+            h = h.reshape(h.shape[0], -1)
+            continue
+        w = params[pi]
+        pi += 1
+        z = _apply_linear(l, h, w, use_pallas)
+        wi += 1
+        if wi == n_w:  # output layer: raw logits into the SVM loss
+            h = z
+            continue
+        gamma, beta = params[pi], params[pi + 1]
+        pi += 2
+        rmean, rvar = bn_state[si], bn_state[si + 1]
+        si += 2
+        y, stats = _batch_norm(z, gamma, beta, rmean, rvar, train)
+        if train:
+            bmean, bvar = stats
+            new_state.append(BN_MOMENTUM * rmean + (1 - BN_MOMENTUM) * bmean)
+            new_state.append(BN_MOMENTUM * rvar + (1 - BN_MOMENTUM) * bvar)
+        h = quant(y, r, a, hl)
+        sparsity.append(jnp.mean((h == 0.0).astype(jnp.float32)))
+    spars = (
+        jnp.stack(sparsity) if sparsity else jnp.zeros((0,), jnp.float32)
+    )
+    return h, new_state, spars
+
+
+# ---------------------------------------------------------------------------
+# Loss / train step / infer
+# ---------------------------------------------------------------------------
+
+
+def svm_hinge_loss(logits, labels, n_classes: int):
+    """L2-SVM squared hinge [23]: mean_i sum_c max(0, 1 - t_ic * o_ic)^2."""
+    t = 2.0 * jax.nn.one_hot(labels, n_classes, dtype=logits.dtype) - 1.0
+    margins = jnp.maximum(0.0, 1.0 - t * logits)
+    return jnp.mean(jnp.sum(margins * margins, axis=1))
+
+
+def make_train_step(
+    arch: Arch, mode: str, window: str = "rect", use_pallas: bool = True
+):
+    """Builds the lowered train-step function.
+
+    Signature (all positional, the manifest records this order):
+      ``(x, labels, r, a, hl, *params, *bn_state)``
+    Returns (flat tuple, the manifest records this order):
+      ``(loss, ncorrect, sparsity, *grads, *new_bn_state)``
+    with one grad per trainable param (W / gamma / beta, in param order).
+    """
+    pds, sds = param_descs(arch)
+    n_p, n_s = len(pds), len(sds)
+
+    def step(x, labels, r, a, hl, *rest):
+        params = list(rest[:n_p])
+        bn_state = list(rest[n_p:])
+        assert len(bn_state) == n_s
+
+        def loss_fn(ps):
+            logits, new_state, spars = forward(
+                arch, ps, bn_state, x, r, a, hl,
+                mode=mode, window=window, train=True, use_pallas=use_pallas,
+            )
+            loss = svm_hinge_loss(logits, labels, arch.n_classes)
+            ncorrect = jnp.sum(
+                (jnp.argmax(logits, axis=1) == labels).astype(jnp.float32)
+            )
+            return loss, (ncorrect, new_state, spars)
+
+        (loss, (nc, new_state, spars)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params)
+        return (loss, nc, spars, *grads, *new_state)
+
+    return step
+
+
+def make_infer(arch: Arch, mode: str, use_pallas: bool = True):
+    """Builds the inference function: ``(x, r, hl, *params, *bn_state)`` ->
+    ``(logits, sparsity)`` using BN running statistics."""
+    pds, sds = param_descs(arch)
+    n_p = len(pds)
+
+    def infer(x, r, hl, *rest):
+        params = list(rest[:n_p])
+        bn_state = list(rest[n_p:])
+        logits, _, spars = forward(
+            arch, params, bn_state, x, r, 0.5, hl,
+            mode=mode, window="rect", train=False, use_pallas=use_pallas,
+        )
+        return (logits, spars)
+
+    return infer

@@ -1,0 +1,6 @@
+"""Make `compile` importable whether pytest runs from repo root or python/."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

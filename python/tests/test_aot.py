@@ -1,0 +1,81 @@
+"""AOT artifact integrity: catalogue, manifest consistency, HLO validity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestCatalogue:
+    def test_names_unique(self):
+        gs = aot.graph_catalogue(full=True)
+        names = [aot.graph_name(g) for g in gs]
+        assert len(names) == len(set(names))
+
+    def test_covers_table1_baselines(self):
+        names = {aot.graph_name(g) for g in aot.graph_catalogue(full=False)}
+        for want in [
+            "mlp_fp_b100_train",
+            "mlp_bin_b100_train",
+            "mlp_multi_b100_train",
+            "cnn_mnist_multi_b100_train",
+            "cnn_cifar_multi_b50_train",
+        ]:
+            assert want in names
+
+    def test_lower_tiny_graph_produces_hlo(self):
+        g = dict(arch="mlp", mode="multi", batch=2, width=0.05, kind="train")
+        hlo, meta = aot.lower_graph(g, use_pallas=False)
+        assert hlo.startswith("HloModule")
+        assert len(meta["inputs"]) == 5 + len(meta["params"]) + len(meta["bn_state"])
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_every_graph_file_exists(self, manifest):
+        for name, meta in manifest["graphs"].items():
+            path = os.path.join(ART, meta["file"])
+            assert os.path.exists(path), name
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), name
+
+    def test_io_counts_match_model(self, manifest):
+        for name, meta in manifest["graphs"].items():
+            arch = model.build_arch(meta["arch"], width=meta["width"])
+            pds, sds = model.param_descs(arch)
+            assert len(meta["params"]) == len(pds), name
+            assert len(meta["bn_state"]) == len(sds), name
+            fixed = 5 if meta["kind"] == "train" else 3
+            assert len(meta["inputs"]) == fixed + len(pds) + len(sds), name
+
+    def test_param_shapes_match_model(self, manifest):
+        for name, meta in manifest["graphs"].items():
+            arch = model.build_arch(meta["arch"], width=meta["width"])
+            pds, _ = model.param_descs(arch)
+            for pd, mp in zip(pds, meta["params"]):
+                assert list(pd.shape) == mp["shape"], (name, pd.name)
+
+    def test_train_outputs_contract(self, manifest):
+        for name, meta in manifest["graphs"].items():
+            outs = [o["name"] for o in meta["outputs"]]
+            if meta["kind"] == "train":
+                assert outs[:3] == ["loss", "ncorrect", "sparsity"], name
+                assert sum(o.startswith("g_") for o in outs) == len(meta["params"])
+            else:
+                assert outs[0] == "logits", name

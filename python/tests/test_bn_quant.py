@@ -1,0 +1,71 @@
+"""Fused BN->quantize kernel vs the composition of its parts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bn_quant, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def oracle(z, gamma, beta, rmean, rvar, r, hl, eps=1e-4):
+    y = (z - rmean) * jax.lax.rsqrt(rvar + eps) * gamma + beta
+    return ref.quantize_fwd(y, r, hl)
+
+
+class TestFoldBn:
+    def test_fold_matches_unfolded(self):
+        k = jax.random.PRNGKey(0)
+        gamma = jax.random.uniform(k, (8,), minval=0.5, maxval=2.0)
+        beta = jax.random.normal(jax.random.PRNGKey(1), (8,))
+        rmean = jax.random.normal(jax.random.PRNGKey(2), (8,))
+        rvar = jax.random.uniform(jax.random.PRNGKey(3), (8,), minval=0.1, maxval=2.0)
+        z = jax.random.normal(jax.random.PRNGKey(4), (16, 8))
+        scale, shift = bn_quant.fold_bn(gamma, beta, rmean, rvar)
+        got = z * scale + shift
+        want = (z - rmean) * jax.lax.rsqrt(rvar + 1e-4) * gamma + beta
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+class TestFusedKernel:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        rows=st.integers(1, 300),
+        c=st.integers(1, 600),
+        n=st.integers(1, 4),
+        r=st.floats(0.0, 0.8),
+        seed=st.integers(0, 2**30),
+    )
+    def test_matches_oracle_composition(self, rows, c, n, r, seed):
+        hl = ref.half_levels(n)
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        z = jax.random.normal(ks[0], (rows, c)) * 2
+        gamma = jax.random.uniform(ks[1], (c,), minval=0.5, maxval=2.0)
+        beta = jax.random.normal(ks[2], (c,))
+        rmean = jax.random.normal(ks[3], (c,)) * 0.5
+        rvar = jax.random.uniform(ks[4], (c,), minval=0.1, maxval=2.0)
+        scale, shift = bn_quant.fold_bn(gamma, beta, rmean, rvar)
+        got = bn_quant.bn_quantize(z, scale, shift, r, hl)
+        want = oracle(z, gamma, beta, rmean, rvar, r, hl)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+    def test_nhwc_4d_shape(self):
+        z = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 5, 7))
+        scale = jnp.ones(7)
+        shift = jnp.zeros(7)
+        got = bn_quant.bn_quantize(z, scale, shift, 0.5, 1.0)
+        assert got.shape == z.shape
+        want = ref.quantize_fwd(z, 0.5, 1.0)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_outputs_on_grid(self):
+        z = jax.random.normal(jax.random.PRNGKey(1), (64, 33)) * 3
+        scale = jnp.full((33,), 1.7)
+        shift = jnp.full((33,), -0.2)
+        for n in (1, 3):
+            hl = ref.half_levels(n)
+            q = np.asarray(bn_quant.bn_quantize(z, scale, shift, 0.3, hl))
+            dz = ref.delta_z(n)
+            np.testing.assert_allclose(q / dz, np.round(q / dz), atol=1e-5)

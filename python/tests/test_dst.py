@@ -1,0 +1,136 @@
+"""DST (discrete state transition) semantics — eqs. (13)-(20), Fig. 3.
+
+The Pallas kernel must match the oracle bit-for-bit; the oracle itself is
+checked against the paper's transition table (six ternary cases of Fig. 3),
+the grid-closure invariant, and the tau transition statistics of eq. (20).
+The same vectors are exported for the Rust twin (see
+rust/src/ternary/dst.rs tests, which hard-code the identical cases).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dst as dk, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def uniforms(shape, seed):
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape)
+
+
+def on_grid(w, dz):
+    w = np.asarray(w)
+    return np.allclose(w / dz, np.round(w / dz), atol=1e-5) and np.abs(w).max() <= 1 + 1e-6
+
+
+class TestOracleDST:
+    def test_fig3_six_ternary_cases(self):
+        """Fig. 3: from state 0 and the boundaries, with dw of either sign."""
+        dz, m = 1.0, 3.0
+        # u = 0 forces the hop whenever tau > 0; u = 1 forbids it.
+        cases = [
+            # (w, dw, u, expected)
+            (0.0, 0.4, 0.0, 1.0),    # 0 --tau--> +1
+            (0.0, 0.4, 1.0, 0.0),    # 0 stays
+            (0.0, -0.4, 0.0, -1.0),  # 0 --tau--> -1
+            (0.0, -0.4, 1.0, 0.0),
+            (-1.0, -0.7, 0.0, -1.0),  # boundary: rho = 0, stays w.p. 1
+            (-1.0, 0.4, 0.0, 0.0),    # kappa=0: -1 -> 0 w.p. tau
+            (-1.0, 1.2, 0.0, 1.0),    # kappa=1: -1 -> 1 w.p. tau
+            (-1.0, 1.2, 1.0, 0.0),    # kappa=1, no hop: -1 -> 0
+            (1.0, 0.5, 0.0, 1.0),     # boundary: rho = 0
+            (1.0, -0.4, 0.0, 0.0),    # 1 -> 0 w.p. tau
+        ]
+        for w, dw, u, want in cases:
+            got = float(
+                ref.dst_update(
+                    jnp.array([w]), jnp.array([dw]), jnp.array([u]), dz, m
+                )[0]
+            )
+            assert got == want, f"w={w} dw={dw} u={u}: got {got}, want {want}"
+
+    def test_zero_increment_is_identity(self):
+        w = jnp.array([-1.0, 0.0, 1.0])
+        got = ref.dst_update(w, jnp.zeros(3), jnp.zeros(3), 1.0, 3.0)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(w))
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        n=st.integers(1, 6),
+        scale=st.floats(0.01, 5.0),
+        seed=st.integers(0, 2**30),
+    )
+    def test_grid_closure(self, n, scale, seed):
+        """W(k) on Z_N and any dw => W(k+1) on Z_N, inside [-1, 1]."""
+        dz = ref.delta_z(n)
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        states = jax.random.randint(k1, (512,), 0, 2 ** n + 1)
+        w = states.astype(jnp.float32) * dz - 1.0
+        dw = jax.random.normal(k2, (512,)) * scale
+        u = jax.random.uniform(k3, (512,))
+        w2 = ref.dst_update(w, dw, u, dz, 3.0)
+        assert on_grid(w2, dz)
+
+    def test_transition_probability_matches_tau(self):
+        """Empirical hop frequency ~= tanh(m|nu|/dz) (eq. 20)."""
+        dz, m, nu = 1.0, 3.0, 0.37
+        n = 200_000
+        w = jnp.zeros(n)
+        dw = jnp.full((n,), nu)
+        u = uniforms((n,), 9)
+        w2 = np.asarray(ref.dst_update(w, dw, u, dz, m))
+        freq = (w2 == 1.0).mean()
+        tau = float(np.tanh(m * nu / dz))
+        assert abs(freq - tau) < 5e-3, (freq, tau)
+
+    def test_kappa_hops_deterministic(self):
+        """|rho| >= dz hops floor(|rho|/dz) states deterministically."""
+        dz = 0.25  # N = 3
+        w = jnp.array([-1.0])
+        dw = jnp.array([0.5])  # kappa = 2, nu = 0
+        got = float(ref.dst_update(w, dw, jnp.array([0.999]), dz, 3.0)[0])
+        assert got == -0.5
+
+    def test_boundary_clamp_rho(self):
+        """eq. 13: increments never push past +-1."""
+        w = jnp.array([1.0, -1.0, 0.5])
+        dw = jnp.array([10.0, -10.0, 10.0])
+        u = jnp.zeros(3)
+        got = np.asarray(ref.dst_update(w, dw, u, 0.5, 3.0))
+        np.testing.assert_array_equal(got, [1.0, -1.0, 1.0])
+
+    def test_rho_decomposition_signs(self):
+        """rem keeps the sign of rho (eq. 16) => hops follow sign(rho)."""
+        dz = 1.0
+        got = float(ref.dst_update(jnp.array([1.0]), jnp.array([-0.6]), jnp.array([0.0]), dz, 3.0)[0])
+        assert got == 0.0  # negative nu hops downward
+
+
+class TestPallasDST:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 6),
+        size=st.integers(1, 5000),
+        scale=st.floats(0.01, 3.0),
+        seed=st.integers(0, 2**30),
+    )
+    def test_matches_oracle(self, n, size, scale, seed):
+        dz = ref.delta_z(n)
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        states = jax.random.randint(k1, (size,), 0, 2 ** n + 1)
+        w = states.astype(jnp.float32) * dz - 1.0
+        dw = jax.random.normal(k2, (size,)) * scale
+        u = jax.random.uniform(k3, (size,))
+        got = dk.dst_update(w, dw, u, dz, 3.0)
+        want = ref.dst_update(w, dw, u, dz, 3.0)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_2d_shape_preserved(self):
+        w = jnp.zeros((37, 53))
+        dw = jnp.full((37, 53), 0.3)
+        u = uniforms((37, 53), 2)
+        got = dk.dst_update(w, dw, u, 1.0, 3.0)
+        assert got.shape == (37, 53)

@@ -1,0 +1,232 @@
+"""L2 graph correctness: shapes, gradients, BN, loss, end-to-end learning."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def blobs(key, batch, dim, n_classes=10, noise=0.3):
+    kc, ky, kn = jax.random.split(key, 3)
+    cents = jax.random.normal(kc, (n_classes, dim)) * 0.5
+    y = jax.random.randint(ky, (batch,), 0, n_classes)
+    x = cents[y] + jax.random.normal(kn, (batch, dim)) * noise
+    return jnp.clip(x, -1, 1), y
+
+
+class TestArch:
+    def test_mlp_shapes(self):
+        arch = model.build_arch("mlp")
+        pds, sds = model.param_descs(arch)
+        assert [p.name for p in pds] == [
+            "W0", "gamma0", "beta0", "W1", "gamma1", "beta1", "W2",
+        ]
+        assert pds[0].shape == (784, 512)
+        assert [s.name for s in sds] == ["rmean0", "rvar0", "rmean1", "rvar1"]
+
+    def test_cnn_mnist_paper_topology(self):
+        """32C5-MP2-64C5-MP2-512FC-SVM with VALID conv: 28->24->12->8->4."""
+        arch = model.build_arch("cnn_mnist")
+        pds, _ = model.param_descs(arch)
+        w = {p.name: p.shape for p in pds if p.kind == "weight"}
+        assert w["W0"] == (5, 5, 1, 32)
+        assert w["W1"] == (5, 5, 32, 64)
+        assert w["W2"] == (64 * 4 * 4, 512)
+        assert w["W3"] == (512, 10)
+
+    def test_cnn_cifar_paper_topology_full_width(self):
+        arch = model.build_arch("cnn_cifar", width=1.0)
+        pds, _ = model.param_descs(arch)
+        w = [p.shape for p in pds if p.kind == "weight"]
+        assert w[0] == (3, 3, 3, 128)
+        assert w[5] == (3, 3, 512, 512)
+        assert w[6] == (512 * 4 * 4, 1024)
+
+    def test_width_scaling(self):
+        arch = model.build_arch("cnn_cifar", width=0.25)
+        pds, _ = model.param_descs(arch)
+        assert pds[0].shape == (3, 3, 3, 32)
+
+    def test_init_on_grid(self):
+        arch = model.build_arch("mlp")
+        for n1 in (0, 1, 3):
+            params, state = model.init_params(arch, jax.random.PRNGKey(0), n1=n1)
+            dz = ref.delta_z(n1)
+            w0 = np.asarray(params[0])
+            # Z_N states are n*dz - 1: offset-grid membership (N=0 states
+            # {-1,1} are not multiples of dz=2, but (w+1)/dz is integral).
+            k = (w0 + 1.0) / dz
+            assert np.allclose(k, np.round(k), atol=1e-6)
+            assert np.abs(w0).max() <= 1.0
+            # not degenerate: at least two distinct states present
+            assert len(np.unique(w0)) >= 2
+
+    def test_init_binary_has_no_zero(self):
+        arch = model.build_arch("mlp")
+        params, _ = model.init_params(arch, jax.random.PRNGKey(1), n1=0)
+        assert set(np.unique(np.asarray(params[0]))) == {-1.0, 1.0}
+
+
+class TestLoss:
+    def test_hinge_zero_when_confident(self):
+        logits = jnp.array([[5.0, -5.0], [-5.0, 5.0]])
+        labels = jnp.array([0, 1])
+        assert float(model.svm_hinge_loss(logits, labels, 2)) == 0.0
+
+    def test_hinge_value(self):
+        logits = jnp.zeros((1, 10))
+        labels = jnp.array([3])
+        # every margin is max(0, 1-0)^2 = 1, summed over 10 classes
+        assert float(model.svm_hinge_loss(logits, labels, 10)) == 10.0
+
+    def test_hinge_grad_direction(self):
+        labels = jnp.array([0])
+        g = jax.grad(lambda o: model.svm_hinge_loss(o, labels, 3))(jnp.zeros((1, 3)))
+        g = np.asarray(g)[0]
+        assert g[0] < 0 and g[1] > 0 and g[2] > 0
+
+
+class TestTrainStep:
+    @pytest.mark.parametrize("mode", ["fp", "bin", "multi"])
+    def test_output_arity_and_shapes(self, mode):
+        arch = model.build_arch("mlp")
+        params, state = model.init_params(arch, jax.random.PRNGKey(0))
+        pds, sds = model.param_descs(arch)
+        x, y = blobs(jax.random.PRNGKey(1), 16, 784)
+        out = jax.jit(model.make_train_step(arch, mode, use_pallas=False))(
+            x, y, 0.5, 0.5, 1.0, *params, *state
+        )
+        assert len(out) == 3 + len(pds) + len(sds)
+        loss, nc, spars = out[0], out[1], out[2]
+        assert loss.shape == () and nc.shape == () and spars.shape == (2,)
+        for pd, g in zip(pds, out[3 : 3 + len(pds)]):
+            assert g.shape == pd.shape, pd.name
+
+    def test_fp_gradients_match_finite_differences(self):
+        arch = model.Arch("tiny", (6,), (model.Dense(6, 4), model.Dense(4, 3)), 3)
+        params, state = model.init_params(arch, jax.random.PRNGKey(0), n1=4)
+        x, y = blobs(jax.random.PRNGKey(2), 8, 6, n_classes=3)
+        step = model.make_train_step(arch, "fp", use_pallas=False)
+        out = step(x, y, 0.5, 0.5, 1.0, *params, *state)
+        g_w0 = np.asarray(out[3])
+
+        def loss_at(w0):
+            ps = [w0] + list(params[1:])
+            o = step(x, y, 0.5, 0.5, 1.0, *ps, *state)
+            return float(o[0])
+
+        eps = 1e-3
+        for idx in [(0, 0), (3, 2), (5, 3)]:
+            w0p = params[0].at[idx].add(eps)
+            w0m = params[0].at[idx].add(-eps)
+            fd = (loss_at(w0p) - loss_at(w0m)) / (2 * eps)
+            assert abs(fd - g_w0[idx]) < 5e-3, (idx, fd, g_w0[idx])
+
+    def test_ternary_weight_grad_uses_ste_window(self):
+        """With r=a and rect window, grads vanish iff preacts far from jumps."""
+        arch = model.build_arch("mlp")
+        params, state = model.init_params(arch, jax.random.PRNGKey(0))
+        x, y = blobs(jax.random.PRNGKey(3), 16, 784)
+        step = jax.jit(model.make_train_step(arch, "multi", use_pallas=False))
+        out = step(x, y, 0.5, 0.5, 1.0, *params, *state)
+        g_w0 = np.asarray(out[3])
+        assert np.isfinite(g_w0).all()
+        assert np.abs(g_w0).sum() > 0
+
+    def test_bn_state_update_moves_toward_batch(self):
+        arch = model.build_arch("mlp")
+        params, state = model.init_params(arch, jax.random.PRNGKey(0))
+        pds, sds = model.param_descs(arch)
+        x, y = blobs(jax.random.PRNGKey(4), 32, 784)
+        out = model.make_train_step(arch, "multi", use_pallas=False)(
+            x, y, 0.5, 0.5, 1.0, *params, *state
+        )
+        new_state = out[3 + len(pds) :]
+        # rmean0 starts at 0; any signal moves it
+        assert np.abs(np.asarray(new_state[0])).sum() > 0
+        # rvar stays positive
+        assert np.asarray(new_state[1]).min() > 0
+
+    def test_sparsity_in_unit_interval_and_responds_to_r(self):
+        arch = model.build_arch("mlp")
+        params, state = model.init_params(arch, jax.random.PRNGKey(0))
+        x, y = blobs(jax.random.PRNGKey(5), 32, 784)
+        step = jax.jit(model.make_train_step(arch, "multi", use_pallas=False))
+        s_small = np.asarray(step(x, y, 0.1, 0.5, 1.0, *params, *state)[2])
+        s_large = np.asarray(step(x, y, 0.9, 0.5, 1.0, *params, *state)[2])
+        assert (0 <= s_small).all() and (s_small <= 1).all()
+        assert (s_large >= s_small - 1e-6).all()
+        assert s_large.mean() > s_small.mean()
+
+
+class TestInfer:
+    def test_infer_uses_running_stats(self):
+        arch = model.build_arch("mlp")
+        params, state = model.init_params(arch, jax.random.PRNGKey(0))
+        x, _ = blobs(jax.random.PRNGKey(6), 16, 784)
+        infer = jax.jit(model.make_infer(arch, "multi", use_pallas=False))
+        logits1, spars = infer(x, 0.5, 1.0, *params, *state)
+        assert logits1.shape == (16, 10)
+        # different running stats -> different logits
+        state2 = [s + 0.5 for s in state]
+        logits2, _ = infer(x, 0.5, 1.0, *params, *state2)
+        assert not np.allclose(np.asarray(logits1), np.asarray(logits2))
+
+    def test_batch_independence(self):
+        """Inference is per-sample: row i doesn't depend on other rows."""
+        arch = model.build_arch("mlp")
+        params, state = model.init_params(arch, jax.random.PRNGKey(0))
+        infer = jax.jit(model.make_infer(arch, "multi", use_pallas=False))
+        x, _ = blobs(jax.random.PRNGKey(7), 16, 784)
+        full, _ = infer(x, 0.5, 1.0, *params, *state)
+        x2 = jnp.concatenate([x[:8], jnp.zeros_like(x[8:])])
+        half, _ = infer(x2, 0.5, 1.0, *params, *state)
+        np.testing.assert_allclose(
+            np.asarray(full)[:8], np.asarray(half)[:8], rtol=1e-5, atol=1e-5
+        )
+
+
+class TestEndToEndLearning:
+    @pytest.mark.parametrize("mode", ["multi", "bin", "fp"])
+    def test_dst_training_learns_blobs(self, mode):
+        """Full paper loop: fwd/bwd graph + DST projection; accuracy >> chance."""
+        arch = model.Arch(
+            "small", (32,), (model.Dense(32, 64), model.Dense(64, 64), model.Dense(64, 10)), 10
+        )
+        n1 = 0 if mode == "bin" else 1
+        params, state = model.init_params(arch, jax.random.PRNGKey(0), n1=n1)
+        pds, _ = model.param_descs(arch)
+        dz = ref.delta_z(n1)
+        step = jax.jit(model.make_train_step(arch, mode, use_pallas=False))
+        key = jax.random.PRNGKey(42)
+        kc = jax.random.PRNGKey(77)
+        cents = jax.random.normal(kc, (10, 32)) * 0.6
+        acc = 0.0
+        for it in range(80):
+            key, kb, kn, ku = jax.random.split(key, 4)
+            y = jax.random.randint(kb, (64,), 0, 10)
+            x = jnp.clip(cents[y] + jax.random.normal(kn, (64, 32)) * 0.25, -1, 1)
+            out = step(x, y, 0.5, 0.5, 1.0, *params, *state)
+            acc = float(out[1]) / 64
+            grads = out[3 : 3 + len(pds)]
+            newp = []
+            for pd, p, g in zip(pds, params, grads):
+                if pd.kind == "weight" and mode != "fp":
+                    ku, kk = jax.random.split(ku)
+                    u = jax.random.uniform(kk, p.shape)
+                    newp.append(ref.dst_update(p, -0.02 * g, u, dz, 3.0))
+                else:
+                    newp.append(p - 0.01 * g)
+            params = newp
+            state = list(out[3 + len(pds) :])
+        assert acc > 0.6, f"{mode}: final train acc {acc}"
+        if mode != "fp":
+            w0 = np.asarray(params[0])
+            # offset-grid membership: states are n*dz - 1 (N=0: {-1,1})
+            k = (w0 + 1.0) / dz
+            assert np.allclose(k, np.round(k), atol=1e-5)

@@ -1,0 +1,180 @@
+"""L1 correctness: Pallas quantizer kernels vs the pure-jnp oracle.
+
+Covers eq. (5) (ternary), eq. (22) (multi-step), eq. (7) (rect window),
+eq. (8) (triangular window) and the Z_N grid semantics of eq. (1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quantize as qk, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed=0, scale=2.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# Oracle semantics (paper equations)
+# ---------------------------------------------------------------------------
+
+
+class TestOracleSemantics:
+    def test_ternary_matches_eq5(self):
+        """phi_r for N=1 is exactly eq. (5): sign outside the window, 0 inside."""
+        x = jnp.array([-2.0, -0.51, -0.5, -0.1, 0.0, 0.1, 0.5, 0.51, 2.0])
+        q = ref.quantize_fwd(x, 0.5, 1.0)
+        np.testing.assert_array_equal(
+            np.asarray(q), [-1, -1, 0, 0, 0, 0, 0, 1, 1]
+        )
+
+    def test_zero_window_half_width(self):
+        """|x| <= r quantizes to exactly 0 for every level count."""
+        for n in range(1, 6):
+            hl = ref.half_levels(n)
+            x = jnp.linspace(-0.3, 0.3, 41)
+            q = ref.quantize_fwd(x, 0.3, hl)
+            assert np.all(np.asarray(q) == 0.0), f"N={n}"
+
+    @pytest.mark.parametrize("n", [1, 2, 3, 4, 6])
+    def test_outputs_on_grid(self, n):
+        hl = ref.half_levels(n)
+        dz = ref.delta_z(n)
+        x = rand((512,), seed=n)
+        q = np.asarray(ref.quantize_fwd(x, 0.4, hl))
+        scaled = q / dz
+        np.testing.assert_allclose(scaled, np.round(scaled), atol=1e-6)
+        assert np.abs(q).max() <= 1.0 + 1e-6
+
+    def test_saturation_at_one(self):
+        """Values beyond H=1 clamp to the extreme state."""
+        q = ref.quantize_fwd(jnp.array([5.0, -5.0]), 0.5, 4.0)
+        np.testing.assert_array_equal(np.asarray(q), [1.0, -1.0])
+
+    def test_monotone_nondecreasing(self):
+        x = jnp.linspace(-2, 2, 1001)
+        for n in (1, 3):
+            q = np.asarray(ref.quantize_fwd(x, 0.25, ref.half_levels(n)))
+            assert np.all(np.diff(q) >= -1e-7)
+
+    def test_odd_symmetry(self):
+        x = rand((256,), seed=3)
+        q1 = np.asarray(ref.quantize_fwd(x, 0.3, 4.0))
+        q2 = np.asarray(ref.quantize_fwd(-x, 0.3, 4.0))
+        np.testing.assert_allclose(q1, -q2, atol=1e-7)
+
+    def test_binary_mode_is_sign(self):
+        x = jnp.array([-0.5, 0.0, 0.5])
+        q = np.asarray(ref.quantize_fwd(x, 0.5, 0.5, mode="bin"))
+        np.testing.assert_array_equal(q, [-1.0, 1.0, 1.0])  # sign(0) := +1
+
+    def test_fp_mode_is_identity(self):
+        x = rand((64,), seed=5)
+        np.testing.assert_array_equal(
+            np.asarray(ref.quantize_fwd(x, 0.5, 1.0, mode="fp")), np.asarray(x)
+        )
+
+
+class TestOracleDerivative:
+    def test_rect_pulse_height_and_support_ternary(self):
+        """eq. (7): 1/(2a) within +-a of |x| = r, else 0."""
+        r, a = 0.5, 0.25
+        x = jnp.array([0.0, 0.24, 0.26, 0.5, 0.74, 0.76, -0.5, -0.76, 2.0])
+        d = np.asarray(ref.quantize_bwd(x, r, a, 1.0, window="rect"))
+        expect = np.array([0, 0, 2.0, 2.0, 2.0, 0, 2.0, 0, 0])
+        np.testing.assert_allclose(d, expect, atol=1e-6)
+
+    def test_tri_peak_and_zero(self):
+        """eq. (8): peak 1/a at the jump, 0 at distance >= a."""
+        r, a = 0.5, 0.5
+        d_at_jump = float(ref.quantize_bwd(jnp.array([r]), r, a, 1.0, window="tri")[0])
+        assert abs(d_at_jump - 1.0 / a) < 1e-6
+        d_far = float(ref.quantize_bwd(jnp.array([r + a + 0.01]), r, a, 1.0, window="tri")[0])
+        assert d_far == 0.0
+
+    def test_pulse_unit_area(self):
+        """Each pulse integrates to ~1 (the impulse it approximates)."""
+        r, a, n = 0.4, 0.1, 1
+        xs = jnp.linspace(0.0, 1.2, 24001)
+        dx = float(xs[1] - xs[0])
+        for window in ("rect", "tri"):
+            d = np.asarray(ref.quantize_bwd(xs, r, a, ref.half_levels(n), window=window))
+            area = d.sum() * dx  # single jump at x = r on the positive axis
+            assert abs(area - 1.0) < 2e-2, window
+
+    @pytest.mark.parametrize("n", [2, 3])
+    def test_multistep_pulse_count(self, n):
+        """hl pulses on the positive axis (jumps at r + k*step, k<hl)."""
+        r, a = 0.2, 0.02
+        hl = ref.half_levels(n)
+        xs = jnp.linspace(0.0, 1.5, 60001)
+        d = np.asarray(ref.quantize_bwd(xs, r, a, hl, window="rect"))
+        # count connected support components
+        on = d > 0
+        starts = np.sum(on[1:] & ~on[:-1]) + int(on[0])
+        assert starts == int(hl)
+
+    def test_bin_mode_hardtanh_window(self):
+        x = jnp.array([-1.5, -1.0, 0.0, 1.0, 1.5])
+        d = np.asarray(ref.quantize_bwd(x, 0.0, 0.5, 0.5, mode="bin"))
+        np.testing.assert_array_equal(d, [0, 1, 1, 1, 0])
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs oracle (the repo's core L1 signal)
+# ---------------------------------------------------------------------------
+
+
+class TestPallasMatchesOracle:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rows=st.integers(1, 7),
+        cols=st.integers(1, 2100),
+        r=st.floats(0.0, 0.9),
+        n=st.integers(1, 6),
+        seed=st.integers(0, 2**30),
+    )
+    def test_fwd(self, rows, cols, r, n, seed):
+        hl = ref.half_levels(n)
+        x = rand((rows, cols), seed=seed)
+        got = qk.quantize_fwd(x, r, hl)
+        want = ref.quantize_fwd(x, r, hl)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        cols=st.integers(1, 2100),
+        r=st.floats(0.0, 0.9),
+        a=st.floats(0.05, 1.0),
+        n=st.integers(1, 6),
+        window=st.sampled_from(["rect", "tri"]),
+        seed=st.integers(0, 2**30),
+    )
+    def test_bwd(self, cols, r, a, n, window, seed):
+        hl = ref.half_levels(n)
+        x = rand((cols,), seed=seed)
+        got = qk.quantize_bwd(x, r, a, hl, window=window)
+        want = ref.quantize_bwd(x, r, a, hl, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+    def test_fwd_3d_shape(self):
+        x = rand((2, 9, 130), seed=11)
+        got = qk.quantize_fwd(x, 0.5, 1.0)
+        want = ref.quantize_fwd(x, 0.5, 1.0)
+        assert got.shape == x.shape
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_traced_scalars_jit(self):
+        """r/hl as traced runtime scalars (the sweep-without-recompile path)."""
+        f = jax.jit(lambda x, r, hl: qk.quantize_fwd(x, r, hl))
+        x = rand((64,), seed=1)
+        for r, n in [(0.3, 1), (0.7, 3)]:
+            hl = ref.half_levels(n)
+            np.testing.assert_array_equal(
+                np.asarray(f(x, r, hl)), np.asarray(ref.quantize_fwd(x, r, hl))
+            )

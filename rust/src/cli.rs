@@ -1,0 +1,222 @@
+//! Hand-rolled CLI argument parser (no clap in the offline vendor set).
+//!
+//! Model: `gxnor <subcommand> [--flag] [--opt value] [--opt=value] [pos..]`.
+//! Declarative enough for help generation, small enough to test exhaustively.
+
+use std::collections::BTreeMap;
+
+/// Declared option (with value) or flag (boolean).
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// A parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_f32(&self, name: &str, default: f32) -> f32 {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// A subcommand with its option declarations.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, takes_value: true, default: Some(default), help });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, takes_value: true, default: None, help });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, takes_value: false, default: None, help });
+        self
+    }
+
+    /// Parse argv (already stripped of program name and subcommand).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        // seed defaults
+        for spec in &self.opts {
+            if let Some(d) = spec.default {
+                out.opts.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name} for `{}`", self.name))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} needs a value"))?
+                        }
+                    };
+                    out.opts.insert(name.to_string(), val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        // check required
+        for spec in &self.opts {
+            if spec.takes_value && spec.default.is_none() && !out.opts.contains_key(spec.name) {
+                return Err(format!("missing required --{} for `{}`", spec.name, self.name));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n", self.name, self.about);
+        for o in &self.opts {
+            let kind = if o.takes_value {
+                match o.default {
+                    Some(d) => format!("<value, default {d}>"),
+                    None => "<value, required>".into(),
+                }
+            } else {
+                "(flag)".into()
+            };
+            s.push_str(&format!("  --{:<16} {kind:<28} {}\n", o.name, o.help));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("train", "train a model")
+            .opt("epochs", "10", "number of epochs")
+            .opt("method", "gxnor", "training method")
+            .req("dataset", "dataset name")
+            .flag("verbose", "log more")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let a = cmd().parse(&argv(&["--dataset", "mnist"])).unwrap();
+        assert_eq!(a.opt_usize("epochs", 0), 10);
+        assert_eq!(a.opt_or("method", ""), "gxnor");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_and_space_forms() {
+        let a = cmd()
+            .parse(&argv(&["--dataset=svhn", "--epochs", "3", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.opt_or("dataset", ""), "svhn");
+        assert_eq!(a.opt_usize("epochs", 0), 3);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(cmd().parse(&argv(&["--epochs", "3"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cmd().parse(&argv(&["--dataset", "x", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cmd().parse(&argv(&["--dataset", "x", "--verbose=yes"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cmd().parse(&argv(&["--dataset", "x", "ckpt.bin"])).unwrap();
+        assert_eq!(a.positional, vec!["ckpt.bin"]);
+    }
+
+    #[test]
+    fn numeric_parsers() {
+        let a = cmd()
+            .parse(&argv(&["--dataset", "x", "--epochs", "bad"]))
+            .unwrap();
+        assert_eq!(a.opt_usize("epochs", 42), 42); // fallback on parse failure
+        assert_eq!(a.opt_f32("epochs", 1.5), 1.5);
+    }
+
+    #[test]
+    fn help_mentions_options() {
+        let h = cmd().help();
+        assert!(h.contains("--epochs"));
+        assert!(h.contains("required"));
+    }
+}

@@ -1,0 +1,267 @@
+//! TOML-subset config parser (no serde/toml in the offline vendor set).
+//!
+//! Supports what the experiment configs need:
+//!
+//! ```toml
+//! # training config
+//! [train]
+//! dataset = "synth_mnist"     # strings
+//! epochs = 10                 # integers
+//! lr_start = 0.02             # floats
+//! adam = true                 # booleans
+//! sparsity_r = 0.5
+//! levels = [1, 2, 3]          # homogeneous arrays
+//! ```
+//!
+//! Keys are addressed as `"section.key"`. Typed getters return defaults so
+//! configs stay minimal.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed config: flat map from "section.key" (or bare "key") to Value.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            let value = parse_value(val.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            values.insert(full_key, value);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn from_file(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> f32 {
+        self.f64(key, default as f64) as f32
+    }
+
+    pub fn i64(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.i64(key, default as i64) as usize
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn f64_array(&self, key: &str) -> Option<Vec<f64>> {
+        match self.get(key)? {
+            Value::Arr(v) => v.iter().map(Value::as_f64).collect(),
+            _ => None,
+        }
+    }
+
+    /// Override a value (CLI `--set section.key=value`).
+    pub fn set(&mut self, key: &str, raw: &str) -> Result<(), String> {
+        self.values.insert(key.to_string(), parse_value(raw)?);
+        Ok(())
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|t| t.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            inner.split(',').map(|it| parse_value(it.trim())).collect();
+        return Ok(Value::Arr(items?));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // bare word -> string (forgiving for enum-ish values)
+    if s.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '-') {
+        return Ok(Value::Str(s.to_string()));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "gxnor-mnist"
+[train]
+epochs = 10          # comment after value
+lr_start = 2e-2
+lr_fin = 1e-4
+adam = true
+method = gxnor
+[model]
+levels = [0, 1, 2]
+widths = [0.5, 1.0]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("name", ""), "gxnor-mnist");
+        assert_eq!(c.usize("train.epochs", 0), 10);
+        assert!((c.f64("train.lr_start", 0.0) - 0.02).abs() < 1e-12);
+        assert!(c.bool("train.adam", false));
+        assert_eq!(c.str("train.method", ""), "gxnor");
+    }
+
+    #[test]
+    fn arrays() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.f64_array("model.levels").unwrap(), vec![0.0, 1.0, 2.0]);
+        assert_eq!(c.f64_array("model.widths").unwrap(), vec![0.5, 1.0]);
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize("train.epochs", 7), 7);
+        assert_eq!(c.str("x", "d"), "d");
+    }
+
+    #[test]
+    fn hash_inside_string_preserved() {
+        let c = Config::parse("tag = \"a#b\"").unwrap();
+        assert_eq!(c.str("tag", ""), "a#b");
+    }
+
+    #[test]
+    fn cli_override() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set("train.epochs", "99").unwrap();
+        assert_eq!(c.usize("train.epochs", 0), 99);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("just a line").is_err());
+        assert!(Config::parse("k = ").is_err());
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let c = Config::parse("a = 3\nb = 3.0").unwrap();
+        assert_eq!(c.get("a"), Some(&Value::Int(3)));
+        assert_eq!(c.get("b"), Some(&Value::Float(3.0)));
+        assert_eq!(c.f64("a", 0.0), 3.0); // ints coerce to f64
+    }
+}

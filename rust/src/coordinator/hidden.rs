@@ -1,0 +1,137 @@
+//! Hidden-weight training — the *baseline* the paper argues against
+//! (Fig. 4a): BinaryConnect [16], TWN [17] and BNN [19] all keep a
+//! full-precision master copy of every weight, apply gradient updates to
+//! it, and re-quantize ("binarization / ternary discretization step") on
+//! every forward pass, "switching frequently between the CWS and the
+//! BWS/TWS".
+//!
+//! Implemented here so the Table-1 baselines can be run *faithfully*
+//! (their original algorithm) as well as under the paper's DST framework,
+//! and so the DST-vs-hidden ablation (bench section `fig4`) can quantify
+//! exactly what removing the hidden weights costs or buys.
+
+use crate::coordinator::optimizer::Optimizer;
+use crate::ternary::DiscreteSpace;
+
+/// Full-precision master weights for one tensor.
+#[derive(Clone, Debug)]
+pub struct HiddenWeights {
+    pub master: Vec<f32>,
+    space: DiscreteSpace,
+}
+
+impl HiddenWeights {
+    /// Initialize masters from the current discrete states (keeps the two
+    /// update rules comparable from identical starting points).
+    pub fn from_discrete(states: &[f32], space: DiscreteSpace) -> Self {
+        HiddenWeights { master: states.to_vec(), space }
+    }
+
+    /// BinaryConnect-style step: optimizer increment into the master,
+    /// clip to [-1, 1] (as in [16] — keeps weights near the quantization
+    /// range), then write the *quantized* view into `out`.
+    ///
+    /// Quantization: sign for the binary space (states are not multiples
+    /// of dz), nearest-state projection otherwise.
+    pub fn step(
+        &mut self,
+        idx: usize,
+        opt: &mut Optimizer,
+        grad: &[f32],
+        lr: f64,
+        dw_buf: &mut [f32],
+        out: &mut [f32],
+    ) {
+        assert_eq!(grad.len(), self.master.len());
+        let dw = &mut dw_buf[..grad.len()];
+        opt.increment(idx, grad, lr, dw);
+        let binary = self.space.n() == 0;
+        let space = self.space;
+        for ((m, &d), o) in self.master.iter_mut().zip(dw.iter()).zip(out.iter_mut()) {
+            *m = (*m + d).clamp(-1.0, 1.0);
+            *o = if binary {
+                if *m >= 0.0 { 1.0 } else { -1.0 }
+            } else {
+                space.project(*m)
+            };
+        }
+    }
+
+    #[inline]
+    pub fn quantize(&self, v: f32) -> f32 {
+        if self.space.n() == 0 {
+            if v >= 0.0 {
+                1.0
+            } else {
+                -1.0
+            }
+        } else {
+            self.space.project(v)
+        }
+    }
+
+    /// Memory the master copy costs (the paper's Remark-2 overhead).
+    pub fn fp32_bytes(&self) -> usize {
+        self.master.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::optimizer::OptKind;
+
+    #[test]
+    fn masters_accumulate_small_gradients() {
+        // the whole point of hidden weights: sub-dz increments accumulate
+        let space = DiscreteSpace::TERNARY;
+        let mut hw = HiddenWeights::from_discrete(&[0.0; 4], space);
+        let mut opt = Optimizer::new(OptKind::Sgd, 1);
+        let mut dw = vec![0.0; 4];
+        let mut out = vec![0.0; 4];
+        for _ in 0..30 {
+            opt.begin_step();
+            hw.step(0, &mut opt, &[-1.0; 4], 0.03, &mut dw, &mut out);
+        }
+        // master drifted up ~0.9; quantized view flipped to 1 after passing 0.5
+        assert!(hw.master[0] > 0.8);
+        assert_eq!(out, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn quantized_view_always_on_grid() {
+        for n in [0u32, 1, 3] {
+            let space = DiscreteSpace::new(n);
+            let mut hw = HiddenWeights::from_discrete(&vec![0.9; 16], space);
+            let mut opt = Optimizer::new(OptKind::Adam, 1);
+            let mut dw = vec![0.0; 16];
+            let mut out = vec![0.0; 16];
+            let mut rng = crate::util::prng::Prng::new(n as u64);
+            for _ in 0..10 {
+                opt.begin_step();
+                let g: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+                hw.step(0, &mut opt, &g, 0.05, &mut dw, &mut out);
+                for &v in &out {
+                    assert!(space.contains(v), "N={n}: {v}");
+                }
+                for &m in &hw.master {
+                    assert!((-1.0..=1.0).contains(&m));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn binary_quantize_is_sign() {
+        let hw = HiddenWeights::from_discrete(&[-1.0, 1.0], DiscreteSpace::BINARY);
+        assert_eq!(hw.quantize(-0.001), -1.0);
+        assert_eq!(hw.quantize(0.0), 1.0);
+        assert_eq!(hw.quantize(0.7), 1.0);
+    }
+
+    #[test]
+    fn memory_overhead_reported() {
+        let hw = HiddenWeights::from_discrete(&[0.0; 1000], DiscreteSpace::TERNARY);
+        assert_eq!(hw.fp32_bytes(), 4000);
+    }
+}

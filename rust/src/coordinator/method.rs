@@ -1,0 +1,127 @@
+//! The unified framework's method space (Table 1 / Fig. 13).
+//!
+//! A method fixes (weight space N1, activation mode/space N2):
+//!
+//! | method | weights        | activations      | graph mode |
+//! |--------|----------------|------------------|------------|
+//! | fp     | dense f32      | full-precision   | `fp`       |
+//! | bwn    | Z_0 = {-1,1}   | full-precision   | `fp`       |
+//! | twn    | Z_1 = {-1,0,1} | full-precision   | `fp`       |
+//! | bnn    | Z_0            | sign             | `bin`      |
+//! | gxnor  | Z_1            | phi_r ternary    | `multi` (hl=1) |
+//! | multi  | Z_N1           | phi_r 2^N2+1-ary | `multi`    |
+
+use crate::ternary::DiscreteSpace;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Full-precision baseline ("Full-precision NNs" row of Table 1).
+    Fp,
+    /// Binary weight network [16][17].
+    Bwn,
+    /// Ternary weight network [17][18].
+    Twn,
+    /// Binarized neural network / XNOR-Net [19][20].
+    Bnn,
+    /// The paper's GXNOR-Net: ternary weights *and* activations.
+    Gxnor,
+    /// The unified multilevel space of Fig. 13: weights Z_N1, acts Z_N2.
+    Multi { n1: u32, n2: u32 },
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method, String> {
+        match s {
+            "fp" => Ok(Method::Fp),
+            "bwn" => Ok(Method::Bwn),
+            "twn" => Ok(Method::Twn),
+            "bnn" => Ok(Method::Bnn),
+            "gxnor" => Ok(Method::Gxnor),
+            other => {
+                // "multi:N1,N2"
+                if let Some(rest) = other.strip_prefix("multi:") {
+                    let (a, b) = rest
+                        .split_once(',')
+                        .ok_or("multi method needs N1,N2 (e.g. multi:6,4)")?;
+                    let n1 = a.parse().map_err(|_| format!("bad N1 {a:?}"))?;
+                    let n2 = b.parse().map_err(|_| format!("bad N2 {b:?}"))?;
+                    return Ok(Method::Multi { n1, n2 });
+                }
+                Err(format!(
+                    "unknown method {other:?} (fp|bwn|twn|bnn|gxnor|multi:N1,N2)"
+                ))
+            }
+        }
+    }
+
+    /// Weight space, or None for dense full-precision weights.
+    pub fn weight_space(&self) -> Option<DiscreteSpace> {
+        match self {
+            Method::Fp => None,
+            Method::Bwn | Method::Bnn => Some(DiscreteSpace::BINARY),
+            Method::Twn | Method::Gxnor => Some(DiscreteSpace::TERNARY),
+            Method::Multi { n1, .. } => Some(DiscreteSpace::new(*n1)),
+        }
+    }
+
+    /// The lowered-graph activation mode this method executes on.
+    pub fn graph_mode(&self) -> &'static str {
+        match self {
+            Method::Fp | Method::Bwn | Method::Twn => "fp",
+            Method::Bnn => "bin",
+            Method::Gxnor | Method::Multi { .. } => "multi",
+        }
+    }
+
+    /// The quantizer's half-level scalar `hl = 2^{N2-1}` (1.0 when unused).
+    pub fn hl(&self) -> f32 {
+        match self {
+            Method::Multi { n2, .. } => DiscreteSpace::new(*n2).half_levels(),
+            _ => 1.0,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Method::Fp => "fp".into(),
+            Method::Bwn => "bwn".into(),
+            Method::Twn => "twn".into(),
+            Method::Bnn => "bnn".into(),
+            Method::Gxnor => "gxnor".into(),
+            Method::Multi { n1, n2 } => format!("multi:{n1},{n2}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["fp", "bwn", "twn", "bnn", "gxnor", "multi:6,4"] {
+            let m = Method::parse(s).unwrap();
+            assert_eq!(m.name(), s);
+        }
+        assert!(Method::parse("nope").is_err());
+        assert!(Method::parse("multi:6").is_err());
+    }
+
+    #[test]
+    fn table1_space_assignments() {
+        assert_eq!(Method::Fp.weight_space(), None);
+        assert_eq!(Method::Bwn.weight_space(), Some(DiscreteSpace::BINARY));
+        assert_eq!(Method::Twn.weight_space(), Some(DiscreteSpace::TERNARY));
+        assert_eq!(Method::Bnn.weight_space(), Some(DiscreteSpace::BINARY));
+        assert_eq!(Method::Gxnor.weight_space(), Some(DiscreteSpace::TERNARY));
+    }
+
+    #[test]
+    fn graph_modes() {
+        assert_eq!(Method::Bwn.graph_mode(), "fp"); // fp activations
+        assert_eq!(Method::Bnn.graph_mode(), "bin");
+        assert_eq!(Method::Gxnor.graph_mode(), "multi");
+        assert_eq!(Method::Gxnor.hl(), 1.0);
+        assert_eq!(Method::Multi { n1: 1, n2: 4 }.hl(), 8.0);
+    }
+}

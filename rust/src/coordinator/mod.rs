@@ -1,0 +1,19 @@
+//! Training coordinator (Layer 3).
+//!
+//! Owns the full training loop: batching, graph execution via the PJRT
+//! runtime, the DST weight update (the paper's contribution — weights never
+//! leave the discrete space), Adam preconditioning, the paper's per-epoch
+//! exponential LR decay, evaluation, and checkpointing.
+
+pub mod checkpoint;
+pub mod hidden;
+pub mod method;
+pub mod optimizer;
+pub mod schedule;
+pub mod trainer;
+
+pub use hidden::HiddenWeights;
+pub use method::Method;
+pub use optimizer::{Optimizer, OptKind};
+pub use schedule::LrSchedule;
+pub use trainer::{StepStats, TrainConfig, TrainReport, Trainer, UpdateRule};

@@ -1,0 +1,192 @@
+//! Gradient preprocessing ahead of the DST projection.
+//!
+//! The paper's "base algorithm for gradient descent is Adam" (Section 3):
+//! gradients are Adam-preconditioned, then the resulting real-valued
+//! increment `dw = -lr * adam(g)` is handed to the DST operator, which
+//! projects it onto a discrete state transition. The Adam moments are
+//! optimizer state (O(2·#weights) f32), not a hidden weight copy — and the
+//! pure `Sgd` mode has zero auxiliary state, demonstrating the paper's
+//! no-full-precision-memory property end to end (DESIGN.md §6).
+//!
+//! Dense parameters (BN gamma/beta, and all weights in the `fp` baseline)
+//! are updated in place by the same machinery.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptKind {
+    Sgd,
+    Adam,
+}
+
+impl OptKind {
+    pub fn parse(s: &str) -> Result<OptKind, String> {
+        match s {
+            "sgd" => Ok(OptKind::Sgd),
+            "adam" => Ok(OptKind::Adam),
+            other => Err(format!("unknown optimizer {other:?} (sgd|adam)")),
+        }
+    }
+}
+
+const BETA1: f64 = 0.9;
+const BETA2: f64 = 0.999;
+const EPS: f64 = 1e-8;
+
+/// Per-tensor optimizer state.
+#[derive(Clone, Debug)]
+struct Slot {
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// Optimizer over an ordered set of tensors (index-addressed; the trainer
+/// uses the manifest's param order).
+#[derive(Clone, Debug)]
+pub struct Optimizer {
+    kind: OptKind,
+    slots: Vec<Option<Slot>>,
+    t: u64,
+}
+
+impl Optimizer {
+    pub fn new(kind: OptKind, n_tensors: usize) -> Self {
+        Optimizer { kind, slots: vec![None; n_tensors], t: 0 }
+    }
+
+    pub fn kind(&self) -> OptKind {
+        self.kind
+    }
+
+    /// Advance the shared timestep (call once per training step, before
+    /// the per-tensor updates).
+    pub fn begin_step(&mut self) {
+        self.t += 1;
+    }
+
+    /// Compute the real-valued increment `dw = -lr * direction(grad)` into
+    /// `dw_out` for tensor `idx` (input to DST for discrete weights).
+    pub fn increment(&mut self, idx: usize, grad: &[f32], lr: f64, dw_out: &mut [f32]) {
+        assert_eq!(grad.len(), dw_out.len());
+        assert!(self.t > 0, "call begin_step first");
+        match self.kind {
+            OptKind::Sgd => {
+                for (o, &g) in dw_out.iter_mut().zip(grad) {
+                    *o = (-lr * g as f64) as f32;
+                }
+            }
+            OptKind::Adam => {
+                let slot = self.slots[idx].get_or_insert_with(|| Slot {
+                    m: vec![0.0; grad.len()],
+                    v: vec![0.0; grad.len()],
+                });
+                assert_eq!(slot.m.len(), grad.len(), "tensor {idx} changed size");
+                // bias corrections in f64 (scalars), per-element math in f32
+                // (the moments themselves are stored f32; doing the
+                // arithmetic in f32 vectorizes and loses nothing that the
+                // storage hadn't already lost — §Perf iteration 4)
+                let bc1 = (1.0 - BETA1.powi(self.t as i32)) as f32;
+                let bc2 = (1.0 - BETA2.powi(self.t as i32)) as f32;
+                let (b1, b2) = (BETA1 as f32, BETA2 as f32);
+                let neg_lr_over_bc1 = (-lr) as f32 / bc1;
+                let inv_bc2 = 1.0 / bc2;
+                let eps = EPS as f32;
+                for i in 0..grad.len() {
+                    let g = grad[i];
+                    let m = b1 * slot.m[i] + (1.0 - b1) * g;
+                    let v = b2 * slot.v[i] + (1.0 - b2) * g * g;
+                    slot.m[i] = m;
+                    slot.v[i] = v;
+                    dw_out[i] = neg_lr_over_bc1 * m / ((v * inv_bc2).sqrt() + eps);
+                }
+            }
+        }
+    }
+
+    /// Apply the increment directly to a dense tensor (BN params, fp weights).
+    pub fn apply_dense(&mut self, idx: usize, param: &mut [f32], grad: &[f32], lr: f64) {
+        let mut dw = vec![0.0f32; grad.len()];
+        self.increment(idx, grad, lr, &mut dw);
+        for (p, d) in param.iter_mut().zip(&dw) {
+            *p += d;
+        }
+    }
+
+    /// Auxiliary f32 state held (bytes) — memory accounting for Remark 2.
+    pub fn state_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .flatten()
+            .map(|s| (s.m.len() + s.v.len()) * 4)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_is_minus_lr_grad() {
+        let mut o = Optimizer::new(OptKind::Sgd, 1);
+        o.begin_step();
+        let mut dw = vec![0.0; 3];
+        o.increment(0, &[1.0, -2.0, 0.0], 0.1, &mut dw);
+        assert_eq!(dw, vec![-0.1, 0.2, 0.0]);
+        assert_eq!(o.state_bytes(), 0);
+    }
+
+    #[test]
+    fn adam_first_step_is_signed_lr() {
+        // bias-corrected first step: |dw| ~ lr regardless of grad scale
+        let mut o = Optimizer::new(OptKind::Adam, 1);
+        o.begin_step();
+        let mut dw = vec![0.0; 2];
+        o.increment(0, &[1e-3, -100.0], 0.01, &mut dw);
+        assert!((dw[0] + 0.01).abs() < 1e-4, "{dw:?}");
+        assert!((dw[1] - 0.01).abs() < 1e-4, "{dw:?}");
+    }
+
+    #[test]
+    fn adam_damps_oscillation() {
+        // alternating gradients: second moment grows, step shrinks
+        let mut o = Optimizer::new(OptKind::Adam, 1);
+        let mut dws = Vec::new();
+        for t in 0..20 {
+            o.begin_step();
+            let g = if t % 2 == 0 { 1.0 } else { -1.0 };
+            let mut dw = vec![0.0];
+            o.increment(0, &[g], 0.01, &mut dw);
+            dws.push(dw[0].abs());
+        }
+        assert!(dws[19] < dws[0] * 0.5, "{dws:?}");
+    }
+
+    #[test]
+    fn adam_converges_quadratic() {
+        // minimize (x-3)^2 with dense updates
+        let mut o = Optimizer::new(OptKind::Adam, 1);
+        let mut x = vec![0.0f32];
+        for _ in 0..800 {
+            o.begin_step();
+            let g = vec![2.0 * (x[0] - 3.0)];
+            o.apply_dense(0, &mut x, &g, 0.05);
+        }
+        assert!((x[0] - 3.0).abs() < 0.05, "x={}", x[0]);
+    }
+
+    #[test]
+    fn state_accounting() {
+        let mut o = Optimizer::new(OptKind::Adam, 2);
+        o.begin_step();
+        let mut dw = vec![0.0; 10];
+        o.increment(0, &[0.0; 10], 0.01, &mut dw);
+        assert_eq!(o.state_bytes(), 10 * 2 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "begin_step")]
+    fn increment_requires_begin_step() {
+        let mut o = Optimizer::new(OptKind::Sgd, 1);
+        let mut dw = vec![0.0];
+        o.increment(0, &[1.0], 0.1, &mut dw);
+    }
+}

@@ -1,0 +1,58 @@
+//! Learning-rate schedule, exactly the paper's Section 3 recipe:
+//! "the learning rate decays at each training epoch by LR = alpha * LR,
+//! where alpha = (LR_fin / LR_start)^(1/Epochs)".
+
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub lr_start: f64,
+    pub lr_fin: f64,
+    pub epochs: usize,
+}
+
+impl LrSchedule {
+    pub fn new(lr_start: f64, lr_fin: f64, epochs: usize) -> Self {
+        assert!(lr_start > 0.0 && lr_fin > 0.0 && epochs > 0);
+        LrSchedule { lr_start, lr_fin, epochs }
+    }
+
+    /// The per-epoch decay factor alpha.
+    pub fn alpha(&self) -> f64 {
+        (self.lr_fin / self.lr_start).powf(1.0 / self.epochs as f64)
+    }
+
+    /// LR in effect during `epoch` (0-based).
+    pub fn lr_at(&self, epoch: usize) -> f64 {
+        self.lr_start * self.alpha().powi(epoch as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints() {
+        let s = LrSchedule::new(0.02, 1e-4, 30);
+        assert!((s.lr_at(0) - 0.02).abs() < 1e-12);
+        // after all epochs the LR has reached lr_fin
+        assert!((s.lr_at(30) - 1e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn geometric_decay() {
+        let s = LrSchedule::new(0.1, 0.001, 10);
+        let a = s.alpha();
+        for e in 0..10 {
+            let ratio = s.lr_at(e + 1) / s.lr_at(e);
+            assert!((ratio - a).abs() < 1e-12);
+        }
+        assert!(a < 1.0);
+    }
+
+    #[test]
+    fn constant_when_equal() {
+        let s = LrSchedule::new(0.01, 0.01, 5);
+        assert!((s.alpha() - 1.0).abs() < 1e-12);
+        assert!((s.lr_at(3) - 0.01).abs() < 1e-12);
+    }
+}

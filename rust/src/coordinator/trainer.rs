@@ -1,0 +1,451 @@
+//! The training loop: the system's end-to-end hot path.
+//!
+//! Per step: expand packed weights to f32 → execute the lowered train graph
+//! (loss, accuracy, per-layer activation sparsity, gradients, BN stats) →
+//! Adam/SGD-precondition the gradients → **DST-project** the weight
+//! increments back onto the Z_N grid (eqs. 13–20) → store packed. Dense
+//! parameters (BN affine; all weights in the `fp` baseline) take ordinary
+//! dense updates. Python is never involved.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::hidden::HiddenWeights;
+use crate::coordinator::method::Method;
+use crate::coordinator::optimizer::{OptKind, Optimizer};
+use crate::coordinator::schedule::LrSchedule;
+use crate::data::{AugmentCfg, BatchIter, Dataset};
+use crate::metrics::Recorder;
+use crate::nn::params::{ModelState, ParamKind, ParamValue};
+use crate::nn::init::init_model;
+use crate::runtime::client::{Arg, Runtime};
+use crate::runtime::manifest::{GraphMeta, Manifest};
+use crate::ternary::{dst_update, DiscreteSpace, DstStats};
+use crate::util::prng::Prng;
+use crate::util::timer::Stopwatch;
+
+/// How discrete weights are updated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateRule {
+    /// The paper's Discrete State Transition: weights live permanently on
+    /// the Z_N grid, no full-precision copy (eqs. 13-20).
+    Dst,
+    /// The baseline the paper replaces (Fig. 4a): full-precision hidden
+    /// weights updated by gradients and re-quantized each step
+    /// (BinaryConnect [16] / TWN [17] / BNN [19]).
+    Hidden,
+}
+
+impl UpdateRule {
+    pub fn parse(s: &str) -> Result<UpdateRule, String> {
+        match s {
+            "dst" => Ok(UpdateRule::Dst),
+            "hidden" => Ok(UpdateRule::Hidden),
+            other => Err(format!("unknown update rule {other:?} (dst|hidden)")),
+        }
+    }
+}
+
+/// Everything a training run needs.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub arch: String,
+    pub method: Method,
+    pub dataset: String,
+    pub train_len: usize,
+    pub test_len: usize,
+    pub epochs: usize,
+    pub seed: u64,
+    /// zero-window half width r (Fig. 10's sparsity knob)
+    pub r: f32,
+    /// derivative pulse half-width a (Fig. 9)
+    pub a: f32,
+    /// DST nonlinearity m (Fig. 8)
+    pub m: f32,
+    pub lr_start: f64,
+    pub lr_fin: f64,
+    pub opt: OptKind,
+    pub update_rule: UpdateRule,
+    pub augment: bool,
+    /// learning rate multiplier for BN/dense params
+    pub dense_lr_scale: f64,
+    /// print progress lines
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            arch: "mlp".into(),
+            method: Method::Gxnor,
+            dataset: "synth_mnist".into(),
+            train_len: 2000,
+            test_len: 500,
+            epochs: 3,
+            seed: 42,
+            r: 0.5,
+            a: 0.5,   // paper: rectangular window, a = 0.5
+            m: 3.0,   // paper: m = 3
+            lr_start: 0.02,
+            lr_fin: 1e-3,
+            opt: OptKind::Adam,
+            update_rule: UpdateRule::Dst,
+            augment: false,
+            dense_lr_scale: 0.5,
+            verbose: false,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct StepStats {
+    pub loss: f64,
+    pub acc: f64,
+    /// mean zero-activation fraction across hidden layers
+    pub sparsity: f64,
+    /// per-hidden-layer zero-activation fraction (hwsim input)
+    pub sparsity_per_layer: Vec<f64>,
+    pub dst: DstStats,
+}
+
+/// Result of a full run (feeds the benches and EXPERIMENTS.md).
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub recorder: Recorder,
+    pub test_acc: f64,
+    pub final_train_loss: f64,
+    pub weight_zero_fraction: f64,
+    pub mean_act_sparsity: f64,
+    pub packed_bytes: usize,
+    pub fp32_bytes: usize,
+    /// fp32 bytes held by hidden masters (0 under DST — the paper's claim)
+    pub hidden_fp32_bytes: usize,
+    pub step_time_ms: f64,
+    pub exec_time_ms: f64,
+    pub dst_time_ms: f64,
+}
+
+/// Trainer wiring one model to one (train, infer) graph pair.
+pub struct Trainer<'rt> {
+    rt: &'rt mut Runtime,
+    train_g: GraphMeta,
+    infer_g: GraphMeta,
+    pub model: ModelState,
+    opt: Optimizer,
+    cfg: TrainConfig,
+    rng: Prng,
+    /// cached f32 expansion of every param (PJRT boundary buffers)
+    param_f32: Vec<Vec<f32>>,
+    /// scratch for DST increments
+    dw_buf: Vec<f32>,
+    /// full-precision masters, only under UpdateRule::Hidden (Fig. 4a)
+    hidden: Vec<Option<HiddenWeights>>,
+    pub sw_exec: Stopwatch,
+    pub sw_update: Stopwatch,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt mut Runtime, manifest: &Manifest, cfg: TrainConfig) -> Result<Self> {
+        let mode = cfg.method.graph_mode();
+        // batch size comes from whatever graph the manifest has for this
+        // arch/mode (the catalogue fixes it per arch).
+        let train_g = manifest
+            .graphs
+            .iter()
+            .find(|g| g.arch == cfg.arch && g.mode == mode && g.kind == "train" && g.batch > 16)
+            .or_else(|| {
+                manifest
+                    .graphs
+                    .iter()
+                    .find(|g| g.arch == cfg.arch && g.mode == mode && g.kind == "train")
+            })
+            .ok_or_else(|| {
+                anyhow!("no train graph for arch={} mode={mode} in manifest", cfg.arch)
+            })?
+            .clone();
+        let infer_g = manifest
+            .get(&train_g.name.replace("_train", "_infer"))
+            .map_err(|e| anyhow!(e))?
+            .clone();
+        rt.load(&train_g)?;
+        rt.load(&infer_g)?;
+
+        let descs: Vec<_> = train_g.params.clone();
+        let bn_names: Vec<String> = train_g.bn_state.iter().map(|s| s.name.clone()).collect();
+        let bn_shapes: Vec<usize> = train_g.bn_state.iter().map(|s| s.numel()).collect();
+        let space = cfg
+            .method
+            .weight_space()
+            .unwrap_or(DiscreteSpace::TERNARY); // placeholder for fp; unused
+        let mut model = init_model(descs, bn_names, &bn_shapes, space, cfg.seed);
+        if cfg.method.weight_space().is_none() {
+            // fp baseline: replace packed weights with dense Glorot init
+            let mut rng = Prng::new(cfg.seed ^ 0xF9);
+            for (d, v) in model.descs.iter().zip(model.values.iter_mut()) {
+                if d.kind == ParamKind::Weight {
+                    let fan_in: usize =
+                        d.shape[..d.shape.len() - 1].iter().product::<usize>().max(1);
+                    let std = (2.0 / fan_in as f32).sqrt();
+                    *v = ParamValue::Dense(
+                        (0..d.numel()).map(|_| rng.normal_f32() * std).collect(),
+                    );
+                }
+            }
+        }
+        let param_f32: Vec<Vec<f32>> = model.values.iter().map(|v| v.to_f32()).collect();
+        // hidden-weight baseline: seed masters from the initial discrete states
+        let hidden: Vec<Option<HiddenWeights>> = model
+            .values
+            .iter()
+            .zip(&param_f32)
+            .map(|(v, f)| match (cfg.update_rule, v) {
+                (UpdateRule::Hidden, ParamValue::Discrete(p)) => {
+                    Some(HiddenWeights::from_discrete(f, p.space()))
+                }
+                _ => None,
+            })
+            .collect();
+        let max_numel = model.descs.iter().map(|d| d.numel()).max().unwrap_or(0);
+        let opt = Optimizer::new(cfg.opt, model.values.len());
+        let rng = Prng::new(cfg.seed ^ 0xD57);
+        Ok(Trainer {
+            rt,
+            train_g,
+            infer_g,
+            model,
+            opt,
+            cfg,
+            rng,
+            param_f32,
+            dw_buf: vec![0.0; max_numel],
+            hidden,
+            sw_exec: Stopwatch::new(),
+            sw_update: Stopwatch::new(),
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.train_g.batch
+    }
+
+    pub fn graph_name(&self) -> &str {
+        &self.train_g.name
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    fn refresh_param_f32(&mut self) {
+        for (v, buf) in self.model.values.iter().zip(self.param_f32.iter_mut()) {
+            match v {
+                ParamValue::Discrete(p) => p.unpack_into(buf),
+                ParamValue::Dense(d) => buf.copy_from_slice(d),
+            }
+        }
+    }
+
+    /// One training step on a prepared batch.
+    pub fn step(&mut self, x: &[f32], labels: &[i32], lr: f64) -> Result<StepStats> {
+        let b = self.train_g.batch;
+        assert_eq!(labels.len(), b);
+        // 1. execute the lowered fwd/bwd graph
+        let hl = self.cfg.method.hl();
+        let mut args: Vec<Arg> = vec![
+            Arg::F32(x),
+            Arg::I32(labels),
+            Arg::Scalar(self.cfg.r),
+            Arg::Scalar(self.cfg.a),
+            Arg::Scalar(hl),
+        ];
+        for p in &self.param_f32 {
+            args.push(Arg::F32(p));
+        }
+        for s in &self.model.bn_state {
+            args.push(Arg::F32(s));
+        }
+        self.sw_exec.start();
+        let outs = self.rt.execute(&self.train_g, &args)?;
+        self.sw_exec.stop();
+
+        let loss = outs[0][0] as f64;
+        let acc = outs[1][0] as f64 / b as f64;
+        let spars = &outs[2];
+        let sparsity = if spars.is_empty() {
+            0.0
+        } else {
+            spars.iter().map(|&v| v as f64).sum::<f64>() / spars.len() as f64
+        };
+
+        // 2. updates: DST for discrete weights, dense for the rest
+        self.sw_update.start();
+        self.opt.begin_step();
+        let n_params = self.model.descs.len();
+        let mut dst_stats = DstStats::default();
+        for i in 0..n_params {
+            let grad = &outs[3 + i];
+            let desc = &self.model.descs[i];
+            match &mut self.model.values[i] {
+                ParamValue::Discrete(packed) => {
+                    debug_assert_eq!(desc.kind, ParamKind::Weight);
+                    let w = &mut self.param_f32[i];
+                    if let Some(hw) = &mut self.hidden[i] {
+                        // Fig. 4a baseline: update the fp master, requantize
+                        hw.step(i, &mut self.opt, grad, lr, &mut self.dw_buf, w);
+                    } else {
+                        // the paper's DST: no master copy exists
+                        let dw = &mut self.dw_buf[..grad.len()];
+                        self.opt.increment(i, grad, lr, dw);
+                        let stats =
+                            dst_update(w, dw, packed.space(), self.cfg.m, &mut self.rng);
+                        dst_stats.merge(&stats);
+                    }
+                    packed.repack_from(w);
+                }
+                ParamValue::Dense(dense) => {
+                    let scale = if desc.kind == ParamKind::Weight {
+                        1.0 // fp baseline weights use the full LR
+                    } else {
+                        self.cfg.dense_lr_scale
+                    };
+                    self.opt.apply_dense(i, dense, grad, lr * scale);
+                    self.param_f32[i].copy_from_slice(dense);
+                }
+            }
+        }
+        // 3. BN running stats come straight off the graph
+        let bn_off = 3 + n_params;
+        for (j, s) in self.model.bn_state.iter_mut().enumerate() {
+            s.copy_from_slice(&outs[bn_off + j]);
+        }
+        self.sw_update.stop();
+
+        Ok(StepStats {
+            loss,
+            acc,
+            sparsity,
+            sparsity_per_layer: spars.iter().map(|&v| v as f64).collect(),
+            dst: dst_stats,
+        })
+    }
+
+    /// Accuracy over a dataset using the infer graph (BN running stats).
+    pub fn evaluate(&mut self, ds: &dyn Dataset) -> Result<f64> {
+        self.refresh_param_f32();
+        let b = self.infer_g.batch;
+        let sample_len = ds.sample_len();
+        let mut x = vec![0.0f32; b * sample_len];
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let n_batches = ds.len() / b;
+        let hl = self.cfg.method.hl();
+        for nb in 0..n_batches {
+            let mut labels = vec![0i32; b];
+            for i in 0..b {
+                labels[i] =
+                    ds.fill(nb * b + i, &mut x[i * sample_len..(i + 1) * sample_len]) as i32;
+            }
+            let mut args: Vec<Arg> =
+                vec![Arg::F32(&x), Arg::Scalar(self.cfg.r), Arg::Scalar(hl)];
+            for p in &self.param_f32 {
+                args.push(Arg::F32(p));
+            }
+            for s in &self.model.bn_state {
+                args.push(Arg::F32(s));
+            }
+            let outs = self.rt.execute(&self.infer_g, &args)?;
+            let logits = &outs[0];
+            for (i, &lbl) in labels.iter().enumerate() {
+                let row = &logits[i * self.infer_g.n_classes..(i + 1) * self.infer_g.n_classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(k, _)| k as i32)
+                    .unwrap();
+                if pred == lbl {
+                    correct += 1;
+                }
+            }
+            total += b;
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// Full run: epochs × batches with the paper's LR decay; returns the
+    /// report consumed by the benches.
+    pub fn run(&mut self, train: &dyn Dataset, test: &dyn Dataset) -> Result<TrainReport> {
+        let schedule = LrSchedule::new(self.cfg.lr_start, self.cfg.lr_fin, self.cfg.epochs);
+        let aug = if self.cfg.augment {
+            AugmentCfg::paper()
+        } else {
+            AugmentCfg::none()
+        };
+        let b = self.train_g.batch;
+        let sample_len = train.sample_len();
+        let mut x = vec![0.0f32; b * sample_len];
+        let mut y = vec![0i32; b];
+        let mut rec = Recorder::new();
+        let mut steps = 0u64;
+        let t0 = std::time::Instant::now();
+        for epoch in 0..self.cfg.epochs {
+            let lr = schedule.lr_at(epoch);
+            let mut it = BatchIter::new(train, b, self.cfg.seed.wrapping_add(epoch as u64), aug);
+            let mut ep_loss = 0.0;
+            let mut ep_acc = 0.0;
+            let mut n = 0;
+            self.refresh_param_f32();
+            while it.next_batch(&mut x, &mut y) {
+                let s = self.step(&x, &y, lr)?;
+                ep_loss += s.loss;
+                ep_acc += s.acc;
+                n += 1;
+                steps += 1;
+                rec.push("loss", s.loss);
+                rec.push("train_acc", s.acc);
+                rec.push("act_sparsity", s.sparsity);
+                for (j, &v) in s.sparsity_per_layer.iter().enumerate() {
+                    rec.push(&format!("act_sparsity_l{j}"), v);
+                }
+                rec.push("dst_rate", s.dst.transition_rate());
+            }
+            let test_acc = self.evaluate(test)?;
+            rec.push("epoch_loss", ep_loss / n.max(1) as f64);
+            rec.push("epoch_train_acc", ep_acc / n.max(1) as f64);
+            rec.push("test_acc", test_acc);
+            rec.push("test_err", 1.0 - test_acc);
+            rec.push("lr", lr);
+            if self.cfg.verbose {
+                println!(
+                    "epoch {epoch:>3}  lr {lr:.2e}  loss {:>8.4}  train {:5.1}%  test {:5.1}%  spars {:.2}",
+                    ep_loss / n.max(1) as f64,
+                    100.0 * ep_acc / n.max(1) as f64,
+                    100.0 * test_acc,
+                    rec.last("act_sparsity").unwrap_or(0.0),
+                );
+            }
+        }
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let (packed, fp32) = self.model.weight_memory_bytes();
+        Ok(TrainReport {
+            test_acc: rec.last("test_acc").unwrap_or(0.0),
+            final_train_loss: rec.last("epoch_loss").unwrap_or(f64::NAN),
+            weight_zero_fraction: self.model.weight_zero_fraction(),
+            mean_act_sparsity: rec.tail_mean("act_sparsity", 50),
+            packed_bytes: packed,
+            fp32_bytes: fp32,
+            hidden_fp32_bytes: self.hidden.iter().flatten().map(|h| h.fp32_bytes()).sum(),
+            step_time_ms: wall_ms / steps.max(1) as f64,
+            exec_time_ms: self.sw_exec.mean_ms(),
+            dst_time_ms: self.sw_update.mean_ms(),
+            recorder: rec,
+        })
+    }
+}
+
+/// Convenience: open datasets, build a trainer, run, return the report.
+pub fn run_training(rt: &mut Runtime, manifest: &Manifest, cfg: TrainConfig) -> Result<TrainReport> {
+    let train = crate::data::open(&cfg.dataset, true, cfg.train_len).map_err(|e| anyhow!(e))?;
+    let test = crate::data::open(&cfg.dataset, false, cfg.test_len).map_err(|e| anyhow!(e))?;
+    let mut tr = Trainer::new(rt, manifest, cfg)?;
+    tr.run(train.as_ref(), test.as_ref())
+}

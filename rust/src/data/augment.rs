@@ -1,0 +1,138 @@
+//! Training-time augmentation, matching the paper's Section 3 recipe for
+//! CIFAR10/SVHN: "4 pixels are padded on each side, and a 32x32 crop is
+//! further randomly sampled from the padded image and its horizontal flip
+//! version". Inference uses the single original view.
+
+use crate::util::prng::Prng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AugmentCfg {
+    /// pixels of zero padding on each side before cropping
+    pub pad: usize,
+    /// enable random horizontal flip
+    pub hflip: bool,
+}
+
+impl AugmentCfg {
+    /// The paper's CIFAR/SVHN recipe.
+    pub fn paper() -> Self {
+        AugmentCfg { pad: 4, hflip: true }
+    }
+
+    pub fn none() -> Self {
+        AugmentCfg { pad: 0, hflip: false }
+    }
+
+    pub fn is_noop(&self) -> bool {
+        self.pad == 0 && !self.hflip
+    }
+}
+
+/// Apply pad+crop+flip in place. `img` is NHWC (h, w, c) row-major.
+pub fn augment(
+    img: &mut [f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    cfg: &AugmentCfg,
+    rng: &mut Prng,
+) {
+    debug_assert_eq!(img.len(), h * w * c);
+    if cfg.is_noop() {
+        return;
+    }
+    let flip = cfg.hflip && rng.next_u64() & 1 == 1;
+    let pad = cfg.pad;
+    // crop offsets in the padded frame: [0, 2*pad]
+    let (dy, dx) = if pad > 0 {
+        (rng.below(2 * pad + 1) as isize - pad as isize,
+         rng.below(2 * pad + 1) as isize - pad as isize)
+    } else {
+        (0, 0)
+    };
+    let src = img.to_vec();
+    for y in 0..h {
+        for x in 0..w {
+            let sy = y as isize + dy;
+            let sx0 = x as isize + dx;
+            let sx = if flip { w as isize - 1 - sx0 } else { sx0 };
+            let dst_base = (y * w + x) * c;
+            if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize {
+                let src_base = (sy as usize * w + sx as usize) * c;
+                img[dst_base..dst_base + c]
+                    .copy_from_slice(&src[src_base..src_base + c]);
+            } else {
+                // zero padding maps to -1 after [-1,1] normalization of black
+                for ch in 0..c {
+                    img[dst_base + ch] = -1.0;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(h: usize, w: usize, c: usize) -> Vec<f32> {
+        (0..h * w * c).map(|i| i as f32 / (h * w * c) as f32).collect()
+    }
+
+    #[test]
+    fn noop_leaves_image() {
+        let mut img = ramp(8, 8, 3);
+        let orig = img.clone();
+        augment(&mut img, 8, 8, 3, &AugmentCfg::none(), &mut Prng::new(1));
+        assert_eq!(img, orig);
+    }
+
+    #[test]
+    fn flip_only_reverses_rows() {
+        let cfg = AugmentCfg { pad: 0, hflip: true };
+        // find a seed whose first draw flips
+        let mut rng = Prng::new(3);
+        while rng.clone().next_u64() & 1 == 0 {
+            rng.next_u64();
+        }
+        let mut img = ramp(2, 4, 1);
+        let orig = img.clone();
+        augment(&mut img, 2, 4, 1, &cfg, &mut rng);
+        for y in 0..2 {
+            for x in 0..4 {
+                assert_eq!(img[y * 4 + x], orig[y * 4 + (3 - x)]);
+            }
+        }
+    }
+
+    #[test]
+    fn crop_shifts_content() {
+        let cfg = AugmentCfg { pad: 4, hflip: false };
+        let mut any_shift = false;
+        for seed in 0..20 {
+            let mut img = ramp(8, 8, 1);
+            let orig = img.clone();
+            augment(&mut img, 8, 8, 1, &cfg, &mut Prng::new(seed));
+            if img != orig {
+                any_shift = true;
+            }
+            // padding is exactly -1 where out of range
+            for &v in &img {
+                assert!(v == -1.0 || (0.0..=1.0).contains(&v));
+            }
+        }
+        assert!(any_shift);
+    }
+
+    #[test]
+    fn augment_preserves_length_and_range() {
+        let cfg = AugmentCfg::paper();
+        let mut rng = Prng::new(7);
+        let mut img: Vec<f32> = (0..32 * 32 * 3)
+            .map(|i| ((i % 255) as f32 / 127.5) - 1.0)
+            .collect();
+        augment(&mut img, 32, 32, 3, &cfg, &mut rng);
+        assert_eq!(img.len(), 32 * 32 * 3);
+        assert!(img.iter().all(|&v| (-1.0..=1.0).contains(&v)));
+    }
+}

@@ -1,0 +1,165 @@
+//! IDX (LeCun MNIST format) loader: used when the real MNIST files are
+//! present under `data/mnist/` (`train-images-idx3-ubyte` etc., unzipped).
+//! The training flow falls back to the procedural datasets otherwise
+//! (DESIGN.md §6).
+
+use crate::data::Dataset;
+use std::path::Path;
+
+pub struct Mnist {
+    images: Vec<u8>,
+    labels: Vec<u8>,
+    rows: usize,
+    cols: usize,
+    train: bool,
+}
+
+fn read_u32(b: &[u8], pos: usize) -> Result<u32, String> {
+    b.get(pos..pos + 4)
+        .map(|s| u32::from_be_bytes(s.try_into().unwrap()))
+        .ok_or_else(|| "truncated IDX header".to_string())
+}
+
+/// Parse an IDX image file: magic 0x00000803, dims [n, rows, cols], u8 pixels.
+pub fn parse_idx_images(bytes: &[u8]) -> Result<(Vec<u8>, usize, usize, usize), String> {
+    if read_u32(bytes, 0)? != 0x0803 {
+        return Err("bad IDX image magic".into());
+    }
+    let n = read_u32(bytes, 4)? as usize;
+    let rows = read_u32(bytes, 8)? as usize;
+    let cols = read_u32(bytes, 12)? as usize;
+    let want = 16 + n * rows * cols;
+    if bytes.len() < want {
+        return Err(format!("IDX image payload short: {} < {want}", bytes.len()));
+    }
+    Ok((bytes[16..want].to_vec(), n, rows, cols))
+}
+
+/// Parse an IDX label file: magic 0x00000801, dim [n], u8 labels.
+pub fn parse_idx_labels(bytes: &[u8]) -> Result<Vec<u8>, String> {
+    if read_u32(bytes, 0)? != 0x0801 {
+        return Err("bad IDX label magic".into());
+    }
+    let n = read_u32(bytes, 4)? as usize;
+    let want = 8 + n;
+    if bytes.len() < want {
+        return Err(format!("IDX label payload short: {} < {want}", bytes.len()));
+    }
+    Ok(bytes[8..want].to_vec())
+}
+
+impl Mnist {
+    pub fn open(dir: &str, train: bool) -> Result<Mnist, String> {
+        let (img_name, lbl_name) = if train {
+            ("train-images-idx3-ubyte", "train-labels-idx1-ubyte")
+        } else {
+            ("t10k-images-idx3-ubyte", "t10k-labels-idx1-ubyte")
+        };
+        let img_path = Path::new(dir).join(img_name);
+        let lbl_path = Path::new(dir).join(lbl_name);
+        let img_bytes =
+            std::fs::read(&img_path).map_err(|e| format!("{}: {e}", img_path.display()))?;
+        let lbl_bytes =
+            std::fs::read(&lbl_path).map_err(|e| format!("{}: {e}", lbl_path.display()))?;
+        let (images, n, rows, cols) = parse_idx_images(&img_bytes)?;
+        let labels = parse_idx_labels(&lbl_bytes)?;
+        if labels.len() != n {
+            return Err(format!("image/label count mismatch: {n} vs {}", labels.len()));
+        }
+        Ok(Mnist { images, labels, rows, cols, train })
+    }
+}
+
+impl Dataset for Mnist {
+    fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    fn shape(&self) -> (usize, usize, usize) {
+        (self.rows, self.cols, 1)
+    }
+
+    fn n_classes(&self) -> usize {
+        10
+    }
+
+    fn fill(&self, idx: usize, out: &mut [f32]) -> u32 {
+        let px = self.rows * self.cols;
+        let src = &self.images[idx * px..(idx + 1) * px];
+        for (o, &b) in out.iter_mut().zip(src) {
+            *o = b as f32 / 127.5 - 1.0; // [0,255] -> [-1,1]
+        }
+        self.labels[idx] as u32
+    }
+
+    fn name(&self) -> &str {
+        if self.train {
+            "mnist-train"
+        } else {
+            "mnist-test"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_idx(n: usize, rows: usize, cols: usize) -> (Vec<u8>, Vec<u8>) {
+        let mut img = vec![];
+        img.extend_from_slice(&0x0803u32.to_be_bytes());
+        img.extend_from_slice(&(n as u32).to_be_bytes());
+        img.extend_from_slice(&(rows as u32).to_be_bytes());
+        img.extend_from_slice(&(cols as u32).to_be_bytes());
+        for i in 0..n * rows * cols {
+            img.push((i % 256) as u8);
+        }
+        let mut lbl = vec![];
+        lbl.extend_from_slice(&0x0801u32.to_be_bytes());
+        lbl.extend_from_slice(&(n as u32).to_be_bytes());
+        for i in 0..n {
+            lbl.push((i % 10) as u8);
+        }
+        (img, lbl)
+    }
+
+    #[test]
+    fn parses_wellformed() {
+        let (img, lbl) = fake_idx(3, 4, 5);
+        let (data, n, r, c) = parse_idx_images(&img).unwrap();
+        assert_eq!((n, r, c), (3, 4, 5));
+        assert_eq!(data.len(), 60);
+        assert_eq!(parse_idx_labels(&lbl).unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let (mut img, lbl) = fake_idx(2, 2, 2);
+        img[3] = 0x01;
+        assert!(parse_idx_images(&img).is_err());
+        let (img2, _) = fake_idx(2, 2, 2);
+        assert!(parse_idx_images(&img2[..17]).is_err());
+        assert!(parse_idx_labels(&lbl[..8]).is_err());
+    }
+
+    #[test]
+    fn end_to_end_via_tempdir() {
+        let dir = std::env::temp_dir().join(format!("gxnor_idx_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (img, lbl) = fake_idx(7, 28, 28);
+        std::fs::write(dir.join("train-images-idx3-ubyte"), &img).unwrap();
+        std::fs::write(dir.join("train-labels-idx1-ubyte"), &lbl).unwrap();
+        let ds = Mnist::open(dir.to_str().unwrap(), true).unwrap();
+        assert_eq!(ds.len(), 7);
+        let mut x = vec![0.0; 784];
+        let l = ds.fill(2, &mut x);
+        assert_eq!(l, 2);
+        assert!(x.iter().all(|&v| (-1.0..=1.0).contains(&v)));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_files_error() {
+        assert!(Mnist::open("/nonexistent/dir", true).is_err());
+    }
+}

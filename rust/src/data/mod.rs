@@ -1,0 +1,84 @@
+//! Dataset substrate.
+//!
+//! The paper evaluates on MNIST, CIFAR10 and SVHN. Offline, this module
+//! provides (a) an IDX loader for the real MNIST files when they are
+//! present under `data/mnist/`, and (b) *procedural* stand-ins —
+//! stroke-rasterized digits and textured color classes — that exercise the
+//! identical training/eval code paths with controllable difficulty
+//! (DESIGN.md §6). Every sample is generated deterministically from
+//! (dataset seed, index), so datasets need no storage and train/test
+//! splits are disjoint by construction.
+
+pub mod augment;
+pub mod idx;
+pub mod loader;
+pub mod synth;
+pub mod textures;
+
+pub use augment::AugmentCfg;
+pub use loader::BatchIter;
+pub use synth::SynthDigits;
+pub use textures::{SynthCifar, SynthSvhn};
+
+/// A supervised vision dataset with deterministic per-index generation.
+pub trait Dataset: Sync {
+    /// Number of samples.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Per-sample shape (H, W, C); MLP consumers flatten.
+    fn shape(&self) -> (usize, usize, usize);
+    fn n_classes(&self) -> usize;
+    /// Write sample `idx` (values in [-1, 1], NHWC order) into `out`
+    /// (length H*W*C) and return its label.
+    fn fill(&self, idx: usize, out: &mut [f32]) -> u32;
+    fn name(&self) -> &str;
+
+    fn sample_len(&self) -> usize {
+        let (h, w, c) = self.shape();
+        h * w * c
+    }
+}
+
+/// Instantiate a dataset by name: `synth_mnist`, `synth_cifar`,
+/// `synth_svhn`, or `mnist` (real IDX files under `data/mnist/`).
+/// `train` selects the split (disjoint seeds / file pairs).
+pub fn open(name: &str, train: bool, len: usize) -> Result<Box<dyn Dataset>, String> {
+    match name {
+        "synth_mnist" => Ok(Box::new(SynthDigits::new(if train { 1 } else { 2 }, len))),
+        "synth_cifar" => Ok(Box::new(SynthCifar::new(if train { 3 } else { 4 }, len))),
+        "synth_svhn" => Ok(Box::new(SynthSvhn::new(if train { 5 } else { 6 }, len))),
+        "mnist" => idx::Mnist::open("data/mnist", train)
+            .map(|d| Box::new(d) as Box<dyn Dataset>),
+        other => Err(format!(
+            "unknown dataset {other:?} (expected synth_mnist|synth_cifar|synth_svhn|mnist)"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_by_name() {
+        for name in ["synth_mnist", "synth_cifar", "synth_svhn"] {
+            let ds = open(name, true, 100).unwrap();
+            assert_eq!(ds.len(), 100);
+            assert_eq!(ds.n_classes(), 10);
+        }
+        assert!(open("nope", true, 1).is_err());
+    }
+
+    #[test]
+    fn train_test_splits_differ() {
+        let tr = open("synth_mnist", true, 10).unwrap();
+        let te = open("synth_mnist", false, 10).unwrap();
+        let mut a = vec![0.0; tr.sample_len()];
+        let mut b = vec![0.0; te.sample_len()];
+        tr.fill(0, &mut a);
+        te.fill(0, &mut b);
+        assert_ne!(a, b);
+    }
+}

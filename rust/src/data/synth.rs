@@ -1,0 +1,258 @@
+//! Procedural MNIST stand-in: stroke-rasterized digits.
+//!
+//! Each class is a polyline template (seven-segment-style with diagonals)
+//! in the unit square; a sample renders its class template through a
+//! random affine transform (rotation, anisotropic scale, translation),
+//! random stroke thickness, and additive pixel noise. The task is
+//! learnable but not linearly trivial — quantized-network accuracy
+//! orderings (Table 1 / Fig. 7–10) reproduce on it.
+
+use crate::data::Dataset;
+use crate::util::prng::Prng;
+
+pub const SIDE: usize = 28;
+
+/// Polyline templates per digit; points are (x, y) in [0,1]^2, y down.
+/// `f32::NAN` x-coordinates separate strokes.
+fn template(digit: usize) -> &'static [(f32, f32)] {
+    const B: f32 = f32::NAN;
+    // segment endpoints
+    // corners: TL(0.25,0.15) TR(0.75,0.15) ML(0.25,0.5) MR(0.75,0.5)
+    //          BL(0.25,0.85) BR(0.75,0.85)
+    match digit {
+        0 => &[
+            (0.25, 0.15), (0.75, 0.15), (0.75, 0.85), (0.25, 0.85), (0.25, 0.15),
+        ],
+        1 => &[(0.45, 0.25), (0.55, 0.15), (0.55, 0.85)],
+        2 => &[
+            (0.25, 0.15), (0.75, 0.15), (0.75, 0.5), (0.25, 0.5), (0.25, 0.85), (0.75, 0.85),
+        ],
+        3 => &[
+            (0.25, 0.15), (0.75, 0.15), (0.75, 0.85), (0.25, 0.85),
+            (B, 0.0), (0.35, 0.5), (0.75, 0.5),
+        ],
+        4 => &[
+            (0.25, 0.15), (0.25, 0.5), (0.75, 0.5),
+            (B, 0.0), (0.75, 0.15), (0.75, 0.85),
+        ],
+        5 => &[
+            (0.75, 0.15), (0.25, 0.15), (0.25, 0.5), (0.75, 0.5), (0.75, 0.85), (0.25, 0.85),
+        ],
+        6 => &[
+            (0.75, 0.15), (0.25, 0.15), (0.25, 0.85), (0.75, 0.85), (0.75, 0.5), (0.25, 0.5),
+        ],
+        7 => &[(0.25, 0.15), (0.75, 0.15), (0.45, 0.85)],
+        8 => &[
+            (0.25, 0.15), (0.75, 0.15), (0.75, 0.85), (0.25, 0.85), (0.25, 0.15),
+            (B, 0.0), (0.25, 0.5), (0.75, 0.5),
+        ],
+        9 => &[
+            (0.75, 0.5), (0.25, 0.5), (0.25, 0.15), (0.75, 0.15), (0.75, 0.85), (0.25, 0.85),
+        ],
+        _ => unreachable!(),
+    }
+}
+
+/// Distance from point to segment, all in pixel units.
+fn seg_dist(px: f32, py: f32, ax: f32, ay: f32, bx: f32, by: f32) -> f32 {
+    let (dx, dy) = (bx - ax, by - ay);
+    let len2 = dx * dx + dy * dy;
+    let t = if len2 <= 1e-9 {
+        0.0
+    } else {
+        (((px - ax) * dx + (py - ay) * dy) / len2).clamp(0.0, 1.0)
+    };
+    let (cx, cy) = (ax + t * dx, ay + t * dy);
+    ((px - cx).powi(2) + (py - cy).powi(2)).sqrt()
+}
+
+/// Render one digit with a given affine jitter into `out` (SIDE*SIDE, [0,1]).
+pub fn render_digit(digit: usize, rng: &mut Prng, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), SIDE * SIDE);
+    let rot = rng.range_f32(-0.30, 0.30); // radians, ~±17°
+    let scale_x = rng.range_f32(0.75, 1.10);
+    let scale_y = rng.range_f32(0.75, 1.10);
+    let tx = rng.range_f32(-2.5, 2.5);
+    let ty = rng.range_f32(-2.5, 2.5);
+    let thick = rng.range_f32(1.0, 1.9); // stroke half-width in px
+    let (sin, cos) = rot.sin_cos();
+    let s = SIDE as f32;
+    // transform template points to pixel space
+    let pts: Vec<(f32, f32)> = template(digit)
+        .iter()
+        .map(|&(x, y)| {
+            if x.is_nan() {
+                return (f32::NAN, 0.0);
+            }
+            // center, scale, rotate, translate
+            let (cx, cy) = ((x - 0.5) * scale_x, (y - 0.5) * scale_y);
+            let (rx, ry) = (cx * cos - cy * sin, cx * sin + cy * cos);
+            ((rx + 0.5) * s + tx, (ry + 0.5) * s + ty)
+        })
+        .collect();
+    // rasterize: soft stroke via distance field
+    for py in 0..SIDE {
+        for px in 0..SIDE {
+            let (fx, fy) = (px as f32 + 0.5, py as f32 + 0.5);
+            let mut d = f32::INFINITY;
+            for w in pts.windows(2) {
+                let (ax, ay) = w[0];
+                let (bx, by) = w[1];
+                if ax.is_nan() || bx.is_nan() {
+                    continue;
+                }
+                d = d.min(seg_dist(fx, fy, ax, ay, bx, by));
+            }
+            // smooth falloff over one pixel
+            let v = (1.0 - (d - thick)).clamp(0.0, 1.0);
+            out[py * SIDE + px] = v;
+        }
+    }
+    // pixel noise
+    for v in out.iter_mut() {
+        *v = (*v + rng.normal_f32() * 0.08).clamp(0.0, 1.0);
+    }
+}
+
+/// The procedural digit dataset (28x28x1, 10 classes, values in [-1,1]).
+pub struct SynthDigits {
+    seed: u64,
+    len: usize,
+}
+
+impl SynthDigits {
+    pub fn new(seed: u64, len: usize) -> Self {
+        SynthDigits { seed, len }
+    }
+}
+
+impl Dataset for SynthDigits {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn shape(&self) -> (usize, usize, usize) {
+        (SIDE, SIDE, 1)
+    }
+
+    fn n_classes(&self) -> usize {
+        10
+    }
+
+    fn fill(&self, idx: usize, out: &mut [f32]) -> u32 {
+        // per-sample deterministic stream
+        let mut rng = Prng::new(
+            self.seed
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(idx as u64),
+        );
+        let label = (rng.next_u64() % 10) as usize;
+        render_digit(label, &mut rng, out);
+        for v in out.iter_mut() {
+            *v = *v * 2.0 - 1.0; // [0,1] -> [-1,1] (paper input normalization)
+        }
+        label as u32
+    }
+
+    fn name(&self) -> &str {
+        "synth_mnist"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_index() {
+        let ds = SynthDigits::new(1, 100);
+        let mut a = vec![0.0; 784];
+        let mut b = vec![0.0; 784];
+        let la = ds.fill(17, &mut a);
+        let lb = ds.fill(17, &mut b);
+        assert_eq!(la, lb);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn values_normalized() {
+        let ds = SynthDigits::new(1, 10);
+        let mut x = vec![0.0; 784];
+        for i in 0..10 {
+            ds.fill(i, &mut x);
+            assert!(x.iter().all(|&v| (-1.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn labels_cover_all_classes() {
+        let ds = SynthDigits::new(1, 500);
+        let mut seen = [false; 10];
+        let mut x = vec![0.0; 784];
+        for i in 0..500 {
+            seen[ds.fill(i, &mut x) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+
+    #[test]
+    fn same_class_varies_between_samples() {
+        let ds = SynthDigits::new(1, 2000);
+        let mut x = vec![0.0; 784];
+        let mut first: Option<Vec<f32>> = None;
+        for i in 0..2000 {
+            if ds.fill(i, &mut x) == 3 {
+                match &first {
+                    None => first = Some(x.clone()),
+                    Some(f) => {
+                        assert_ne!(f, &x, "two 3s rendered identically");
+                        return;
+                    }
+                }
+            }
+        }
+        panic!("class 3 appeared < 2 times in 2000 samples");
+    }
+
+    #[test]
+    fn digits_have_ink() {
+        // every rendered digit must light up a plausible number of pixels
+        let mut rng = Prng::new(9);
+        let mut img = vec![0.0; SIDE * SIDE];
+        for d in 0..10 {
+            render_digit(d, &mut rng, &mut img);
+            let ink: f32 = img.iter().sum();
+            assert!(ink > 20.0, "digit {d} has almost no ink ({ink})");
+            assert!(ink < 500.0, "digit {d} is a blob ({ink})");
+        }
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // mean intra-class L2 distance must be well below inter-class
+        let mut rng = Prng::new(4);
+        let render_mean = |d: usize, rng: &mut Prng| {
+            let mut acc = vec![0.0f32; SIDE * SIDE];
+            let mut img = vec![0.0f32; SIDE * SIDE];
+            for _ in 0..8 {
+                render_digit(d, rng, &mut img);
+                for (a, v) in acc.iter_mut().zip(&img) {
+                    *a += v / 8.0;
+                }
+            }
+            acc
+        };
+        let means: Vec<Vec<f32>> = (0..10).map(|d| render_mean(d, &mut rng)).collect();
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f32>().sqrt()
+        };
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                assert!(
+                    dist(&means[i], &means[j]) > 1.5,
+                    "digits {i} and {j} too similar"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Procedural CIFAR10/SVHN stand-ins (32x32x3).
+//!
+//! * `SynthCifar` — each class is a fixed mixture of oriented sinusoidal
+//!   textures plus a color tint; samples add random phase, gain, spatial
+//!   jitter and pixel noise. Class identity is carried by texture
+//!   statistics (not a single template), so convnets beat linear models.
+//! * `SynthSvhn` — colorized digits (reusing the stroke rasterizer) over a
+//!   textured background: digit-shape classes with photometric nuisance,
+//!   the SVHN regime.
+
+use crate::data::synth::{render_digit, SIDE as DIGIT_SIDE};
+use crate::data::Dataset;
+use crate::util::prng::Prng;
+
+pub const SIDE: usize = 32;
+const NCOMP: usize = 6; // texture components per class
+
+struct TexComp {
+    fx: f32,
+    fy: f32,
+    color: [f32; 3],
+    amp: f32,
+}
+
+fn class_components(class: usize) -> Vec<TexComp> {
+    // deterministic per-class texture bank
+    let mut rng = Prng::new(0xC1FA_0000 + class as u64);
+    (0..NCOMP)
+        .map(|_| {
+            let freq = rng.range_f32(0.3, 2.2);
+            let theta = rng.range_f32(0.0, std::f32::consts::PI);
+            TexComp {
+                fx: freq * theta.cos(),
+                fy: freq * theta.sin(),
+                color: [
+                    rng.range_f32(-1.0, 1.0),
+                    rng.range_f32(-1.0, 1.0),
+                    rng.range_f32(-1.0, 1.0),
+                ],
+                amp: rng.range_f32(0.3, 1.0),
+            }
+        })
+        .collect()
+}
+
+/// Textured color classes, 32x32x3 in [-1,1] (NHWC).
+pub struct SynthCifar {
+    seed: u64,
+    len: usize,
+    banks: Vec<Vec<TexComp>>,
+}
+
+impl SynthCifar {
+    pub fn new(seed: u64, len: usize) -> Self {
+        SynthCifar {
+            seed,
+            len,
+            banks: (0..10).map(class_components).collect(),
+        }
+    }
+}
+
+impl Dataset for SynthCifar {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn shape(&self) -> (usize, usize, usize) {
+        (SIDE, SIDE, 3)
+    }
+
+    fn n_classes(&self) -> usize {
+        10
+    }
+
+    fn fill(&self, idx: usize, out: &mut [f32]) -> u32 {
+        let mut rng = Prng::new(
+            self.seed
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(idx as u64),
+        );
+        let label = (rng.next_u64() % 10) as usize;
+        let bank = &self.banks[label];
+        // per-sample nuisance: phases, gains, offset
+        let phases: Vec<f32> = (0..NCOMP)
+            .map(|_| rng.range_f32(0.0, 2.0 * std::f32::consts::PI))
+            .collect();
+        let gains: Vec<f32> = (0..NCOMP).map(|_| rng.range_f32(0.6, 1.4)).collect();
+        let (jx, jy) = (rng.range_f32(-3.0, 3.0), rng.range_f32(-3.0, 3.0));
+        out.fill(0.0);
+        for y in 0..SIDE {
+            for x in 0..SIDE {
+                let (fx, fy) = (x as f32 + jx, y as f32 + jy);
+                let base = (y * SIDE + x) * 3;
+                for (k, c) in bank.iter().enumerate() {
+                    let v =
+                        (c.fx * fx * 0.35 + c.fy * fy * 0.35 + phases[k]).sin()
+                            * c.amp
+                            * gains[k]
+                            / NCOMP as f32;
+                    out[base] += v * c.color[0];
+                    out[base + 1] += v * c.color[1];
+                    out[base + 2] += v * c.color[2];
+                }
+            }
+        }
+        for v in out.iter_mut() {
+            *v = (*v * 2.0 + rng.normal_f32() * 0.10).clamp(-1.0, 1.0);
+        }
+        label as u32
+    }
+
+    fn name(&self) -> &str {
+        "synth_cifar"
+    }
+}
+
+/// Colorized digits over textured backgrounds, 32x32x3 in [-1,1].
+pub struct SynthSvhn {
+    seed: u64,
+    len: usize,
+}
+
+impl SynthSvhn {
+    pub fn new(seed: u64, len: usize) -> Self {
+        SynthSvhn { seed, len }
+    }
+}
+
+impl Dataset for SynthSvhn {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn shape(&self) -> (usize, usize, usize) {
+        (SIDE, SIDE, 3)
+    }
+
+    fn n_classes(&self) -> usize {
+        10
+    }
+
+    fn fill(&self, idx: usize, out: &mut [f32]) -> u32 {
+        let mut rng = Prng::new(
+            self.seed
+                .wrapping_mul(0x517C_C1B7_2722_0A95)
+                .wrapping_add(idx as u64),
+        );
+        let label = (rng.next_u64() % 10) as usize;
+        // digit mask at 28x28
+        let mut mask = vec![0.0f32; DIGIT_SIDE * DIGIT_SIDE];
+        render_digit(label, &mut rng, &mut mask);
+        // photometric nuisance
+        let fg: [f32; 3] = [
+            rng.range_f32(-1.0, 1.0),
+            rng.range_f32(-1.0, 1.0),
+            rng.range_f32(-1.0, 1.0),
+        ];
+        let bg: [f32; 3] = [
+            rng.range_f32(-0.6, 0.6),
+            rng.range_f32(-0.6, 0.6),
+            rng.range_f32(-0.6, 0.6),
+        ];
+        // low-frequency background texture
+        let (bfx, bfy, bph) = (
+            rng.range_f32(0.1, 0.5),
+            rng.range_f32(0.1, 0.5),
+            rng.range_f32(0.0, 6.28),
+        );
+        let (ox, oy) = (
+            rng.below(SIDE - DIGIT_SIDE + 1),
+            rng.below(SIDE - DIGIT_SIDE + 1),
+        );
+        for y in 0..SIDE {
+            for x in 0..SIDE {
+                let tex = (bfx * x as f32 + bfy * y as f32 + bph).sin() * 0.3;
+                let m = if x >= ox && x < ox + DIGIT_SIDE && y >= oy && y < oy + DIGIT_SIDE {
+                    mask[(y - oy) * DIGIT_SIDE + (x - ox)]
+                } else {
+                    0.0
+                };
+                let base = (y * SIDE + x) * 3;
+                for ch in 0..3 {
+                    let v = bg[ch] + tex + m * (fg[ch] - bg[ch]);
+                    out[base + ch] =
+                        (v + rng.normal_f32() * 0.08).clamp(-1.0, 1.0);
+                }
+            }
+        }
+        label as u32
+    }
+
+    fn name(&self) -> &str {
+        "synth_svhn"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_common(ds: &dyn Dataset) {
+        let mut x = vec![0.0f32; ds.sample_len()];
+        let mut seen = [false; 10];
+        for i in 0..200 {
+            let l = ds.fill(i, &mut x);
+            assert!(x.iter().all(|&v| (-1.0..=1.0).contains(&v)));
+            seen[l as usize] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 9, "{seen:?}");
+    }
+
+    #[test]
+    fn cifar_valid() {
+        let ds = SynthCifar::new(3, 1000);
+        assert_eq!(ds.shape(), (32, 32, 3));
+        check_common(&ds);
+    }
+
+    #[test]
+    fn svhn_valid() {
+        let ds = SynthSvhn::new(5, 1000);
+        assert_eq!(ds.shape(), (32, 32, 3));
+        check_common(&ds);
+    }
+
+    #[test]
+    fn cifar_classes_distinct_in_texture_space() {
+        // average power spectrum proxy: per-class mean images differ
+        let ds = SynthCifar::new(3, 5000);
+        let n = ds.sample_len();
+        let mut sums = vec![vec![0.0f64; n]; 10];
+        let mut counts = [0usize; 10];
+        let mut x = vec![0.0f32; n];
+        for i in 0..600 {
+            let l = ds.fill(i, &mut x) as usize;
+            counts[l] += 1;
+            for (s, &v) in sums[l].iter_mut().zip(&x) {
+                *s += (v as f64).abs(); // mean |activation| carries texture energy
+            }
+        }
+        for c in 0..10 {
+            assert!(counts[c] > 10, "class {c} undersampled");
+            for s in sums[c].iter_mut() {
+                *s /= counts[c] as f64;
+            }
+        }
+        let mut min_dist = f64::INFINITY;
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                let d: f64 = sums[i]
+                    .iter()
+                    .zip(&sums[j])
+                    .map(|(a, b)| (a - b).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                min_dist = min_dist.min(d);
+            }
+        }
+        assert!(min_dist > 0.5, "classes statistically indistinct: {min_dist}");
+    }
+
+    #[test]
+    fn svhn_digit_visible() {
+        // foreground/background contrast exists
+        let ds = SynthSvhn::new(5, 100);
+        let mut x = vec![0.0f32; ds.sample_len()];
+        ds.fill(0, &mut x);
+        let mean: f32 = x.iter().sum::<f32>() / x.len() as f32;
+        let var: f32 =
+            x.iter().map(|v| (v - mean).powi(2)).sum::<f32>() / x.len() as f32;
+        assert!(var > 0.01, "image nearly constant (var={var})");
+    }
+}

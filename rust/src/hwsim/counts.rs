@@ -1,0 +1,273 @@
+//! Operation counting for the Fig. 11 architectures.
+//!
+//! For a neuron with M inputs (activations X_i, weights W_i):
+//!
+//! * **Full-precision NN** (Fig. 11b): M multiplications + M accumulations.
+//! * **BWN** (Fig. 11c): multiplexer selects ±X_i -> M accumulations.
+//! * **TWN** (Fig. 11d): event-driven accumulation; W_i = 0 rests the unit.
+//! * **BNN/XNOR** (Fig. 11e): M XNOR ops + 1 bitcount.
+//! * **GXNOR** (Fig. 11f): XNOR+bitcount *gated* on both operands being
+//!   non-zero; a resting unit contributes neither op.
+
+/// The network families of Table 2 / Fig. 11.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetArch {
+    FullPrecision,
+    Bwn,
+    Twn,
+    Bnn,
+    Gxnor,
+}
+
+impl NetArch {
+    pub const ALL: [NetArch; 5] = [
+        NetArch::FullPrecision,
+        NetArch::Bwn,
+        NetArch::Twn,
+        NetArch::Bnn,
+        NetArch::Gxnor,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetArch::FullPrecision => "Full-precision NNs",
+            NetArch::Bwn => "BWNs",
+            NetArch::Twn => "TWNs",
+            NetArch::Bnn => "BNNs/XNOR",
+            NetArch::Gxnor => "GXNOR-Nets",
+        }
+    }
+}
+
+/// Operation tallies for a set of neuron evaluations.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OpCounts {
+    pub mult: u64,
+    pub acc: u64,
+    pub xnor: u64,
+    pub bitcount: u64,
+    /// connections whose compute unit stayed resting
+    pub resting: u64,
+    /// total connections considered
+    pub total: u64,
+}
+
+impl OpCounts {
+    pub fn resting_probability(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.resting as f64 / self.total as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &OpCounts) {
+        self.mult += o.mult;
+        self.acc += o.acc;
+        self.xnor += o.xnor;
+        self.bitcount += o.bitcount;
+        self.resting += o.resting;
+        self.total += o.total;
+    }
+
+    /// Active arithmetic/logic ops (the quantity gating reduces).
+    pub fn active_ops(&self) -> u64 {
+        self.mult + self.acc + self.xnor + self.bitcount
+    }
+}
+
+/// Count ops for one neuron evaluation: weights `w` against activations
+/// `x` (slices of equal length M). Values are interpreted in the
+/// discretization the architecture assumes; only zero/non-zero matters for
+/// gating.
+pub fn count_neuron(arch: NetArch, w: &[f32], x: &[f32]) -> OpCounts {
+    assert_eq!(w.len(), x.len());
+    let m = w.len() as u64;
+    let mut c = OpCounts { total: m, ..Default::default() };
+    match arch {
+        NetArch::FullPrecision => {
+            c.mult = m;
+            c.acc = m;
+        }
+        NetArch::Bwn => {
+            // multiplexer chooses +x or -x; accumulation always fires
+            c.acc = m;
+        }
+        NetArch::Twn => {
+            // event-driven: W_i = 0 keeps the accumulator resting
+            for &wi in w {
+                if wi == 0.0 {
+                    c.resting += 1;
+                } else {
+                    c.acc += 1;
+                }
+            }
+        }
+        NetArch::Bnn => {
+            c.xnor = m;
+            c.bitcount = 1;
+        }
+        NetArch::Gxnor => {
+            // gated XNOR: both operands must be non-zero to wake the unit
+            let mut active = 0;
+            for (&wi, &xi) in w.iter().zip(x) {
+                if wi != 0.0 && xi != 0.0 {
+                    active += 1;
+                } else {
+                    c.resting += 1;
+                }
+            }
+            c.xnor = active;
+            c.bitcount = if active > 0 { 1 } else { 0 };
+        }
+    }
+    c
+}
+
+/// Table 2's analytic expectations for an M-input neuron, parameterized by
+/// the zero-state probabilities of weights (`pw0`) and activations (`px0`).
+/// The paper's uniform-state assumption is pw0 = px0 = 1/3.
+pub fn expected_counts(arch: NetArch, m: u64, pw0: f64, px0: f64) -> OpCounts {
+    let mf = m as f64;
+    match arch {
+        NetArch::FullPrecision => OpCounts {
+            mult: m, acc: m, xnor: 0, bitcount: 0, resting: 0, total: m,
+        },
+        NetArch::Bwn => OpCounts { mult: 0, acc: m, xnor: 0, bitcount: 0, resting: 0, total: m },
+        NetArch::Twn => {
+            let rest = (mf * pw0).round() as u64;
+            OpCounts { mult: 0, acc: m - rest, xnor: 0, bitcount: 0, resting: rest, total: m }
+        }
+        NetArch::Bnn => OpCounts { mult: 0, acc: 0, xnor: m, bitcount: 1, resting: 0, total: m },
+        NetArch::Gxnor => {
+            // resting iff W=0 or X=0: p = 1 - (1-pw0)(1-px0)
+            let p_rest = 1.0 - (1.0 - pw0) * (1.0 - px0);
+            let rest = (mf * p_rest).round() as u64;
+            OpCounts {
+                mult: 0,
+                acc: 0,
+                xnor: m - rest,
+                bitcount: 1,
+                resting: rest,
+                total: m,
+            }
+        }
+    }
+}
+
+/// Measure op counts over a whole dense layer: activations `x` (batch ×
+/// M) against every output neuron's weight column (M × N, row-major
+/// `w[m * n_out + n]`).
+pub fn count_layer(arch: NetArch, x: &[f32], w: &[f32], m: usize, n_out: usize) -> OpCounts {
+    assert_eq!(w.len(), m * n_out);
+    assert_eq!(x.len() % m, 0);
+    let batch = x.len() / m;
+    let mut total = OpCounts::default();
+    let mut wcol = vec![0.0f32; m];
+    for n in 0..n_out {
+        for i in 0..m {
+            wcol[i] = w[i * n_out + n];
+        }
+        for b in 0..batch {
+            total.merge(&count_neuron(arch, &wcol, &x[b * m..(b + 1) * m]));
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_uniform_state_resting_probabilities() {
+        // Table 2: FP 0%, BWN 0%, TWN 33.3%, BNN 0%, GXNOR 55.6%
+        let m = 9_000u64;
+        let p = |arch| expected_counts(arch, m, 1.0 / 3.0, 1.0 / 3.0).resting_probability();
+        assert_eq!(p(NetArch::FullPrecision), 0.0);
+        assert_eq!(p(NetArch::Bwn), 0.0);
+        assert!((p(NetArch::Twn) - 1.0 / 3.0).abs() < 1e-3);
+        assert_eq!(p(NetArch::Bnn), 0.0);
+        assert!((p(NetArch::Gxnor) - 5.0 / 9.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn table2_operation_kinds() {
+        let m = 100u64;
+        let fp = expected_counts(NetArch::FullPrecision, m, 0.0, 0.0);
+        assert_eq!((fp.mult, fp.acc), (m, m));
+        let bwn = expected_counts(NetArch::Bwn, m, 0.0, 0.0);
+        assert_eq!((bwn.mult, bwn.acc), (0, m));
+        let bnn = expected_counts(NetArch::Bnn, m, 0.0, 0.0);
+        assert_eq!((bnn.xnor, bnn.bitcount), (m, 1));
+        let twn = expected_counts(NetArch::Twn, m, 1.0 / 3.0, 0.0);
+        assert_eq!(twn.acc, 67); // 0~M band of Table 2
+        let gx = expected_counts(NetArch::Gxnor, m, 1.0 / 3.0, 1.0 / 3.0);
+        assert_eq!(gx.xnor, 44); // (2/3)^2 of 100, rounded
+    }
+
+    #[test]
+    fn gating_measured_vs_analytic() {
+        // uniform ternary weights/acts: measured resting prob ~ 5/9
+        use crate::util::prng::Prng;
+        let mut rng = Prng::new(5);
+        let m = 30_000;
+        let tern = |rng: &mut Prng| (rng.below(3) as f32) - 1.0;
+        let w: Vec<f32> = (0..m).map(|_| tern(&mut rng)).collect();
+        let x: Vec<f32> = (0..m).map(|_| tern(&mut rng)).collect();
+        let c = count_neuron(NetArch::Gxnor, &w, &x);
+        assert!((c.resting_probability() - 5.0 / 9.0).abs() < 0.02);
+        assert_eq!(c.xnor + c.resting, m as u64);
+    }
+
+    #[test]
+    fn fig12_example_21_to_9_xnor() {
+        // Fig. 12: a 3-neuron / 7-input ternary network: 21 nominal XNOR
+        // ops reduce to ~21 * 4/9 ≈ 9 under uniform states.
+        use crate::util::prng::Prng;
+        let mut rng = Prng::new(11);
+        let mut active_sum = 0u64;
+        let trials = 4000;
+        for _ in 0..trials {
+            for _neuron in 0..3 {
+                let w: Vec<f32> = (0..7).map(|_| (rng.below(3) as f32) - 1.0).collect();
+                let x: Vec<f32> = (0..7).map(|_| (rng.below(3) as f32) - 1.0).collect();
+                active_sum += count_neuron(NetArch::Gxnor, &w, &x).xnor;
+            }
+        }
+        let mean_active = active_sum as f64 / trials as f64;
+        assert!(
+            (mean_active - 21.0 * 4.0 / 9.0).abs() < 0.3,
+            "mean active {mean_active} vs 9.33"
+        );
+    }
+
+    #[test]
+    fn zero_weight_neuron_fully_rests() {
+        let w = vec![0.0; 16];
+        let x = vec![1.0; 16];
+        let c = count_neuron(NetArch::Gxnor, &w, &x);
+        assert_eq!(c.xnor, 0);
+        assert_eq!(c.bitcount, 0);
+        assert_eq!(c.resting_probability(), 1.0);
+    }
+
+    #[test]
+    fn count_layer_aggregates() {
+        // 2-batch, 3-in, 2-out, all non-zero
+        let x = vec![1.0; 6];
+        let w = vec![1.0; 6];
+        let c = count_layer(NetArch::Bnn, &x, &w, 3, 2);
+        assert_eq!(c.xnor, 3 * 2 * 2);
+        assert_eq!(c.bitcount, 4); // one per neuron eval
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = count_neuron(NetArch::FullPrecision, &[1.0; 4], &[1.0; 4]);
+        let b = count_neuron(NetArch::FullPrecision, &[1.0; 6], &[1.0; 6]);
+        a.merge(&b);
+        assert_eq!(a.mult, 10);
+        assert_eq!(a.total, 10);
+    }
+}

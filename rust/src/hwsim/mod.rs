@@ -1,0 +1,18 @@
+//! Event-driven hardware computing-architecture simulator (Section 3.C).
+//!
+//! Models the six implementations of Fig. 11 at the operation level and
+//! reproduces Table 2 (operation overheads + resting probability) and the
+//! Fig. 12 gating example (21 XNOR -> ~9 under uniform ternary states),
+//! both analytically (uniform-state assumption, as the paper's Table 2)
+//! and *measured* over real weight/activation tensors coming out of
+//! training. `network` scales the per-neuron analysis to whole
+//! architectures, layer by layer.
+
+pub mod counts;
+pub mod energy;
+pub mod network;
+pub mod report;
+
+pub use counts::{count_neuron, expected_counts, NetArch, OpCounts};
+pub use energy::EnergyModel;
+pub use network::{network_counts, render_network_table, LayerReport};

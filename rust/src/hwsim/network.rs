@@ -1,0 +1,161 @@
+//! Whole-network event-driven analysis: walk an architecture's weighted
+//! layers with measured (or assumed) state distributions and produce the
+//! per-layer operation table — Section 3.C scaled from one neuron
+//! (Table 2) to the full networks of Table 1.
+
+use std::fmt::Write as _;
+
+use crate::hwsim::counts::{expected_counts, NetArch, OpCounts};
+use crate::hwsim::energy::EnergyModel;
+use crate::nn::arch::{geometry, Arch, LayerGeometry};
+
+/// Per-layer result of a network walk.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub geometry: LayerGeometry,
+    pub counts: OpCounts,
+}
+
+/// Expected op counts for one *sample* through every weighted layer.
+///
+/// `pw0` is the weight zero-state probability; `px0_per_layer` gives the
+/// activation sparsity entering each weighted layer (first entry is the
+/// input layer — real-valued inputs have ~0 zero fraction).
+pub fn network_counts(
+    arch: &Arch,
+    net: NetArch,
+    pw0: f64,
+    px0_per_layer: &[f64],
+) -> Vec<LayerReport> {
+    let geo = geometry(arch);
+    assert!(
+        px0_per_layer.len() >= geo.len(),
+        "need one activation sparsity per weighted layer ({} < {})",
+        px0_per_layer.len(),
+        geo.len()
+    );
+    geo.into_iter()
+        .enumerate()
+        .map(|(i, g)| {
+            let mut c = expected_counts(net, g.fan_in as u64, pw0, px0_per_layer[i]);
+            // scale per-neuron expectations to the layer's neuron count
+            let n = g.neuron_evals as u64;
+            c.mult *= n;
+            c.acc *= n;
+            c.xnor *= n;
+            c.bitcount *= n;
+            c.resting *= n;
+            c.total *= n;
+            LayerReport { geometry: g, counts: c }
+        })
+        .collect()
+}
+
+/// Render the per-layer table plus totals and a relative-energy summary.
+pub fn render_network_table(
+    arch_name: &str,
+    reports_by_net: &[(NetArch, Vec<LayerReport>)],
+) -> String {
+    let energy = EnergyModel::default();
+    let mut out = String::new();
+    let _ = writeln!(out, "network: {arch_name} (per-sample op counts)");
+    let fp_total: f64 = reports_by_net
+        .iter()
+        .find(|(n, _)| *n == NetArch::FullPrecision)
+        .map(|(_, reps)| reps.iter().map(|r| energy.energy_pj(&r.counts)).sum())
+        .unwrap_or(f64::NAN);
+    for (net, reps) in reports_by_net {
+        let _ = writeln!(out, "\n  {}", net.name());
+        let _ = writeln!(
+            out,
+            "  {:<24} {:>12} {:>12} {:>12} {:>9}",
+            "layer", "active ops", "resting", "total", "rest %"
+        );
+        let mut tot = OpCounts::default();
+        for r in reps {
+            let _ = writeln!(
+                out,
+                "  {:<24} {:>12} {:>12} {:>12} {:>8.1}%",
+                r.geometry.name,
+                r.counts.active_ops(),
+                r.counts.resting,
+                r.counts.total,
+                100.0 * r.counts.resting_probability()
+            );
+            tot.merge(&r.counts);
+        }
+        let e: f64 = reps.iter().map(|r| energy.energy_pj(&r.counts)).sum();
+        let _ = writeln!(
+            out,
+            "  {:<24} {:>12} {:>12} {:>12} {:>8.1}%   energy vs fp: {:.5}",
+            "TOTAL",
+            tot.active_ops(),
+            tot.resting,
+            tot.total,
+            100.0 * tot.resting_probability(),
+            e / fp_total
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::arch::build_arch;
+
+    #[test]
+    fn gxnor_network_rests_more_than_twn() {
+        let arch = build_arch("cnn_mnist").unwrap();
+        let px0 = vec![0.0, 1.0 / 3.0, 1.0 / 3.0, 1.0 / 3.0]; // input dense
+        let gx = network_counts(&arch, NetArch::Gxnor, 1.0 / 3.0, &px0);
+        let twn = network_counts(&arch, NetArch::Twn, 1.0 / 3.0, &px0);
+        let total = |reps: &[LayerReport]| {
+            let mut t = OpCounts::default();
+            for r in reps {
+                t.merge(&r.counts);
+            }
+            t
+        };
+        let g = total(&gx);
+        let t = total(&twn);
+        assert!(g.resting_probability() > t.resting_probability());
+        assert_eq!(g.total, t.total);
+    }
+
+    #[test]
+    fn first_layer_never_rests_on_dense_input(){
+        // real-valued inputs: px0 = 0 -> only zero weights rest
+        let arch = build_arch("mlp").unwrap();
+        let px0 = vec![0.0, 0.4, 0.4];
+        let reps = network_counts(&arch, NetArch::Gxnor, 1.0 / 3.0, &px0);
+        let p0 = reps[0].counts.resting_probability();
+        assert!((p0 - 1.0 / 3.0).abs() < 0.01, "{p0}");
+        let p1 = reps[1].counts.resting_probability();
+        assert!(p1 > p0);
+    }
+
+    #[test]
+    fn table_renders_totals_and_energy() {
+        let arch = build_arch("mlp").unwrap();
+        let px0 = vec![0.0, 0.36, 0.36];
+        let by_net: Vec<_> = [NetArch::FullPrecision, NetArch::Gxnor]
+            .iter()
+            .map(|&n| (n, network_counts(&arch, n, 1.0 / 3.0, &px0)))
+            .collect();
+        let t = render_network_table("mlp", &by_net);
+        assert!(t.contains("TOTAL"));
+        assert!(t.contains("GXNOR-Nets"));
+        assert!(t.contains("energy vs fp"));
+    }
+
+    #[test]
+    fn conv_layers_dominate_cnn_ops() {
+        let arch = build_arch("cnn_cifar").unwrap();
+        let px0 = vec![1.0 / 3.0; 8];
+        let reps = network_counts(&arch, NetArch::Gxnor, 1.0 / 3.0, &px0);
+        let conv_ops: u64 = reps[..6].iter().map(|r| r.counts.total).sum();
+        let fc_ops: u64 = reps[6..].iter().map(|r| r.counts.total).sum();
+        assert!(conv_ops > 10 * fc_ops);
+    }
+}

@@ -1,0 +1,131 @@
+//! Rendering of Table 2 and the Fig. 12 gating example.
+
+use std::fmt::Write as _;
+
+use crate::hwsim::counts::{count_neuron, expected_counts, NetArch, OpCounts};
+use crate::hwsim::energy::EnergyModel;
+use crate::util::prng::Prng;
+
+/// Table 2 under the uniform-state assumption for an M-input neuron.
+/// `pw0`/`px0` override the zero-state probabilities (pass 1/3 each for
+/// the paper's numbers; pass measured fractions for the empirical table).
+pub fn table2(m: u64, pw0: f64, px0: f64) -> String {
+    let e = EnergyModel::default();
+    let fp_base = expected_counts(NetArch::FullPrecision, m, pw0, px0);
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<22} {:>14} {:>14} {:>10} {:>10} {:>9} {:>10}",
+        "Networks", "Multiplication", "Accumulation", "XNOR", "BitCount", "Resting", "RelEnergy"
+    );
+    for arch in NetArch::ALL {
+        let c = expected_counts(arch, m, pw0, px0);
+        // exact analytic resting probability (integer-count rounding would
+        // distort small M: 55.56% must print as 55.6%, not 56.0%)
+        let p_rest = match arch {
+            NetArch::Twn => pw0,
+            NetArch::Gxnor => 1.0 - (1.0 - pw0) * (1.0 - px0),
+            _ => 0.0,
+        };
+        let (mult, acc, xnor) = match arch {
+            NetArch::Twn => (
+                "0".to_string(),
+                format!("0~{m}"),
+                "0".to_string(),
+            ),
+            NetArch::Gxnor => (
+                "0".to_string(),
+                "0".to_string(),
+                format!("0~{m}"),
+            ),
+            _ => (c.mult.to_string(), c.acc.to_string(), c.xnor.to_string()),
+        };
+        let bitcount = match arch {
+            NetArch::Gxnor => "0/1".to_string(),
+            _ => c.bitcount.to_string(),
+        };
+        let _ = writeln!(
+            out,
+            "{:<22} {:>14} {:>14} {:>10} {:>10} {:>8.1}% {:>10.4}",
+            arch.name(),
+            mult,
+            acc,
+            xnor,
+            bitcount,
+            100.0 * p_rest,
+            e.relative(&c, &fp_base),
+        );
+    }
+    let _ = writeln!(
+        out,
+        "(M = {m}; zero-state probability: weights {pw0:.3}, activations {px0:.3})"
+    );
+    out
+}
+
+/// The Fig. 12 experiment: a 3-neuron, 7-input ternary network — nominal
+/// 21 XNOR ops; report the measured active count under sampled uniform
+/// states. Returns (nominal, mean_active).
+pub fn fig12_example(trials: usize, seed: u64) -> (u64, f64) {
+    let mut rng = Prng::new(seed);
+    let mut active = 0u64;
+    for _ in 0..trials {
+        for _neuron in 0..3 {
+            let w: Vec<f32> = (0..7).map(|_| rng.below(3) as f32 - 1.0).collect();
+            let x: Vec<f32> = (0..7).map(|_| rng.below(3) as f32 - 1.0).collect();
+            active += count_neuron(NetArch::Gxnor, &w, &x).xnor;
+        }
+    }
+    (21, active as f64 / trials as f64)
+}
+
+/// Measured-mode table: op counts from real weight/activation slices
+/// (e.g. a trained model's first FC layer against a test batch).
+pub fn measured_row(arch: NetArch, w: &[f32], x: &[f32]) -> OpCounts {
+    // per-neuron application over x in chunks of w.len()
+    let m = w.len();
+    let mut total = OpCounts::default();
+    for chunk in x.chunks_exact(m) {
+        total.merge(&count_neuron(arch, w, chunk));
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_renders_all_rows() {
+        let t = table2(100, 1.0 / 3.0, 1.0 / 3.0);
+        for name in [
+            "Full-precision NNs",
+            "BWNs",
+            "TWNs",
+            "BNNs/XNOR",
+            "GXNOR-Nets",
+        ] {
+            assert!(t.contains(name), "missing {name} in:\n{t}");
+        }
+        assert!(t.contains("55.6%"), "GXNOR resting missing:\n{t}");
+        assert!(t.contains("33.3%"), "TWN resting missing:\n{t}");
+    }
+
+    #[test]
+    fn fig12_mean_near_nine() {
+        let (nominal, mean) = fig12_example(5000, 1);
+        assert_eq!(nominal, 21);
+        assert!((mean - 9.33).abs() < 0.35, "mean={mean}");
+    }
+
+    #[test]
+    fn measured_row_chunks() {
+        let w = vec![1.0, 0.0, -1.0];
+        let x = vec![1.0, 1.0, 0.0, /* second */ 0.0, 0.0, 0.0];
+        let c = measured_row(NetArch::Gxnor, &w, &x);
+        // first sample: pairs (1,1)=active, (0,1)=rest, (-1,0)=rest
+        // second: all rest
+        assert_eq!(c.xnor, 1);
+        assert_eq!(c.resting, 5);
+    }
+}

@@ -1,0 +1,39 @@
+//! # GXNOR-Net
+//!
+//! A production reproduction of *"GXNOR-Net: Training deep neural networks with
+//! ternary weights and activations without full-precision memory under a unified
+//! discretization framework"* (L. Deng, P. Jiao, J. Pei, Z. Wu, G. Li — Neural
+//! Networks 100, 49–58, 2018).
+//!
+//! The system is a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (Pallas, build time)** — the gated-XNOR compute hot spots
+//!   (ternary matmul, multi-step activation quantization, derivative
+//!   approximation, DST probabilistic projection) written as Pallas kernels in
+//!   `python/compile/kernels/`, checked against a pure-`jnp` oracle.
+//! * **Layer 2 (JAX, build time)** — the full forward/backward graphs of the
+//!   paper's networks (MLP and CNN over MNIST/CIFAR10/SVHN-class data) lowered
+//!   once by `python/compile/aot.py` to HLO text in `artifacts/`.
+//! * **Layer 3 (Rust, run time)** — everything in this crate: the PJRT runtime
+//!   that loads and executes the artifacts, the training coordinator that owns
+//!   the discrete-state-transition (DST) weight update, the dataset substrate,
+//!   the event-driven hardware simulator, and the experiment/benchmark harness.
+//!
+//! Python never runs on the training hot path: the lowered graphs compute
+//!   logits and gradients; the DST update — the paper's central contribution,
+//!   weights living *permanently* in a discrete space with no full-precision
+//!   hidden copy — is implemented in [`ternary::dst`] and applied by the
+//!   [`coordinator`].
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod hwsim;
+pub mod metrics;
+pub mod nn;
+pub mod ptest;
+pub mod runtime;
+pub mod sweep;
+pub mod ternary;
+pub mod util;

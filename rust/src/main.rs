@@ -1,0 +1,330 @@
+//! `gxnor` — the GXNOR-Net training coordinator CLI.
+//!
+//! Subcommands:
+//!   train   train a network with any Table-1 method (gxnor/bnn/bwn/twn/fp
+//!           or multi:N1,N2) on a real or procedural dataset
+//!   eval    evaluate a checkpoint
+//!   sweep   reproduce the ablation figures (m / a / r / levels)
+//!   hwsim   print Table 2 + the Fig. 12 gating example
+//!   info    list artifacts and their shapes
+//!
+//! Run `gxnor <cmd> --help` for options.
+
+use anyhow::{anyhow, Result};
+
+use gxnor::cli::Command;
+use gxnor::coordinator::checkpoint;
+use gxnor::coordinator::method::Method;
+use gxnor::coordinator::optimizer::OptKind;
+use gxnor::coordinator::trainer::{TrainConfig, Trainer};
+use gxnor::hwsim::report as hwreport;
+use gxnor::runtime::client::Runtime;
+use gxnor::runtime::manifest::Manifest;
+use gxnor::sweep;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print_usage();
+        return;
+    }
+    let (cmd, rest) = (argv[0].as_str(), &argv[1..]);
+    let result = match cmd {
+        "train" => cmd_train(rest),
+        "eval" => cmd_eval(rest),
+        "sweep" => cmd_sweep(rest),
+        "hwsim" => cmd_hwsim(rest),
+        "info" => cmd_info(rest),
+        "inspect" => cmd_inspect(rest),
+        other => Err(anyhow!("unknown command {other:?}; run `gxnor help`")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "gxnor — ternary weights & activations without full-precision memory\n\
+         (Deng et al., Neural Networks 2018 — unified discretization framework)\n\n\
+         usage: gxnor <train|eval|sweep|hwsim|info> [options]\n"
+    );
+    for c in [train_cmd(), eval_cmd(), sweep_cmd(), hwsim_cmd(), info_cmd()] {
+        println!("{}", c.help());
+    }
+}
+
+fn train_cmd() -> Command {
+    Command::new("train", "train a network with the DST framework")
+        .opt("config", "", "TOML config (configs/*.toml); CLI options override")
+        .opt("set", "", "config override, e.g. train.epochs=20")
+        .opt("arch", "mlp", "mlp | cnn_mnist | cnn_cifar")
+        .opt("method", "gxnor", "fp|bwn|twn|bnn|gxnor|multi:N1,N2")
+        .opt("dataset", "synth_mnist", "synth_mnist|synth_cifar|synth_svhn|mnist")
+        .opt("epochs", "5", "training epochs")
+        .opt("train-len", "4000", "train split size (procedural datasets)")
+        .opt("test-len", "1000", "test split size")
+        .opt("r", "0.5", "zero-window half width (sparsity knob)")
+        .opt("a", "0.5", "derivative pulse half-width")
+        .opt("m", "3.0", "DST transition nonlinearity")
+        .opt("lr-start", "0.02", "initial learning rate")
+        .opt("lr-fin", "0.001", "final learning rate")
+        .opt("opt", "adam", "adam | sgd")
+        .opt("update", "dst", "dst (paper) | hidden (Fig. 4a baseline: fp masters)")
+        .opt("seed", "42", "RNG seed")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("save", "", "checkpoint path to write after training")
+        .flag("augment", "pad-4 + random crop + hflip (paper CIFAR recipe)")
+        .flag("quiet", "suppress per-epoch lines")
+}
+
+fn parse_train_cfg(a: &gxnor::cli::Args) -> Result<TrainConfig> {
+    // layering: built-in defaults < TOML config < --set overrides < CLI opts
+    let mut file_cfg = gxnor::config::Config::default();
+    let cfg_path = a.opt_or("config", "");
+    if !cfg_path.is_empty() {
+        file_cfg = gxnor::config::Config::from_file(&cfg_path).map_err(|e| anyhow!(e))?;
+    }
+    if let Some(ov) = a.opt("set").filter(|s| !s.is_empty()) {
+        let (k, v) = ov
+            .split_once('=')
+            .ok_or_else(|| anyhow!("--set expects key=value, got {ov:?}"))?;
+        file_cfg.set(k, v).map_err(|e| anyhow!(e))?;
+    }
+    // CLI value if explicitly usable, else config value, else default
+    let s = |cli: &str, key: &str, def: &str| -> String {
+        match a.opt(cli) {
+            Some(v) if v != def => v.to_string(), // explicit CLI override
+            _ => file_cfg.str(key, &a.opt_or(cli, def)),
+        }
+    };
+    let f = |cli: &str, key: &str, def: f64| -> f64 {
+        let cli_v = a.opt_f64(cli, def);
+        if (cli_v - def).abs() > 1e-12 {
+            cli_v
+        } else {
+            file_cfg.f64(key, cli_v)
+        }
+    };
+    Ok(TrainConfig {
+        arch: s("arch", "train.arch", "mlp"),
+        method: Method::parse(&s("method", "train.method", "gxnor")).map_err(|e| anyhow!(e))?,
+        dataset: s("dataset", "train.dataset", "synth_mnist"),
+        train_len: f("train-len", "train.train_len", 4000.0) as usize,
+        test_len: f("test-len", "train.test_len", 1000.0) as usize,
+        epochs: f("epochs", "train.epochs", 5.0) as usize,
+        seed: f("seed", "train.seed", 42.0) as u64,
+        r: f("r", "train.r", 0.5) as f32,
+        a: f("a", "train.a", 0.5) as f32,
+        m: f("m", "train.m", 3.0) as f32,
+        lr_start: f("lr-start", "train.lr_start", 0.02),
+        lr_fin: f("lr-fin", "train.lr_fin", 0.001),
+        opt: OptKind::parse(&s("opt", "train.opt", "adam")).map_err(|e| anyhow!(e))?,
+        update_rule: gxnor::coordinator::UpdateRule::parse(&s("update", "train.update", "dst"))
+            .map_err(|e| anyhow!(e))?,
+        augment: a.flag("augment") || file_cfg.bool("train.augment", false),
+        dense_lr_scale: file_cfg.f64("train.dense_lr_scale", 0.5),
+        verbose: !a.flag("quiet"),
+    })
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let a = train_cmd().parse(argv).map_err(|e| anyhow!(e))?;
+    let cfg = parse_train_cfg(&a)?;
+    let manifest = Manifest::load(&a.opt_or("artifacts", "artifacts")).map_err(|e| anyhow!(e))?;
+    let mut rt = Runtime::new()?;
+    println!(
+        "platform={} arch={} method={} dataset={}",
+        rt.platform(),
+        cfg.arch,
+        cfg.method.name(),
+        cfg.dataset
+    );
+    let train = gxnor::data::open(&cfg.dataset, true, cfg.train_len).map_err(|e| anyhow!(e))?;
+    let test = gxnor::data::open(&cfg.dataset, false, cfg.test_len).map_err(|e| anyhow!(e))?;
+    let save = a.opt_or("save", "");
+    let mut trainer = Trainer::new(&mut rt, &manifest, cfg)?;
+    println!("graph: {} (batch {})", trainer.graph_name(), trainer.batch_size());
+    let report = trainer.run(train.as_ref(), test.as_ref())?;
+    println!("\ntest accuracy : {:.2}%", 100.0 * report.test_acc);
+    println!("act sparsity  : {:.3}", report.mean_act_sparsity);
+    println!("w zero frac   : {:.3}", report.weight_zero_fraction);
+    println!(
+        "weight memory : {} B packed vs {} B f32 ({:.1}x smaller)",
+        report.packed_bytes,
+        report.fp32_bytes,
+        report.fp32_bytes as f64 / report.packed_bytes.max(1) as f64
+    );
+    println!(
+        "per-step      : {:.1} ms total ({:.1} ms graph exec, {:.2} ms DST+update)",
+        report.step_time_ms, report.exec_time_ms, report.dst_time_ms
+    );
+    println!("loss curve    : {}", report.recorder.sparkline("loss", 60));
+    if !save.is_empty() {
+        checkpoint::save(&trainer.model, &save).map_err(|e| anyhow!(e))?;
+        println!("checkpoint    : {save}");
+    }
+    Ok(())
+}
+
+fn eval_cmd() -> Command {
+    Command::new("eval", "evaluate a checkpoint on a dataset")
+        .req("ckpt", "checkpoint path")
+        .opt("arch", "mlp", "architecture of the checkpoint")
+        .opt("method", "gxnor", "method used at training time")
+        .opt("dataset", "synth_mnist", "dataset")
+        .opt("test-len", "1000", "test split size")
+        .opt("r", "0.5", "zero-window half width")
+        .opt("artifacts", "artifacts", "artifact directory")
+}
+
+fn cmd_eval(argv: &[String]) -> Result<()> {
+    let a = eval_cmd().parse(argv).map_err(|e| anyhow!(e))?;
+    let manifest = Manifest::load(&a.opt_or("artifacts", "artifacts")).map_err(|e| anyhow!(e))?;
+    let mut rt = Runtime::new()?;
+    let cfg = TrainConfig {
+        arch: a.opt_or("arch", "mlp"),
+        method: Method::parse(&a.opt_or("method", "gxnor")).map_err(|e| anyhow!(e))?,
+        dataset: a.opt_or("dataset", "synth_mnist"),
+        test_len: a.opt_usize("test-len", 1000),
+        r: a.opt_f32("r", 0.5),
+        verbose: false,
+        ..Default::default()
+    };
+    let test = gxnor::data::open(&cfg.dataset, false, cfg.test_len).map_err(|e| anyhow!(e))?;
+    let mut trainer = Trainer::new(&mut rt, &manifest, cfg)?;
+    checkpoint::load(&mut trainer.model, a.opt("ckpt").unwrap()).map_err(|e| anyhow!(e))?;
+    let acc = trainer.evaluate(test.as_ref())?;
+    println!("test accuracy: {:.2}%", 100.0 * acc);
+    Ok(())
+}
+
+fn sweep_cmd() -> Command {
+    Command::new("sweep", "reproduce the ablation figures (8/9/10/13)")
+        .opt("param", "m", "m | a | r | levels")
+        .opt("values", "", "comma list, e.g. 0.5,1,3,10 (scalar sweeps)")
+        .opt("grid", "", "N1xN2 list for levels, e.g. 0,0;1,1;2,2;6,4")
+        .opt("epochs", "3", "epochs per point")
+        .opt("train-len", "3000", "train split size")
+        .opt("test-len", "800", "test split size")
+        .opt("dataset", "synth_mnist", "dataset")
+        .opt("seed", "42", "RNG seed")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("csv", "", "write results CSV to this path")
+}
+
+fn cmd_sweep(argv: &[String]) -> Result<()> {
+    let a = sweep_cmd().parse(argv).map_err(|e| anyhow!(e))?;
+    let manifest = Manifest::load(&a.opt_or("artifacts", "artifacts")).map_err(|e| anyhow!(e))?;
+    let mut rt = Runtime::new()?;
+    let base = TrainConfig {
+        epochs: a.opt_usize("epochs", 3),
+        train_len: a.opt_usize("train-len", 3000),
+        test_len: a.opt_usize("test-len", 800),
+        dataset: a.opt_or("dataset", "synth_mnist"),
+        seed: a.opt_u64("seed", 42),
+        verbose: false,
+        ..Default::default()
+    };
+    let param = a.opt_or("param", "m");
+    let points = if param == "levels" {
+        let grid_s = a.opt_or("grid", "0,0;1,1;2,2;3,3;6,4");
+        let grid: Vec<(u32, u32)> = grid_s
+            .split(';')
+            .map(|p| {
+                let (x, y) = p.split_once(',').ok_or_else(|| anyhow!("bad grid point {p:?}"))?;
+                Ok((x.trim().parse()?, y.trim().parse()?))
+            })
+            .collect::<Result<_>>()?;
+        sweep::sweep_levels(&mut rt, &manifest, &base, &grid)?
+    } else {
+        let default_vals = match param.as_str() {
+            "m" => "0.5,1,2,3,5,10",
+            "a" => "0.1,0.25,0.5,1.0,2.0",
+            _ => "0.05,0.2,0.5,0.8,0.95",
+        };
+        let vals: Vec<f64> = a
+            .opt_or("values", default_vals)
+            .split(',')
+            .map(|s| s.trim().parse::<f64>())
+            .collect::<Result<_, _>>()?;
+        sweep::sweep_scalar(&mut rt, &manifest, &base, &param, &vals)?
+    };
+    print!("{}", sweep::render_table(&format!("sweep {param}"), &points));
+    if let Some(bp) = sweep::best(&points) {
+        println!("best: {} ({:.2}%)", bp.label, 100.0 * bp.test_acc);
+    }
+    let csv = a.opt_or("csv", "");
+    if !csv.is_empty() {
+        let mut s = String::from("label,value,test_acc,act_sparsity,w_zero_frac\n");
+        for p in &points {
+            s.push_str(&format!(
+                "{},{},{},{},{}\n",
+                p.label, p.value, p.test_acc, p.act_sparsity, p.weight_zero_fraction
+            ));
+        }
+        std::fs::write(&csv, s)?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn hwsim_cmd() -> Command {
+    Command::new("hwsim", "event-driven architecture analysis (Table 2, Fig. 12)")
+        .opt("m", "100", "neuron fan-in M")
+        .opt("pw0", "0.3333333", "weight zero-state probability")
+        .opt("px0", "0.3333333", "activation zero-state probability")
+        .opt("trials", "10000", "Fig. 12 sampling trials")
+}
+
+fn cmd_hwsim(argv: &[String]) -> Result<()> {
+    let a = hwsim_cmd().parse(argv).map_err(|e| anyhow!(e))?;
+    println!("{}", hwreport::table2(a.opt_u64("m", 100), a.opt_f64("pw0", 1.0 / 3.0), a.opt_f64("px0", 1.0 / 3.0)));
+    let (nominal, mean) = hwreport::fig12_example(a.opt_usize("trials", 10000), 7);
+    println!(
+        "Fig. 12 example: {nominal} nominal XNOR ops -> {mean:.2} active on average \
+         (paper: 21 -> 9)"
+    );
+    Ok(())
+}
+
+fn inspect_cmd() -> Command {
+    Command::new("inspect", "describe a checkpoint (tensors, spaces, histograms)")
+}
+
+fn cmd_inspect(argv: &[String]) -> Result<()> {
+    let a = inspect_cmd().parse(argv).map_err(|e| anyhow!(e))?;
+    let path = a
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: gxnor inspect <ckpt>"))?;
+    let bytes = std::fs::read(path)?;
+    print!("{}", checkpoint::inspect(&bytes).map_err(|e| anyhow!(e))?);
+    Ok(())
+}
+
+fn info_cmd() -> Command {
+    Command::new("info", "list lowered artifacts")
+        .opt("artifacts", "artifacts", "artifact directory")
+}
+
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let a = info_cmd().parse(argv).map_err(|e| anyhow!(e))?;
+    let manifest = Manifest::load(&a.opt_or("artifacts", "artifacts")).map_err(|e| anyhow!(e))?;
+    println!(
+        "{:<28} {:>6} {:>8} {:>8} {:>9}",
+        "graph", "batch", "params", "inputs", "outputs"
+    );
+    for g in &manifest.graphs {
+        println!(
+            "{:<28} {:>6} {:>8} {:>8} {:>9}",
+            g.name,
+            g.batch,
+            g.params.len(),
+            g.inputs.len(),
+            g.outputs.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,200 @@
+//! Metrics tracking and emission for training/evaluation runs.
+//!
+//! A `Recorder` accumulates named scalar series (loss, accuracy, sparsity,
+//! step time …) and renders them as CSV, JSON, summary statistics, or a
+//! terminal sparkline — the benches use the latter to show Fig. 7/8/9/10
+//! curves inline.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// Accumulates scalar series keyed by metric name.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    series: BTreeMap<String, Vec<f64>>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, name: &str, value: f64) {
+        self.series.entry(name.to_string()).or_default().push(value);
+    }
+
+    pub fn get(&self, name: &str) -> &[f64] {
+        self.series.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn last(&self, name: &str) -> Option<f64> {
+        self.get(name).last().copied()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.series.keys()
+    }
+
+    pub fn len(&self, name: &str) -> usize {
+        self.get(name).len()
+    }
+
+    // ---- statistics -------------------------------------------------------
+
+    pub fn mean(&self, name: &str) -> f64 {
+        let xs = self.get(name);
+        if xs.is_empty() {
+            return f64::NAN;
+        }
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+
+    pub fn max(&self, name: &str) -> f64 {
+        self.get(name).iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn min(&self, name: &str) -> f64 {
+        self.get(name).iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Mean of the final `k` points (converged value estimate).
+    pub fn tail_mean(&self, name: &str, k: usize) -> f64 {
+        let xs = self.get(name);
+        if xs.is_empty() {
+            return f64::NAN;
+        }
+        let tail = &xs[xs.len().saturating_sub(k)..];
+        tail.iter().sum::<f64>() / tail.len() as f64
+    }
+
+    // ---- rendering ---------------------------------------------------------
+
+    /// CSV with one column per series (rows padded with empty cells).
+    pub fn to_csv(&self) -> String {
+        let names: Vec<&String> = self.series.keys().collect();
+        let rows = names.iter().map(|n| self.series[*n].len()).max().unwrap_or(0);
+        let mut out = String::new();
+        out.push_str("step");
+        for n in &names {
+            out.push(',');
+            out.push_str(n);
+        }
+        out.push('\n');
+        for r in 0..rows {
+            let _ = write!(out, "{r}");
+            for n in &names {
+                out.push(',');
+                if let Some(v) = self.series[*n].get(r) {
+                    let _ = write!(out, "{v}");
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.series
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::arr_f64(v)))
+                .collect(),
+        )
+    }
+
+    pub fn save_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+
+    /// Unicode sparkline of a series (terminal-friendly curve rendering).
+    pub fn sparkline(&self, name: &str, width: usize) -> String {
+        let xs = self.get(name);
+        if xs.is_empty() {
+            return String::new();
+        }
+        let blocks = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let lo = self.min(name);
+        let hi = self.max(name);
+        let span = (hi - lo).max(1e-12);
+        let step = (xs.len() as f64 / width as f64).max(1.0);
+        let mut out = String::new();
+        let mut i = 0.0;
+        while (i as usize) < xs.len() && out.chars().count() < width {
+            // bucket average
+            let a = i as usize;
+            let b = ((i + step) as usize).min(xs.len()).max(a + 1);
+            let v = xs[a..b].iter().sum::<f64>() / (b - a) as f64;
+            let idx = (((v - lo) / span) * 7.0).round() as usize;
+            out.push(blocks[idx.min(7)]);
+            i += step;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_stats() {
+        let mut r = Recorder::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            r.push("loss", v);
+        }
+        assert_eq!(r.len("loss"), 4);
+        assert_eq!(r.mean("loss"), 2.5);
+        assert_eq!(r.min("loss"), 1.0);
+        assert_eq!(r.max("loss"), 4.0);
+        assert_eq!(r.tail_mean("loss", 2), 3.5);
+        assert_eq!(r.last("loss"), Some(4.0));
+    }
+
+    #[test]
+    fn missing_series_is_empty() {
+        let r = Recorder::new();
+        assert!(r.get("none").is_empty());
+        assert!(r.mean("none").is_nan());
+    }
+
+    #[test]
+    fn csv_layout() {
+        let mut r = Recorder::new();
+        r.push("a", 1.0);
+        r.push("a", 2.0);
+        r.push("b", 9.0);
+        let csv = r.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "step,a,b");
+        assert_eq!(lines[1], "0,1,9");
+        assert_eq!(lines[2], "1,2,"); // padded
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut r = Recorder::new();
+        r.push("x", 0.5);
+        let j = r.to_json();
+        assert_eq!(
+            j.get("x").unwrap().as_arr().unwrap()[0].as_f64(),
+            Some(0.5)
+        );
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let mut r = Recorder::new();
+        for i in 0..64 {
+            r.push("up", i as f64);
+        }
+        let s = r.sparkline("up", 8);
+        assert_eq!(s.chars().count(), 8);
+        assert!(s.starts_with('▁'));
+        assert!(s.ends_with('█'));
+    }
+}

@@ -1,0 +1,188 @@
+//! Rust-side architecture descriptions, mirroring
+//! `python/compile/model.py::build_arch`.
+//!
+//! The runtime itself never needs these (shapes come from the manifest);
+//! they exist for the *hardware simulator*, which must know each layer's
+//! spatial geometry (neuron count × fan-in) to turn a trained model into
+//! the per-layer operation tables of Section 3.C.
+
+/// One layer of a network.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layer {
+    /// k×k convolution, cin -> cout, with "SAME" (true) or "VALID" padding.
+    Conv { cin: usize, cout: usize, k: usize, same: bool },
+    /// Max-pool size×size, stride = size.
+    Pool { size: usize },
+    Flatten,
+    Dense { din: usize, dout: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct Arch {
+    pub name: &'static str,
+    /// (H, W, C) per-sample input
+    pub input: (usize, usize, usize),
+    pub layers: Vec<Layer>,
+}
+
+/// Mirror of the python catalogue (width 1.0).
+pub fn build_arch(name: &str) -> Result<Arch, String> {
+    match name {
+        "mlp" => Ok(Arch {
+            name: "mlp",
+            input: (1, 1, 784),
+            layers: vec![
+                Layer::Flatten,
+                Layer::Dense { din: 784, dout: 512 },
+                Layer::Dense { din: 512, dout: 512 },
+                Layer::Dense { din: 512, dout: 10 },
+            ],
+        }),
+        "cnn_mnist" => Ok(Arch {
+            name: "cnn_mnist",
+            input: (28, 28, 1),
+            layers: vec![
+                Layer::Conv { cin: 1, cout: 32, k: 5, same: false },
+                Layer::Pool { size: 2 },
+                Layer::Conv { cin: 32, cout: 64, k: 5, same: false },
+                Layer::Pool { size: 2 },
+                Layer::Flatten,
+                Layer::Dense { din: 1024, dout: 512 },
+                Layer::Dense { din: 512, dout: 10 },
+            ],
+        }),
+        "cnn_cifar" => Ok(Arch {
+            name: "cnn_cifar",
+            input: (32, 32, 3),
+            layers: vec![
+                Layer::Conv { cin: 3, cout: 128, k: 3, same: true },
+                Layer::Conv { cin: 128, cout: 128, k: 3, same: true },
+                Layer::Pool { size: 2 },
+                Layer::Conv { cin: 128, cout: 256, k: 3, same: true },
+                Layer::Conv { cin: 256, cout: 256, k: 3, same: true },
+                Layer::Pool { size: 2 },
+                Layer::Conv { cin: 256, cout: 512, k: 3, same: true },
+                Layer::Conv { cin: 512, cout: 512, k: 3, same: true },
+                Layer::Pool { size: 2 },
+                Layer::Flatten,
+                Layer::Dense { din: 8192, dout: 1024 },
+                Layer::Dense { din: 1024, dout: 10 },
+            ],
+        }),
+        other => Err(format!("unknown arch {other:?}")),
+    }
+}
+
+/// One weighted layer's compute geometry after shape propagation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerGeometry {
+    pub name: String,
+    /// fan-in per neuron evaluation (M in Table 2)
+    pub fan_in: usize,
+    /// neuron evaluations per sample (out positions × out channels)
+    pub neuron_evals: usize,
+    /// trainable weights in the layer
+    pub weights: usize,
+}
+
+impl LayerGeometry {
+    /// Nominal multiply-accumulate (or XNOR) ops per sample.
+    pub fn nominal_ops(&self) -> u64 {
+        self.fan_in as u64 * self.neuron_evals as u64
+    }
+}
+
+/// Propagate shapes through the network, yielding geometry per weighted
+/// layer (the hwsim's input).
+pub fn geometry(arch: &Arch) -> Vec<LayerGeometry> {
+    let (mut h, mut w, mut c) = arch.input;
+    let mut out = Vec::new();
+    let mut li = 0usize;
+    for layer in &arch.layers {
+        match *layer {
+            Layer::Conv { cin, cout, k, same } => {
+                assert_eq!(c, cin, "channel mismatch at layer {li}");
+                let (oh, ow) = if same { (h, w) } else { (h - k + 1, w - k + 1) };
+                out.push(LayerGeometry {
+                    name: format!("conv{li} {k}x{k}x{cin}->{cout}"),
+                    fan_in: k * k * cin,
+                    neuron_evals: oh * ow * cout,
+                    weights: k * k * cin * cout,
+                });
+                h = oh;
+                w = ow;
+                c = cout;
+                li += 1;
+            }
+            Layer::Pool { size } => {
+                h /= size;
+                w /= size;
+            }
+            Layer::Flatten => {
+                c = h * w * c;
+                h = 1;
+                w = 1;
+            }
+            Layer::Dense { din, dout } => {
+                assert_eq!(h * w * c, din, "dense fan-in mismatch at layer {li}");
+                out.push(LayerGeometry {
+                    name: format!("fc{li} {din}->{dout}"),
+                    fan_in: din,
+                    neuron_evals: dout,
+                    weights: din * dout,
+                });
+                c = dout;
+                h = 1;
+                w = 1;
+                li += 1;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_cnn_geometry_matches_paper() {
+        // 32C5-MP2-64C5-MP2-512FC-SVM over 28x28: 24^2, 8^2 feature maps
+        let arch = build_arch("cnn_mnist").unwrap();
+        let g = geometry(&arch);
+        assert_eq!(g.len(), 4);
+        assert_eq!(g[0].fan_in, 25);
+        assert_eq!(g[0].neuron_evals, 24 * 24 * 32);
+        assert_eq!(g[1].fan_in, 5 * 5 * 32);
+        assert_eq!(g[1].neuron_evals, 8 * 8 * 64);
+        assert_eq!(g[2].fan_in, 1024);
+        assert_eq!(g[2].neuron_evals, 512);
+        assert_eq!(g[3].weights, 5120);
+    }
+
+    #[test]
+    fn cifar_geometry_matches_paper() {
+        let arch = build_arch("cnn_cifar").unwrap();
+        let g = geometry(&arch);
+        assert_eq!(g.len(), 8);
+        // last conv block: 8x8 maps at 512 channels
+        assert_eq!(g[5].neuron_evals, 8 * 8 * 512);
+        // FC: 512 * 4 * 4 = 8192 -> 1024
+        assert_eq!(g[6].fan_in, 8192);
+        // total weights ~ 13M (the paper-scale net)
+        let total: usize = g.iter().map(|l| l.weights).sum();
+        assert!(total > 12_000_000 && total < 16_000_000, "{total}");
+    }
+
+    #[test]
+    fn mlp_geometry() {
+        let g = geometry(&build_arch("mlp").unwrap());
+        assert_eq!(g.len(), 3);
+        assert_eq!(g[0].nominal_ops(), 784 * 512);
+    }
+
+    #[test]
+    fn unknown_arch_rejected() {
+        assert!(build_arch("vgg").is_err());
+    }
+}

@@ -1,0 +1,115 @@
+//! Parameter initialization.
+//!
+//! Weights start uniformly distributed over the states of Z_N (matching
+//! `python/compile/model.py::init_params` — a nearest-grid projection of a
+//! Glorot init collapses to all-zeros for coarse grids); BN gamma = 1,
+//! beta = 0, running mean = 0, running var = 1.
+
+use crate::nn::params::{ModelState, ParamDesc, ParamKind, ParamValue};
+use crate::ternary::{DiscreteSpace, PackedTensor};
+use crate::util::prng::Prng;
+
+/// Build a fresh model state from manifest descriptors.
+pub fn init_model(
+    descs: Vec<ParamDesc>,
+    bn_names: Vec<String>,
+    bn_shapes: &[usize],
+    space: DiscreteSpace,
+    seed: u64,
+) -> ModelState {
+    let mut rng = Prng::new(seed);
+    let mut values = Vec::with_capacity(descs.len());
+    for d in &descs {
+        match d.kind {
+            ParamKind::Weight => {
+                let mut tensor_rng = rng.fork(d.layer as u64 + 1);
+                let vals: Vec<f32> = (0..d.numel())
+                    .map(|_| space.state(tensor_rng.below(space.n_states())))
+                    .collect();
+                values.push(ParamValue::Discrete(PackedTensor::pack(
+                    &vals, &d.shape, space,
+                )));
+            }
+            ParamKind::Gamma => values.push(ParamValue::Dense(vec![1.0; d.numel()])),
+            ParamKind::Beta => values.push(ParamValue::Dense(vec![0.0; d.numel()])),
+        }
+    }
+    assert_eq!(bn_names.len(), bn_shapes.len());
+    let bn_state = bn_names
+        .iter()
+        .zip(bn_shapes)
+        .map(|(name, &len)| {
+            if name.starts_with("rvar") {
+                vec![1.0f32; len]
+            } else {
+                vec![0.0f32; len]
+            }
+        })
+        .collect();
+    ModelState { descs, values, bn_names, bn_state, space }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn descs() -> Vec<ParamDesc> {
+        vec![
+            ParamDesc { name: "W0".into(), shape: vec![20, 30], kind: ParamKind::Weight, layer: 0 },
+            ParamDesc { name: "gamma0".into(), shape: vec![30], kind: ParamKind::Gamma, layer: 0 },
+            ParamDesc { name: "beta0".into(), shape: vec![30], kind: ParamKind::Beta, layer: 0 },
+            ParamDesc { name: "W1".into(), shape: vec![30, 10], kind: ParamKind::Weight, layer: 1 },
+        ]
+    }
+
+    #[test]
+    fn init_shapes_and_kinds() {
+        let m = init_model(
+            descs(),
+            vec!["rmean0".into(), "rvar0".into()],
+            &[30, 30],
+            DiscreteSpace::TERNARY,
+            42,
+        );
+        assert_eq!(m.values.len(), 4);
+        assert_eq!(m.values[0].len(), 600);
+        assert_eq!(m.values[1].to_f32(), vec![1.0; 30]);
+        assert_eq!(m.values[2].to_f32(), vec![0.0; 30]);
+        assert_eq!(m.bn_state[0], vec![0.0; 30]);
+        assert_eq!(m.bn_state[1], vec![1.0; 30]);
+        assert_eq!(m.n_weights(), 600 + 300);
+    }
+
+    #[test]
+    fn weights_on_grid_and_not_degenerate() {
+        for n in [0u32, 1, 3] {
+            let space = DiscreteSpace::new(n);
+            let m = init_model(descs(), vec![], &[], space, 7);
+            if let ParamValue::Discrete(p) = &m.values[0] {
+                let h = p.histogram();
+                assert_eq!(h.iter().sum::<u64>(), 600);
+                // roughly uniform: every state present for small spaces
+                assert!(h.iter().all(|&c| c > 0), "N={n}: {h:?}");
+            } else {
+                panic!("W0 should be discrete");
+            }
+        }
+    }
+
+    #[test]
+    fn different_layers_different_streams() {
+        let m = init_model(descs(), vec![], &[], DiscreteSpace::TERNARY, 1);
+        let w0 = m.values[0].to_f32();
+        let w1 = m.values[3].to_f32();
+        assert_ne!(&w0[..10], &w1[..10]);
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a = init_model(descs(), vec![], &[], DiscreteSpace::TERNARY, 5);
+        let b = init_model(descs(), vec![], &[], DiscreteSpace::TERNARY, 5);
+        assert_eq!(a.values[0].to_f32(), b.values[0].to_f32());
+        let c = init_model(descs(), vec![], &[], DiscreteSpace::TERNARY, 6);
+        assert_ne!(a.values[0].to_f32(), c.values[0].to_f32());
+    }
+}

@@ -1,0 +1,11 @@
+//! Model-side bookkeeping: parameter descriptors (parsed from the artifact
+//! manifest), discrete/dense initialization, the in-memory model state the
+//! coordinator trains, and rust-side architecture geometry for the
+//! hardware simulator.
+
+pub mod arch;
+pub mod init;
+pub mod params;
+
+pub use arch::{build_arch, geometry, Arch, Layer, LayerGeometry};
+pub use params::{ModelState, ParamDesc, ParamKind};

@@ -1,0 +1,207 @@
+//! Parameter descriptors and trainable model state.
+//!
+//! The Rust side hard-codes nothing about network shapes: descriptors are
+//! parsed from `artifacts/manifest.json` (written by `python/compile/aot.py`).
+//! Weights are held *packed* on the Z_N grid (`PackedTensor`) — the paper's
+//! no-hidden-weights property — and expanded to f32 only to cross the PJRT
+//! boundary. BatchNorm affine parameters and running stats are small dense
+//! f32 vectors (activation-side, O(#channels); see DESIGN.md §6).
+
+use crate::ternary::{DiscreteSpace, PackedTensor};
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamKind {
+    Weight,
+    Gamma,
+    Beta,
+}
+
+impl ParamKind {
+    pub fn parse(s: &str) -> Result<ParamKind, String> {
+        match s {
+            "weight" => Ok(ParamKind::Weight),
+            "gamma" => Ok(ParamKind::Gamma),
+            "beta" => Ok(ParamKind::Beta),
+            other => Err(format!("unknown param kind {other:?}")),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamDesc {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: ParamKind,
+    pub layer: usize,
+}
+
+impl ParamDesc {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn from_manifest(j: &Json) -> Result<ParamDesc, String> {
+        Ok(ParamDesc {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("param missing name")?
+                .to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_usize_vec)
+                .ok_or("param missing shape")?,
+            kind: ParamKind::parse(
+                j.get("kind").and_then(Json::as_str).ok_or("param missing kind")?,
+            )?,
+            layer: j.get("layer").and_then(Json::as_usize).ok_or("param missing layer")?,
+        })
+    }
+}
+
+/// One trainable parameter: packed weight or dense BN affine.
+#[derive(Clone, Debug)]
+pub enum ParamValue {
+    /// Weights on the Z_N grid, bit-packed.
+    Discrete(PackedTensor),
+    /// BN gamma/beta, plain f32.
+    Dense(Vec<f32>),
+}
+
+impl ParamValue {
+    pub fn len(&self) -> usize {
+        match self {
+            ParamValue::Discrete(p) => p.len(),
+            ParamValue::Dense(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand to f32 (PJRT boundary format).
+    pub fn to_f32(&self) -> Vec<f32> {
+        match self {
+            ParamValue::Discrete(p) => p.unpack(),
+            ParamValue::Dense(v) => v.clone(),
+        }
+    }
+}
+
+/// Full trainable state of one network: params + BN running stats.
+#[derive(Clone, Debug)]
+pub struct ModelState {
+    pub descs: Vec<ParamDesc>,
+    pub values: Vec<ParamValue>,
+    pub bn_names: Vec<String>,
+    pub bn_state: Vec<Vec<f32>>,
+    pub space: DiscreteSpace,
+}
+
+impl ModelState {
+    /// Total weight count (the paper's memory accounting unit).
+    pub fn n_weights(&self) -> usize {
+        self.descs
+            .iter()
+            .zip(&self.values)
+            .filter(|(d, _)| d.kind == ParamKind::Weight)
+            .map(|(d, _)| d.numel())
+            .sum()
+    }
+
+    /// Bytes held by weights in packed form vs the f32 hidden-weight copy
+    /// the paper's baselines would need. Returns (packed, fp32).
+    pub fn weight_memory_bytes(&self) -> (usize, usize) {
+        let mut packed = 0usize;
+        let mut fp32 = 0usize;
+        for (d, v) in self.descs.iter().zip(&self.values) {
+            if d.kind == ParamKind::Weight {
+                if let ParamValue::Discrete(p) = v {
+                    packed += p.payload_bytes();
+                }
+                fp32 += d.numel() * 4;
+            }
+        }
+        (packed, fp32)
+    }
+
+    /// Mean zero-state fraction over all weight tensors (Table 2 input).
+    pub fn weight_zero_fraction(&self) -> f64 {
+        let (mut zeros, mut total) = (0.0f64, 0.0f64);
+        for (d, v) in self.descs.iter().zip(&self.values) {
+            if d.kind == ParamKind::Weight {
+                if let ParamValue::Discrete(p) = v {
+                    zeros += p.zero_fraction() * p.len() as f64;
+                    total += p.len() as f64;
+                }
+            }
+        }
+        if total == 0.0 {
+            0.0
+        } else {
+            zeros / total
+        }
+    }
+
+    /// Histogram over weight states (aggregated across tensors).
+    pub fn weight_histogram(&self) -> Vec<u64> {
+        let mut h = vec![0u64; self.space.n_states()];
+        for (d, v) in self.descs.iter().zip(&self.values) {
+            if d.kind == ParamKind::Weight {
+                if let ParamValue::Discrete(p) = v {
+                    for (i, c) in p.histogram().into_iter().enumerate() {
+                        h[i] += c;
+                    }
+                }
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_param_desc() {
+        let j = Json::parse(r#"{"name":"W0","shape":[784,512],"kind":"weight","layer":0}"#)
+            .unwrap();
+        let d = ParamDesc::from_manifest(&j).unwrap();
+        assert_eq!(d.name, "W0");
+        assert_eq!(d.numel(), 784 * 512);
+        assert_eq!(d.kind, ParamKind::Weight);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        let j = Json::parse(r#"{"name":"W0"}"#).unwrap();
+        assert!(ParamDesc::from_manifest(&j).is_err());
+        let j = Json::parse(r#"{"name":"x","shape":[1],"kind":"mystery","layer":0}"#).unwrap();
+        assert!(ParamDesc::from_manifest(&j).is_err());
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let space = DiscreteSpace::TERNARY;
+        let w = PackedTensor::zeros(&[1000], space);
+        let state = ModelState {
+            descs: vec![
+                ParamDesc { name: "W0".into(), shape: vec![1000], kind: ParamKind::Weight, layer: 0 },
+                ParamDesc { name: "gamma0".into(), shape: vec![10], kind: ParamKind::Gamma, layer: 0 },
+            ],
+            values: vec![ParamValue::Discrete(w), ParamValue::Dense(vec![1.0; 10])],
+            bn_names: vec![],
+            bn_state: vec![],
+            space,
+        };
+        assert_eq!(state.n_weights(), 1000);
+        let (packed, fp) = state.weight_memory_bytes();
+        assert_eq!(fp, 4000);
+        assert!(packed <= 256 + 8, "2-bit packing: {packed}");
+        assert_eq!(state.weight_zero_fraction(), 1.0);
+        assert_eq!(state.weight_histogram()[1], 1000);
+    }
+}

@@ -1,0 +1,152 @@
+//! Miniature property-based testing framework (no proptest offline).
+//!
+//! Usage (`no_run`: doctest binaries don't get the xla rpath):
+//! ```no_run
+//! use gxnor::ptest::{property, Gen};
+//! property("abs is non-negative", 200, |g: &mut Gen| {
+//!     let x = g.f32_in(-10.0, 10.0);
+//!     if x.abs() < 0.0 { return Err(format!("abs({x}) < 0")); }
+//!     Ok(())
+//! });
+//! ```
+//!
+//! Each case runs with a deterministic per-case seed derived from the
+//! property name; failures report the case index and seed so a regression
+//! can be replayed with `replay(name, case)`.
+
+use crate::util::prng::Prng;
+
+/// Random-input generator handed to each property case.
+pub struct Gen {
+    rng: Prng,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Prng::new(seed) }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        lo + self.rng.below(hi - lo)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn unit_f32(&mut self) -> f32 {
+        self.rng.uniform_f32()
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.rng.normal_f32()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| self.normal_f32() * scale).collect()
+    }
+
+    /// Access the raw PRNG (e.g. to feed APIs that take `&mut Prng`).
+    pub fn rng(&mut self) -> &mut Prng {
+        &mut self.rng
+    }
+}
+
+fn name_seed(name: &str) -> u64 {
+    // FNV-1a
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Run `cases` random cases of the property; panics with a replayable
+/// diagnostic on the first failure.
+pub fn property(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    let base = name_seed(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed:#x}): {msg}\n\
+                 replay with ptest::replay({name:?}, {case}, ..)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by (name, case-index).
+pub fn replay(name: &str, case: u64, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    let seed = name_seed(name).wrapping_add(case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut g = Gen::new(seed);
+    prop(&mut g).expect("replayed case should reproduce the failure");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        property("always-true", 50, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-false\" failed")]
+    fn failing_property_panics_with_case() {
+        property("always-false", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        property("det", 5, |g| {
+            first.push(g.u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        property("det", 5, |g| {
+            second.push(g.u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen::new(1);
+        for _ in 0..100 {
+            let x = g.f32_in(2.0, 3.0);
+            assert!((2.0..3.0).contains(&x));
+            let n = g.usize_in(5, 9);
+            assert!((5..9).contains(&n));
+        }
+        let v = g.vec_f32(17, -1.0, 1.0);
+        assert_eq!(v.len(), 17);
+    }
+}

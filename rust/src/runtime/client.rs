@@ -1,0 +1,266 @@
+//! PJRT execution: compile-once, execute-many.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO **text** ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`. Executables are cached by graph name, so
+//! a parameter sweep touching one graph compiles exactly once.
+//!
+//! Input marshalling: callers pass `&[f32]` / `&[i32]` slices in manifest
+//! input order; literals are built with `create_from_shape_and_untyped_data`
+//! (one memcpy, no per-element conversion). Outputs come back as a flat
+//! `Vec<Vec<f32>>` in manifest output order.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::manifest::GraphMeta;
+
+/// A caller-supplied graph input.
+#[derive(Clone, Copy, Debug)]
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    Scalar(f32),
+}
+
+/// PJRT CPU runtime with an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) the executable for a graph.
+    pub fn load(&mut self, meta: &GraphMeta) -> Result<()> {
+        if self.cache.contains_key(&meta.name) {
+            return Ok(());
+        }
+        let path = meta
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling graph {}", meta.name))?;
+        self.cache.insert(meta.name.clone(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.cache.contains_key(name)
+    }
+
+    /// Execute a loaded graph. `args` must match `meta.inputs` in order,
+    /// length and dtype. Returns one flat f32 vector per manifest output.
+    pub fn execute(&self, meta: &GraphMeta, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        let exe = self
+            .cache
+            .get(&meta.name)
+            .ok_or_else(|| anyhow!("graph {} not loaded", meta.name))?;
+        if args.len() != meta.inputs.len() {
+            return Err(anyhow!(
+                "graph {} expects {} inputs, got {}",
+                meta.name,
+                meta.inputs.len(),
+                args.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (io, arg) in meta.inputs.iter().zip(args) {
+            literals.push(build_literal(io, arg).with_context(|| {
+                format!("building input {:?} for {}", io.name, meta.name)
+            })?);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", meta.name))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let elems = result.to_tuple()?;
+        if elems.len() != meta.outputs.len() {
+            return Err(anyhow!(
+                "graph {} returned {} outputs, manifest says {}",
+                meta.name,
+                elems.len(),
+                meta.outputs.len()
+            ));
+        }
+        let mut out = Vec::with_capacity(elems.len());
+        for (io, lit) in meta.outputs.iter().zip(elems) {
+            let v: Vec<f32> = lit
+                .to_vec()
+                .with_context(|| format!("reading output {:?}", io.name))?;
+            if v.len() != io.numel() {
+                return Err(anyhow!(
+                    "output {:?}: got {} elements, expected {}",
+                    io.name,
+                    v.len(),
+                    io.numel()
+                ));
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+fn build_literal(io: &crate::runtime::manifest::IoDesc, arg: &Arg<'_>) -> Result<xla::Literal> {
+    // single-copy construction: `vec1(..).reshape(..)` would copy twice
+    // (§Perf iteration 5 — weights cross this boundary every step)
+    fn as_bytes<T>(data: &[T]) -> &[u8] {
+        unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+        }
+    }
+    match (io.dtype.as_str(), arg) {
+        ("f32", Arg::Scalar(v)) => {
+            if !io.shape.is_empty() {
+                return Err(anyhow!("scalar arg for non-scalar input"));
+            }
+            Ok(xla::Literal::scalar(*v))
+        }
+        ("f32", Arg::F32(data)) => {
+            if data.len() != io.numel() {
+                return Err(anyhow!("length {} != shape numel {}", data.len(), io.numel()));
+            }
+            if io.shape.is_empty() {
+                return Ok(xla::Literal::scalar(data[0]));
+            }
+            Ok(xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &io.shape,
+                as_bytes(data),
+            )?)
+        }
+        ("i32", Arg::I32(data)) => {
+            if data.len() != io.numel() {
+                return Err(anyhow!("length {} != shape numel {}", data.len(), io.numel()));
+            }
+            Ok(xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S32,
+                &io.shape,
+                as_bytes(data),
+            )?)
+        }
+        (dt, a) => Err(anyhow!("dtype mismatch: input is {dt}, arg is {a:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn artifacts_ready() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    /// Full round-trip through a real lowered graph (needs `make artifacts`).
+    #[test]
+    fn executes_mlp_infer_graph() {
+        if !artifacts_ready() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        let g = m.get("mlp_multi_b16_infer").unwrap();
+        let mut rt = Runtime::new().unwrap();
+        rt.load(g).unwrap();
+        // zero weights -> logits all zero, sparsity = 1 (everything rests)
+        let x = vec![0.5f32; 16 * 784];
+        let mut args: Vec<Arg> = vec![Arg::F32(&x), Arg::Scalar(0.5), Arg::Scalar(1.0)];
+        let park: Vec<Vec<f32>> = g
+            .params
+            .iter()
+            .map(|p| vec![0.0f32; p.numel()])
+            .collect();
+        let bns: Vec<Vec<f32>> = g
+            .bn_state
+            .iter()
+            .map(|s| {
+                if s.name.starts_with("rvar") {
+                    vec![1.0f32; s.numel()]
+                } else {
+                    vec![0.0f32; s.numel()]
+                }
+            })
+            .collect();
+        for p in &park {
+            args.push(Arg::F32(p));
+        }
+        for s in &bns {
+            args.push(Arg::F32(s));
+        }
+        let out = rt.execute(g, &args).unwrap();
+        assert_eq!(out.len(), g.outputs.len());
+        let logits = &out[0];
+        assert_eq!(logits.len(), 16 * 10);
+        assert!(logits.iter().all(|&v| v == 0.0));
+        let spars = &out[1];
+        assert!(spars.iter().all(|&s| s == 1.0), "{spars:?}");
+        assert!(rt.is_loaded("mlp_multi_b16_infer"));
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        if !artifacts_ready() {
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        let g = m.get("mlp_multi_b16_infer").unwrap();
+        let mut rt = Runtime::new().unwrap();
+        rt.load(g).unwrap();
+        let x = vec![0.0f32; 16 * 784];
+        let err = rt.execute(g, &[Arg::F32(&x)]).unwrap_err();
+        assert!(err.to_string().contains("expects"));
+    }
+
+    #[test]
+    fn wrong_length_rejected() {
+        if !artifacts_ready() {
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        let g = m.get("mlp_multi_b16_infer").unwrap();
+        let mut rt = Runtime::new().unwrap();
+        rt.load(g).unwrap();
+        let x = vec![0.0f32; 3]; // wrong
+        let mut args = vec![Arg::F32(&x), Arg::Scalar(0.5), Arg::Scalar(1.0)];
+        let park: Vec<Vec<f32>> =
+            g.params.iter().map(|p| vec![0.0f32; p.numel()]).collect();
+        let bns: Vec<Vec<f32>> =
+            g.bn_state.iter().map(|s| vec![0.0f32; s.numel()]).collect();
+        for p in &park {
+            args.push(Arg::F32(p));
+        }
+        for s in &bns {
+            args.push(Arg::F32(s));
+        }
+        assert!(rt.execute(g, &args).is_err());
+    }
+
+    #[test]
+    fn execute_unloaded_graph_errors() {
+        if !artifacts_ready() {
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        let g = m.get("mlp_multi_b16_infer").unwrap();
+        let rt = Runtime::new().unwrap();
+        assert!(rt.execute(g, &[]).is_err());
+    }
+}

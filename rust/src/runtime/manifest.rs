@@ -1,0 +1,228 @@
+//! Artifact manifest: the contract between `aot.py` and the Rust runtime.
+//!
+//! Nothing about graph shapes or parameter ordering is hard-coded in Rust;
+//! it all flows from `artifacts/manifest.json`.
+
+use std::path::{Path, PathBuf};
+
+use crate::nn::params::ParamDesc;
+use crate::util::json::Json;
+
+/// One named input or output of a lowered graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoDesc {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl IoDesc {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<IoDesc, String> {
+        Ok(IoDesc {
+            name: j.get("name").and_then(Json::as_str).ok_or("io missing name")?.into(),
+            shape: j.get("shape").and_then(Json::as_usize_vec).ok_or("io missing shape")?,
+            dtype: j
+                .get("dtype")
+                .and_then(Json::as_str)
+                .unwrap_or("f32")
+                .into(),
+        })
+    }
+}
+
+/// Metadata for one lowered graph.
+#[derive(Clone, Debug)]
+pub struct GraphMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub arch: String,
+    pub mode: String,
+    pub kind: String, // "train" | "infer"
+    pub batch: usize,
+    pub width: f64,
+    pub input_shape: Vec<usize>,
+    pub n_classes: usize,
+    pub params: Vec<ParamDesc>,
+    pub bn_state: Vec<IoDesc>,
+    pub inputs: Vec<IoDesc>,
+    pub outputs: Vec<IoDesc>,
+}
+
+impl GraphMeta {
+    /// Per-sample flattened input length.
+    pub fn sample_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Index of output named `name`.
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|o| o.name == name)
+    }
+}
+
+/// Parsed manifest with graph lookup.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub graphs: Vec<GraphMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest, String> {
+        let path = Path::new(dir).join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e} (run `make artifacts` first)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &str, text: &str) -> Result<Manifest, String> {
+        let j = Json::parse(text)?;
+        let graphs_obj = j
+            .get("graphs")
+            .and_then(Json::as_obj)
+            .ok_or("manifest missing graphs object")?;
+        let mut graphs = Vec::new();
+        for (name, g) in graphs_obj {
+            let params = g
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or("graph missing params")?
+                .iter()
+                .map(ParamDesc::from_manifest)
+                .collect::<Result<Vec<_>, _>>()?;
+            let parse_ios = |key: &str| -> Result<Vec<IoDesc>, String> {
+                g.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| format!("graph missing {key}"))?
+                    .iter()
+                    .map(IoDesc::from_json)
+                    .collect()
+            };
+            graphs.push(GraphMeta {
+                name: name.clone(),
+                file: Path::new(dir).join(
+                    g.get("file").and_then(Json::as_str).ok_or("graph missing file")?,
+                ),
+                arch: g.get("arch").and_then(Json::as_str).ok_or("graph missing arch")?.into(),
+                mode: g.get("mode").and_then(Json::as_str).ok_or("graph missing mode")?.into(),
+                kind: g.get("kind").and_then(Json::as_str).ok_or("graph missing kind")?.into(),
+                batch: g.get("batch").and_then(Json::as_usize).ok_or("graph missing batch")?,
+                width: g.get("width").and_then(Json::as_f64).unwrap_or(1.0),
+                input_shape: g
+                    .get("input_shape")
+                    .and_then(Json::as_usize_vec)
+                    .ok_or("graph missing input_shape")?,
+                n_classes: g.get("n_classes").and_then(Json::as_usize).unwrap_or(10),
+                params,
+                bn_state: parse_ios("bn_state")?,
+                inputs: parse_ios("inputs")?,
+                outputs: parse_ios("outputs")?,
+            });
+        }
+        Ok(Manifest { dir: PathBuf::from(dir), graphs })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&GraphMeta, String> {
+        self.graphs
+            .iter()
+            .find(|g| g.name == name)
+            .ok_or_else(|| {
+                let names: Vec<&str> = self.graphs.iter().map(|g| g.name.as_str()).collect();
+                format!("graph {name:?} not in manifest; available: {names:?}")
+            })
+    }
+
+    /// Find the (train, infer) pair for an arch/mode/batch triple.
+    pub fn find_pair(
+        &self,
+        arch: &str,
+        mode: &str,
+        batch: usize,
+    ) -> Result<(&GraphMeta, &GraphMeta), String> {
+        let train = self.get(&format!("{arch}_{mode}_b{batch}_train"))?;
+        let infer = self.get(&format!("{arch}_{mode}_b{batch}_infer"))?;
+        Ok((train, infer))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "graphs": {
+        "mlp_multi_b16_train": {
+          "file": "mlp_multi_b16_train.hlo.txt",
+          "arch": "mlp", "mode": "multi", "batch": 16, "width": 1.0,
+          "kind": "train", "input_shape": [784], "n_classes": 10,
+          "params": [
+            {"name": "W0", "shape": [784, 512], "kind": "weight", "layer": 0},
+            {"name": "gamma0", "shape": [512], "kind": "gamma", "layer": 0}
+          ],
+          "bn_state": [
+            {"name": "rmean0", "shape": [512], "dtype": "f32"}
+          ],
+          "inputs": [
+            {"name": "x", "shape": [16, 784], "dtype": "f32"},
+            {"name": "labels", "shape": [16], "dtype": "i32"}
+          ],
+          "outputs": [
+            {"name": "loss", "shape": [], "dtype": "f32"},
+            {"name": "ncorrect", "shape": [], "dtype": "f32"}
+          ]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse("/tmp/art", SAMPLE).unwrap();
+        assert_eq!(m.graphs.len(), 1);
+        let g = m.get("mlp_multi_b16_train").unwrap();
+        assert_eq!(g.batch, 16);
+        assert_eq!(g.params.len(), 2);
+        assert_eq!(g.params[0].numel(), 784 * 512);
+        assert_eq!(g.inputs[1].dtype, "i32");
+        assert_eq!(g.output_index("ncorrect"), Some(1));
+        assert_eq!(g.sample_len(), 784);
+        assert!(g.file.ends_with("mlp_multi_b16_train.hlo.txt"));
+    }
+
+    #[test]
+    fn unknown_graph_lists_available() {
+        let m = Manifest::parse("/tmp/art", SAMPLE).unwrap();
+        let err = m.get("nope").unwrap_err();
+        assert!(err.contains("mlp_multi_b16_train"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("/tmp", "{}").is_err());
+        assert!(Manifest::parse("/tmp", r#"{"graphs": {"g": {}}}"#).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            let m = Manifest::load("artifacts").unwrap();
+            assert!(m.get("mlp_multi_b100_train").is_ok());
+            let (tr, inf) = m.find_pair("mlp", "multi", 100).unwrap();
+            assert_eq!(tr.kind, "train");
+            assert_eq!(inf.kind, "infer");
+            // contract: train inputs = x, labels, r, a, hl, params..., bn...
+            let tr = m.get("mlp_multi_b100_train").unwrap();
+            assert_eq!(tr.inputs[0].name, "x");
+            assert_eq!(tr.inputs[2].name, "r");
+            assert_eq!(
+                tr.inputs.len(),
+                5 + tr.params.len() + tr.bn_state.len()
+            );
+            assert_eq!(tr.outputs[0].name, "loss");
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: loads HLO-text artifacts produced by `python/compile/aot.py`
+//! and executes them on the CPU PJRT client. This is the only place the
+//! process touches XLA; everything above it works with plain `&[f32]`.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use manifest::{GraphMeta, IoDesc, Manifest};

@@ -1,0 +1,141 @@
+//! Parameter-sweep harness for the paper's ablation figures:
+//! Fig. 8 (m), Fig. 9 (a), Fig. 10 (r -> activation sparsity),
+//! Fig. 13 (N1 x N2 grid). Each point is a short training run on the MLP
+//! graphs; r/a/hl are runtime scalars, so every point reuses the same
+//! compiled executable.
+
+use anyhow::Result;
+
+use crate::coordinator::method::Method;
+use crate::coordinator::trainer::{run_training, TrainConfig};
+use crate::runtime::client::Runtime;
+use crate::runtime::manifest::Manifest;
+
+/// Which hyper-parameter a sweep varies.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SweepParam {
+    M,
+    A,
+    R,
+    /// (N1, N2) grid point
+    Levels(Vec<(u32, u32)>),
+}
+
+/// One sweep point's outcome.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub label: String,
+    pub value: f64,
+    pub test_acc: f64,
+    pub act_sparsity: f64,
+    pub weight_zero_fraction: f64,
+}
+
+/// Run a 1-D sweep of `param` over `values` with a common base config.
+pub fn sweep_scalar(
+    rt: &mut Runtime,
+    manifest: &Manifest,
+    base: &TrainConfig,
+    param: &str,
+    values: &[f64],
+) -> Result<Vec<SweepPoint>> {
+    let mut out = Vec::new();
+    for &v in values {
+        let mut cfg = base.clone();
+        match param {
+            "m" => cfg.m = v as f32,
+            "a" => cfg.a = v as f32,
+            "r" => cfg.r = v as f32,
+            other => anyhow::bail!("unknown sweep param {other:?} (m|a|r)"),
+        }
+        let rep = run_training(rt, manifest, cfg)?;
+        out.push(SweepPoint {
+            label: format!("{param}={v}"),
+            value: v,
+            test_acc: rep.test_acc,
+            act_sparsity: rep.mean_act_sparsity,
+            weight_zero_fraction: rep.weight_zero_fraction,
+        });
+    }
+    Ok(out)
+}
+
+/// Fig. 13: accuracy over the (N1, N2) grid.
+pub fn sweep_levels(
+    rt: &mut Runtime,
+    manifest: &Manifest,
+    base: &TrainConfig,
+    grid: &[(u32, u32)],
+) -> Result<Vec<SweepPoint>> {
+    let mut out = Vec::new();
+    for &(n1, n2) in grid {
+        let mut cfg = base.clone();
+        cfg.method = Method::Multi { n1, n2 };
+        let rep = run_training(rt, manifest, cfg)?;
+        out.push(SweepPoint {
+            label: format!("N1={n1},N2={n2}"),
+            value: (n1 * 100 + n2) as f64,
+            test_acc: rep.test_acc,
+            act_sparsity: rep.mean_act_sparsity,
+            weight_zero_fraction: rep.weight_zero_fraction,
+        });
+    }
+    Ok(out)
+}
+
+/// Render sweep points as an aligned text table (benches print this).
+pub fn render_table(title: &str, points: &[SweepPoint]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(s, "== {title} ==");
+    let _ = writeln!(
+        s,
+        "{:<16} {:>10} {:>14} {:>14}",
+        "point", "test_acc", "act_sparsity", "w_zero_frac"
+    );
+    for p in points {
+        let _ = writeln!(
+            s,
+            "{:<16} {:>9.2}% {:>14.3} {:>14.3}",
+            p.label,
+            100.0 * p.test_acc,
+            p.act_sparsity,
+            p.weight_zero_fraction
+        );
+    }
+    s
+}
+
+/// Best point by test accuracy.
+pub fn best(points: &[SweepPoint]) -> Option<&SweepPoint> {
+    points
+        .iter()
+        .max_by(|a, b| a.test_acc.partial_cmp(&b.test_acc).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts() -> Vec<SweepPoint> {
+        vec![
+            SweepPoint { label: "m=1".into(), value: 1.0, test_acc: 0.7, act_sparsity: 0.3, weight_zero_fraction: 0.3 },
+            SweepPoint { label: "m=3".into(), value: 3.0, test_acc: 0.9, act_sparsity: 0.35, weight_zero_fraction: 0.31 },
+            SweepPoint { label: "m=10".into(), value: 10.0, test_acc: 0.85, act_sparsity: 0.4, weight_zero_fraction: 0.29 },
+        ]
+    }
+
+    #[test]
+    fn best_picks_max_acc() {
+        assert_eq!(best(&pts()).unwrap().label, "m=3");
+        assert!(best(&[]).is_none());
+    }
+
+    #[test]
+    fn table_renders_every_point() {
+        let t = render_table("fig8", &pts());
+        assert!(t.contains("fig8"));
+        assert!(t.contains("m=1") && t.contains("m=3") && t.contains("m=10"));
+        assert!(t.contains("90.00%"));
+    }
+}

@@ -1,0 +1,320 @@
+//! Discrete State Transition (DST) — the paper's central training operator
+//! (Section 2.D, eqs. 13–20; multilevel form eqs. 23–26).
+//!
+//! Given a weight vector living *exactly* on the Z_N grid and a real-valued
+//! increment `dw` (already -lr·grad, possibly Adam-preconditioned), DST:
+//!
+//! 1. clamps the increment so the next state stays inside [-1, 1]
+//!    (boundary restriction ϱ, eq. 13),
+//! 2. splits ϱ into κ whole state-hops and a remainder ν (eqs. 15/16,
+//!    `fix` = truncation toward zero, `rem` keeps the sign of ϱ),
+//! 3. commits the κ hops deterministically and resolves the remainder with
+//!    one Bernoulli draw of probability τ(ν) = tanh(m·|ν|/dz) (eqs. 18–20).
+//!
+//! No full-precision weight copy exists anywhere: the input *is* the
+//! discrete state and the output is the next discrete state. This function
+//! is the hot CPU path of training (one call per weight tensor per step)
+//! and is written branch-light for vectorization; `benches/` tracks its
+//! throughput and `ptest` checks its invariants against the same vectors
+//! as the Python twins (python/tests/test_dst.py).
+
+use crate::ternary::space::DiscreteSpace;
+use crate::util::prng::Prng;
+
+/// Per-call statistics (used by the convergence diagnostics and hwsim).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DstStats {
+    /// weights that changed state this step
+    pub transitions: u64,
+    /// deterministic multi-state hops (|kappa| >= 1)
+    pub kappa_hops: u64,
+    /// stochastic hops taken (u < tau)
+    pub stochastic_hops: u64,
+    pub n: u64,
+}
+
+impl DstStats {
+    pub fn transition_rate(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.transitions as f64 / self.n as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &DstStats) {
+        self.transitions += o.transitions;
+        self.kappa_hops += o.kappa_hops;
+        self.stochastic_hops += o.stochastic_hops;
+        self.n += o.n;
+    }
+}
+
+/// Apply DST in place: `w[i] <- next state`. `w` must be on the `space`
+/// grid (checked in debug builds). Returns transition statistics.
+/// Resolution of the tanh lookup table used on the hot path. τ is smooth
+/// and concave on [0, 1); linear interpolation over 2048 knots keeps the
+/// absolute error below 2e-7 — far inside the statistical tolerance the
+/// equivalence tests check (and the tail is clamped exactly).
+const TANH_LUT_SIZE: usize = 2048;
+
+/// Precomputed τ(ν) = tanh(m·|ν|/dz) over |ν|/dz ∈ [0, 1].
+struct TauLut {
+    table: [f32; TANH_LUT_SIZE + 1],
+}
+
+impl TauLut {
+    fn new(m: f32) -> Self {
+        let mut table = [0.0f32; TANH_LUT_SIZE + 1];
+        for (i, t) in table.iter_mut().enumerate() {
+            *t = (m * i as f32 / TANH_LUT_SIZE as f32).tanh();
+        }
+        TauLut { table }
+    }
+
+    #[inline]
+    fn eval(&self, frac: f32) -> f32 {
+        // frac = |nu|/dz in [0, 1)
+        let x = frac * TANH_LUT_SIZE as f32;
+        let i = (x as usize).min(TANH_LUT_SIZE - 1);
+        let t = x - i as f32;
+        self.table[i] + t * (self.table[i + 1] - self.table[i])
+    }
+}
+
+pub fn dst_update(
+    w: &mut [f32],
+    dw: &[f32],
+    space: DiscreteSpace,
+    m: f32,
+    rng: &mut Prng,
+) -> DstStats {
+    // one uniform per weight, drawn up front: the xoshiro state update is a
+    // serial dependency chain; pre-filling (4 interleaved lanes) lets the
+    // projection loop below pipeline freely (§Perf iteration 7)
+    let mut u = vec![0.0f32; w.len()];
+    rng.fill_uniform_x4(&mut u);
+
+    // large tensors: shard across threads — DST is embarrassingly parallel
+    // (per-element, disjoint writes) and memory-bandwidth friendly
+    // (§Perf iteration 8: 17 ms -> ~5 ms / 1M on 4 cores)
+    const PAR_THRESHOLD: usize = 200_000;
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if w.len() >= PAR_THRESHOLD && threads > 1 {
+        let nchunks = threads.min(8);
+        let chunk = (w.len() + nchunks - 1) / nchunks;
+        let mut total = DstStats::default();
+        let results: Vec<DstStats> = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for ((wc, dc), uc) in w
+                .chunks_mut(chunk)
+                .zip(dw.chunks(chunk))
+                .zip(u.chunks(chunk))
+            {
+                handles.push(s.spawn(move || dst_update_with_uniforms(wc, dc, uc, space, m)));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in &results {
+            total.merge(r);
+        }
+        return total;
+    }
+    dst_update_with_uniforms(w, dw, &u, space, m)
+}
+
+/// DST with caller-supplied uniforms (also the API the equivalence tests
+/// use to pin semantics against the JAX twin, which takes uniforms too).
+pub fn dst_update_with_uniforms(
+    w: &mut [f32],
+    dw: &[f32],
+    u: &[f32],
+    space: DiscreteSpace,
+    m: f32,
+) -> DstStats {
+    assert_eq!(w.len(), dw.len(), "weight/increment length mismatch");
+    assert_eq!(w.len(), u.len(), "weight/uniform length mismatch");
+    let dz = space.dz();
+    let inv_dz = 1.0 / dz;
+    let lut = TauLut::new(m);
+    let mut stats = DstStats { n: w.len() as u64, ..Default::default() };
+    for ((wi, &di), &ui) in w.iter_mut().zip(dw.iter()).zip(u.iter()) {
+        debug_assert!(space.contains(*wi), "off-grid weight {wi}");
+        let old = *wi;
+        // eq. 13 as a branchless clamp: for di >= 0 the lower bound is
+        // inactive (di > -1-old), for di < 0 the upper bound is — so the
+        // two-sided clamp equals the paper's piecewise form exactly.
+        let rho = di.clamp(-1.0 - old, 1.0 - old);
+        // eq. 15/16: kappa = fix(rho/dz), nu = rem(rho, dz)
+        let scaled = rho * inv_dz;
+        let kappa = scaled.trunc();
+        let nu_frac = (scaled - kappa).abs(); // |nu|/dz in [0, 1)
+        // eq. 20: transition probability (tanh via LUT)
+        let tau = lut.eval(nu_frac);
+        // eq. 18/19: stochastic remainder hop along sign(rho)
+        let take = (ui < tau) as u32 as f32;
+        let sgn = if rho >= 0.0 { 1.0f32 } else { -1.0f32 };
+        let hop = take * sgn;
+        let next = (old + (kappa + hop) * dz).clamp(-1.0, 1.0);
+        stats.kappa_hops += (kappa != 0.0) as u64;
+        stats.stochastic_hops += (hop != 0.0) as u64;
+        stats.transitions += (next != old) as u64;
+        *wi = next;
+    }
+    stats
+}
+
+/// Reference (scalar) DST for one weight with an explicit uniform draw —
+/// used by the property/equivalence tests to pin semantics independently of
+/// RNG consumption order.
+pub fn dst_step_scalar(w: f32, dw: f32, u: f32, dz: f32, m: f32) -> f32 {
+    let rho = if dw >= 0.0 {
+        dw.min(1.0 - w)
+    } else {
+        dw.max(-1.0 - w)
+    };
+    let kappa = (rho / dz).trunc();
+    let nu = rho - kappa * dz;
+    let tau = (m * nu.abs() / dz).tanh();
+    let sgn = if rho >= 0.0 { 1.0 } else { -1.0 };
+    let hop = if u < tau { sgn } else { 0.0 };
+    (w + (kappa + hop) * dz).clamp(-1.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The exact vectors of python/tests/test_dst.py::test_fig3_six_ternary_cases —
+    /// the Rust and JAX twins must agree on every one.
+    #[test]
+    fn fig3_transition_table() {
+        let dz = 1.0;
+        let m = 3.0;
+        let cases: &[(f32, f32, f32, f32)] = &[
+            (0.0, 0.4, 0.0, 1.0),
+            (0.0, 0.4, 1.0, 0.0),
+            (0.0, -0.4, 0.0, -1.0),
+            (0.0, -0.4, 1.0, 0.0),
+            (-1.0, -0.7, 0.0, -1.0),
+            (-1.0, 0.4, 0.0, 0.0),
+            (-1.0, 1.2, 0.0, 1.0),
+            (-1.0, 1.2, 1.0, 0.0),
+            (1.0, 0.5, 0.0, 1.0),
+            (1.0, -0.4, 0.0, 0.0),
+        ];
+        for &(w, dw, u, want) in cases {
+            let got = dst_step_scalar(w, dw, u, dz, m);
+            assert_eq!(got, want, "w={w} dw={dw} u={u}");
+        }
+    }
+
+    #[test]
+    fn zero_increment_is_identity() {
+        let space = DiscreteSpace::TERNARY;
+        let mut w = vec![-1.0, 0.0, 1.0];
+        let dw = vec![0.0; 3];
+        let mut rng = Prng::new(0);
+        let stats = dst_update(&mut w, &dw, space, 3.0, &mut rng);
+        assert_eq!(w, vec![-1.0, 0.0, 1.0]);
+        assert_eq!(stats.transitions, 0);
+    }
+
+    #[test]
+    fn grid_closure_all_spaces() {
+        let mut rng = Prng::new(42);
+        for n in 0..7 {
+            let space = DiscreteSpace::new(n);
+            let mut w: Vec<f32> = (0..2048)
+                .map(|_| space.state(rng.below(space.n_states())))
+                .collect();
+            let dw: Vec<f32> = (0..2048).map(|_| rng.normal_f32() * 1.5).collect();
+            dst_update(&mut w, &dw, space, 3.0, &mut rng);
+            for &v in &w {
+                assert!(space.contains(v), "N={n}: {v} off grid");
+            }
+        }
+    }
+
+    #[test]
+    fn transition_frequency_matches_tau() {
+        // eq. 20: empirical hop rate ~ tanh(m |nu| / dz)
+        let space = DiscreteSpace::TERNARY;
+        let m = 3.0;
+        let nu = 0.37f32;
+        let n = 200_000;
+        let mut w = vec![0.0f32; n];
+        let dw = vec![nu; n];
+        let mut rng = Prng::new(7);
+        let stats = dst_update(&mut w, &dw, space, m, &mut rng);
+        let freq = stats.transitions as f64 / n as f64;
+        let tau = (m as f64 * nu as f64).tanh();
+        assert!((freq - tau).abs() < 5e-3, "freq={freq} tau={tau}");
+        assert_eq!(stats.stochastic_hops, stats.transitions);
+        assert_eq!(stats.kappa_hops, 0);
+    }
+
+    #[test]
+    fn kappa_hops_deterministic() {
+        // dz = 0.25 (N=3), dw = 0.5 => kappa = 2, nu = 0
+        let space = DiscreteSpace::new(3);
+        let mut w = vec![-1.0f32];
+        let dw = vec![0.5f32];
+        let mut rng = Prng::new(1);
+        let stats = dst_update(&mut w, &dw, space, 3.0, &mut rng);
+        assert_eq!(w[0], -0.5);
+        assert_eq!(stats.kappa_hops, 1);
+    }
+
+    #[test]
+    fn boundary_saturation() {
+        let space = DiscreteSpace::TERNARY;
+        let mut w = vec![1.0, -1.0];
+        let dw = vec![100.0, -100.0];
+        let mut rng = Prng::new(2);
+        dst_update(&mut w, &dw, space, 3.0, &mut rng);
+        assert_eq!(w, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn binary_space_hops_between_poles() {
+        // N=0: dz=2; from -1 an increment of +1.2 gives nu=1.2,
+        // tau = tanh(3*0.6) ~ 0.947 -> nearly always flips to +1.
+        let space = DiscreteSpace::BINARY;
+        let n = 50_000;
+        let mut w = vec![-1.0f32; n];
+        let dw = vec![1.2f32; n];
+        let mut rng = Prng::new(3);
+        dst_update(&mut w, &dw, space, 3.0, &mut rng);
+        let flipped = w.iter().filter(|&&v| v == 1.0).count() as f64 / n as f64;
+        let tau = (3.0f64 * 1.2 / 2.0).tanh();
+        assert!((flipped - tau).abs() < 0.01, "flipped={flipped} tau={tau}");
+        for &v in &w {
+            assert!(v == -1.0 || v == 1.0);
+        }
+    }
+
+    #[test]
+    fn expected_drift_follows_gradient_sign() {
+        // Many small positive increments must move the mean weight up.
+        let space = DiscreteSpace::TERNARY;
+        let n = 10_000;
+        let mut w = vec![0.0f32; n];
+        let mut rng = Prng::new(4);
+        for _ in 0..5 {
+            let dw = vec![0.05f32; n];
+            dst_update(&mut w, &dw, space, 3.0, &mut rng);
+        }
+        let mean: f32 = w.iter().sum::<f32>() / n as f32;
+        assert!(mean > 0.2, "mean={mean}");
+    }
+
+    #[test]
+    fn stats_merge() {
+        let mut a = DstStats { transitions: 1, kappa_hops: 2, stochastic_hops: 3, n: 4 };
+        let b = DstStats { transitions: 10, kappa_hops: 20, stochastic_hops: 30, n: 40 };
+        a.merge(&b);
+        assert_eq!(a, DstStats { transitions: 11, kappa_hops: 22, stochastic_hops: 33, n: 44 });
+        assert!((a.transition_rate() - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,12 @@
+//! The paper's discretization core: the Z_N space (eq. 1), discrete-state
+//! tensors with bit-packed storage, and the Discrete State Transition
+//! operator (eqs. 13–20) — the run-time twin of the Pallas kernel in
+//! `python/compile/kernels/dst.py`.
+
+pub mod dst;
+pub mod packed;
+pub mod space;
+
+pub use dst::{dst_update, DstStats};
+pub use packed::PackedTensor;
+pub use space::DiscreteSpace;

@@ -1,0 +1,355 @@
+//! Bit-packed storage for discrete tensors.
+//!
+//! The paper's memory claim (Remark 2) is that training holds *no*
+//! full-precision weight copy: a ternary weight needs 2 bits, not 32.
+//! `PackedTensor` is the canonical at-rest representation — checkpoints,
+//! the weight store between steps, and the hwsim all use it; weights are
+//! expanded to f32 grid values only to cross the PJRT boundary.
+
+use crate::ternary::space::DiscreteSpace;
+
+/// A discrete tensor stored as bit-packed state indices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedTensor {
+    space: DiscreteSpace,
+    shape: Vec<usize>,
+    bits: u32,
+    data: Vec<u64>,
+    len: usize,
+}
+
+impl PackedTensor {
+    /// Pack f32 grid values (each must lie on the space's grid).
+    pub fn pack(values: &[f32], shape: &[usize], space: DiscreteSpace) -> Self {
+        let len: usize = shape.iter().product();
+        assert_eq!(len, values.len(), "shape/product mismatch");
+        let bits = space.bits_per_state();
+        let mut data = vec![0u64; (len * bits as usize + 63) / 64];
+        for (i, &v) in values.iter().enumerate() {
+            debug_assert!(space.contains(v), "off-grid value {v}");
+            let idx = space.index_of(v) as u64;
+            set_bits(&mut data, i, bits, idx);
+        }
+        PackedTensor { space, shape: shape.to_vec(), bits, data, len }
+    }
+
+    /// All-zero (or lowest-state for binary) tensor.
+    pub fn zeros(shape: &[usize], space: DiscreteSpace) -> Self {
+        let len: usize = shape.iter().product();
+        let zero_idx = space.index_of(0.0) as u64;
+        let bits = space.bits_per_state();
+        let mut data = vec![0u64; (len * bits as usize + 63) / 64];
+        if zero_idx != 0 {
+            for i in 0..len {
+                set_bits(&mut data, i, bits, zero_idx);
+            }
+        }
+        PackedTensor { space, shape: shape.to_vec(), bits, data, len }
+    }
+
+    pub fn space(&self) -> DiscreteSpace {
+        self.space
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bytes used by the packed payload (the paper's memory win).
+    pub fn payload_bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+
+    pub fn get(&self, i: usize) -> f32 {
+        assert!(i < self.len);
+        let idx = get_bits(&self.data, i, self.bits) as usize;
+        self.space.state(idx)
+    }
+
+    pub fn set(&mut self, i: usize, v: f32) {
+        assert!(i < self.len);
+        debug_assert!(self.space.contains(v));
+        set_bits(&mut self.data, i, self.bits, self.space.index_of(v) as u64);
+    }
+
+    /// Expand to f32 grid values (the PJRT boundary format).
+    pub fn unpack(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len);
+        for i in 0..self.len {
+            out.push(self.get(i));
+        }
+        out
+    }
+
+    /// Expand into a caller-provided buffer (hot-path, no allocation).
+    ///
+    /// The 2-bit (ternary) layout gets a word-at-a-time fast path: 32
+    /// states per u64, no cross-word straddling (64 % 2 == 0).
+    pub fn unpack_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len);
+        if self.bits == 2 {
+            let dz = self.space.dz();
+            for (wi, chunk) in out.chunks_mut(32).enumerate() {
+                let mut word = self.data[wi];
+                for o in chunk {
+                    *o = (word & 3) as f32 * dz - 1.0;
+                    word >>= 2;
+                }
+            }
+            return;
+        }
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.space.state(get_bits(&self.data, i, self.bits) as usize);
+        }
+    }
+
+    /// Re-pack from updated grid values (after a DST step).
+    /// Same 2-bit word-at-a-time fast path as `unpack_into`.
+    pub fn repack_from(&mut self, values: &[f32]) {
+        assert_eq!(values.len(), self.len);
+        if self.bits == 2 {
+            // ternary states are exactly representable: v + 1.0 ∈ {0, 1, 2}
+            for (wi, chunk) in values.chunks(32).enumerate() {
+                let mut word = 0u64;
+                for (j, &v) in chunk.iter().enumerate() {
+                    debug_assert!(self.space.contains(v), "off-grid value {v}");
+                    word |= ((v + 1.0) as u64) << (2 * j);
+                }
+                self.data[wi] = word;
+            }
+            return;
+        }
+        for (i, &v) in values.iter().enumerate() {
+            debug_assert!(self.space.contains(v), "off-grid value {v}");
+            set_bits(&mut self.data, i, self.bits, self.space.index_of(v) as u64);
+        }
+    }
+
+    /// Histogram over state indices (sparsity/distribution diagnostics;
+    /// Table 2's resting-probability analysis consumes this).
+    pub fn histogram(&self) -> Vec<u64> {
+        let mut h = vec![0u64; self.space.n_states()];
+        for i in 0..self.len {
+            h[get_bits(&self.data, i, self.bits) as usize] += 1;
+        }
+        h
+    }
+
+    /// Fraction of exactly-zero states (0 for the binary space).
+    pub fn zero_fraction(&self) -> f64 {
+        if self.len == 0 {
+            return 0.0;
+        }
+        let zero_state = self.space.index_of(0.0);
+        if self.space.state(zero_state) != 0.0 {
+            return 0.0;
+        }
+        self.histogram()[zero_state] as f64 / self.len as f64
+    }
+
+    // ---- binary serialization (checkpoints) ------------------------------
+
+    /// Layout: [n: u32][ndim: u32][dims: u64 x ndim][words: u64][data].
+    pub fn serialize(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.space.n().to_le_bytes());
+        out.extend_from_slice(&(self.shape.len() as u32).to_le_bytes());
+        for &d in &self.shape {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        out.extend_from_slice(&(self.data.len() as u64).to_le_bytes());
+        for &w in &self.data {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+
+    pub fn deserialize(buf: &[u8], pos: &mut usize) -> Result<Self, String> {
+        let rd_u32 = |buf: &[u8], pos: &mut usize| -> Result<u32, String> {
+            let b = buf
+                .get(*pos..*pos + 4)
+                .ok_or("truncated checkpoint")?
+                .try_into()
+                .unwrap();
+            *pos += 4;
+            Ok(u32::from_le_bytes(b))
+        };
+        let rd_u64 = |buf: &[u8], pos: &mut usize| -> Result<u64, String> {
+            let b = buf
+                .get(*pos..*pos + 8)
+                .ok_or("truncated checkpoint")?
+                .try_into()
+                .unwrap();
+            *pos += 8;
+            Ok(u64::from_le_bytes(b))
+        };
+        let n = rd_u32(buf, pos)?;
+        let ndim = rd_u32(buf, pos)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(rd_u64(buf, pos)? as usize);
+        }
+        let words = rd_u64(buf, pos)? as usize;
+        let mut data = Vec::with_capacity(words);
+        for _ in 0..words {
+            data.push(rd_u64(buf, pos)?);
+        }
+        let space = DiscreteSpace::new(n);
+        let len: usize = shape.iter().product();
+        let bits = space.bits_per_state();
+        if data.len() != (len * bits as usize + 63) / 64 {
+            return Err("packed payload size mismatch".into());
+        }
+        Ok(PackedTensor { space, shape, bits, data, len })
+    }
+}
+
+#[inline]
+fn set_bits(data: &mut [u64], i: usize, bits: u32, val: u64) {
+    let bit_pos = i * bits as usize;
+    let word = bit_pos / 64;
+    let off = (bit_pos % 64) as u32;
+    let mask = (1u64 << bits) - 1;
+    data[word] = (data[word] & !(mask << off)) | ((val & mask) << off);
+    if off + bits > 64 {
+        let hi_bits = off + bits - 64;
+        let lo_mask = (1u64 << hi_bits) - 1;
+        data[word + 1] = (data[word + 1] & !lo_mask) | (val >> (bits - hi_bits));
+    }
+}
+
+#[inline]
+fn get_bits(data: &[u64], i: usize, bits: u32) -> u64 {
+    let bit_pos = i * bits as usize;
+    let word = bit_pos / 64;
+    let off = (bit_pos % 64) as u32;
+    let mask = (1u64 << bits) - 1;
+    let mut v = (data[word] >> off) & mask;
+    if off + bits > 64 {
+        let hi_bits = off + bits - 64;
+        v |= (data[word + 1] & ((1u64 << hi_bits) - 1)) << (bits - hi_bits);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn random_grid(space: DiscreteSpace, n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Prng::new(seed);
+        (0..n).map(|_| space.state(rng.below(space.n_states()))).collect()
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_all_spaces() {
+        for n in 0..7 {
+            let space = DiscreteSpace::new(n);
+            let vals = random_grid(space, 1000, n as u64);
+            let p = PackedTensor::pack(&vals, &[10, 100], space);
+            assert_eq!(p.unpack(), vals, "N={n}");
+        }
+    }
+
+    #[test]
+    fn ternary_uses_2_bits() {
+        let space = DiscreteSpace::TERNARY;
+        let vals = random_grid(space, 4096, 1);
+        let p = PackedTensor::pack(&vals, &[4096], space);
+        // 4096 weights * 2 bits = 1 KiB vs 16 KiB f32: 16x smaller
+        assert_eq!(p.payload_bytes(), 4096 * 2 / 8);
+    }
+
+    #[test]
+    fn get_set() {
+        let space = DiscreteSpace::TERNARY;
+        let mut p = PackedTensor::zeros(&[64], space);
+        assert_eq!(p.get(13), 0.0);
+        p.set(13, -1.0);
+        p.set(14, 1.0);
+        assert_eq!(p.get(13), -1.0);
+        assert_eq!(p.get(14), 1.0);
+        assert_eq!(p.get(15), 0.0);
+    }
+
+    #[test]
+    fn crossing_word_boundaries() {
+        // 7-bit states (N=6) straddle u64 boundaries: exercise hi/lo paths.
+        let space = DiscreteSpace::new(6);
+        let vals = random_grid(space, 300, 9);
+        let p = PackedTensor::pack(&vals, &[300], space);
+        assert_eq!(p.unpack(), vals);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let space = DiscreteSpace::TERNARY;
+        let vals = vec![-1.0, -1.0, 0.0, 1.0, 1.0, 1.0];
+        let p = PackedTensor::pack(&vals, &[6], space);
+        assert_eq!(p.histogram(), vec![2, 1, 3]);
+        assert!((p.zero_fraction() - 1.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn binary_zero_fraction_is_zero() {
+        let space = DiscreteSpace::BINARY;
+        let p = PackedTensor::pack(&[-1.0, 1.0, 1.0], &[3], space);
+        assert_eq!(p.zero_fraction(), 0.0);
+    }
+
+    #[test]
+    fn unpack_into_matches_unpack() {
+        let space = DiscreteSpace::new(2);
+        let vals = random_grid(space, 513, 3);
+        let p = PackedTensor::pack(&vals, &[513], space);
+        let mut buf = vec![0.0f32; 513];
+        p.unpack_into(&mut buf);
+        assert_eq!(buf, p.unpack());
+    }
+
+    #[test]
+    fn repack_after_dst_step() {
+        let space = DiscreteSpace::TERNARY;
+        let vals = random_grid(space, 256, 4);
+        let mut p = PackedTensor::pack(&vals, &[256], space);
+        let mut w = p.unpack();
+        let dw: Vec<f32> = (0..256).map(|i| if i % 2 == 0 { 0.9 } else { -0.9 }).collect();
+        let mut rng = Prng::new(5);
+        crate::ternary::dst::dst_update(&mut w, &dw, space, 3.0, &mut rng);
+        p.repack_from(&w);
+        assert_eq!(p.unpack(), w);
+    }
+
+    #[test]
+    fn serialize_roundtrip() {
+        for n in [0u32, 1, 3, 6] {
+            let space = DiscreteSpace::new(n);
+            let vals = random_grid(space, 777, 10 + n as u64);
+            let p = PackedTensor::pack(&vals, &[7, 111], space);
+            let mut buf = Vec::new();
+            p.serialize(&mut buf);
+            let mut pos = 0;
+            let q = PackedTensor::deserialize(&buf, &mut pos).unwrap();
+            assert_eq!(pos, buf.len());
+            assert_eq!(p, q);
+        }
+    }
+
+    #[test]
+    fn deserialize_rejects_truncation() {
+        let space = DiscreteSpace::TERNARY;
+        let p = PackedTensor::pack(&[0.0, 1.0], &[2], space);
+        let mut buf = Vec::new();
+        p.serialize(&mut buf);
+        buf.truncate(buf.len() - 1);
+        let mut pos = 0;
+        assert!(PackedTensor::deserialize(&buf, &mut pos).is_err());
+    }
+}

@@ -1,0 +1,165 @@
+//! The discrete space Z_N of eq. (1):
+//!
+//! ```text
+//! Z_N = { n / 2^{N-1} - 1 | n = 0, 1, ..., 2^N },   dz_N = 1 / 2^{N-1}
+//! ```
+//!
+//! N = 0 is the binary space {-1, 1} (dz = 2, and the grid is *offset*: its
+//! states are not multiples of dz), N = 1 the ternary space {-1, 0, 1} of
+//! GXNOR-Net, N >= 2 the multilevel spaces of Fig. 13.
+
+/// A discrete weight/activation space parameterized by N (eq. 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DiscreteSpace {
+    n: u32,
+}
+
+impl DiscreteSpace {
+    pub const BINARY: DiscreteSpace = DiscreteSpace { n: 0 };
+    pub const TERNARY: DiscreteSpace = DiscreteSpace { n: 1 };
+
+    pub fn new(n: u32) -> Self {
+        assert!(n <= 15, "Z_N with N={n} overflows the state index");
+        DiscreteSpace { n }
+    }
+
+    pub fn n(&self) -> u32 {
+        self.n
+    }
+
+    /// Number of states: 2^N + 1, except the binary space which has 2
+    /// (eq. 1 with N = 0 gives n = 0, 1, 2 -> {-1, 0, 1}? No: dz_0 = 2, so
+    /// n ranges over {0, 1} -> {-1, 1}; the paper's N=0 space is binary).
+    pub fn n_states(&self) -> usize {
+        if self.n == 0 {
+            2
+        } else {
+            (1usize << self.n) + 1
+        }
+    }
+
+    /// State spacing dz_N = 1 / 2^{N-1}; dz_0 = 2.
+    pub fn dz(&self) -> f32 {
+        if self.n == 0 {
+            2.0
+        } else {
+            1.0 / (1u32 << (self.n - 1)) as f32
+        }
+    }
+
+    /// Half-level count 2^{N-1} (the quantizer's `hl` scalar); 0.5 for N=0.
+    pub fn half_levels(&self) -> f32 {
+        if self.n == 0 {
+            0.5
+        } else {
+            (1u32 << (self.n - 1)) as f32
+        }
+    }
+
+    /// The k-th state value, k in [0, n_states).
+    pub fn state(&self, k: usize) -> f32 {
+        debug_assert!(k < self.n_states());
+        (k as f32) * self.dz() - 1.0
+    }
+
+    /// All states, ascending.
+    pub fn states(&self) -> Vec<f32> {
+        (0..self.n_states()).map(|k| self.state(k)).collect()
+    }
+
+    /// Index of the nearest state to `v` (clamped).
+    pub fn index_of(&self, v: f32) -> usize {
+        let k = ((v + 1.0) / self.dz()).round() as isize;
+        k.clamp(0, self.n_states() as isize - 1) as usize
+    }
+
+    /// Nearest-state projection.
+    pub fn project(&self, v: f32) -> f32 {
+        self.state(self.index_of(v))
+    }
+
+    /// Exact grid membership (within float tolerance).
+    pub fn contains(&self, v: f32) -> bool {
+        if !(-1.0..=1.0).contains(&v) {
+            return false;
+        }
+        let k = (v + 1.0) / self.dz();
+        (k - k.round()).abs() < 1e-5
+    }
+
+    /// Bits needed to store one state index.
+    pub fn bits_per_state(&self) -> u32 {
+        usize::BITS - (self.n_states() - 1).leading_zeros()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_space() {
+        let s = DiscreteSpace::BINARY;
+        assert_eq!(s.n_states(), 2);
+        assert_eq!(s.dz(), 2.0);
+        assert_eq!(s.states(), vec![-1.0, 1.0]);
+        assert_eq!(s.bits_per_state(), 1);
+    }
+
+    #[test]
+    fn ternary_space_matches_paper() {
+        let s = DiscreteSpace::TERNARY;
+        assert_eq!(s.n_states(), 3);
+        assert_eq!(s.dz(), 1.0);
+        assert_eq!(s.states(), vec![-1.0, 0.0, 1.0]);
+        assert_eq!(s.bits_per_state(), 2);
+    }
+
+    #[test]
+    fn eq1_general_form() {
+        // N=2: dz = 0.5, states {-1,-0.5,0,0.5,1}
+        let s = DiscreteSpace::new(2);
+        assert_eq!(s.states(), vec![-1.0, -0.5, 0.0, 0.5, 1.0]);
+        // N=6 (paper's best weight direction): 65 states
+        assert_eq!(DiscreteSpace::new(6).n_states(), 65);
+        assert!((DiscreteSpace::new(6).dz() - 1.0 / 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn projection_roundtrip() {
+        for n in 0..7 {
+            let s = DiscreteSpace::new(n);
+            for k in 0..s.n_states() {
+                let v = s.state(k);
+                assert_eq!(s.index_of(v), k);
+                assert!(s.contains(v), "N={n} state {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn project_clamps_and_snaps() {
+        let s = DiscreteSpace::TERNARY;
+        assert_eq!(s.project(5.0), 1.0);
+        assert_eq!(s.project(-5.0), -1.0);
+        assert_eq!(s.project(0.4), 0.0);
+        assert_eq!(s.project(0.6), 1.0);
+    }
+
+    #[test]
+    fn contains_rejects_off_grid() {
+        let s = DiscreteSpace::TERNARY;
+        assert!(!s.contains(0.5));
+        assert!(!s.contains(1.5));
+        let b = DiscreteSpace::BINARY;
+        assert!(!b.contains(0.0)); // binary grid is offset: 0 is not a state
+    }
+
+    #[test]
+    fn bits_per_state_tight() {
+        assert_eq!(DiscreteSpace::new(1).bits_per_state(), 2); // 3 states
+        assert_eq!(DiscreteSpace::new(2).bits_per_state(), 3); // 5 states
+        assert_eq!(DiscreteSpace::new(3).bits_per_state(), 4); // 9 states
+        assert_eq!(DiscreteSpace::new(6).bits_per_state(), 7); // 65 states
+    }
+}

@@ -1,0 +1,11 @@
+//! Foundation substrates built from scratch (the offline vendor set has no
+//! serde/rand/clap/criterion — see DESIGN.md §2): PRNG, JSON, timing.
+
+pub mod json;
+pub mod plot;
+pub mod prng;
+pub mod timer;
+
+pub use json::Json;
+pub use prng::Prng;
+pub use timer::Stopwatch;

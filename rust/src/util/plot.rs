@@ -1,0 +1,99 @@
+//! Terminal line/scatter plots for the figure benches (no plotting crate
+//! offline). Renders (x, y) series on a character grid with axis labels —
+//! enough to *see* the U-shapes of Figs. 8/9/10/13 in `cargo bench` output.
+
+use std::fmt::Write as _;
+
+/// Render one or more named series on a shared grid.
+/// Each series is a list of (x, y) points; markers cycle through `*+ox#`.
+pub fn line_plot(
+    title: &str,
+    series: &[(&str, Vec<(f64, f64)>)],
+    width: usize,
+    height: usize,
+) -> String {
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|(_, p)| p.iter().copied()).collect();
+    if all.is_empty() {
+        return format!("{title}: (no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let markers = ['*', '+', 'o', 'x', '#'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let mk = markers[si % markers.len()];
+        for &(x, y) in pts {
+            let cx = (((x - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx.min(width - 1)] = mk;
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            format!("{y1:>8.3}")
+        } else if r == height - 1 {
+            format!("{y0:>8.3}")
+        } else {
+            " ".repeat(8)
+        };
+        let _ = writeln!(out, "{label} |{}|", row.iter().collect::<String>());
+    }
+    let _ = writeln!(
+        out,
+        "{:>8}  {x0:<12.3}{:>w$.3}",
+        "",
+        x1,
+        w = width.saturating_sub(12)
+    );
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {name}", markers[i % markers.len()]))
+        .collect();
+    let _ = writeln!(out, "{:>10}{}", "", legend.join("   "));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plots_single_series() {
+        let pts: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, (i * i) as f64)).collect();
+        let p = line_plot("parabola", &[("y=x^2", pts)], 40, 10);
+        assert!(p.contains("parabola"));
+        assert!(p.contains('*'));
+        assert!(p.contains("81.000")); // y max label
+        assert!(p.contains("y=x^2"));
+    }
+
+    #[test]
+    fn plots_multiple_series_with_distinct_markers() {
+        let a: Vec<(f64, f64)> = (0..5).map(|i| (i as f64, i as f64)).collect();
+        let b: Vec<(f64, f64)> = (0..5).map(|i| (i as f64, 4.0 - i as f64)).collect();
+        let p = line_plot("cross", &[("up", a), ("down", b)], 30, 8);
+        assert!(p.contains('*') && p.contains('+'));
+    }
+
+    #[test]
+    fn handles_degenerate_input() {
+        assert!(line_plot("empty", &[("none", vec![])], 10, 5).contains("no data"));
+        let p = line_plot("point", &[("p", vec![(1.0, 1.0)])], 10, 5);
+        assert!(p.contains('*'));
+    }
+}

@@ -1,0 +1,95 @@
+//! Lightweight timing helpers for the coordinator and the bench harness.
+
+use std::time::Instant;
+
+/// Accumulating stopwatch: measure disjoint spans of the same phase.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Option<Instant>,
+    total_ns: u128,
+    laps: u64,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { start: None, total_ns: 0, laps: 0 }
+    }
+
+    pub fn start(&mut self) {
+        self.start = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(s) = self.start.take() {
+            self.total_ns += s.elapsed().as_nanos();
+            self.laps += 1;
+        }
+    }
+
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.total_ns as f64 / 1e9
+    }
+
+    pub fn laps(&self) -> u64 {
+        self.laps
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.laps == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / 1e6 / self.laps as f64
+        }
+    }
+}
+
+/// Run `f` `iters` times, returning (mean_ms, min_ms, max_ms).
+pub fn time_iters(iters: usize, mut f: impl FnMut()) -> (f64, f64, f64) {
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let sum: f64 = times.iter().sum();
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    (sum / iters as f64, min, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        for _ in 0..3 {
+            sw.time(|| std::thread::sleep(std::time::Duration::from_millis(2)));
+        }
+        assert_eq!(sw.laps(), 3);
+        assert!(sw.total_secs() >= 0.006);
+        assert!(sw.mean_ms() >= 2.0);
+    }
+
+    #[test]
+    fn time_iters_stats_ordered() {
+        let (mean, min, max) = time_iters(5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(min <= mean && mean <= max);
+    }
+}

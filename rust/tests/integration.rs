@@ -1,0 +1,392 @@
+//! Integration tests across the full stack: manifest -> PJRT runtime ->
+//! trainer -> DST updates -> evaluation, plus cross-layer property tests
+//! tying the Rust DST to the paper's equations.
+//!
+//! These tests need `make artifacts` to have run (they use the b16 MLP
+//! graphs, which are cheap); they skip gracefully when artifacts are
+//! missing so `cargo test` stays runnable pre-AOT.
+
+use gxnor::coordinator::checkpoint;
+use gxnor::coordinator::method::Method;
+use gxnor::coordinator::optimizer::OptKind;
+use gxnor::coordinator::trainer::{TrainConfig, Trainer};
+use gxnor::data::{self, Dataset};
+use gxnor::ptest::{property, Gen};
+use gxnor::runtime::client::Runtime;
+use gxnor::runtime::manifest::Manifest;
+use gxnor::ternary::{dst_update, DiscreteSpace};
+
+fn manifest() -> Option<Manifest> {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Some(Manifest::load("artifacts").unwrap())
+    } else {
+        eprintln!("skipping integration test: run `make artifacts`");
+        None
+    }
+}
+
+fn small_cfg(method: Method) -> TrainConfig {
+    TrainConfig {
+        arch: "mlp".into(),
+        method,
+        dataset: "synth_mnist".into(),
+        train_len: 600,
+        test_len: 200,
+        epochs: 2,
+        seed: 7,
+        verbose: false,
+        ..Default::default()
+    }
+}
+
+/// Pick the b16 graphs for fast tests by shadowing the batch>16 preference:
+/// we simply filter the manifest down to b16 graphs.
+fn b16_manifest(m: &Manifest) -> Manifest {
+    let mut m2 = m.clone();
+    m2.graphs.retain(|g| g.batch == 16 || g.mode != "multi");
+    m2
+}
+
+#[test]
+fn gxnor_training_learns_and_stays_on_grid() {
+    let Some(m) = manifest() else { return };
+    let m = b16_manifest(&m);
+    let mut rt = Runtime::new().unwrap();
+    let cfg = small_cfg(Method::Gxnor);
+    let train = data::open(&cfg.dataset, true, cfg.train_len).unwrap();
+    let test = data::open(&cfg.dataset, false, cfg.test_len).unwrap();
+    let mut tr = Trainer::new(&mut rt, &m, cfg).unwrap();
+    assert_eq!(tr.batch_size(), 16);
+    let report = tr.run(train.as_ref(), test.as_ref()).unwrap();
+    // learning happened (chance = 10%)
+    assert!(
+        report.test_acc > 0.3,
+        "gxnor failed to learn: {:.1}%",
+        100.0 * report.test_acc
+    );
+    // paper's core invariant: every weight is exactly in {-1, 0, 1}
+    let space = DiscreteSpace::TERNARY;
+    for (d, v) in tr.model.descs.iter().zip(&tr.model.values) {
+        if d.kind == gxnor::nn::params::ParamKind::Weight {
+            for w in v.to_f32() {
+                assert!(space.contains(w), "{}: off-grid weight {w}", d.name);
+            }
+        }
+    }
+    // memory claim: packed weights ~16x below f32
+    assert!(report.fp32_bytes as f64 / report.packed_bytes as f64 > 12.0);
+    // loss decreased
+    let losses = report.recorder.get("epoch_loss");
+    assert!(losses.last().unwrap() < losses.first().unwrap());
+}
+
+#[test]
+fn all_table1_methods_run_on_mlp() {
+    let Some(m) = manifest() else { return };
+    let m = b16_manifest(&m);
+    let mut rt = Runtime::new().unwrap();
+    for method in [Method::Fp, Method::Bnn, Method::Gxnor] {
+        let cfg = TrainConfig { epochs: 1, ..small_cfg(method) };
+        let train = data::open("synth_mnist", true, 600).unwrap();
+        let test = data::open("synth_mnist", false, 200).unwrap();
+        let mut tr = Trainer::new(&mut rt, &m, cfg).unwrap();
+        let report = tr.run(train.as_ref(), test.as_ref()).unwrap();
+        assert!(
+            report.test_acc > 0.15,
+            "{}: {:.1}%",
+            method.name(),
+            100.0 * report.test_acc
+        );
+    }
+}
+
+#[test]
+fn bwn_twn_share_fp_graph_with_discrete_weights() {
+    let Some(m) = manifest() else { return };
+    let mut rt = Runtime::new().unwrap();
+    for (method, n_states) in [(Method::Bwn, 2usize), (Method::Twn, 3usize)] {
+        let cfg = TrainConfig { epochs: 1, ..small_cfg(method) };
+        let train = data::open("synth_mnist", true, 600).unwrap();
+        let test = data::open("synth_mnist", false, 200).unwrap();
+        let mut tr = Trainer::new(&mut rt, &m, cfg).unwrap();
+        assert!(tr.graph_name().contains("_fp_"), "{}", tr.graph_name());
+        tr.run(train.as_ref(), test.as_ref()).unwrap();
+        let space = method.weight_space().unwrap();
+        assert_eq!(space.n_states(), n_states);
+        for (d, v) in tr.model.descs.iter().zip(&tr.model.values) {
+            if d.kind == gxnor::nn::params::ParamKind::Weight {
+                for w in v.to_f32() {
+                    assert!(space.contains(w), "{}: off-grid {w}", method.name());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn multilevel_spaces_run_and_respect_n1() {
+    let Some(m) = manifest() else { return };
+    let m = b16_manifest(&m);
+    let mut rt = Runtime::new().unwrap();
+    let method = Method::Multi { n1: 3, n2: 2 };
+    let cfg = TrainConfig { epochs: 1, ..small_cfg(method) };
+    let train = data::open("synth_mnist", true, 400).unwrap();
+    let test = data::open("synth_mnist", false, 160).unwrap();
+    let mut tr = Trainer::new(&mut rt, &m, cfg).unwrap();
+    tr.run(train.as_ref(), test.as_ref()).unwrap();
+    let space = DiscreteSpace::new(3);
+    let hist = tr.model.weight_histogram();
+    assert_eq!(hist.len(), space.n_states());
+    // intermediate states are actually used (multi-hop transitions happened)
+    let interior: u64 = hist[1..hist.len() - 1].iter().sum();
+    assert!(interior > 0, "no interior states used: {hist:?}");
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_accuracy() {
+    let Some(m) = manifest() else { return };
+    let m = b16_manifest(&m);
+    let mut rt = Runtime::new().unwrap();
+    let cfg = small_cfg(Method::Gxnor);
+    let train = data::open("synth_mnist", true, 600).unwrap();
+    let test = data::open("synth_mnist", false, 200).unwrap();
+    let path = std::env::temp_dir().join(format!("gxnor_it_{}.ckpt", std::process::id()));
+    let path_s = path.to_str().unwrap().to_string();
+    let acc_before;
+    {
+        let mut tr = Trainer::new(&mut rt, &m, cfg.clone()).unwrap();
+        tr.run(train.as_ref(), test.as_ref()).unwrap();
+        acc_before = tr.evaluate(test.as_ref()).unwrap();
+        checkpoint::save(&tr.model, &path_s).unwrap();
+    }
+    {
+        let mut tr = Trainer::new(&mut rt, &m, cfg).unwrap();
+        checkpoint::load(&mut tr.model, &path_s).unwrap();
+        let acc_after = tr.evaluate(test.as_ref()).unwrap();
+        assert!(
+            (acc_before - acc_after).abs() < 1e-9,
+            "{acc_before} vs {acc_after}"
+        );
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn sparsity_knob_r_moves_measured_sparsity() {
+    let Some(m) = manifest() else { return };
+    let m = b16_manifest(&m);
+    let mut rt = Runtime::new().unwrap();
+    let mut accs = Vec::new();
+    for r in [0.1f32, 0.9f32] {
+        let cfg = TrainConfig { r, epochs: 1, ..small_cfg(Method::Gxnor) };
+        let train = data::open("synth_mnist", true, 400).unwrap();
+        let test = data::open("synth_mnist", false, 160).unwrap();
+        let mut tr = Trainer::new(&mut rt, &m, cfg).unwrap();
+        let rep = tr.run(train.as_ref(), test.as_ref()).unwrap();
+        accs.push(rep.mean_act_sparsity);
+    }
+    assert!(
+        accs[1] > accs[0] + 0.1,
+        "sparsity should grow with r: {accs:?}"
+    );
+}
+
+#[test]
+fn dst_sgd_mode_has_zero_fp_state() {
+    // the paper's pure no-full-precision-memory configuration
+    let Some(m) = manifest() else { return };
+    let m = b16_manifest(&m);
+    let mut rt = Runtime::new().unwrap();
+    let cfg = TrainConfig {
+        opt: OptKind::Sgd,
+        lr_start: 0.02,
+        lr_fin: 0.005,
+        epochs: 3,
+        train_len: 1200,
+        ..small_cfg(Method::Gxnor)
+    };
+    let train = data::open("synth_mnist", true, 1200).unwrap();
+    let test = data::open("synth_mnist", false, 200).unwrap();
+    let mut tr = Trainer::new(&mut rt, &m, cfg).unwrap();
+    let rep = tr.run(train.as_ref(), test.as_ref()).unwrap();
+    assert!(rep.test_acc > 0.25, "{:.1}%", 100.0 * rep.test_acc);
+}
+
+#[test]
+fn hidden_weight_rule_trains_and_reports_master_memory() {
+    // the Fig. 4a baseline: fp masters exist, quantized view stays on grid
+    use gxnor::coordinator::trainer::UpdateRule;
+    let Some(m) = manifest() else { return };
+    let m = b16_manifest(&m);
+    let mut rt = Runtime::new().unwrap();
+    let cfg = TrainConfig {
+        update_rule: UpdateRule::Hidden,
+        ..small_cfg(Method::Gxnor)
+    };
+    let train = data::open("synth_mnist", true, 600).unwrap();
+    let test = data::open("synth_mnist", false, 200).unwrap();
+    let mut tr = Trainer::new(&mut rt, &m, cfg).unwrap();
+    let rep = tr.run(train.as_ref(), test.as_ref()).unwrap();
+    assert!(rep.test_acc > 0.3, "{:.1}%", 100.0 * rep.test_acc);
+    // masters cost exactly 4 B per weight
+    assert_eq!(rep.hidden_fp32_bytes, 4 * tr.model.n_weights());
+    // quantized view still strictly on-grid
+    let space = DiscreteSpace::TERNARY;
+    for (d, v) in tr.model.descs.iter().zip(&tr.model.values) {
+        if d.kind == gxnor::nn::params::ParamKind::Weight {
+            for w in v.to_f32() {
+                assert!(space.contains(w), "off-grid {w}");
+            }
+        }
+    }
+    // and DST mode reports zero master memory
+    let cfg2 = small_cfg(Method::Gxnor);
+    let mut tr2 = Trainer::new(&mut rt, &m, cfg2).unwrap();
+    let rep2 = tr2.run(train.as_ref(), test.as_ref()).unwrap();
+    assert_eq!(rep2.hidden_fp32_bytes, 0);
+}
+
+#[test]
+fn checkpoint_inspect_describes_tensors() {
+    let Some(m) = manifest() else { return };
+    let m = b16_manifest(&m);
+    let mut rt = Runtime::new().unwrap();
+    let cfg = TrainConfig { epochs: 1, ..small_cfg(Method::Gxnor) };
+    let train = data::open("synth_mnist", true, 320).unwrap();
+    let test = data::open("synth_mnist", false, 160).unwrap();
+    let mut tr = Trainer::new(&mut rt, &m, cfg).unwrap();
+    tr.run(train.as_ref(), test.as_ref()).unwrap();
+    let bytes = checkpoint::serialize(&tr.model);
+    let desc = checkpoint::inspect(&bytes).unwrap();
+    assert!(desc.contains("W0"), "{desc}");
+    assert!(desc.contains("Z_1"), "{desc}");
+    assert!(desc.contains("bn state"), "{desc}");
+    assert!(desc.contains("packed weights"), "{desc}");
+}
+
+// ---------------------------------------------------------------------------
+// Cross-layer property tests (ptest harness)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_dst_preserves_grid_and_bounds() {
+    property("dst grid closure", 300, |g: &mut Gen| {
+        let n = g.usize_in(0, 7) as u32;
+        let space = DiscreteSpace::new(n);
+        let len = g.usize_in(1, 300);
+        let mut w: Vec<f32> = (0..len)
+            .map(|_| space.state(g.usize_in(0, space.n_states())))
+            .collect();
+        let dw = g.vec_normal(len, 2.0);
+        let m = g.f32_in(0.1, 10.0);
+        dst_update(&mut w, &dw, space, m, g.rng());
+        for &v in &w {
+            if !space.contains(v) {
+                return Err(format!("N={n}: {v} off grid"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dst_zero_increment_fixed_point() {
+    property("dst zero fixed point", 100, |g: &mut Gen| {
+        let n = g.usize_in(0, 7) as u32;
+        let space = DiscreteSpace::new(n);
+        let len = g.usize_in(1, 100);
+        let w0: Vec<f32> = (0..len)
+            .map(|_| space.state(g.usize_in(0, space.n_states())))
+            .collect();
+        let mut w = w0.clone();
+        let dw = vec![0.0f32; len];
+        dst_update(&mut w, &dw, space, 3.0, g.rng());
+        if w != w0 {
+            return Err("zero increment moved weights".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dst_monotone_in_expectation() {
+    // positive increments never *decrease* a weight (single draw can only
+    // hop along sign(rho)): check per-element next >= current for dw >= 0.
+    property("dst monotone", 200, |g: &mut Gen| {
+        let space = DiscreteSpace::new(g.usize_in(1, 7) as u32);
+        let len = g.usize_in(1, 200);
+        let w0: Vec<f32> = (0..len)
+            .map(|_| space.state(g.usize_in(0, space.n_states())))
+            .collect();
+        let mut w = w0.clone();
+        let dw: Vec<f32> = (0..len).map(|_| g.f32_in(0.0, 3.0)).collect();
+        dst_update(&mut w, &dw, space, 3.0, g.rng());
+        for (i, (&before, &after)) in w0.iter().zip(&w).enumerate() {
+            if after < before - 1e-6 {
+                return Err(format!("w[{i}] moved against dw: {before} -> {after}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_augment_preserves_range() {
+    use gxnor::data::augment::{augment, AugmentCfg};
+    property("augment range", 100, |g: &mut Gen| {
+        let h = g.usize_in(4, 33);
+        let w = g.usize_in(4, 33);
+        let c = *g.choose(&[1usize, 3]);
+        let mut img = g.vec_f32(h * w * c, -1.0, 1.0);
+        let cfg = AugmentCfg { pad: g.usize_in(0, 5), hflip: g.bool() };
+        augment(&mut img, h, w, c, &cfg, g.rng());
+        if img.len() != h * w * c {
+            return Err("length changed".into());
+        }
+        for &v in &img {
+            if !(-1.0..=1.0).contains(&v) {
+                return Err(format!("out of range {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packed_tensor_roundtrip() {
+    use gxnor::ternary::PackedTensor;
+    property("packed roundtrip", 150, |g: &mut Gen| {
+        let n = g.usize_in(0, 7) as u32;
+        let space = DiscreteSpace::new(n);
+        let len = g.usize_in(1, 1000);
+        let vals: Vec<f32> = (0..len)
+            .map(|_| space.state(g.usize_in(0, space.n_states())))
+            .collect();
+        let p = PackedTensor::pack(&vals, &[len], space);
+        if p.unpack() != vals {
+            return Err(format!("roundtrip failed for N={n} len={len}"));
+        }
+        let mut buf = Vec::new();
+        p.serialize(&mut buf);
+        let mut pos = 0;
+        let q = PackedTensor::deserialize(&buf, &mut pos).map_err(|e| e)?;
+        if q.unpack() != vals {
+            return Err("serialize roundtrip failed".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn eval_batches_agree_with_direct_fill() {
+    // BatchIter::for_eval must enumerate the dataset in order
+    let ds = data::open("synth_cifar", false, 64).unwrap();
+    let mut labels = Vec::new();
+    gxnor::data::BatchIter::for_eval(ds.as_ref(), 16, |_, y| {
+        labels.extend_from_slice(y)
+    });
+    let mut buf = vec![0.0; ds.sample_len()];
+    for (i, &l) in labels.iter().enumerate() {
+        assert_eq!(l, ds.fill(i, &mut buf) as i32);
+    }
+}
