@@ -22,7 +22,7 @@
 use std::time::Instant;
 
 use gxnor::coordinator::method::Method;
-use gxnor::coordinator::trainer::{run_training, TrainConfig};
+use gxnor::coordinator::trainer::{run_training, TrainConfig, Trainer};
 use gxnor::data::Dataset;
 use gxnor::hwsim::report::{fig12_example, table2};
 use gxnor::metrics::Recorder;
@@ -30,8 +30,9 @@ use gxnor::runtime::client::{Arg, Runtime};
 use gxnor::runtime::manifest::Manifest;
 use gxnor::sweep;
 use gxnor::ternary::{dst_update, DiscreteSpace, PackedTensor};
+use gxnor::util::json::Json;
 use gxnor::util::prng::Prng;
-use gxnor::util::timer::time_iters;
+use gxnor::util::timer::{percentile, time_iters};
 
 fn main() -> anyhow::Result<()> {
     let filters: Vec<String> = std::env::args()
@@ -400,5 +401,154 @@ fn bench_perf(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> {
         );
     }
     println!();
+    bench_step_loop(rt, manifest)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// §Perf step-loop A/B: legacy one-shot boundary vs pooled zero-copy boundary
+// ---------------------------------------------------------------------------
+
+/// Per-variant timing of the full training step (exec + update + marshal).
+struct StepTiming {
+    graph: String,
+    steps_per_sec: f64,
+    step_ms_mean: f64,
+    exec_ms: f64,
+    update_ms: f64,
+    marshal_ms: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+impl StepTiming {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("steps_per_sec".into(), Json::Num(self.steps_per_sec)),
+            ("step_ms_mean".into(), Json::Num(self.step_ms_mean)),
+            ("exec_ms".into(), Json::Num(self.exec_ms)),
+            ("update_ms".into(), Json::Num(self.update_ms)),
+            ("marshal_ms".into(), Json::Num(self.marshal_ms)),
+            ("p50_ms".into(), Json::Num(self.p50_ms)),
+            ("p99_ms".into(), Json::Num(self.p99_ms)),
+        ])
+    }
+}
+
+/// Run `steps` full training steps on one fixed batch through either the
+/// pooled (`Trainer::step`) or the legacy (`Trainer::step_unpooled`)
+/// boundary, on a fresh trainer (compilation is cached in `rt`, so only
+/// the first variant pays it — warmup absorbs the remainder).
+fn measure_steps(
+    rt: &mut Runtime,
+    manifest: &Manifest,
+    cfg: &TrainConfig,
+    train: &dyn Dataset,
+    pooled: bool,
+    steps: usize,
+) -> anyhow::Result<StepTiming> {
+    let mut tr = Trainer::new(rt, manifest, cfg.clone())?;
+    let b = tr.batch_size();
+    let sl = train.sample_len();
+    let mut x = vec![0.0f32; b * sl];
+    let mut y = vec![0i32; b];
+    for i in 0..b {
+        y[i] = train.fill(i % train.len(), &mut x[i * sl..(i + 1) * sl]) as i32;
+    }
+    let lr = 1e-3;
+    for _ in 0..3 {
+        if pooled {
+            tr.step(&x, &y, lr)?;
+        } else {
+            tr.step_unpooled(&x, &y, lr)?;
+        }
+    }
+    // warmup paid compilation cache-fill, first-touch and (pooled) the
+    // initial all-params refill — drop it from the per-phase means so
+    // BENCH_step.json records the steady state only.
+    tr.sw_exec.reset();
+    tr.sw_update.reset();
+    tr.sw_marshal.reset();
+    let mut per_step = Vec::with_capacity(steps);
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        let ts = Instant::now();
+        if pooled {
+            tr.step(&x, &y, lr)?;
+        } else {
+            tr.step_unpooled(&x, &y, lr)?;
+        }
+        per_step.push(ts.elapsed().as_secs_f64() * 1e3);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(StepTiming {
+        graph: tr.graph_name().to_string(),
+        steps_per_sec: steps as f64 / wall.max(1e-12),
+        step_ms_mean: 1e3 * wall / steps as f64,
+        exec_ms: tr.sw_exec.mean_ms(),
+        update_ms: tr.sw_update.mean_ms(),
+        marshal_ms: tr.sw_marshal.mean_ms(),
+        p50_ms: percentile(&per_step, 50.0),
+        p99_ms: percentile(&per_step, 99.0),
+    })
+}
+
+/// Steps/sec on the mlp train graph, legacy vs pooled boundary, recorded
+/// machine-readably in `BENCH_step.json` so later PRs regress against it.
+fn bench_step_loop(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> {
+    println!("== perf: step-loop boundary A/B (BENCH_step.json) ==\n");
+    let cfg = TrainConfig { epochs: 1, train_len: 2000, test_len: 400, ..base_cfg() };
+    let train =
+        gxnor::data::open(&cfg.dataset, true, cfg.train_len).map_err(anyhow::Error::msg)?;
+    const STEPS: usize = 30;
+
+    let baseline = measure_steps(rt, manifest, &cfg, train.as_ref(), false, STEPS)?;
+    let pooled = measure_steps(rt, manifest, &cfg, train.as_ref(), true, STEPS)?;
+    let speedup = pooled.steps_per_sec / baseline.steps_per_sec.max(1e-12);
+
+    // end-to-end: pooled boundary + pipelined prefetch across a real epoch
+    let run_rep = run_training(rt, manifest, cfg.clone())?;
+
+    let graph_name = pooled.graph.clone();
+    println!(
+        "legacy boundary  : {:>8.2} steps/s  (step {:.1} ms, marshal {:.2} ms)",
+        baseline.steps_per_sec, baseline.step_ms_mean, baseline.marshal_ms
+    );
+    println!(
+        "pooled boundary  : {:>8.2} steps/s  (step {:.1} ms, marshal {:.2} ms, p50 {:.1}, p99 {:.1})",
+        pooled.steps_per_sec, pooled.step_ms_mean, pooled.marshal_ms, pooled.p50_ms, pooled.p99_ms
+    );
+    println!(
+        "pipelined run    : {:>8.2} steps/s  (prefetch on, incl. eval epochs)",
+        run_rep.steps_per_sec
+    );
+    println!("speedup          : {speedup:.2}x (pooled vs legacy)\n");
+
+    let doc = Json::Obj(vec![
+        ("schema".into(), Json::Str("bench_step.v1".into())),
+        ("graph".into(), Json::Str(graph_name)),
+        ("steps_measured".into(), Json::Num(STEPS as f64)),
+        ("baseline".into(), baseline.to_json()),
+        ("pooled".into(), pooled.to_json()),
+        (
+            "pipelined_run".into(),
+            Json::Obj(vec![
+                ("steps_per_sec".into(), Json::Num(run_rep.steps_per_sec)),
+                ("step_p50_ms".into(), Json::Num(run_rep.step_p50_ms)),
+                ("step_p99_ms".into(), Json::Num(run_rep.step_p99_ms)),
+                ("exec_ms".into(), Json::Num(run_rep.exec_time_ms)),
+                ("update_ms".into(), Json::Num(run_rep.dst_time_ms)),
+                ("marshal_ms".into(), Json::Num(run_rep.marshal_time_ms)),
+            ]),
+        ),
+        ("speedup_pooled_vs_baseline".into(), Json::Num(speedup)),
+    ]);
+    let text = doc.to_string();
+    std::fs::write("BENCH_step.json", &text)?;
+    // also drop a copy at the repo root when benching from rust/
+    if std::path::Path::new("../ROADMAP.md").exists() {
+        std::fs::write("../BENCH_step.json", &text)?;
+    }
+    println!("wrote BENCH_step.json\n");
     Ok(())
 }

@@ -1,11 +1,28 @@
 //! The training loop: the system's end-to-end hot path.
 //!
-//! Per step: expand packed weights to f32 → execute the lowered train graph
-//! (loss, accuracy, per-layer activation sparsity, gradients, BN stats) →
-//! Adam/SGD-precondition the gradients → **DST-project** the weight
-//! increments back onto the Z_N grid (eqs. 13–20) → store packed. Dense
-//! parameters (BN affine; all weights in the `fp` baseline) take ordinary
-//! dense updates. Python is never involved.
+//! Per step: execute the lowered train graph (loss, accuracy, per-layer
+//! activation sparsity, gradients, BN stats) → Adam/SGD-precondition the
+//! gradients → **DST-project** the weight increments back onto the Z_N
+//! grid (eqs. 13–20) → store packed. Dense parameters (BN affine; all
+//! weights in the `fp` baseline) take ordinary dense updates. Python is
+//! never involved.
+//!
+//! The boundary is pooled and pipelined (§Perf iteration 9):
+//!
+//! * **Zero-copy marshalling** — every input literal lives in a per-graph
+//!   [`ExecBuffers`] pool created at construction and refilled in place.
+//!   Batch `x`/`labels` and BN state refill every step; a discrete weight
+//!   tensor refills only when DST actually moved a state on it
+//!   (`DstStats::transitions > 0` — at high sparsity most tensors most
+//!   steps move nothing, echoing the paper's Remark 2 that the discrete
+//!   weights *are* the state); static scalars (`r`, `a`, `hl`) are written
+//!   once. Outputs land in reusable caller-owned buffers via
+//!   [`Runtime::execute_into`]. The steady-state marshalling path performs
+//!   no heap allocation.
+//! * **Pipelined batches** — a [`Prefetcher`] worker assembles batch *k+1*
+//!   (shuffle, procedural fill, augment) while the graph executes batch
+//!   *k*, reproducing the serial iterator's per-epoch RNG streams exactly,
+//!   so the training trajectory is bit-identical to the serial loop.
 
 use anyhow::{anyhow, Result};
 
@@ -13,15 +30,22 @@ use crate::coordinator::hidden::HiddenWeights;
 use crate::coordinator::method::Method;
 use crate::coordinator::optimizer::{OptKind, Optimizer};
 use crate::coordinator::schedule::LrSchedule;
-use crate::data::{AugmentCfg, BatchIter, Dataset};
+use crate::data::{AugmentCfg, Dataset, Item, Prefetcher};
 use crate::metrics::Recorder;
-use crate::nn::params::{ModelState, ParamKind, ParamValue};
 use crate::nn::init::init_model;
-use crate::runtime::client::{Arg, Runtime};
+use crate::nn::params::{ModelState, ParamKind, ParamValue};
+use crate::runtime::client::{Arg, ExecBuffers, Runtime};
 use crate::runtime::manifest::{GraphMeta, Manifest};
 use crate::ternary::{dst_update, DiscreteSpace, DstStats};
 use crate::util::prng::Prng;
-use crate::util::timer::Stopwatch;
+use crate::util::timer::{percentile, Stopwatch};
+
+/// Train-graph input layout: x, labels, r, a, hl, params…, bn….
+const TRAIN_FIXED_INPUTS: usize = 5;
+/// Infer-graph input layout: x, r, hl, params…, bn….
+const INFER_FIXED_INPUTS: usize = 3;
+/// Pipeline depth of the batch prefetcher (double buffering).
+const PREFETCH_DEPTH: usize = 2;
 
 /// How discrete weights are updated.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -122,6 +146,12 @@ pub struct TrainReport {
     pub step_time_ms: f64,
     pub exec_time_ms: f64,
     pub dst_time_ms: f64,
+    /// mean time spent refilling input literals (the PJRT boundary cost)
+    pub marshal_time_ms: f64,
+    /// median / tail step latency over the whole run
+    pub step_p50_ms: f64,
+    pub step_p99_ms: f64,
+    pub steps_per_sec: f64,
 }
 
 /// Trainer wiring one model to one (train, infer) graph pair.
@@ -139,8 +169,14 @@ pub struct Trainer<'rt> {
     dw_buf: Vec<f32>,
     /// full-precision masters, only under UpdateRule::Hidden (Fig. 4a)
     hidden: Vec<Option<HiddenWeights>>,
+    /// pooled input literals + reusable output buffers, per graph
+    train_bufs: ExecBuffers,
+    infer_bufs: ExecBuffers,
+    /// param i's device literal is stale and needs a refill next step
+    dirty: Vec<bool>,
     pub sw_exec: Stopwatch,
     pub sw_update: Stopwatch,
+    pub sw_marshal: Stopwatch,
 }
 
 impl<'rt> Trainer<'rt> {
@@ -207,6 +243,18 @@ impl<'rt> Trainer<'rt> {
         let max_numel = model.descs.iter().map(|d| d.numel()).max().unwrap_or(0);
         let opt = Optimizer::new(cfg.opt, model.values.len());
         let rng = Prng::new(cfg.seed ^ 0xD57);
+
+        // boundary pools: literals allocated once, static scalars set once
+        let hl = cfg.method.hl();
+        let mut train_bufs = ExecBuffers::new(&train_g)?;
+        train_bufs.set_scalar(&train_g, 2, cfg.r)?;
+        train_bufs.set_scalar(&train_g, 3, cfg.a)?;
+        train_bufs.set_scalar(&train_g, 4, hl)?;
+        let mut infer_bufs = ExecBuffers::new(&infer_g)?;
+        infer_bufs.set_scalar(&infer_g, 1, cfg.r)?;
+        infer_bufs.set_scalar(&infer_g, 2, hl)?;
+        let dirty = vec![true; model.values.len()];
+
         Ok(Trainer {
             rt,
             train_g,
@@ -218,8 +266,12 @@ impl<'rt> Trainer<'rt> {
             param_f32,
             dw_buf: vec![0.0; max_numel],
             hidden,
+            train_bufs,
+            infer_bufs,
+            dirty,
             sw_exec: Stopwatch::new(),
             sw_update: Stopwatch::new(),
+            sw_marshal: Stopwatch::new(),
         })
     }
 
@@ -244,12 +296,78 @@ impl<'rt> Trainer<'rt> {
         }
     }
 
-    /// One training step on a prepared batch.
+    /// Re-expand the packed model and invalidate every pooled literal.
+    /// Called at run start so externally mutated state (e.g. a checkpoint
+    /// loaded into `self.model`) reaches the device.
+    pub fn sync_from_model(&mut self) {
+        self.refresh_param_f32();
+        self.dirty.fill(true);
+    }
+
+    /// One training step on a prepared batch (pooled, allocation-free
+    /// marshalling).
     pub fn step(&mut self, x: &[f32], labels: &[i32], lr: f64) -> Result<StepStats> {
         let b = self.train_g.batch;
         assert_eq!(labels.len(), b);
-        // 1. execute the lowered fwd/bwd graph
+        let n_params = self.model.descs.len();
+
+        // 1. refill only what changed on the host since the last step
+        self.sw_marshal.start();
+        self.train_bufs.set_f32(&self.train_g, 0, x)?;
+        self.train_bufs.set_i32(&self.train_g, 1, labels)?;
+        for i in 0..n_params {
+            if self.dirty[i] {
+                self.train_bufs
+                    .set_f32(&self.train_g, TRAIN_FIXED_INPUTS + i, &self.param_f32[i])?;
+                self.dirty[i] = false;
+            }
+        }
+        for (j, s) in self.model.bn_state.iter().enumerate() {
+            self.train_bufs
+                .set_f32(&self.train_g, TRAIN_FIXED_INPUTS + n_params + j, s)?;
+        }
+        self.sw_marshal.stop();
+
+        // 2. execute the lowered fwd/bwd graph into pooled output buffers
+        self.sw_exec.start();
+        self.rt.execute_into(&self.train_g, &mut self.train_bufs)?;
+        self.sw_exec.stop();
+
+        // 3. updates (take the outputs out of the pool to sidestep the
+        //    simultaneous-borrow of self; zero-cost swap, restored below)
+        let outs = std::mem::take(&mut self.train_bufs.outputs);
+        self.sw_update.start();
+        let dst_stats = self.apply_updates(&outs, lr, false);
+        self.sw_update.stop();
+
+        let loss = outs[0][0] as f64;
+        let acc = outs[1][0] as f64 / b as f64;
+        let spars = &outs[2];
+        let sparsity = if spars.is_empty() {
+            0.0
+        } else {
+            spars.iter().map(|&v| v as f64).sum::<f64>() / spars.len() as f64
+        };
+        let stats = StepStats {
+            loss,
+            acc,
+            sparsity,
+            sparsity_per_layer: spars.iter().map(|&v| v as f64).collect(),
+            dst: dst_stats,
+        };
+        self.train_bufs.outputs = outs;
+        Ok(stats)
+    }
+
+    /// One training step through the legacy one-shot boundary: every
+    /// literal rebuilt, every output freshly allocated, every discrete
+    /// tensor repacked. Kept as the A/B baseline the `perf` bench section
+    /// measures the pooled path against (`BENCH_step.json`).
+    pub fn step_unpooled(&mut self, x: &[f32], labels: &[i32], lr: f64) -> Result<StepStats> {
+        let b = self.train_g.batch;
+        assert_eq!(labels.len(), b);
         let hl = self.cfg.method.hl();
+        self.sw_marshal.start();
         let mut args: Vec<Arg> = vec![
             Arg::F32(x),
             Arg::I32(labels),
@@ -263,9 +381,14 @@ impl<'rt> Trainer<'rt> {
         for s in &self.model.bn_state {
             args.push(Arg::F32(s));
         }
+        self.sw_marshal.stop();
         self.sw_exec.start();
         let outs = self.rt.execute(&self.train_g, &args)?;
         self.sw_exec.stop();
+
+        self.sw_update.start();
+        let dst_stats = self.apply_updates(&outs, lr, true);
+        self.sw_update.stop();
 
         let loss = outs[0][0] as f64;
         let acc = outs[1][0] as f64 / b as f64;
@@ -275,9 +398,21 @@ impl<'rt> Trainer<'rt> {
         } else {
             spars.iter().map(|&v| v as f64).sum::<f64>() / spars.len() as f64
         };
+        Ok(StepStats {
+            loss,
+            acc,
+            sparsity,
+            sparsity_per_layer: spars.iter().map(|&v| v as f64).collect(),
+            dst: dst_stats,
+        })
+    }
 
-        // 2. updates: DST for discrete weights, dense for the rest
-        self.sw_update.start();
+    /// Shared update half of a step: DST for discrete weights, dense for
+    /// the rest, BN running stats straight off the graph. With
+    /// `force_repack` every discrete tensor is repacked and marked dirty
+    /// (legacy semantics); otherwise tensors with zero DST transitions
+    /// skip both the repack and the next literal refill.
+    fn apply_updates(&mut self, outs: &[Vec<f32>], lr: f64, force_repack: bool) -> DstStats {
         self.opt.begin_step();
         let n_params = self.model.descs.len();
         let mut dst_stats = DstStats::default();
@@ -291,15 +426,20 @@ impl<'rt> Trainer<'rt> {
                     if let Some(hw) = &mut self.hidden[i] {
                         // Fig. 4a baseline: update the fp master, requantize
                         hw.step(i, &mut self.opt, grad, lr, &mut self.dw_buf, w);
+                        packed.repack_from(w);
+                        self.dirty[i] = true;
                     } else {
                         // the paper's DST: no master copy exists
                         let dw = &mut self.dw_buf[..grad.len()];
                         self.opt.increment(i, grad, lr, dw);
                         let stats =
                             dst_update(w, dw, packed.space(), self.cfg.m, &mut self.rng);
+                        if force_repack || stats.transitions > 0 {
+                            packed.repack_from(w);
+                            self.dirty[i] = true;
+                        }
                         dst_stats.merge(&stats);
                     }
-                    packed.repack_from(w);
                 }
                 ParamValue::Dense(dense) => {
                     let scale = if desc.kind == ParamKind::Weight {
@@ -309,70 +449,68 @@ impl<'rt> Trainer<'rt> {
                     };
                     self.opt.apply_dense(i, dense, grad, lr * scale);
                     self.param_f32[i].copy_from_slice(dense);
+                    self.dirty[i] = true;
                 }
             }
         }
-        // 3. BN running stats come straight off the graph
+        // BN running stats come straight off the graph
         let bn_off = 3 + n_params;
         for (j, s) in self.model.bn_state.iter_mut().enumerate() {
             s.copy_from_slice(&outs[bn_off + j]);
         }
-        self.sw_update.stop();
-
-        Ok(StepStats {
-            loss,
-            acc,
-            sparsity,
-            sparsity_per_layer: spars.iter().map(|&v| v as f64).collect(),
-            dst: dst_stats,
-        })
+        dst_stats
     }
 
     /// Accuracy over a dataset using the infer graph (BN running stats).
+    /// Batch assembly is prefetched; per-batch work allocates nothing —
+    /// logits land in the pooled output buffer, labels ride the recycled
+    /// batch ring.
     pub fn evaluate(&mut self, ds: &dyn Dataset) -> Result<f64> {
         self.refresh_param_f32();
+        let n_params = self.model.descs.len();
+        for i in 0..n_params {
+            self.infer_bufs
+                .set_f32(&self.infer_g, INFER_FIXED_INPUTS + i, &self.param_f32[i])?;
+        }
+        for (j, s) in self.model.bn_state.iter().enumerate() {
+            self.infer_bufs
+                .set_f32(&self.infer_g, INFER_FIXED_INPUTS + n_params + j, s)?;
+        }
         let b = self.infer_g.batch;
-        let sample_len = ds.sample_len();
-        let mut x = vec![0.0f32; b * sample_len];
+        let n_classes = self.infer_g.n_classes;
         let mut correct = 0usize;
         let mut total = 0usize;
-        let n_batches = ds.len() / b;
-        let hl = self.cfg.method.hl();
-        for nb in 0..n_batches {
-            let mut labels = vec![0i32; b];
-            for i in 0..b {
-                labels[i] =
-                    ds.fill(nb * b + i, &mut x[i * sample_len..(i + 1) * sample_len]) as i32;
-            }
-            let mut args: Vec<Arg> =
-                vec![Arg::F32(&x), Arg::Scalar(self.cfg.r), Arg::Scalar(hl)];
-            for p in &self.param_f32 {
-                args.push(Arg::F32(p));
-            }
-            for s in &self.model.bn_state {
-                args.push(Arg::F32(s));
-            }
-            let outs = self.rt.execute(&self.infer_g, &args)?;
-            let logits = &outs[0];
-            for (i, &lbl) in labels.iter().enumerate() {
-                let row = &logits[i * self.infer_g.n_classes..(i + 1) * self.infer_g.n_classes];
-                let pred = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(k, _)| k as i32)
-                    .unwrap();
-                if pred == lbl {
-                    correct += 1;
+        std::thread::scope(|scope| -> Result<()> {
+            let mut pf = Prefetcher::spawn_eval(scope, ds, b, PREFETCH_DEPTH);
+            while let Some(item) = pf.next() {
+                let Item::Batch(batch) = item else { continue };
+                self.infer_bufs.set_f32(&self.infer_g, 0, &batch.x)?;
+                self.rt.execute_into(&self.infer_g, &mut self.infer_bufs)?;
+                let logits = &self.infer_bufs.outputs[0];
+                for (i, &lbl) in batch.y.iter().enumerate() {
+                    let row = &logits[i * n_classes..(i + 1) * n_classes];
+                    let pred = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(k, _)| k as i32)
+                        .unwrap();
+                    if pred == lbl {
+                        correct += 1;
+                    }
                 }
+                total += b;
+                pf.recycle(batch);
             }
-            total += b;
-        }
+            Ok(())
+        })?;
         Ok(correct as f64 / total.max(1) as f64)
     }
 
     /// Full run: epochs × batches with the paper's LR decay; returns the
-    /// report consumed by the benches.
+    /// report consumed by the benches. Batch k+1 is assembled on the
+    /// prefetch worker while the graph executes batch k; the trajectory is
+    /// bit-identical to the serial loop (same per-epoch RNG streams).
     pub fn run(&mut self, train: &dyn Dataset, test: &dyn Dataset) -> Result<TrainReport> {
         let schedule = LrSchedule::new(self.cfg.lr_start, self.cfg.lr_fin, self.cfg.epochs);
         let aug = if self.cfg.augment {
@@ -381,49 +519,65 @@ impl<'rt> Trainer<'rt> {
             AugmentCfg::none()
         };
         let b = self.train_g.batch;
-        let sample_len = train.sample_len();
-        let mut x = vec![0.0f32; b * sample_len];
-        let mut y = vec![0i32; b];
+        let epochs = self.cfg.epochs;
+        let seed = self.cfg.seed;
+        let verbose = self.cfg.verbose;
+        self.sync_from_model();
         let mut rec = Recorder::new();
         let mut steps = 0u64;
+        let mut step_ms: Vec<f64> = Vec::with_capacity(epochs * (train.len() / b.max(1)));
         let t0 = std::time::Instant::now();
-        for epoch in 0..self.cfg.epochs {
-            let lr = schedule.lr_at(epoch);
-            let mut it = BatchIter::new(train, b, self.cfg.seed.wrapping_add(epoch as u64), aug);
+        std::thread::scope(|scope| -> Result<()> {
+            let mut pf =
+                Prefetcher::spawn_train(scope, train, b, seed, aug, epochs, PREFETCH_DEPTH);
+            let mut lr = schedule.lr_at(0);
             let mut ep_loss = 0.0;
             let mut ep_acc = 0.0;
-            let mut n = 0;
-            self.refresh_param_f32();
-            while it.next_batch(&mut x, &mut y) {
-                let s = self.step(&x, &y, lr)?;
-                ep_loss += s.loss;
-                ep_acc += s.acc;
-                n += 1;
-                steps += 1;
-                rec.push("loss", s.loss);
-                rec.push("train_acc", s.acc);
-                rec.push("act_sparsity", s.sparsity);
-                for (j, &v) in s.sparsity_per_layer.iter().enumerate() {
-                    rec.push(&format!("act_sparsity_l{j}"), v);
+            let mut n = 0usize;
+            while let Some(item) = pf.next() {
+                match item {
+                    Item::Batch(batch) => {
+                        let ts = std::time::Instant::now();
+                        let s = self.step(&batch.x, &batch.y, lr)?;
+                        step_ms.push(ts.elapsed().as_secs_f64() * 1e3);
+                        pf.recycle(batch);
+                        ep_loss += s.loss;
+                        ep_acc += s.acc;
+                        n += 1;
+                        steps += 1;
+                        rec.push("loss", s.loss);
+                        rec.push("train_acc", s.acc);
+                        rec.push("act_sparsity", s.sparsity);
+                        for (j, &v) in s.sparsity_per_layer.iter().enumerate() {
+                            rec.push(&format!("act_sparsity_l{j}"), v);
+                        }
+                        rec.push("dst_rate", s.dst.transition_rate());
+                    }
+                    Item::EpochEnd { epoch } => {
+                        let test_acc = self.evaluate(test)?;
+                        rec.push("epoch_loss", ep_loss / n.max(1) as f64);
+                        rec.push("epoch_train_acc", ep_acc / n.max(1) as f64);
+                        rec.push("test_acc", test_acc);
+                        rec.push("test_err", 1.0 - test_acc);
+                        rec.push("lr", lr);
+                        if verbose {
+                            println!(
+                                "epoch {epoch:>3}  lr {lr:.2e}  loss {:>8.4}  train {:5.1}%  test {:5.1}%  spars {:.2}",
+                                ep_loss / n.max(1) as f64,
+                                100.0 * ep_acc / n.max(1) as f64,
+                                100.0 * test_acc,
+                                rec.last("act_sparsity").unwrap_or(0.0),
+                            );
+                        }
+                        ep_loss = 0.0;
+                        ep_acc = 0.0;
+                        n = 0;
+                        lr = schedule.lr_at(epoch as usize + 1);
+                    }
                 }
-                rec.push("dst_rate", s.dst.transition_rate());
             }
-            let test_acc = self.evaluate(test)?;
-            rec.push("epoch_loss", ep_loss / n.max(1) as f64);
-            rec.push("epoch_train_acc", ep_acc / n.max(1) as f64);
-            rec.push("test_acc", test_acc);
-            rec.push("test_err", 1.0 - test_acc);
-            rec.push("lr", lr);
-            if self.cfg.verbose {
-                println!(
-                    "epoch {epoch:>3}  lr {lr:.2e}  loss {:>8.4}  train {:5.1}%  test {:5.1}%  spars {:.2}",
-                    ep_loss / n.max(1) as f64,
-                    100.0 * ep_acc / n.max(1) as f64,
-                    100.0 * test_acc,
-                    rec.last("act_sparsity").unwrap_or(0.0),
-                );
-            }
-        }
+            Ok(())
+        })?;
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
         let (packed, fp32) = self.model.weight_memory_bytes();
         Ok(TrainReport {
@@ -437,6 +591,10 @@ impl<'rt> Trainer<'rt> {
             step_time_ms: wall_ms / steps.max(1) as f64,
             exec_time_ms: self.sw_exec.mean_ms(),
             dst_time_ms: self.sw_update.mean_ms(),
+            marshal_time_ms: self.sw_marshal.mean_ms(),
+            step_p50_ms: percentile(&step_ms, 50.0),
+            step_p99_ms: percentile(&step_ms, 99.0),
+            steps_per_sec: steps as f64 / (wall_ms / 1e3).max(1e-9),
             recorder: rec,
         })
     }

@@ -12,11 +12,13 @@
 pub mod augment;
 pub mod idx;
 pub mod loader;
+pub mod prefetch;
 pub mod synth;
 pub mod textures;
 
 pub use augment::AugmentCfg;
 pub use loader::BatchIter;
+pub use prefetch::{Batch, Item, Prefetcher};
 pub use synth::SynthDigits;
 pub use textures::{SynthCifar, SynthSvhn};
 

@@ -157,8 +157,12 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         report.fp32_bytes as f64 / report.packed_bytes.max(1) as f64
     );
     println!(
-        "per-step      : {:.1} ms total ({:.1} ms graph exec, {:.2} ms DST+update)",
-        report.step_time_ms, report.exec_time_ms, report.dst_time_ms
+        "per-step      : {:.1} ms total ({:.1} ms graph exec, {:.2} ms DST+update, {:.3} ms marshal)",
+        report.step_time_ms, report.exec_time_ms, report.dst_time_ms, report.marshal_time_ms
+    );
+    println!(
+        "step latency  : p50 {:.1} ms  p99 {:.1} ms  ({:.1} steps/s)",
+        report.step_p50_ms, report.step_p99_ms, report.steps_per_sec
     );
     println!("loss curve    : {}", report.recorder.sparkline("loss", 60));
     if !save.is_empty() {

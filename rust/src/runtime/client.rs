@@ -1,20 +1,28 @@
-//! PJRT execution: compile-once, execute-many.
+//! PJRT execution: compile-once, execute-many, marshal-nothing.
 //!
 //! Follows the /opt/xla-example/load_hlo pattern: HLO **text** ->
 //! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
 //! `client.compile` -> `execute`. Executables are cached by graph name, so
 //! a parameter sweep touching one graph compiles exactly once.
 //!
-//! Input marshalling: callers pass `&[f32]` / `&[i32]` slices in manifest
-//! input order; literals are built with `create_from_shape_and_untyped_data`
-//! (one memcpy, no per-element conversion). Outputs come back as a flat
-//! `Vec<Vec<f32>>` in manifest output order.
+//! Two execution paths cross the boundary:
+//!
+//! * [`Runtime::execute`] — one-shot: builds every input literal from the
+//!   caller's slices and returns fresh `Vec<Vec<f32>>` outputs. Fine for
+//!   sweeps and tests; allocates O(inputs + outputs) per call.
+//! * [`Runtime::execute_into`] + [`ExecBuffers`] — the training hot path:
+//!   input literals are created **once** per graph and refilled in place
+//!   (`Literal::copy_raw_from`, one memcpy, no allocation), outputs are
+//!   written into caller-owned reusable buffers. Together with the
+//!   trainer's dirty-tracking (discrete tensors are only refilled when DST
+//!   actually moved a state) the steady-state step loop performs no heap
+//!   allocation in the marshalling layer at all (§Perf iteration 9).
 
 use std::collections::HashMap;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::runtime::manifest::GraphMeta;
+use crate::runtime::manifest::{GraphMeta, IoDesc};
 
 /// A caller-supplied graph input.
 #[derive(Clone, Copy, Debug)]
@@ -22,6 +30,160 @@ pub enum Arg<'a> {
     F32(&'a [f32]),
     I32(&'a [i32]),
     Scalar(f32),
+}
+
+fn as_bytes<T>(data: &[T]) -> &[u8] {
+    // safety: T is f32/i32 (plain-old-data, no padding, align 4 >= 1)
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    }
+}
+
+fn as_bytes_mut<T>(data: &mut [T]) -> &mut [u8] {
+    // safety: as above, and any bit pattern is a valid f32/i32
+    unsafe {
+        std::slice::from_raw_parts_mut(
+            data.as_mut_ptr() as *mut u8,
+            std::mem::size_of_val(data),
+        )
+    }
+}
+
+/// Per-graph pool of reusable PJRT boundary buffers.
+///
+/// Input literals are allocated once from the graph's manifest metadata and
+/// refilled in place; output vectors are sized once and overwritten by
+/// [`Runtime::execute_into`]. Callers decide *which* inputs to refill each
+/// step — tensors whose host copy did not change (static scalars, discrete
+/// weights with zero DST transitions) keep their previous device payload.
+pub struct ExecBuffers {
+    graph: String,
+    literals: Vec<xla::Literal>,
+    /// One flat f32 vector per manifest output, in manifest order.
+    pub outputs: Vec<Vec<f32>>,
+}
+
+impl ExecBuffers {
+    /// Allocate the pool for one graph: zero-filled input literals (exact
+    /// shapes/dtypes from the manifest) and zero-filled output vectors.
+    pub fn new(meta: &GraphMeta) -> Result<ExecBuffers> {
+        let mut literals = Vec::with_capacity(meta.inputs.len());
+        for io in &meta.inputs {
+            let lit = if io.shape.is_empty() {
+                if io.dtype != "f32" {
+                    return Err(anyhow!(
+                        "scalar input {:?} of {}: unsupported dtype {:?} (only f32 scalars)",
+                        io.name,
+                        meta.name,
+                        io.dtype
+                    ));
+                }
+                xla::Literal::scalar(0.0)
+            } else {
+                match io.dtype.as_str() {
+                    "f32" => xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::F32,
+                        &io.shape,
+                        &vec![0u8; io.numel() * 4],
+                    )?,
+                    "i32" => xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::S32,
+                        &io.shape,
+                        &vec![0u8; io.numel() * 4],
+                    )?,
+                    other => {
+                        return Err(anyhow!(
+                            "input {:?} of {}: unsupported dtype {other:?}",
+                            io.name,
+                            meta.name
+                        ))
+                    }
+                }
+            };
+            literals.push(lit);
+        }
+        let outputs = meta.outputs.iter().map(|o| vec![0.0f32; o.numel()]).collect();
+        Ok(ExecBuffers { graph: meta.name.clone(), literals, outputs })
+    }
+
+    pub fn graph(&self) -> &str {
+        &self.graph
+    }
+
+    fn check(&self, meta: &GraphMeta, idx: usize, dtype: &str, len: usize) -> Result<()> {
+        if meta.name != self.graph {
+            return Err(anyhow!(
+                "buffer pool belongs to {}, refill targets {}",
+                self.graph,
+                meta.name
+            ));
+        }
+        let io = meta
+            .inputs
+            .get(idx)
+            .ok_or_else(|| anyhow!("input index {idx} out of range for {}", self.graph))?;
+        if io.dtype != dtype {
+            return Err(anyhow!(
+                "input {:?} of {} is {}, refill is {dtype}",
+                io.name,
+                self.graph,
+                io.dtype
+            ));
+        }
+        if io.numel() != len {
+            return Err(anyhow!(
+                "input {:?} of {}: refill length {len} != shape numel {}",
+                io.name,
+                self.graph,
+                io.numel()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Refill input `idx` with f32 data, in place (one memcpy).
+    pub fn set_f32(&mut self, meta: &GraphMeta, idx: usize, data: &[f32]) -> Result<()> {
+        self.check(meta, idx, "f32", data.len())?;
+        self.literals[idx]
+            .copy_raw_from(as_bytes(data))
+            .with_context(|| format!("refilling input {idx} of {}", self.graph))?;
+        Ok(())
+    }
+
+    /// Refill input `idx` with i32 data, in place.
+    pub fn set_i32(&mut self, meta: &GraphMeta, idx: usize, data: &[i32]) -> Result<()> {
+        self.check(meta, idx, "i32", data.len())?;
+        self.literals[idx]
+            .copy_raw_from(as_bytes(data))
+            .with_context(|| format!("refilling input {idx} of {}", self.graph))?;
+        Ok(())
+    }
+
+    /// Refill a scalar f32 input (static hyper-parameters: set once).
+    pub fn set_scalar(&mut self, meta: &GraphMeta, idx: usize, v: f32) -> Result<()> {
+        self.check(meta, idx, "f32", 1)?;
+        let io = &meta.inputs[idx];
+        if !io.shape.is_empty() {
+            return Err(anyhow!(
+                "input {:?} of {} is not a scalar",
+                io.name,
+                self.graph
+            ));
+        }
+        self.literals[idx]
+            .copy_raw_from(&v.to_le_bytes())
+            .with_context(|| format!("refilling scalar input {idx} of {}", self.graph))?;
+        Ok(())
+    }
+
+    /// Dispatch on [`Arg`] (convenience for code that already builds args).
+    pub fn set_arg(&mut self, meta: &GraphMeta, idx: usize, arg: &Arg<'_>) -> Result<()> {
+        match arg {
+            Arg::F32(d) => self.set_f32(meta, idx, d),
+            Arg::I32(d) => self.set_i32(meta, idx, d),
+            Arg::Scalar(v) => self.set_scalar(meta, idx, *v),
+        }
+    }
 }
 
 /// PJRT CPU runtime with an executable cache.
@@ -64,13 +226,51 @@ impl Runtime {
         self.cache.contains_key(name)
     }
 
+    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.cache
+            .get(name)
+            .ok_or_else(|| anyhow!("graph {name} not loaded"))
+    }
+
+    /// Run the executable and unpack the result tuple, with contextual
+    /// errors instead of panics on empty replica/device output sets.
+    fn run_tuple(
+        &self,
+        meta: &GraphMeta,
+        exe: &xla::PjRtLoadedExecutable,
+        literals: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let mut replicas = exe
+            .execute::<xla::Literal>(literals)
+            .with_context(|| format!("executing {}", meta.name))?;
+        if replicas.is_empty() || replicas[0].is_empty() {
+            return Err(anyhow!(
+                "graph {} produced no device outputs (replicas: {}, first replica empty)",
+                meta.name,
+                replicas.len()
+            ));
+        }
+        let result = replicas[0].swap_remove(0).to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let elems = result.to_tuple()?;
+        if elems.len() != meta.outputs.len() {
+            return Err(anyhow!(
+                "graph {} returned {} outputs, manifest says {}",
+                meta.name,
+                elems.len(),
+                meta.outputs.len()
+            ));
+        }
+        Ok(elems)
+    }
+
     /// Execute a loaded graph. `args` must match `meta.inputs` in order,
     /// length and dtype. Returns one flat f32 vector per manifest output.
+    ///
+    /// One-shot path: builds every literal and allocates every output. The
+    /// step loop uses [`Runtime::execute_into`] instead.
     pub fn execute(&self, meta: &GraphMeta, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
-        let exe = self
-            .cache
-            .get(&meta.name)
-            .ok_or_else(|| anyhow!("graph {} not loaded", meta.name))?;
+        let exe = self.exe(&meta.name)?;
         if args.len() != meta.inputs.len() {
             return Err(anyhow!(
                 "graph {} expects {} inputs, got {}",
@@ -85,20 +285,7 @@ impl Runtime {
                 format!("building input {:?} for {}", io.name, meta.name)
             })?);
         }
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", meta.name))?[0][0]
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: unpack the tuple.
-        let elems = result.to_tuple()?;
-        if elems.len() != meta.outputs.len() {
-            return Err(anyhow!(
-                "graph {} returned {} outputs, manifest says {}",
-                meta.name,
-                elems.len(),
-                meta.outputs.len()
-            ));
-        }
+        let elems = self.run_tuple(meta, exe, &literals)?;
         let mut out = Vec::with_capacity(elems.len());
         for (io, lit) in meta.outputs.iter().zip(elems) {
             let v: Vec<f32> = lit
@@ -116,16 +303,47 @@ impl Runtime {
         }
         Ok(out)
     }
+
+    /// Execute a loaded graph against a pre-filled [`ExecBuffers`] pool,
+    /// writing outputs into `bufs.outputs` in place. The steady-state
+    /// training path: no literal construction, no output allocation.
+    pub fn execute_into(&self, meta: &GraphMeta, bufs: &mut ExecBuffers) -> Result<()> {
+        if bufs.graph != meta.name {
+            return Err(anyhow!(
+                "buffer pool belongs to {}, executing {}",
+                bufs.graph,
+                meta.name
+            ));
+        }
+        if bufs.outputs.len() != meta.outputs.len() {
+            return Err(anyhow!(
+                "buffer pool for {} holds {} output buffers, manifest says {}",
+                meta.name,
+                bufs.outputs.len(),
+                meta.outputs.len()
+            ));
+        }
+        let exe = self.exe(&meta.name)?;
+        let elems = self.run_tuple(meta, exe, &bufs.literals)?;
+        for ((io, lit), out) in meta.outputs.iter().zip(elems).zip(bufs.outputs.iter_mut()) {
+            if lit.element_count() != io.numel() {
+                return Err(anyhow!(
+                    "output {:?}: got {} elements, expected {}",
+                    io.name,
+                    lit.element_count(),
+                    io.numel()
+                ));
+            }
+            lit.copy_raw_to(as_bytes_mut(out.as_mut_slice()))
+                .with_context(|| format!("reading output {:?}", io.name))?;
+        }
+        Ok(())
+    }
 }
 
-fn build_literal(io: &crate::runtime::manifest::IoDesc, arg: &Arg<'_>) -> Result<xla::Literal> {
+fn build_literal(io: &IoDesc, arg: &Arg<'_>) -> Result<xla::Literal> {
     // single-copy construction: `vec1(..).reshape(..)` would copy twice
     // (§Perf iteration 5 — weights cross this boundary every step)
-    fn as_bytes<T>(data: &[T]) -> &[u8] {
-        unsafe {
-            std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
-        }
-    }
     match (io.dtype.as_str(), arg) {
         ("f32", Arg::Scalar(v)) => {
             if !io.shape.is_empty() {
@@ -167,6 +385,76 @@ mod tests {
 
     fn artifacts_ready() -> bool {
         std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    const POOL_SAMPLE: &str = r#"{
+      "format": 1,
+      "graphs": {
+        "tiny_train": {
+          "file": "tiny_train.hlo.txt",
+          "arch": "tiny", "mode": "multi", "batch": 2, "width": 1.0,
+          "kind": "train", "input_shape": [3], "n_classes": 2,
+          "params": [
+            {"name": "W0", "shape": [3, 2], "kind": "weight", "layer": 0}
+          ],
+          "bn_state": [],
+          "inputs": [
+            {"name": "x", "shape": [2, 3], "dtype": "f32"},
+            {"name": "labels", "shape": [2], "dtype": "i32"},
+            {"name": "r", "shape": [], "dtype": "f32"},
+            {"name": "W0", "shape": [3, 2], "dtype": "f32"}
+          ],
+          "outputs": [
+            {"name": "loss", "shape": [], "dtype": "f32"},
+            {"name": "gW0", "shape": [3, 2], "dtype": "f32"}
+          ]
+        }
+      }
+    }"#;
+
+    /// The pool is pure host-side marshalling: testable without a device.
+    #[test]
+    fn exec_buffers_refill_and_validate() {
+        let m = Manifest::parse("/tmp/art", POOL_SAMPLE).unwrap();
+        let g = m.get("tiny_train").unwrap();
+        let mut bufs = ExecBuffers::new(g).unwrap();
+        assert_eq!(bufs.graph(), "tiny_train");
+        assert_eq!(bufs.outputs.len(), 2);
+        assert_eq!(bufs.outputs[1].len(), 6);
+
+        // valid refills
+        bufs.set_f32(g, 0, &[0.5; 6]).unwrap();
+        bufs.set_i32(g, 1, &[1, 0]).unwrap();
+        bufs.set_scalar(g, 2, 0.5).unwrap();
+        bufs.set_f32(g, 3, &[1.0; 6]).unwrap();
+        bufs.set_arg(g, 3, &Arg::F32(&[0.0; 6])).unwrap();
+
+        // wrong length / dtype / index / scalar-ness all rejected
+        assert!(bufs.set_f32(g, 0, &[0.5; 5]).is_err());
+        assert!(bufs.set_i32(g, 0, &[1; 6]).is_err());
+        assert!(bufs.set_f32(g, 1, &[0.0; 2]).is_err());
+        assert!(bufs.set_f32(g, 99, &[0.0; 1]).is_err());
+        assert!(bufs.set_scalar(g, 0, 1.0).is_err());
+
+        // refills against a foreign graph's meta are rejected up front
+        let mut foreign = g.clone();
+        foreign.name = "other".into();
+        let err = bufs.set_f32(&foreign, 0, &[0.5; 6]).unwrap_err();
+        assert!(err.to_string().contains("belongs to"), "{err}");
+    }
+
+    #[test]
+    fn pool_rejects_foreign_graph() {
+        let m = Manifest::parse("/tmp/art", POOL_SAMPLE).unwrap();
+        let g = m.get("tiny_train").unwrap();
+        let bufs = ExecBuffers::new(g).unwrap();
+        let mut g2 = g.clone();
+        g2.name = "other".into();
+        if let Ok(rt) = Runtime::new() {
+            let mut bufs = bufs;
+            let err = rt.execute_into(&g2, &mut bufs).unwrap_err();
+            assert!(err.to_string().contains("belongs to"));
+        }
     }
 
     /// Full round-trip through a real lowered graph (needs `make artifacts`).
@@ -213,6 +501,59 @@ mod tests {
         let spars = &out[1];
         assert!(spars.iter().all(|&s| s == 1.0), "{spars:?}");
         assert!(rt.is_loaded("mlp_multi_b16_infer"));
+    }
+
+    /// `execute_into` must agree bit-for-bit with `execute` on the same
+    /// inputs — the pooled path changes marshalling, not math.
+    #[test]
+    fn execute_into_matches_execute() {
+        if !artifacts_ready() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        let g = m.get("mlp_multi_b16_infer").unwrap();
+        let mut rt = Runtime::new().unwrap();
+        rt.load(g).unwrap();
+        let x: Vec<f32> = (0..16 * 784).map(|i| ((i % 17) as f32) / 17.0 - 0.5).collect();
+        let park: Vec<Vec<f32>> = g
+            .params
+            .iter()
+            .enumerate()
+            .map(|(k, p)| {
+                (0..p.numel())
+                    .map(|i| [-1.0f32, 0.0, 1.0][(i + k) % 3])
+                    .collect()
+            })
+            .collect();
+        let bns: Vec<Vec<f32>> = g
+            .bn_state
+            .iter()
+            .map(|s| {
+                if s.name.starts_with("rvar") {
+                    vec![1.0f32; s.numel()]
+                } else {
+                    vec![0.1f32; s.numel()]
+                }
+            })
+            .collect();
+        let mut args: Vec<Arg> = vec![Arg::F32(&x), Arg::Scalar(0.5), Arg::Scalar(1.0)];
+        for p in &park {
+            args.push(Arg::F32(p));
+        }
+        for s in &bns {
+            args.push(Arg::F32(s));
+        }
+        let reference = rt.execute(g, &args).unwrap();
+
+        let mut bufs = ExecBuffers::new(g).unwrap();
+        for (i, a) in args.iter().enumerate() {
+            bufs.set_arg(g, i, a).unwrap();
+        }
+        // run twice: the second pass exercises buffer reuse
+        rt.execute_into(g, &mut bufs).unwrap();
+        rt.execute_into(g, &mut bufs).unwrap();
+        assert_eq!(bufs.outputs, reference);
     }
 
     #[test]

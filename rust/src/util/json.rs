@@ -81,6 +81,8 @@ impl Json {
 
     // ---- writing ---------------------------------------------------------
 
+    // inherent by design: no Display impl wanted for a JSON value
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

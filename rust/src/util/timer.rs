@@ -32,6 +32,13 @@ impl Stopwatch {
         }
     }
 
+    /// Discard accumulated laps (e.g. after benchmark warmup).
+    pub fn reset(&mut self) {
+        self.start = None;
+        self.total_ns = 0;
+        self.laps = 0;
+    }
+
     pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
         self.start();
         let out = f();
@@ -54,6 +61,19 @@ impl Stopwatch {
             self.total_ns as f64 / 1e6 / self.laps as f64
         }
     }
+}
+
+/// Nearest-rank percentile (`p` in [0, 100]) of unsorted samples; 0.0 on
+/// empty input. Used for the step-latency p50/p99 in `TrainReport` and
+/// `BENCH_step.json`.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
 }
 
 /// Run `f` `iters` times, returning (mean_ms, min_ms, max_ms).
@@ -83,6 +103,23 @@ mod tests {
         assert_eq!(sw.laps(), 3);
         assert!(sw.total_secs() >= 0.006);
         assert!(sw.mean_ms() >= 2.0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        let p50 = percentile(&v, 50.0);
+        assert!((50.0..=51.0).contains(&p50), "{p50}");
+        let p99 = percentile(&v, 99.0);
+        assert!((99.0..=100.0).contains(&p99), "{p99}");
+        // order-independent
+        let mut rev = v.clone();
+        rev.reverse();
+        assert_eq!(percentile(&rev, 99.0), p99);
     }
 
     #[test]

@@ -264,6 +264,34 @@ fn checkpoint_inspect_describes_tensors() {
     assert!(desc.contains("packed weights"), "{desc}");
 }
 
+#[test]
+fn training_trajectory_bit_reproducible_with_prefetcher() {
+    // The pipelined prefetcher + pooled boundary must not perturb the
+    // math: two runs from the same TrainConfig produce identical loss and
+    // accuracy trajectories (the prefetcher replays the serial iterator's
+    // per-epoch RNG streams; dirty-tracking only skips no-op refills).
+    let Some(m) = manifest() else { return };
+    let m = b16_manifest(&m);
+    let mut rt = Runtime::new().unwrap();
+    let run_once = |rt: &mut Runtime| {
+        let cfg = small_cfg(Method::Gxnor);
+        let train = data::open(&cfg.dataset, true, cfg.train_len).unwrap();
+        let test = data::open(&cfg.dataset, false, cfg.test_len).unwrap();
+        let mut tr = Trainer::new(rt, &m, cfg).unwrap();
+        let rep = tr.run(train.as_ref(), test.as_ref()).unwrap();
+        (
+            rep.recorder.get("loss").to_vec(),
+            rep.recorder.get("test_acc").to_vec(),
+            rep.test_acc,
+        )
+    };
+    let (loss1, acc1, t1) = run_once(&mut rt);
+    let (loss2, acc2, t2) = run_once(&mut rt);
+    assert_eq!(loss1, loss2, "loss trajectories diverge");
+    assert_eq!(acc1, acc2, "test-acc trajectories diverge");
+    assert_eq!(t1, t2);
+}
+
 // ---------------------------------------------------------------------------
 // Cross-layer property tests (ptest harness)
 // ---------------------------------------------------------------------------

@@ -1,0 +1,234 @@
+//! Offline-vendored minimal subset of the `anyhow` API.
+//!
+//! The container image has no crates.io access, so the crate graph must be
+//! closed over path dependencies. This implements exactly the surface the
+//! gxnor crate uses — `Error`, `Result`, the `Context` extension trait and
+//! the `anyhow!` / `bail!` macros — with the same semantics (contextual
+//! wrapping, `?` conversion from any `std::error::Error`). Swapping in the
+//! real crate is a one-line change in `rust/Cargo.toml`.
+
+use std::fmt;
+
+/// An error with an optional chain of context frames.
+///
+/// Like the real `anyhow::Error`, this deliberately does **not** implement
+/// `std::error::Error`, which is what permits the blanket
+/// `From<E: std::error::Error>` impl used by the `?` operator.
+pub struct Error(Box<ErrorImpl>);
+
+struct ErrorImpl {
+    msg: String,
+    source: Option<Error>,
+}
+
+impl Error {
+    /// Construct an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error(Box::new(ErrorImpl { msg: message.to_string(), source: None }))
+    }
+
+    /// Wrap this error with an outer context frame.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error(Box::new(ErrorImpl { msg: context.to_string(), source: Some(self) }))
+    }
+
+    /// Iterate the chain outermost-first as strings (diagnostics only).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut frames = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            frames.push(e.0.msg.as_str());
+            cur = e.0.source.as_ref();
+        }
+        frames.into_iter()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0.msg)?;
+        let mut cur = self.0.source.as_ref();
+        while let Some(e) = cur {
+            write!(f, ": {}", e.0.msg)?;
+            cur = e.0.source.as_ref();
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        // fold the std error chain into context frames
+        let mut frames = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        let mut err = Error::msg(frames.pop().unwrap());
+        while let Some(f) = frames.pop() {
+            err = err.context(f);
+        }
+        err
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+// Coherent with the impl above because `Error` (a local type) does not and
+// cannot downstream-implement `std::error::Error`.
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a: Error = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 3;
+        let b: Error = anyhow!("got {n} and {}", 4);
+        assert_eq!(b.to_string(), "got 3 and 4");
+        let c: Error = anyhow!(String::from("owned"));
+        assert_eq!(c.to_string(), "owned");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening artifact").unwrap_err();
+        assert_eq!(e.to_string(), "opening artifact: missing");
+        let e2 = Err::<(), Error>(e).with_context(|| "loading graph").unwrap_err();
+        assert_eq!(e2.to_string(), "loading graph: opening artifact: missing");
+        assert_eq!(e2.chain().count(), 3);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("empty").unwrap_err();
+        assert_eq!(e.to_string(), "empty");
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative -1");
+    }
+}

@@ -1,0 +1,299 @@
+//! In-tree stub of the xla-rs PJRT surface used by `gxnor::runtime`.
+//!
+//! The offline container cannot fetch (or link) the real `xla` crate and
+//! its PJRT CPU plugin, so this stub provides the exact API the runtime
+//! compiles against — `PjRtClient`, `PjRtLoadedExecutable`, `Literal`,
+//! `HloModuleProto`, `XlaComputation` — plus the mutable-literal accessors
+//! (`copy_raw_from` / `copy_raw_to`) the zero-copy execution pool relies
+//! on. Host-side behavior (literal construction, in-place refill, tuple
+//! decomposition, typed read-out) is fully functional so the marshalling
+//! layer is testable without a device; only `PjRtClient::cpu()` fails,
+//! with an error explaining how to link the real backend. Every test that
+//! actually executes a graph is gated on `artifacts/manifest.json`, so
+//! `cargo test` passes cleanly against the stub.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error type, mirroring `xla::Error` closely enough for `anyhow`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes the gxnor graphs use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn byte_size(self) -> usize {
+        4
+    }
+}
+
+/// A host-side literal: dtype + dims + row-major raw bytes, or a tuple.
+///
+/// Functional in the stub (the execution pool refills these in place every
+/// step); with the real xla-rs backend the same calls map onto the C++
+/// `xla::Literal` untyped-data accessors.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Scalar f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal {
+            ty: ElementType::F32,
+            dims: Vec::new(),
+            data: v.to_le_bytes().to_vec(),
+            tuple: None,
+        }
+    }
+
+    /// Dense literal from raw bytes (one memcpy, no per-element work).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let numel: usize = dims.iter().product();
+        if data.len() != numel * ty.byte_size() {
+            return Err(Error(format!(
+                "untyped data is {} bytes, shape {dims:?} needs {}",
+                data.len(),
+                numel * ty.byte_size()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), data: data.to_vec(), tuple: None })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Overwrite the payload in place (the zero-copy refill path).
+    pub fn copy_raw_from(&mut self, bytes: &[u8]) -> Result<()> {
+        if self.tuple.is_some() {
+            return Err(Error("copy_raw_from on a tuple literal".into()));
+        }
+        if bytes.len() != self.data.len() {
+            return Err(Error(format!(
+                "refill size {} != literal size {}",
+                bytes.len(),
+                self.data.len()
+            )));
+        }
+        self.data.copy_from_slice(bytes);
+        Ok(())
+    }
+
+    /// Read the payload into a caller-owned buffer (no allocation).
+    pub fn copy_raw_to(&self, out: &mut [u8]) -> Result<()> {
+        if self.tuple.is_some() {
+            return Err(Error("copy_raw_to on a tuple literal".into()));
+        }
+        if out.len() != self.data.len() {
+            return Err(Error(format!(
+                "read-out size {} != literal size {}",
+                out.len(),
+                self.data.len()
+            )));
+        }
+        out.copy_from_slice(&self.data);
+        Ok(())
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.tuple {
+            Some(elems) => Ok(elems),
+            None => Err(Error("to_tuple on a non-tuple literal".into())),
+        }
+    }
+
+    /// Build a tuple literal (used by tests to fabricate results).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { ty: ElementType::F32, dims: Vec::new(), data: Vec::new(), tuple: Some(elems) }
+    }
+
+    /// Typed copy-out (allocating); mirrors xla-rs `Literal::to_vec`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::ELEMENT_TYPE {
+            return Err(Error(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::ELEMENT_TYPE
+            )));
+        }
+        Ok(self
+            .data
+            .chunks_exact(T::ELEMENT_TYPE.byte_size())
+            .map(T::from_le_chunk)
+            .collect())
+    }
+}
+
+/// Native element types readable out of a [`Literal`].
+pub trait NativeType: Sized {
+    const ELEMENT_TYPE: ElementType;
+    fn from_le_chunk(chunk: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+    fn from_le_chunk(chunk: &[u8]) -> Self {
+        f32::from_le_bytes(chunk.try_into().unwrap())
+    }
+}
+
+impl NativeType for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+    fn from_le_chunk(chunk: &[u8]) -> Self {
+        i32::from_le_bytes(chunk.try_into().unwrap())
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+/// Computation handle (opaque in the stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+const STUB_MSG: &str = "PJRT backend unavailable: gxnor was built against the in-tree \
+`xla` stub (rust/vendor/xla). Point the `xla` dependency in rust/Cargo.toml at the real \
+xla-rs crate (with its PJRT CPU plugin) to compile and execute graphs";
+
+/// PJRT client. `cpu()` fails in the stub — graph execution needs the real
+/// backend; everything gated on `artifacts/` skips cleanly without it.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error(STUB_MSG.into()))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(STUB_MSG.into()))
+    }
+}
+
+/// Compiled executable handle (never constructed by the stub client).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Mirrors xla-rs: one `Vec<PjRtBuffer>` per replica.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(STUB_MSG.into()))
+    }
+}
+
+/// Device buffer handle (never constructed by the stub client).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(STUB_MSG.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_refill() {
+        let xs = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = xs.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let mut lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.element_count(), 3);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), xs);
+
+        let ys = [9.0f32, 8.0, 7.0];
+        let bytes2: Vec<u8> = ys.iter().flat_map(|v| v.to_le_bytes()).collect();
+        lit.copy_raw_from(&bytes2).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), ys);
+
+        let mut out = [0u8; 12];
+        lit.copy_raw_to(&mut out).unwrap();
+        assert_eq!(&out[..], &bytes2[..]);
+
+        assert!(lit.copy_raw_from(&[0u8; 4]).is_err());
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 4])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn tuple_decomposition() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0), Literal::scalar(2.0)]);
+        let elems = t.to_tuple().unwrap();
+        assert_eq!(elems.len(), 2);
+        assert_eq!(elems[1].to_vec::<f32>().unwrap(), vec![2.0]);
+        assert!(Literal::scalar(0.0).to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_fails_with_guidance() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}
