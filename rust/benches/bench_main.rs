@@ -22,11 +22,12 @@
 use std::time::Instant;
 
 use gxnor::coordinator::method::Method;
-use gxnor::coordinator::trainer::{run_training, TrainConfig, Trainer};
+use gxnor::coordinator::trainer::{evaluate_engine, run_training, TrainConfig, Trainer};
 use gxnor::data::Dataset;
 use gxnor::hwsim::report::{fig12_example, table2};
 use gxnor::metrics::Recorder;
 use gxnor::runtime::client::{Arg, Runtime};
+use gxnor::runtime::exec::ExecEngine as _;
 use gxnor::runtime::manifest::Manifest;
 use gxnor::sweep;
 use gxnor::ternary::{dst_update, DiscreteSpace, PackedTensor};
@@ -402,6 +403,115 @@ fn bench_perf(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> {
     }
     println!();
     bench_step_loop(rt, manifest)?;
+    bench_infer(rt, manifest)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// §Perf inference A/B: XLA graph vs native gated-XNOR (BENCH_infer.json)
+// ---------------------------------------------------------------------------
+
+/// Evaluate the same trained model through both `ExecEngine` backends,
+/// record packed-domain samples/sec for each plus the native engine's
+/// measured gate rates, and write `BENCH_infer.json`.
+fn bench_infer(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> {
+    println!("== perf: inference engine A/B (BENCH_infer.json) ==\n");
+    let cfg = TrainConfig { epochs: 1, train_len: 2000, test_len: 1000, ..base_cfg() };
+    let train =
+        gxnor::data::open(&cfg.dataset, true, cfg.train_len).map_err(anyhow::Error::msg)?;
+    let test =
+        gxnor::data::open(&cfg.dataset, false, cfg.test_len).map_err(anyhow::Error::msg)?;
+    let mut tr = Trainer::new(rt, manifest, cfg)?;
+    tr.run(train.as_ref(), test.as_ref())?; // trained weights + BN state
+
+    // native engine: warm pass, then a timed pass on fresh gate counters
+    let mut nat = tr.native_engine()?;
+    let batch = nat.batch();
+    evaluate_engine(&mut nat, test.as_ref())?;
+    nat.reset_gate_stats();
+    let t0 = Instant::now();
+    let acc_native = evaluate_engine(&mut nat, test.as_ref())?;
+    let native_secs = t0.elapsed().as_secs_f64();
+    let gate = nat.total_gate_stats();
+    let per_layer = nat.gate_report();
+
+    // XLA engine view over the exact same model state
+    let graph = tr.infer_graph_name().to_string();
+    let (acc_xla, xla_secs) = {
+        let mut xla = tr.xla_engine()?;
+        evaluate_engine(&mut xla, test.as_ref())?; // warm
+        let t0 = Instant::now();
+        let acc = evaluate_engine(&mut xla, test.as_ref())?;
+        (acc, t0.elapsed().as_secs_f64())
+    };
+
+    let n = test.len() as f64;
+    // padded rows execute too: normalize gate counts by evaluated rows
+    let rows = (test.len().div_ceil(batch) * batch) as f64;
+    println!(
+        "xla engine       : {:>8.0} samples/s  acc {:.2}%",
+        n / xla_secs.max(1e-12),
+        100.0 * acc_xla
+    );
+    println!(
+        "native engine    : {:>8.0} samples/s  acc {:.2}%  gated XNOR {:.0}/sample \
+         ({:.1}% of nominal resting)",
+        n / native_secs.max(1e-12),
+        100.0 * acc_native,
+        gate.xnor as f64 / rows,
+        100.0 * gate.resting_rate()
+    );
+    for r in &per_layer {
+        println!(
+            "  {:<24} resting {:>5.1}%  (w0 {:.3}, x0 {:.3})",
+            r.name,
+            100.0 * r.stats.resting_rate(),
+            r.w_zero_fraction,
+            r.stats.x_zero_fraction()
+        );
+    }
+
+    let eng_fields = |sps: f64, acc: f64| {
+        vec![
+            ("samples_per_sec".to_string(), Json::Num(sps)),
+            ("accuracy".to_string(), Json::Num(acc)),
+        ]
+    };
+    let mut native_obj = eng_fields(n / native_secs.max(1e-12), acc_native);
+    native_obj.push(("gated_xnor_per_sample".into(), Json::Num(gate.xnor as f64 / rows)));
+    native_obj.push(("nominal_ops_per_sample".into(), Json::Num(gate.total as f64 / rows)));
+    native_obj.push(("resting_fraction".into(), Json::Num(gate.resting_rate())));
+    let doc = Json::Obj(vec![
+        ("schema".into(), Json::Str("bench_infer.v1".into())),
+        ("graph".into(), Json::Str(graph)),
+        ("batch".into(), Json::Num(batch as f64)),
+        ("samples".into(), Json::Num(n)),
+        ("xla".into(), Json::Obj(eng_fields(n / xla_secs.max(1e-12), acc_xla))),
+        ("native".into(), Json::Obj(native_obj)),
+        (
+            "per_layer_gate".into(),
+            Json::Arr(
+                per_layer
+                    .iter()
+                    .map(|r| {
+                        Json::Obj(vec![
+                            ("name".into(), Json::Str(r.name.clone())),
+                            ("resting_rate".into(), Json::Num(r.stats.resting_rate())),
+                            ("w_zero".into(), Json::Num(r.w_zero_fraction)),
+                            ("x_zero".into(), Json::Num(r.stats.x_zero_fraction())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("accuracy_match".into(), Json::Bool(acc_xla == acc_native)),
+    ]);
+    let text = doc.to_string();
+    std::fs::write("BENCH_infer.json", &text)?;
+    if std::path::Path::new("../ROADMAP.md").exists() {
+        std::fs::write("../BENCH_infer.json", &text)?;
+    }
+    println!("\nwrote BENCH_infer.json (accuracy match: {})\n", acc_xla == acc_native);
     Ok(())
 }
 

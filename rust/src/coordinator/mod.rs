@@ -16,4 +16,4 @@ pub use hidden::HiddenWeights;
 pub use method::Method;
 pub use optimizer::{Optimizer, OptKind};
 pub use schedule::LrSchedule;
-pub use trainer::{StepStats, TrainConfig, TrainReport, Trainer, UpdateRule};
+pub use trainer::{evaluate_engine, StepStats, TrainConfig, TrainReport, Trainer, UpdateRule};

@@ -31,12 +31,15 @@ use crate::coordinator::method::Method;
 use crate::coordinator::optimizer::{OptKind, Optimizer};
 use crate::coordinator::schedule::LrSchedule;
 use crate::data::{AugmentCfg, Dataset, Item, Prefetcher};
+use crate::engine::NativeEngine;
 use crate::metrics::Recorder;
 use crate::nn::init::init_model;
 use crate::nn::params::{ModelState, ParamKind, ParamValue};
 use crate::runtime::client::{Arg, ExecBuffers, Runtime};
+use crate::runtime::exec::{EngineKind, ExecEngine, XlaInferEngine};
 use crate::runtime::manifest::{GraphMeta, Manifest};
 use crate::ternary::{dst_update, DiscreteSpace, DstStats};
+use crate::util::argmax;
 use crate::util::prng::Prng;
 use crate::util::timer::{percentile, Stopwatch};
 
@@ -92,6 +95,8 @@ pub struct TrainConfig {
     pub augment: bool,
     /// learning rate multiplier for BN/dense params
     pub dense_lr_scale: f64,
+    /// which `ExecEngine` evaluation runs on (`--engine xla|native`)
+    pub engine: EngineKind,
     /// print progress lines
     pub verbose: bool,
 }
@@ -115,6 +120,7 @@ impl Default for TrainConfig {
             update_rule: UpdateRule::Dst,
             augment: false,
             dense_lr_scale: 0.5,
+            engine: EngineKind::Xla,
             verbose: false,
         }
     }
@@ -281,6 +287,10 @@ impl<'rt> Trainer<'rt> {
 
     pub fn graph_name(&self) -> &str {
         &self.train_g.name
+    }
+
+    pub fn infer_graph_name(&self) -> &str {
+        &self.infer_g.name
     }
 
     pub fn config(&self) -> &TrainConfig {
@@ -461,11 +471,10 @@ impl<'rt> Trainer<'rt> {
         dst_stats
     }
 
-    /// Accuracy over a dataset using the infer graph (BN running stats).
-    /// Batch assembly is prefetched; per-batch work allocates nothing —
-    /// logits land in the pooled output buffer, labels ride the recycled
-    /// batch ring.
-    pub fn evaluate(&mut self, ds: &dyn Dataset) -> Result<f64> {
+    /// Build the XLA-backed [`ExecEngine`] view over the infer graph, with
+    /// params/BN state refilled from the current model. The view borrows
+    /// the trainer's pooled boundary buffers.
+    pub fn xla_engine(&mut self) -> Result<XlaInferEngine<'_>> {
         self.refresh_param_f32();
         let n_params = self.model.descs.len();
         for i in 0..n_params {
@@ -476,35 +485,39 @@ impl<'rt> Trainer<'rt> {
             self.infer_bufs
                 .set_f32(&self.infer_g, INFER_FIXED_INPUTS + n_params + j, s)?;
         }
-        let b = self.infer_g.batch;
-        let n_classes = self.infer_g.n_classes;
-        let mut correct = 0usize;
-        let mut total = 0usize;
-        std::thread::scope(|scope| -> Result<()> {
-            let mut pf = Prefetcher::spawn_eval(scope, ds, b, PREFETCH_DEPTH);
-            while let Some(item) = pf.next() {
-                let Item::Batch(batch) = item else { continue };
-                self.infer_bufs.set_f32(&self.infer_g, 0, &batch.x)?;
-                self.rt.execute_into(&self.infer_g, &mut self.infer_bufs)?;
-                let logits = &self.infer_bufs.outputs[0];
-                for (i, &lbl) in batch.y.iter().enumerate() {
-                    let row = &logits[i * n_classes..(i + 1) * n_classes];
-                    let pred = row
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(k, _)| k as i32)
-                        .unwrap();
-                    if pred == lbl {
-                        correct += 1;
-                    }
-                }
-                total += b;
-                pf.recycle(batch);
+        Ok(XlaInferEngine::new(&*self.rt, &self.infer_g, &mut self.infer_bufs))
+    }
+
+    /// Build a native gated-XNOR engine snapshot of the current model
+    /// (packed weights ternarized into bit planes, BN folded into
+    /// per-channel thresholds). Independent of the PJRT device.
+    pub fn native_engine(&self) -> Result<NativeEngine> {
+        NativeEngine::from_model(
+            &self.cfg.arch,
+            self.cfg.method,
+            &self.model,
+            self.cfg.r,
+            self.infer_g.batch,
+            self.infer_g.n_classes,
+        )
+    }
+
+    /// Accuracy over a dataset using the configured inference engine
+    /// (`TrainConfig::engine`): the XLA infer graph through the pooled
+    /// boundary, or the native packed-domain engine. Both run the shared
+    /// [`evaluate_engine`] loop, so batching, final-batch padding and
+    /// argmax are identical.
+    pub fn evaluate(&mut self, ds: &dyn Dataset) -> Result<f64> {
+        match self.cfg.engine {
+            EngineKind::Native => {
+                let mut eng = self.native_engine()?;
+                evaluate_engine(&mut eng, ds)
             }
-            Ok(())
-        })?;
-        Ok(correct as f64 / total.max(1) as f64)
+            EngineKind::Xla => {
+                let mut eng = self.xla_engine()?;
+                evaluate_engine(&mut eng, ds)
+            }
+        }
     }
 
     /// Full run: epochs × batches with the paper's LR decay; returns the
@@ -598,6 +611,36 @@ impl<'rt> Trainer<'rt> {
             recorder: rec,
         })
     }
+}
+
+/// Accuracy of any [`ExecEngine`] over a dataset: batch assembly is
+/// prefetched and double-buffered, the final partial batch is padded (not
+/// dropped — only its `valid` rows are scored, so the denominator is the
+/// true dataset length), and class prediction uses the shared NaN-safe
+/// [`argmax`]. Both the XLA and native backends evaluate through this one
+/// loop, which is what makes their accuracies directly comparable.
+pub fn evaluate_engine(engine: &mut dyn ExecEngine, ds: &dyn Dataset) -> Result<f64> {
+    let b = engine.batch();
+    let n_classes = engine.n_classes();
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    std::thread::scope(|scope| -> Result<()> {
+        let mut pf = Prefetcher::spawn_eval(scope, ds, b, PREFETCH_DEPTH);
+        while let Some(item) = pf.next() {
+            let Item::Batch(batch) = item else { continue };
+            let logits = engine.infer_batch(&batch.x)?;
+            for (i, &lbl) in batch.y[..batch.valid].iter().enumerate() {
+                if argmax(&logits[i * n_classes..(i + 1) * n_classes]) as i32 == lbl {
+                    correct += 1;
+                }
+            }
+            total += batch.valid;
+            pf.recycle(batch);
+        }
+        Ok(())
+    })?;
+    debug_assert_eq!(total, ds.len(), "evaluation must cover the whole split");
+    Ok(correct as f64 / total.max(1) as f64)
 }
 
 /// Convenience: open datasets, build a trainer, run, return the report.

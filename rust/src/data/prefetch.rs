@@ -29,6 +29,12 @@ pub struct Batch {
     pub y: Vec<i32>,
     /// Epoch this batch belongs to (train mode; 0 in eval mode).
     pub epoch: u64,
+    /// Leading valid samples. Always the full batch in train mode; the
+    /// final eval batch of a dataset whose length is not a multiple of the
+    /// batch size carries `len % batch` valid rows, with the tail padded
+    /// by repeating the last valid sample (consumers must ignore padded
+    /// rows — `evaluate_engine` does).
+    pub valid: usize,
 }
 
 /// What the consumer receives: a filled batch or an epoch boundary.
@@ -78,6 +84,7 @@ impl<'scope> Prefetcher<'scope> {
                     };
                     if it.next_batch(&mut buf.x, &mut buf.y) {
                         buf.epoch = epoch;
+                        buf.valid = batch;
                         if tx.send(Item::Batch(buf)).is_err() {
                             return;
                         }
@@ -96,7 +103,10 @@ impl<'scope> Prefetcher<'scope> {
 
     /// In-order single pass, no shuffle, no augmentation — the evaluation
     /// path (mirrors `BatchIter::for_eval`). No `EpochEnd` is emitted; the
-    /// stream simply ends.
+    /// stream simply ends. Unlike the train path, the final batch is
+    /// **padded, not dropped**: every sample of the dataset appears exactly
+    /// once among the `valid` rows, so accuracy denominators can use the
+    /// true dataset length.
     pub fn spawn_eval<'env>(
         scope: &'scope Scope<'scope, 'env>,
         ds: &'env dyn Dataset,
@@ -108,18 +118,30 @@ impl<'scope> Prefetcher<'scope> {
         prime(&tx_back, ds, batch, depth);
         let handle = scope.spawn(move || {
             let sample_len = ds.sample_len();
-            let n_batches = ds.len() / batch;
+            let n = ds.len();
+            let n_batches = n.div_ceil(batch);
             for nb in 0..n_batches {
                 let mut buf = match rx_back.recv() {
                     Ok(b) => b,
                     Err(_) => return,
                 };
-                for b in 0..batch {
-                    let idx = nb * batch + b;
+                let start = nb * batch;
+                let valid = batch.min(n - start);
+                for b in 0..valid {
                     buf.y[b] =
-                        ds.fill(idx, &mut buf.x[b * sample_len..(b + 1) * sample_len]) as i32;
+                        ds.fill(start + b, &mut buf.x[b * sample_len..(b + 1) * sample_len])
+                            as i32;
+                }
+                // pad the tail by copying the last valid sample (the graph
+                // needs a full batch; consumers skip rows >= valid) — a
+                // memcpy, not a re-render of the procedural sample
+                for b in valid..batch {
+                    buf.x
+                        .copy_within((valid - 1) * sample_len..valid * sample_len, b * sample_len);
+                    buf.y[b] = buf.y[valid - 1];
                 }
                 buf.epoch = 0;
+                buf.valid = valid;
                 if tx.send(Item::Batch(buf)).is_err() {
                     return;
                 }
@@ -149,6 +171,7 @@ fn prime(tx_back: &Sender<Batch>, ds: &dyn Dataset, batch: usize, depth: usize) 
             x: vec![0.0f32; batch * sample_len],
             y: vec![0i32; batch],
             epoch: 0,
+            valid: 0,
         });
     }
 }
@@ -212,7 +235,8 @@ mod tests {
             let mut pf = Prefetcher::spawn_eval(scope, ds.as_ref(), 10, 2);
             while let Some(item) = pf.next() {
                 if let Item::Batch(b) = item {
-                    labels.extend_from_slice(&b.y);
+                    assert_eq!(b.valid, 10, "exact split: every batch full");
+                    labels.extend_from_slice(&b.y[..b.valid]);
                     pf.recycle(b);
                 }
             }
@@ -222,6 +246,52 @@ mod tests {
         for (i, &l) in labels.iter().enumerate() {
             assert_eq!(l, ds.fill(i, &mut buf) as i32, "sample {i}");
         }
+    }
+
+    /// `len % batch != 0`: the final batch is padded, not dropped — every
+    /// sample appears exactly once among the valid rows (the bug this
+    /// pins: eval used to silently skip the last `len % batch` samples).
+    #[test]
+    fn eval_mode_pads_final_partial_batch() {
+        let ds = SynthDigits::new(2, 43);
+        let batch = 16;
+        let mut labels = Vec::new();
+        let mut valids = Vec::new();
+        std::thread::scope(|scope| {
+            let mut pf = Prefetcher::spawn_eval(scope, &ds, batch, 2);
+            while let Some(item) = pf.next() {
+                if let Item::Batch(b) = item {
+                    assert_eq!(b.y.len(), batch, "padded to the full batch");
+                    valids.push(b.valid);
+                    labels.extend_from_slice(&b.y[..b.valid]);
+                    pf.recycle(b);
+                }
+            }
+        });
+        assert_eq!(valids, vec![16, 16, 11]);
+        assert_eq!(labels.len(), 43);
+        let mut buf = vec![0.0; ds.sample_len()];
+        for (i, &l) in labels.iter().enumerate() {
+            assert_eq!(l, ds.fill(i, &mut buf) as i32, "sample {i}");
+        }
+    }
+
+    /// A dataset smaller than one batch still yields one padded batch.
+    #[test]
+    fn eval_mode_handles_tiny_dataset() {
+        let ds = SynthDigits::new(2, 5);
+        let mut total = 0usize;
+        std::thread::scope(|scope| {
+            let mut pf = Prefetcher::spawn_eval(scope, &ds, 16, 2);
+            while let Some(item) = pf.next() {
+                if let Item::Batch(b) = item {
+                    assert_eq!(b.valid, 5);
+                    total += b.valid;
+                    pf.recycle(b);
+                }
+            }
+        });
+        assert_eq!(total, 5);
     }
 
     #[test]

@@ -1,0 +1,324 @@
+//! Word-parallel bit-plane kernels for the gated-XNOR forward pass.
+//!
+//! A ternary vector v ∈ {-1, 0, +1}^M is stored as two u64 bit planes:
+//! the **sign** plane (bit set iff v_i = +1) and the **nonzero** plane
+//! (bit set iff v_i ≠ 0). A binary vector ({-1, +1}) is the special case
+//! whose nonzero plane is all ones. The dot product of two such vectors is
+//!
+//! ```text
+//! gate  = a_nz & w_nz                      (both operands non-zero)
+//! agree = !(a_sign ^ w_sign) & gate        (XNOR of the sign bits, gated)
+//! dot  += 2·popcount(agree) − popcount(gate)
+//! ```
+//!
+//! which is the paper's Fig. 11f compute unit executed 64 lanes at a time:
+//! an XNOR fires only where `gate` is set; everywhere else the unit rests.
+//! Words whose gate is all-zero are skipped outright — the event-driven
+//! zero-state gate at word granularity. [`GateStats`] counts the ops that
+//! actually fired so the hwsim's Table 2 predictions can be cross-checked
+//! against executed reality (`hwsim::counts::gate_rate_matches`).
+
+/// u64 words needed to hold `m` lanes.
+pub const fn words_for(m: usize) -> usize {
+    (m + 63) / 64
+}
+
+/// Pack grid values into sign/nonzero planes. Values must lie in
+/// {-1.0, 0.0, +1.0}; lanes past `vals.len()` are cleared (they gate off).
+pub fn pack_row_into(vals: &[f32], sign: &mut [u64], nz: &mut [u64]) {
+    let words = words_for(vals.len());
+    debug_assert!(sign.len() >= words && nz.len() >= words);
+    sign[..words].fill(0);
+    nz[..words].fill(0);
+    for (i, &v) in vals.iter().enumerate() {
+        debug_assert!(
+            v == -1.0 || v == 0.0 || v == 1.0,
+            "non-ternary value {v} in bitplane pack"
+        );
+        let b = 1u64 << (i % 64);
+        if v > 0.0 {
+            sign[i / 64] |= b;
+        }
+        if v != 0.0 {
+            nz[i / 64] |= b;
+        }
+    }
+}
+
+/// The columns of a row-major (m × n) weight matrix, each packed into
+/// sign/nonzero planes (done once at engine load; HWIO conv weights
+/// flatten to exactly this layout with m = k·k·cin).
+pub struct BitplaneCols {
+    sign: Vec<u64>,
+    nz: Vec<u64>,
+    pub m: usize,
+    pub n: usize,
+    pub words: usize,
+}
+
+impl BitplaneCols {
+    pub fn pack_cols(w: &[f32], m: usize, n: usize) -> Self {
+        assert_eq!(w.len(), m * n, "weight matrix shape mismatch");
+        let words = words_for(m);
+        let mut sign = vec![0u64; words * n];
+        let mut nz = vec![0u64; words * n];
+        for i in 0..m {
+            let wi = i / 64;
+            let b = 1u64 << (i % 64);
+            for (j, &v) in w[i * n..(i + 1) * n].iter().enumerate() {
+                debug_assert!(
+                    v == -1.0 || v == 0.0 || v == 1.0,
+                    "non-ternary weight {v} in bitplane pack"
+                );
+                if v > 0.0 {
+                    sign[j * words + wi] |= b;
+                }
+                if v != 0.0 {
+                    nz[j * words + wi] |= b;
+                }
+            }
+        }
+        BitplaneCols { sign, nz, m, n, words }
+    }
+
+    /// (sign, nonzero) planes of column `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u64], &[u64]) {
+        let s = j * self.words;
+        (&self.sign[s..s + self.words], &self.nz[s..s + self.words])
+    }
+}
+
+/// Gated-XNOR dot product of one packed row against one packed column.
+/// Returns `(dot, active)`: the exact integer Σ aᵢ·wᵢ and the number of
+/// XNOR ops that fired (lanes where both operands were non-zero).
+#[inline]
+pub fn gated_dot(a_sign: &[u64], a_nz: &[u64], w_sign: &[u64], w_nz: &[u64]) -> (i64, u64) {
+    let mut dot = 0i64;
+    let mut active = 0u64;
+    for k in 0..w_sign.len() {
+        let gate = a_nz[k] & w_nz[k];
+        if gate == 0 {
+            // every unit in this word rests: no XNOR, no accumulate
+            continue;
+        }
+        let agree = !(a_sign[k] ^ w_sign[k]) & gate;
+        let fired = gate.count_ones() as i64;
+        dot += 2 * agree.count_ones() as i64 - fired;
+        active += fired as u64;
+    }
+    (dot, active)
+}
+
+/// Tallies of what the gated kernel actually executed (per layer).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GateStats {
+    /// XNOR ops that fired (both operands non-zero).
+    pub xnor: u64,
+    /// Nominal connections considered (fan-in × neuron evaluations).
+    pub total: u64,
+    /// Neuron evaluations whose accumulator woke at least once.
+    pub bitcount: u64,
+    /// Neuron evaluations performed.
+    pub evals: u64,
+    /// Non-zero activation states among those packed.
+    pub x_nonzero: u64,
+    /// Activation states packed (fan-in per row × rows).
+    pub x_count: u64,
+}
+
+impl GateStats {
+    /// Connections whose compute unit stayed resting.
+    pub fn resting(&self) -> u64 {
+        self.total - self.xnor
+    }
+
+    /// Measured resting probability (Table 2's last column, executed).
+    pub fn resting_rate(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.resting() as f64 / self.total as f64
+        }
+    }
+
+    /// Measured zero-state fraction of the activations the kernel saw.
+    pub fn x_zero_fraction(&self) -> f64 {
+        if self.x_count == 0 {
+            0.0
+        } else {
+            1.0 - self.x_nonzero as f64 / self.x_count as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &GateStats) {
+        self.xnor += o.xnor;
+        self.total += o.total;
+        self.bitcount += o.bitcount;
+        self.evals += o.evals;
+        self.x_nonzero += o.x_nonzero;
+        self.x_count += o.x_count;
+    }
+}
+
+/// One packed activation row against every weight column: writes `out[j]`
+/// for each column and tallies the gate ops. `sign`/`nz` must be exactly
+/// `cols.words` long (as produced by [`pack_row_into`] for `cols.m`
+/// lanes). This is the single home of the GateStats counting semantics —
+/// the dense GEMM and the conv patch walk both go through it.
+pub fn gated_row(
+    sign: &[u64],
+    nz: &[u64],
+    cols: &BitplaneCols,
+    out: &mut [f32],
+    stats: &mut GateStats,
+) {
+    debug_assert_eq!(nz.len(), cols.words);
+    debug_assert_eq!(out.len(), cols.n);
+    let m = cols.m as u64;
+    stats.x_nonzero += nz.iter().map(|w| w.count_ones() as u64).sum::<u64>();
+    stats.x_count += m;
+    for (j, o) in out.iter_mut().enumerate() {
+        let (ws, wn) = cols.col(j);
+        let (dot, active) = gated_dot(sign, nz, ws, wn);
+        *o = dot as f32;
+        stats.xnor += active;
+        stats.total += m;
+        stats.evals += 1;
+        if active > 0 {
+            stats.bitcount += 1;
+        }
+    }
+}
+
+/// Gated-XNOR GEMM: `out[row·n + col] = Σᵢ a[row·m + i]·w[i, col]` for
+/// ternary operands, rows packed on the fly, gate ops tallied into `stats`.
+pub fn gated_xnor_gemm(
+    a: &[f32],
+    rows: usize,
+    cols: &BitplaneCols,
+    out: &mut [f32],
+    stats: &mut GateStats,
+) {
+    let m = cols.m;
+    assert_eq!(a.len(), rows * m);
+    assert_eq!(out.len(), rows * cols.n);
+    let mut sign = vec![0u64; cols.words];
+    let mut nz = vec![0u64; cols.words];
+    for row in 0..rows {
+        pack_row_into(&a[row * m..(row + 1) * m], &mut sign, &mut nz);
+        gated_row(&sign, &nz, cols, &mut out[row * cols.n..(row + 1) * cols.n], stats);
+    }
+}
+
+/// Scalar GEMM with f64 accumulation:
+/// `out[row·n + col] = Σᵢ a[row·m + i]·w[i·n + col]`. Doubles as the
+/// reference the bitplane kernel is pinned against in the tests and as
+/// the engine's full-precision fallback path (first layer, fp modes).
+pub fn scalar_gemm(a: &[f32], rows: usize, w: &[f32], m: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), rows * m);
+    assert_eq!(w.len(), m * n);
+    assert_eq!(out.len(), rows * n);
+    for row in 0..rows {
+        let ar = &a[row * m..(row + 1) * m];
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for i in 0..m {
+                acc += ar[i] as f64 * w[i * n + j] as f64;
+            }
+            out[row * n + j] = acc as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn random_ternary(rng: &mut Prng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.below(3) as f32 - 1.0).collect()
+    }
+
+    #[test]
+    fn gated_gemm_matches_scalar_reference() {
+        let mut rng = Prng::new(7);
+        let shapes = [(1usize, 1usize, 1usize), (3, 63, 5), (4, 64, 8), (2, 65, 3), (5, 200, 17)];
+        for &(rows, m, n) in &shapes {
+            let a = random_ternary(&mut rng, rows * m);
+            let w = random_ternary(&mut rng, m * n);
+            let cols = BitplaneCols::pack_cols(&w, m, n);
+            let mut got = vec![0.0f32; rows * n];
+            let mut want = vec![0.0f32; rows * n];
+            let mut stats = GateStats::default();
+            gated_xnor_gemm(&a, rows, &cols, &mut got, &mut stats);
+            scalar_gemm(&a, rows, &w, m, n, &mut want);
+            assert_eq!(got, want, "rows={rows} m={m} n={n}");
+            assert_eq!(stats.total, (rows * m * n) as u64);
+            assert_eq!(stats.evals, (rows * n) as u64);
+            assert_eq!(stats.x_count, (rows * m) as u64);
+        }
+    }
+
+    #[test]
+    fn binary_vectors_never_rest() {
+        let mut rng = Prng::new(3);
+        let m = 130;
+        let a: Vec<f32> = (0..m).map(|_| if rng.below(2) == 0 { -1.0 } else { 1.0 }).collect();
+        let w: Vec<f32> = (0..m).map(|_| if rng.below(2) == 0 { -1.0 } else { 1.0 }).collect();
+        let cols = BitplaneCols::pack_cols(&w, m, 1);
+        let mut out = vec![0.0f32; 1];
+        let mut stats = GateStats::default();
+        gated_xnor_gemm(&a, 1, &cols, &mut out, &mut stats);
+        assert_eq!(stats.xnor, m as u64);
+        assert_eq!(stats.resting(), 0);
+        assert_eq!(stats.x_zero_fraction(), 0.0);
+        let mut want = vec![0.0f32; 1];
+        scalar_gemm(&a, 1, &w, m, 1, &mut want);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn zero_operands_gate_off_and_tail_lanes_are_clean() {
+        // all-zero activations: every word is skipped, dot = 0, bitcount 0
+        let m = 100; // tail lanes 100..128 must not leak into counts
+        let a = vec![0.0f32; m];
+        let w = vec![1.0f32; m];
+        let cols = BitplaneCols::pack_cols(&w, m, 1);
+        let mut out = vec![9.0f32; 1];
+        let mut stats = GateStats::default();
+        gated_xnor_gemm(&a, 1, &cols, &mut out, &mut stats);
+        assert_eq!(out[0], 0.0);
+        assert_eq!(stats.xnor, 0);
+        assert_eq!(stats.bitcount, 0);
+        assert_eq!(stats.resting(), m as u64);
+        assert!((stats.x_zero_fraction() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gate_counts_match_hand_example() {
+        // Fig. 12-style: w = [1, 0, -1], x = [1, 1, 0]
+        // pairs: (1,1) fires (+1), (0,1) rests, (-1,0) rests
+        let w = vec![1.0, 0.0, -1.0];
+        let x = vec![1.0, 1.0, 0.0];
+        let cols = BitplaneCols::pack_cols(&w, 3, 1);
+        let mut out = vec![0.0f32; 1];
+        let mut stats = GateStats::default();
+        gated_xnor_gemm(&x, 1, &cols, &mut out, &mut stats);
+        assert_eq!(out[0], 1.0);
+        assert_eq!(stats.xnor, 1);
+        assert_eq!(stats.resting(), 2);
+        assert_eq!(stats.bitcount, 1);
+    }
+
+    #[test]
+    fn stats_merge_accumulates() {
+        let mut a = GateStats { xnor: 3, total: 10, bitcount: 1, evals: 2, x_nonzero: 4, x_count: 5 };
+        let b = GateStats { xnor: 1, total: 10, bitcount: 1, evals: 2, x_nonzero: 1, x_count: 5 };
+        a.merge(&b);
+        assert_eq!(a.xnor, 4);
+        assert_eq!(a.total, 20);
+        assert_eq!(a.resting(), 16);
+        assert_eq!(a.x_count, 10);
+    }
+}

@@ -124,6 +124,22 @@ pub fn count_neuron(arch: NetArch, w: &[f32], x: &[f32]) -> OpCounts {
     c
 }
 
+/// Analytic resting probability of a gated-XNOR unit: it rests iff either
+/// operand is in the zero state, p = 1 − (1 − pw0)(1 − px0) (Table 2,
+/// GXNOR row). Under the uniform assumption pw0 = px0 = 1/3 this is 5/9.
+pub fn gxnor_resting_probability(pw0: f64, px0: f64) -> f64 {
+    1.0 - (1.0 - pw0) * (1.0 - px0)
+}
+
+/// Cross-check a *measured* gated-op rate (e.g. the native engine's
+/// `GateStats::resting_rate`) against the Table 2 analytic prediction for
+/// the measured zero-state probabilities, within absolute tolerance `tol`
+/// (sampling noise). This is the loop-closure between the paper's
+/// analytical architecture study and executed packed-domain code.
+pub fn gate_rate_matches(measured_resting_rate: f64, pw0: f64, px0: f64, tol: f64) -> bool {
+    (measured_resting_rate - gxnor_resting_probability(pw0, px0)).abs() <= tol
+}
+
 /// Table 2's analytic expectations for an M-input neuron, parameterized by
 /// the zero-state probabilities of weights (`pw0`) and activations (`px0`).
 /// The paper's uniform-state assumption is pw0 = px0 = 1/3.
@@ -140,8 +156,8 @@ pub fn expected_counts(arch: NetArch, m: u64, pw0: f64, px0: f64) -> OpCounts {
         }
         NetArch::Bnn => OpCounts { mult: 0, acc: 0, xnor: m, bitcount: 1, resting: 0, total: m },
         NetArch::Gxnor => {
-            // resting iff W=0 or X=0: p = 1 - (1-pw0)(1-px0)
-            let p_rest = 1.0 - (1.0 - pw0) * (1.0 - px0);
+            // resting iff W=0 or X=0
+            let p_rest = gxnor_resting_probability(pw0, px0);
             let rest = (mf * p_rest).round() as u64;
             OpCounts {
                 mult: 0,
@@ -240,6 +256,53 @@ mod tests {
             (mean_active - 21.0 * 4.0 / 9.0).abs() < 0.3,
             "mean active {mean_active} vs 9.33"
         );
+    }
+
+    /// Loop closure with the executed engine: the bitplane kernel's
+    /// *measured* gate rate over uniform random ternary tensors must match
+    /// the Table 2 analytic prediction computed from the tensors' actual
+    /// zero-state fractions, within 2% sampling tolerance (the acceptance
+    /// bound this PR pins).
+    #[test]
+    fn native_kernel_gate_rate_matches_table2() {
+        use crate::engine::bitplane::{gated_xnor_gemm, BitplaneCols, GateStats};
+        use crate::util::prng::Prng;
+        let mut rng = Prng::new(23);
+        let (rows, m, n) = (64usize, 128usize, 48usize);
+        let tern = |rng: &mut Prng| rng.below(3) as f32 - 1.0;
+        let a: Vec<f32> = (0..rows * m).map(|_| tern(&mut rng)).collect();
+        let w: Vec<f32> = (0..m * n).map(|_| tern(&mut rng)).collect();
+        let cols = BitplaneCols::pack_cols(&w, m, n);
+        let mut out = vec![0.0f32; rows * n];
+        let mut stats = GateStats::default();
+        gated_xnor_gemm(&a, rows, &cols, &mut out, &mut stats);
+        // measured zero-state probabilities of the actual tensors
+        let pw0 = w.iter().filter(|&&v| v == 0.0).count() as f64 / w.len() as f64;
+        let px0 = stats.x_zero_fraction();
+        assert!(
+            gate_rate_matches(stats.resting_rate(), pw0, px0, 0.02),
+            "measured {:.4} vs analytic {:.4} (pw0 {pw0:.3}, px0 {px0:.3})",
+            stats.resting_rate(),
+            gxnor_resting_probability(pw0, px0)
+        );
+        // the uniform-state paper number (5/9) also holds loosely
+        assert!(
+            gate_rate_matches(stats.resting_rate(), 1.0 / 3.0, 1.0 / 3.0, 0.02),
+            "measured {:.4} vs 5/9",
+            stats.resting_rate()
+        );
+        // and the kernel's counting identities hold exactly
+        assert_eq!(stats.xnor + stats.resting(), stats.total);
+        assert_eq!(stats.total, (rows * m * n) as u64);
+    }
+
+    #[test]
+    fn gxnor_resting_probability_analytic_points() {
+        assert!((gxnor_resting_probability(1.0 / 3.0, 1.0 / 3.0) - 5.0 / 9.0).abs() < 1e-12);
+        assert_eq!(gxnor_resting_probability(0.0, 0.0), 0.0);
+        assert_eq!(gxnor_resting_probability(1.0, 0.0), 1.0);
+        assert!(gate_rate_matches(0.56, 1.0 / 3.0, 1.0 / 3.0, 0.02));
+        assert!(!gate_rate_matches(0.70, 1.0 / 3.0, 1.0 / 3.0, 0.02));
     }
 
     #[test]

@@ -13,6 +13,8 @@ pub mod energy;
 pub mod network;
 pub mod report;
 
-pub use counts::{count_neuron, expected_counts, NetArch, OpCounts};
+pub use counts::{
+    count_neuron, expected_counts, gate_rate_matches, gxnor_resting_probability, NetArch, OpCounts,
+};
 pub use energy::EnergyModel;
 pub use network::{network_counts, render_network_table, LayerReport};

@@ -2,7 +2,9 @@
 
 use std::fmt::Write as _;
 
-use crate::hwsim::counts::{count_neuron, expected_counts, NetArch, OpCounts};
+use crate::hwsim::counts::{
+    count_neuron, expected_counts, gxnor_resting_probability, NetArch, OpCounts,
+};
 use crate::hwsim::energy::EnergyModel;
 use crate::util::prng::Prng;
 
@@ -24,7 +26,7 @@ pub fn table2(m: u64, pw0: f64, px0: f64) -> String {
         // distort small M: 55.56% must print as 55.6%, not 56.0%)
         let p_rest = match arch {
             NetArch::Twn => pw0,
-            NetArch::Gxnor => 1.0 - (1.0 - pw0) * (1.0 - px0),
+            NetArch::Gxnor => gxnor_resting_probability(pw0, px0),
             _ => 0.0,
         };
         let (mult, acc, xnor) = match arch {

@@ -29,6 +29,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod hwsim;
 pub mod metrics;
 pub mod nn;

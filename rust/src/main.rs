@@ -1,12 +1,13 @@
 //! `gxnor` — the GXNOR-Net training coordinator CLI.
 //!
 //! Subcommands:
-//!   train   train a network with any Table-1 method (gxnor/bnn/bwn/twn/fp
-//!           or multi:N1,N2) on a real or procedural dataset
-//!   eval    evaluate a checkpoint
-//!   sweep   reproduce the ablation figures (m / a / r / levels)
-//!   hwsim   print Table 2 + the Fig. 12 gating example
-//!   info    list artifacts and their shapes
+//!   train    train a network with any Table-1 method (gxnor/bnn/bwn/twn/fp
+//!            or multi:N1,N2) on a real or procedural dataset
+//!   eval     evaluate a checkpoint (--engine xla|native)
+//!   sweep    reproduce the ablation figures (m / a / r / levels)
+//!   hwsim    print Table 2 + the Fig. 12 gating example
+//!   info     list artifacts and their shapes
+//!   inspect  describe a checkpoint (tensors, spaces, histograms)
 //!
 //! Run `gxnor <cmd> --help` for options.
 
@@ -16,9 +17,10 @@ use gxnor::cli::Command;
 use gxnor::coordinator::checkpoint;
 use gxnor::coordinator::method::Method;
 use gxnor::coordinator::optimizer::OptKind;
-use gxnor::coordinator::trainer::{TrainConfig, Trainer};
+use gxnor::coordinator::trainer::{evaluate_engine, TrainConfig, Trainer};
 use gxnor::hwsim::report as hwreport;
 use gxnor::runtime::client::Runtime;
+use gxnor::runtime::exec::EngineKind;
 use gxnor::runtime::manifest::Manifest;
 use gxnor::sweep;
 
@@ -48,9 +50,10 @@ fn print_usage() {
     println!(
         "gxnor — ternary weights & activations without full-precision memory\n\
          (Deng et al., Neural Networks 2018 — unified discretization framework)\n\n\
-         usage: gxnor <train|eval|sweep|hwsim|info> [options]\n"
+         usage: gxnor <train|eval|sweep|hwsim|info|inspect> [options]\n"
     );
-    for c in [train_cmd(), eval_cmd(), sweep_cmd(), hwsim_cmd(), info_cmd()] {
+    let cmds = [train_cmd(), eval_cmd(), sweep_cmd(), hwsim_cmd(), info_cmd(), inspect_cmd()];
+    for c in cmds {
         println!("{}", c.help());
     }
 }
@@ -180,27 +183,60 @@ fn eval_cmd() -> Command {
         .opt("dataset", "synth_mnist", "dataset")
         .opt("test-len", "1000", "test split size")
         .opt("r", "0.5", "zero-window half width")
+        .opt("engine", "xla", "inference engine: xla (PJRT graph) | native (gated XNOR)")
         .opt("artifacts", "artifacts", "artifact directory")
 }
 
 fn cmd_eval(argv: &[String]) -> Result<()> {
     let a = eval_cmd().parse(argv).map_err(|e| anyhow!(e))?;
     let manifest = Manifest::load(&a.opt_or("artifacts", "artifacts")).map_err(|e| anyhow!(e))?;
-    let mut rt = Runtime::new()?;
-    let cfg = TrainConfig {
-        arch: a.opt_or("arch", "mlp"),
-        method: Method::parse(&a.opt_or("method", "gxnor")).map_err(|e| anyhow!(e))?,
-        dataset: a.opt_or("dataset", "synth_mnist"),
-        test_len: a.opt_usize("test-len", 1000),
-        r: a.opt_f32("r", 0.5),
-        verbose: false,
-        ..Default::default()
-    };
-    let test = gxnor::data::open(&cfg.dataset, false, cfg.test_len).map_err(|e| anyhow!(e))?;
-    let mut trainer = Trainer::new(&mut rt, &manifest, cfg)?;
-    checkpoint::load(&mut trainer.model, a.opt("ckpt").unwrap()).map_err(|e| anyhow!(e))?;
-    let acc = trainer.evaluate(test.as_ref())?;
-    println!("test accuracy: {:.2}%", 100.0 * acc);
+    let engine = EngineKind::parse(&a.opt_or("engine", "xla")).map_err(|e| anyhow!(e))?;
+    let arch = a.opt_or("arch", "mlp");
+    let method = Method::parse(&a.opt_or("method", "gxnor")).map_err(|e| anyhow!(e))?;
+    let dataset = a.opt_or("dataset", "synth_mnist");
+    let test_len = a.opt_usize("test-len", 1000);
+    let r = a.opt_f32("r", 0.5);
+    let ckpt = a.opt("ckpt").unwrap();
+    let test = gxnor::data::open(&dataset, false, test_len).map_err(|e| anyhow!(e))?;
+    println!("engine       : {}", engine.name());
+    match engine {
+        EngineKind::Native => {
+            // fully device-free: metadata from the manifest, weights from
+            // the checkpoint — no PJRT client is ever created, and the
+            // gate report reflects exactly the evaluation just performed
+            let mut eng =
+                gxnor::engine::native_engine_from_checkpoint(&manifest, &arch, method, r, ckpt)?;
+            let acc = evaluate_engine(&mut eng, test.as_ref())?;
+            println!("test accuracy: {:.2}%", 100.0 * acc);
+            for rep in eng.gate_report() {
+                println!(
+                    "gate {:<24} fired {:>6.1}% of {} nominal XNOR (w0 {:.3}, x0 {:.3})",
+                    rep.name,
+                    100.0 * (1.0 - rep.stats.resting_rate()),
+                    rep.stats.total,
+                    rep.w_zero_fraction,
+                    rep.stats.x_zero_fraction(),
+                );
+            }
+        }
+        EngineKind::Xla => {
+            let mut rt = Runtime::new()?;
+            let cfg = TrainConfig {
+                arch,
+                method,
+                dataset,
+                test_len,
+                r,
+                engine,
+                verbose: false,
+                ..Default::default()
+            };
+            let mut trainer = Trainer::new(&mut rt, &manifest, cfg)?;
+            checkpoint::load(&mut trainer.model, ckpt).map_err(|e| anyhow!(e))?;
+            let acc = trainer.evaluate(test.as_ref())?;
+            println!("test accuracy: {:.2}%", 100.0 * acc);
+        }
+    }
     Ok(())
 }
 
@@ -214,6 +250,7 @@ fn sweep_cmd() -> Command {
         .opt("test-len", "800", "test split size")
         .opt("dataset", "synth_mnist", "dataset")
         .opt("seed", "42", "RNG seed")
+        .opt("engine", "xla", "evaluation engine: xla | native")
         .opt("artifacts", "artifacts", "artifact directory")
         .opt("csv", "", "write results CSV to this path")
 }
@@ -228,6 +265,7 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         test_len: a.opt_usize("test-len", 800),
         dataset: a.opt_or("dataset", "synth_mnist"),
         seed: a.opt_u64("seed", 42),
+        engine: EngineKind::parse(&a.opt_or("engine", "xla")).map_err(|e| anyhow!(e))?,
         verbose: false,
         ..Default::default()
     };

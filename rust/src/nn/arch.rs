@@ -73,6 +73,51 @@ pub fn build_arch(name: &str) -> Result<Arch, String> {
     }
 }
 
+/// Rebuild a named architecture with its weighted-layer dimensions
+/// overridden by actual weight shapes — Dense `[din, dout]`, Conv
+/// `[k, k, cin, cout]` (HWIO) — so width-scaled artifacts drive the same
+/// topology. This is how the native engine recovers the exact network a
+/// manifest/checkpoint was lowered with.
+pub fn arch_from_weights(name: &str, shapes: &[Vec<usize>]) -> Result<Arch, String> {
+    let mut arch = build_arch(name)?;
+    let mut wi = 0usize;
+    for l in arch.layers.iter_mut() {
+        match l {
+            Layer::Conv { cin, cout, k, .. } => {
+                let s = shapes
+                    .get(wi)
+                    .ok_or_else(|| format!("arch {name}: missing weight shape for conv {wi}"))?;
+                if s.len() != 4 || s[0] != s[1] {
+                    return Err(format!("conv {wi}: bad HWIO weight shape {s:?}"));
+                }
+                *k = s[0];
+                *cin = s[2];
+                *cout = s[3];
+                wi += 1;
+            }
+            Layer::Dense { din, dout } => {
+                let s = shapes
+                    .get(wi)
+                    .ok_or_else(|| format!("arch {name}: missing weight shape for dense {wi}"))?;
+                if s.len() != 2 {
+                    return Err(format!("dense {wi}: bad weight shape {s:?}"));
+                }
+                *din = s[0];
+                *dout = s[1];
+                wi += 1;
+            }
+            Layer::Pool { .. } | Layer::Flatten => {}
+        }
+    }
+    if wi != shapes.len() {
+        return Err(format!(
+            "arch {name} has {wi} weighted layers, got {} weight shapes",
+            shapes.len()
+        ));
+    }
+    Ok(arch)
+}
+
 /// One weighted layer's compute geometry after shape propagation.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct LayerGeometry {
@@ -184,5 +229,33 @@ mod tests {
     #[test]
     fn unknown_arch_rejected() {
         assert!(build_arch("vgg").is_err());
+    }
+
+    #[test]
+    fn arch_from_weights_overrides_width() {
+        // a width-scaled mlp: 784-32-32-10 instead of 784-512-512-10
+        let shapes = vec![vec![784, 32], vec![32, 32], vec![32, 10]];
+        let a = arch_from_weights("mlp", &shapes).unwrap();
+        assert_eq!(a.layers[1], Layer::Dense { din: 784, dout: 32 });
+        assert_eq!(a.layers[3], Layer::Dense { din: 32, dout: 10 });
+        let g = geometry(&a);
+        assert_eq!(g[0].neuron_evals, 32);
+    }
+
+    #[test]
+    fn arch_from_weights_rejects_mismatches() {
+        // wrong count
+        assert!(arch_from_weights("mlp", &[vec![784, 32]]).is_err());
+        // wrong rank for a conv layer
+        let bad = vec![vec![25, 32], vec![5, 5, 32, 64], vec![1024, 512], vec![512, 10]];
+        assert!(arch_from_weights("cnn_mnist", &bad).is_err());
+        // non-square conv kernel
+        let bad2 = vec![
+            vec![5, 3, 1, 32],
+            vec![5, 5, 32, 64],
+            vec![1024, 512],
+            vec![512, 10],
+        ];
+        assert!(arch_from_weights("cnn_mnist", &bad2).is_err());
     }
 }

@@ -7,5 +7,5 @@ pub mod arch;
 pub mod init;
 pub mod params;
 
-pub use arch::{build_arch, geometry, Arch, Layer, LayerGeometry};
+pub use arch::{arch_from_weights, build_arch, geometry, Arch, Layer, LayerGeometry};
 pub use params::{ModelState, ParamDesc, ParamKind};

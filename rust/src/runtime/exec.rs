@@ -1,0 +1,110 @@
+//! The inference-engine abstraction: one trait, two backends.
+//!
+//! * [`XlaInferEngine`] — the lowered HLO infer graph executed on the PJRT
+//!   client through the pooled zero-copy boundary (`runtime/client.rs`).
+//! * `engine::NativeEngine` — the packed-domain gated-XNOR CPU backend
+//!   (Section 3.C of the paper executed for real, not just analyzed).
+//!
+//! Everything above this trait — `Trainer::evaluate`, `gxnor eval/sweep`,
+//! the bench harness — talks to [`ExecEngine`] only, so the two paths can
+//! be selected per run (`--engine xla|native`) and A/B'd on identical
+//! checkpoints (`BENCH_infer.json`).
+
+use anyhow::Result;
+
+use crate::runtime::client::{ExecBuffers, Runtime};
+use crate::runtime::manifest::GraphMeta;
+
+/// A batched inference backend over one fixed network + weight snapshot.
+pub trait ExecEngine {
+    /// Backend name ("xla" | "native"), for reports and error messages.
+    fn name(&self) -> &'static str;
+
+    /// Samples per `infer_batch` call (fixed at construction).
+    fn batch(&self) -> usize;
+
+    fn n_classes(&self) -> usize;
+
+    /// Forward one batch (`batch × sample_len`, flattened NHWC) and return
+    /// logits (`batch × n_classes`, row-major). The slice borrows the
+    /// engine's pooled output buffer and is valid until the next call.
+    fn infer_batch(&mut self, x: &[f32]) -> Result<&[f32]>;
+}
+
+/// Which [`ExecEngine`] implementation a run evaluates on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EngineKind {
+    /// The lowered XLA infer graph on the PJRT client.
+    #[default]
+    Xla,
+    /// The native packed-domain gated-XNOR CPU engine.
+    Native,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<EngineKind, String> {
+        match s {
+            "xla" => Ok(EngineKind::Xla),
+            "native" => Ok(EngineKind::Native),
+            other => Err(format!("unknown engine {other:?} (xla|native)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Xla => "xla",
+            EngineKind::Native => "native",
+        }
+    }
+}
+
+/// The PJRT-graph backend: a view over a loaded infer graph and its pooled
+/// boundary buffers. The caller refills params/BN state once (they don't
+/// change during evaluation); `infer_batch` refills only the batch input.
+pub struct XlaInferEngine<'a> {
+    rt: &'a Runtime,
+    meta: &'a GraphMeta,
+    bufs: &'a mut ExecBuffers,
+}
+
+impl<'a> XlaInferEngine<'a> {
+    /// `bufs` must belong to `meta` and already hold the static scalars
+    /// plus current params/BN state (the trainer guarantees this).
+    pub fn new(rt: &'a Runtime, meta: &'a GraphMeta, bufs: &'a mut ExecBuffers) -> Self {
+        XlaInferEngine { rt, meta, bufs }
+    }
+}
+
+impl ExecEngine for XlaInferEngine<'_> {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn batch(&self) -> usize {
+        self.meta.batch
+    }
+
+    fn n_classes(&self) -> usize {
+        self.meta.n_classes
+    }
+
+    fn infer_batch(&mut self, x: &[f32]) -> Result<&[f32]> {
+        self.bufs.set_f32(self.meta, 0, x)?;
+        self.rt.execute_into(self.meta, self.bufs)?;
+        Ok(&self.bufs.outputs[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_parses() {
+        assert_eq!(EngineKind::parse("xla").unwrap(), EngineKind::Xla);
+        assert_eq!(EngineKind::parse("native").unwrap(), EngineKind::Native);
+        assert!(EngineKind::parse("tpu").is_err());
+        assert_eq!(EngineKind::default().name(), "xla");
+        assert_eq!(EngineKind::Native.name(), "native");
+    }
+}

@@ -3,7 +3,9 @@
 //! process touches XLA; everything above it works with plain `&[f32]`.
 
 pub mod client;
+pub mod exec;
 pub mod manifest;
 
 pub use client::Runtime;
+pub use exec::{EngineKind, ExecEngine, XlaInferEngine};
 pub use manifest::{GraphMeta, IoDesc, Manifest};

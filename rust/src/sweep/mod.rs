@@ -106,11 +106,10 @@ pub fn render_table(title: &str, points: &[SweepPoint]) -> String {
     s
 }
 
-/// Best point by test accuracy.
+/// Best point by test accuracy (NaN-safe: total order, so a NaN point can
+/// never panic the sweep report).
 pub fn best(points: &[SweepPoint]) -> Option<&SweepPoint> {
-    points
-        .iter()
-        .max_by(|a, b| a.test_acc.partial_cmp(&b.test_acc).unwrap())
+    points.iter().max_by(|a, b| a.test_acc.total_cmp(&b.test_acc))
 }
 
 #[cfg(test)]

@@ -9,3 +9,31 @@ pub mod timer;
 pub use json::Json;
 pub use prng::Prng;
 pub use timer::Stopwatch;
+
+/// Index of the first maximal element under `f32::total_cmp` (NaN-safe;
+/// first occurrence wins on exact ties, matching `jnp.argmax`). Shared by
+/// every engine's evaluation path so XLA and native classify identically.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, v) in xs.iter().enumerate().skip(1) {
+        if v.total_cmp(&xs[best]) == std::cmp::Ordering::Greater {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::argmax;
+
+    #[test]
+    fn argmax_first_max_wins_and_handles_nan() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.9, 0.2]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+        assert_eq!(argmax(&[-1.0, -0.5, -2.0]), 1);
+        // total_cmp orders +NaN above +inf: deterministic, never panics
+        assert_eq!(argmax(&[0.0, f32::NAN, 1.0]), 1);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -0.0, 0.0]), 2);
+    }
+}
