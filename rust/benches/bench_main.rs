@@ -24,6 +24,8 @@ use std::time::Instant;
 use gxnor::coordinator::method::Method;
 use gxnor::coordinator::trainer::{evaluate_engine, run_training, TrainConfig, Trainer};
 use gxnor::data::Dataset;
+use gxnor::engine::bitplane::GateStats;
+use gxnor::engine::NativeEngine;
 use gxnor::hwsim::report::{fig12_example, table2};
 use gxnor::metrics::Recorder;
 use gxnor::runtime::client::{Arg, Runtime};
@@ -413,7 +415,9 @@ fn bench_perf(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> {
 
 /// Evaluate the same trained model through both `ExecEngine` backends,
 /// record packed-domain samples/sec for each plus the native engine's
-/// measured gate rates, and write `BENCH_infer.json`.
+/// measured gate rates, sweep the native engine's thread count (1/2/4),
+/// A/B the packed im2col conv against the scalar oracle, and write
+/// `BENCH_infer.json` (schema `bench_infer.v2`, documented in README).
 fn bench_infer(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> {
     println!("== perf: inference engine A/B (BENCH_infer.json) ==\n");
     let cfg = TrainConfig { epochs: 1, train_len: 2000, test_len: 1000, ..base_cfg() };
@@ -434,6 +438,7 @@ fn bench_infer(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> {
     let native_secs = t0.elapsed().as_secs_f64();
     let gate = nat.total_gate_stats();
     let per_layer = nat.gate_report();
+    let nat_threads = nat.threads();
 
     // XLA engine view over the exact same model state
     let graph = tr.infer_graph_name().to_string();
@@ -471,6 +476,50 @@ fn bench_infer(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> {
         );
     }
 
+    // thread-scaling sweep on the same engine + model: samples/sec at
+    // 1/2/4 workers, with the merged GateStats pinned identical across
+    // counts (the determinism guarantee, measured not assumed)
+    println!("\nthread scaling (native engine):");
+    let mut scaling: Vec<(usize, f64, f64)> = Vec::new();
+    let mut stats_match = true;
+    let mut ref_stats: Option<GateStats> = None;
+    for threads in [1usize, 2, 4] {
+        nat.set_threads(threads);
+        nat.reset_gate_stats();
+        let t0 = Instant::now();
+        let acc = evaluate_engine(&mut nat, test.as_ref())?;
+        let secs = t0.elapsed().as_secs_f64();
+        let total = nat.total_gate_stats();
+        if let Some(r) = ref_stats {
+            if r != total {
+                stats_match = false;
+            }
+        } else {
+            ref_stats = Some(total);
+        }
+        let sps = n / secs.max(1e-12);
+        println!("  threads {threads}: {:>8.0} samples/s  acc {:.2}%", sps, 100.0 * acc);
+        scaling.push((threads, sps, acc));
+    }
+    let speedup4 = scaling[2].1 / scaling[0].1.max(1e-12);
+    println!(
+        "  4-thread speedup {speedup4:.2}x over 1 thread; merged GateStats identical: {stats_match}"
+    );
+
+    // packed-domain im2col conv vs the per-pixel scalar oracle, on a
+    // full-width cnn_mnist built straight from an initialized model (no
+    // artifacts needed for this half)
+    println!("\nconv lowering A/B (cnn_mnist, 200 samples):");
+    let conv_ab = bench_conv_ab(200)?;
+    for (name, im2col_sps, scalar_sps) in &conv_ab {
+        println!(
+            "  {name:<6} im2col {:>7.1} samples/s  vs scalar {:>7.1}  ({:.2}x)",
+            im2col_sps,
+            scalar_sps,
+            im2col_sps / scalar_sps.max(1e-12)
+        );
+    }
+
     let eng_fields = |sps: f64, acc: f64| {
         vec![
             ("samples_per_sec".to_string(), Json::Num(sps)),
@@ -478,16 +527,53 @@ fn bench_infer(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> {
         ]
     };
     let mut native_obj = eng_fields(n / native_secs.max(1e-12), acc_native);
+    native_obj.push(("threads".into(), Json::Num(nat_threads as f64)));
     native_obj.push(("gated_xnor_per_sample".into(), Json::Num(gate.xnor as f64 / rows)));
     native_obj.push(("nominal_ops_per_sample".into(), Json::Num(gate.total as f64 / rows)));
     native_obj.push(("resting_fraction".into(), Json::Num(gate.resting_rate())));
     let doc = Json::Obj(vec![
-        ("schema".into(), Json::Str("bench_infer.v1".into())),
+        ("schema".into(), Json::Str("bench_infer.v2".into())),
         ("graph".into(), Json::Str(graph)),
         ("batch".into(), Json::Num(batch as f64)),
         ("samples".into(), Json::Num(n)),
         ("xla".into(), Json::Obj(eng_fields(n / xla_secs.max(1e-12), acc_xla))),
         ("native".into(), Json::Obj(native_obj)),
+        (
+            "thread_scaling".into(),
+            Json::Arr(
+                scaling
+                    .iter()
+                    .map(|&(t, sps, acc)| {
+                        Json::Obj(vec![
+                            ("threads".into(), Json::Num(t as f64)),
+                            ("samples_per_sec".into(), Json::Num(sps)),
+                            ("accuracy".into(), Json::Num(acc)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("speedup_4_threads".into(), Json::Num(speedup4)),
+        ("gate_stats_match_across_threads".into(), Json::Bool(stats_match)),
+        (
+            "conv_ab".into(),
+            Json::Arr(
+                conv_ab
+                    .iter()
+                    .map(|(name, im2col_sps, scalar_sps)| {
+                        Json::Obj(vec![
+                            ("method".into(), Json::Str(name.clone())),
+                            ("im2col_samples_per_sec".into(), Json::Num(*im2col_sps)),
+                            ("scalar_samples_per_sec".into(), Json::Num(*scalar_sps)),
+                            (
+                                "speedup".into(),
+                                Json::Num(im2col_sps / scalar_sps.max(1e-12)),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
         (
             "per_layer_gate".into(),
             Json::Arr(
@@ -513,6 +599,68 @@ fn bench_infer(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> {
     }
     println!("\nwrote BENCH_infer.json (accuracy match: {})\n", acc_xla == acc_native);
     Ok(())
+}
+
+/// Packed-domain im2col conv vs the per-pixel scalar oracle, per packed
+/// method, on a full-width cnn_mnist (32C5-MP2-64C5-MP2-512FC-10) built
+/// straight from an initialized model — no artifacts, no training; the
+/// A/B isolates the conv lowering, so both engines run single-threaded.
+/// Returns `(method, im2col samples/sec, scalar samples/sec)` rows.
+fn bench_conv_ab(samples: usize) -> anyhow::Result<Vec<(String, f64, f64)>> {
+    use gxnor::nn::init::init_model;
+    use gxnor::nn::params::{ParamDesc, ParamKind};
+    let ds = gxnor::data::open("synth_mnist", false, samples).map_err(anyhow::Error::msg)?;
+    let d = |name: &str, shape: Vec<usize>, kind, layer| ParamDesc {
+        name: name.into(),
+        shape,
+        kind,
+        layer,
+    };
+    use ParamKind::*;
+    let mut rows = Vec::new();
+    for (method, space) in [
+        (Method::Gxnor, DiscreteSpace::TERNARY),
+        (Method::Bnn, DiscreteSpace::BINARY),
+    ] {
+        let model = init_model(
+            vec![
+                d("W0", vec![5, 5, 1, 32], Weight, 0),
+                d("gamma0", vec![32], Gamma, 0),
+                d("beta0", vec![32], Beta, 0),
+                d("W1", vec![5, 5, 32, 64], Weight, 1),
+                d("gamma1", vec![64], Gamma, 1),
+                d("beta1", vec![64], Beta, 1),
+                d("W2", vec![1024, 512], Weight, 2),
+                d("gamma2", vec![512], Gamma, 2),
+                d("beta2", vec![512], Beta, 2),
+                d("W3", vec![512, 10], Weight, 3),
+            ],
+            ["rmean0", "rvar0", "rmean1", "rvar1", "rmean2", "rvar2"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            &[32, 32, 64, 64, 512, 512],
+            space,
+            77,
+        );
+        let timed = |eng: &mut NativeEngine| -> anyhow::Result<f64> {
+            evaluate_engine(eng, ds.as_ref())?; // warm (allocations, caches)
+            let t0 = Instant::now();
+            evaluate_engine(eng, ds.as_ref())?;
+            Ok(samples as f64 / t0.elapsed().as_secs_f64().max(1e-12))
+        };
+        let mut im2col =
+            NativeEngine::from_model("cnn_mnist", method, &model, 0.5, 50, 10, 1)?;
+        let mut scalar =
+            NativeEngine::from_model("cnn_mnist", method, &model, 0.5, 50, 10, 1)?;
+        // conv-only scalarization: dense layers stay packed in both arms,
+        // so the measured delta is the conv lowering and nothing else
+        scalar.force_scalar_conv();
+        let im2col_sps = timed(&mut im2col)?;
+        let scalar_sps = timed(&mut scalar)?;
+        rows.push((method.name(), im2col_sps, scalar_sps));
+    }
+    Ok(rows)
 }
 
 // ---------------------------------------------------------------------------

@@ -97,6 +97,11 @@ pub struct TrainConfig {
     pub dense_lr_scale: f64,
     /// which `ExecEngine` evaluation runs on (`--engine xla|native`)
     pub engine: EngineKind,
+    /// native-engine worker threads for `infer_batch` sharding
+    /// (`--threads N`; 0 = auto, up to one per core). Logits and merged
+    /// `GateStats` are thread-count-invariant, so this is purely a
+    /// throughput knob.
+    pub threads: usize,
     /// print progress lines
     pub verbose: bool,
 }
@@ -121,6 +126,7 @@ impl Default for TrainConfig {
             augment: false,
             dense_lr_scale: 0.5,
             engine: EngineKind::Xla,
+            threads: 0,
             verbose: false,
         }
     }
@@ -490,7 +496,8 @@ impl<'rt> Trainer<'rt> {
 
     /// Build a native gated-XNOR engine snapshot of the current model
     /// (packed weights ternarized into bit planes, BN folded into
-    /// per-channel thresholds). Independent of the PJRT device.
+    /// per-channel thresholds). Independent of the PJRT device; shards
+    /// batches across `TrainConfig::threads` workers.
     pub fn native_engine(&self) -> Result<NativeEngine> {
         NativeEngine::from_model(
             &self.cfg.arch,
@@ -499,6 +506,7 @@ impl<'rt> Trainer<'rt> {
             self.cfg.r,
             self.infer_g.batch,
             self.infer_g.n_classes,
+            self.cfg.threads,
         )
     }
 

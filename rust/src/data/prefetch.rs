@@ -113,6 +113,15 @@ impl<'scope> Prefetcher<'scope> {
         batch: usize,
         depth: usize,
     ) -> Prefetcher<'scope> {
+        if depth < 2 {
+            // prime() silently clamps to 1 buffer, which serializes the
+            // pipeline: the worker can only assemble batch k+1 after the
+            // consumer recycles batch k. Degrade loudly, not silently.
+            eprintln!(
+                "prefetch(eval): ring depth {depth} < 2 — batch assembly degrades to \
+                 synchronous (no overlap with inference)"
+            );
+        }
         let (tx, rx) = channel::<Item>();
         let (tx_back, rx_back) = channel::<Batch>();
         prime(&tx_back, ds, batch, depth);

@@ -20,7 +20,7 @@
 
 /// u64 words needed to hold `m` lanes.
 pub const fn words_for(m: usize) -> usize {
-    (m + 63) / 64
+    crate::util::div_ceil(m, 64)
 }
 
 /// Pack grid values into sign/nonzero planes. Values must lie in
@@ -161,54 +161,143 @@ impl GateStats {
     }
 }
 
-/// One packed activation row against every weight column: writes `out[j]`
-/// for each column and tallies the gate ops. `sign`/`nz` must be exactly
-/// `cols.words` long (as produced by [`pack_row_into`] for `cols.m`
-/// lanes). This is the single home of the GateStats counting semantics —
-/// the dense GEMM and the conv patch walk both go through it.
-pub fn gated_row(
-    sign: &[u64],
-    nz: &[u64],
+/// Caller-owned pool of packed activation rows: the sign/nonzero planes
+/// of a (rows × m) ternary matrix, row-major. `reset` reuses capacity, so
+/// a scratch held across `infer_batch` calls makes the steady-state pack
+/// allocation-free — this replaced the fresh per-call `Vec`s that used to
+/// be the last allocation in the inference hot loop. The packed-domain
+/// im2col conv fills one scratch per sample (one row per output pixel)
+/// and dense layers pack the whole sub-batch; both then fire through the
+/// same tiled kernel, [`gated_packed_rows`].
+#[derive(Default)]
+pub struct PackScratch {
+    sign: Vec<u64>,
+    nz: Vec<u64>,
+    words: usize,
+    rows: usize,
+}
+
+impl PackScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Size for `rows` rows of `m` lanes, reusing capacity. Row contents
+    /// are garbage until written by `set_row`.
+    pub fn reset(&mut self, rows: usize, m: usize) {
+        self.words = words_for(m);
+        self.rows = rows;
+        let need = rows * self.words;
+        if self.sign.len() < need {
+            self.sign.resize(need, 0);
+            self.nz.resize(need, 0);
+        }
+    }
+
+    /// Pack one row of grid values ({-1, 0, +1}); `vals` must have exactly
+    /// the lane count `reset` was given (tail lanes of the last word are
+    /// cleared, so stale bits from a previous, wider use cannot leak).
+    pub fn set_row(&mut self, row: usize, vals: &[f32]) {
+        debug_assert!(row < self.rows);
+        debug_assert_eq!(words_for(vals.len()), self.words, "row width mismatch");
+        let (lo, hi) = (row * self.words, (row + 1) * self.words);
+        pack_row_into(vals, &mut self.sign[lo..hi], &mut self.nz[lo..hi]);
+    }
+
+    /// Pack a full row-major (rows × m) matrix.
+    pub fn pack_rows(&mut self, a: &[f32], rows: usize, m: usize) {
+        assert_eq!(a.len(), rows * m);
+        self.reset(rows, m);
+        for row in 0..rows {
+            self.set_row(row, &a[row * m..(row + 1) * m]);
+        }
+    }
+
+    /// (sign, nonzero) planes of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u64], &[u64]) {
+        let s = i * self.words;
+        (&self.sign[s..s + self.words], &self.nz[s..s + self.words])
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+}
+
+/// Bytes of weight bit-planes a column tile may occupy: half a typical
+/// 32 KiB L1d, leaving the other half for the streaming activation rows.
+const TILE_BYTES: usize = 16 * 1024;
+
+/// Columns per tile for a given plane width: sign + nz cost 16 bytes per
+/// word per column. Wide layers (large fan-in) get narrow tiles; the
+/// clamp keeps degenerate shapes sane.
+fn col_tile(words: usize) -> usize {
+    (TILE_BYTES / (16 * words.max(1))).clamp(4, 256)
+}
+
+/// Every packed row against every weight column, tiled over output-column
+/// blocks sized to L1 so each tile's weight bit-planes stay cache-hot
+/// while the activation rows stream past (instead of re-walking the full
+/// weight matrix per row and thrashing). Writes `out[row·n + col]`; the
+/// dot is an exact integer, so results are bit-identical to the untiled
+/// walk in any tile order. This is the single home of the GateStats
+/// counting semantics — the dense GEMM and the im2col conv both land here.
+pub fn gated_packed_rows(
+    pack: &PackScratch,
     cols: &BitplaneCols,
     out: &mut [f32],
     stats: &mut GateStats,
 ) {
-    debug_assert_eq!(nz.len(), cols.words);
-    debug_assert_eq!(out.len(), cols.n);
+    let rows = pack.rows;
+    let n = cols.n;
+    debug_assert_eq!(pack.words, cols.words, "row/column plane width mismatch");
+    assert_eq!(out.len(), rows * n);
     let m = cols.m as u64;
-    stats.x_nonzero += nz.iter().map(|w| w.count_ones() as u64).sum::<u64>();
-    stats.x_count += m;
-    for (j, o) in out.iter_mut().enumerate() {
-        let (ws, wn) = cols.col(j);
-        let (dot, active) = gated_dot(sign, nz, ws, wn);
-        *o = dot as f32;
-        stats.xnor += active;
-        stats.total += m;
-        stats.evals += 1;
-        if active > 0 {
-            stats.bitcount += 1;
-        }
+    for row in 0..rows {
+        let (_, nz) = pack.row(row);
+        stats.x_nonzero += nz.iter().map(|w| w.count_ones() as u64).sum::<u64>();
+        stats.x_count += m;
     }
+    let tile = col_tile(cols.words);
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + tile).min(n);
+        for row in 0..rows {
+            let (rs, rn) = pack.row(row);
+            let orow = &mut out[row * n..row * n + n];
+            for j in j0..j1 {
+                let (ws, wn) = cols.col(j);
+                let (dot, active) = gated_dot(rs, rn, ws, wn);
+                orow[j] = dot as f32;
+                stats.xnor += active;
+                if active > 0 {
+                    stats.bitcount += 1;
+                }
+            }
+        }
+        j0 = j1;
+    }
+    // per (row, col) evaluation: fan-in connections considered, one eval
+    stats.total += rows as u64 * n as u64 * m;
+    stats.evals += (rows * n) as u64;
 }
 
 /// Gated-XNOR GEMM: `out[row·n + col] = Σᵢ a[row·m + i]·w[i, col]` for
-/// ternary operands, rows packed on the fly, gate ops tallied into `stats`.
+/// ternary operands. Rows are packed into the caller-owned `pack` scratch
+/// (reused across calls — no per-call allocation), then run through the
+/// tiled kernel.
 pub fn gated_xnor_gemm(
     a: &[f32],
     rows: usize,
     cols: &BitplaneCols,
     out: &mut [f32],
     stats: &mut GateStats,
+    pack: &mut PackScratch,
 ) {
-    let m = cols.m;
-    assert_eq!(a.len(), rows * m);
-    assert_eq!(out.len(), rows * cols.n);
-    let mut sign = vec![0u64; cols.words];
-    let mut nz = vec![0u64; cols.words];
-    for row in 0..rows {
-        pack_row_into(&a[row * m..(row + 1) * m], &mut sign, &mut nz);
-        gated_row(&sign, &nz, cols, &mut out[row * cols.n..(row + 1) * cols.n], stats);
-    }
+    assert_eq!(a.len(), rows * cols.m);
+    pack.pack_rows(a, rows, cols.m);
+    gated_packed_rows(pack, cols, out, stats);
 }
 
 /// Scalar GEMM with f64 accumulation:
@@ -243,7 +332,22 @@ mod tests {
     #[test]
     fn gated_gemm_matches_scalar_reference() {
         let mut rng = Prng::new(7);
-        let shapes = [(1usize, 1usize, 1usize), (3, 63, 5), (4, 64, 8), (2, 65, 3), (5, 200, 17)];
+        // shapes straddle word edges AND column-tile edges: m = 130 gives
+        // words = 3 (tile 341 -> clamped 256), so n = 300 spans two
+        // tiles; m = 4100 makes the tile genuinely narrow (words = 65 ->
+        // tile 15, n = 40 spans three)
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (3, 63, 5),
+            (4, 64, 8),
+            (2, 65, 3),
+            (5, 200, 17),
+            (2, 130, 300),
+            (3, 4100, 40),
+        ];
+        // one scratch reused across every shape: capacity reuse must not
+        // leak rows/lanes between calls
+        let mut pack = PackScratch::new();
         for &(rows, m, n) in &shapes {
             let a = random_ternary(&mut rng, rows * m);
             let w = random_ternary(&mut rng, m * n);
@@ -251,13 +355,60 @@ mod tests {
             let mut got = vec![0.0f32; rows * n];
             let mut want = vec![0.0f32; rows * n];
             let mut stats = GateStats::default();
-            gated_xnor_gemm(&a, rows, &cols, &mut got, &mut stats);
+            gated_xnor_gemm(&a, rows, &cols, &mut got, &mut stats, &mut pack);
             scalar_gemm(&a, rows, &w, m, n, &mut want);
             assert_eq!(got, want, "rows={rows} m={m} n={n}");
             assert_eq!(stats.total, (rows * m * n) as u64);
             assert_eq!(stats.evals, (rows * n) as u64);
             assert_eq!(stats.x_count, (rows * m) as u64);
         }
+    }
+
+    #[test]
+    fn tiled_kernel_stats_are_tile_order_independent() {
+        // the same matmul through a tiny fan-in (wide tile, one block) and
+        // a huge fan-in is covered above; here pin that the tallies of a
+        // multi-tile walk equal the per-element definition computed by hand
+        let mut rng = Prng::new(41);
+        let (rows, m, n) = (3usize, 70usize, 300usize);
+        let a = random_ternary(&mut rng, rows * m);
+        let w = random_ternary(&mut rng, m * n);
+        let cols = BitplaneCols::pack_cols(&w, m, n);
+        let mut out = vec![0.0f32; rows * n];
+        let mut stats = GateStats::default();
+        let mut pack = PackScratch::new();
+        gated_xnor_gemm(&a, rows, &cols, &mut out, &mut stats, &mut pack);
+        let mut xnor = 0u64;
+        let mut bitcount = 0u64;
+        for row in 0..rows {
+            for j in 0..n {
+                let fired = (0..m)
+                    .filter(|&i| a[row * m + i] != 0.0 && w[i * n + j] != 0.0)
+                    .count() as u64;
+                xnor += fired;
+                if fired > 0 {
+                    bitcount += 1;
+                }
+            }
+        }
+        assert_eq!(stats.xnor, xnor);
+        assert_eq!(stats.bitcount, bitcount);
+        let x_nonzero = a.iter().filter(|&&v| v != 0.0).count() as u64;
+        assert_eq!(stats.x_nonzero, x_nonzero);
+    }
+
+    #[test]
+    fn pack_scratch_reuse_shrinks_cleanly() {
+        // wide pack first, then a narrower one: stale lanes must gate off
+        let mut pack = PackScratch::new();
+        let wide = vec![1.0f32; 2 * 130];
+        pack.pack_rows(&wide, 2, 130);
+        let narrow = vec![0.0f32, 1.0, -1.0];
+        pack.pack_rows(&narrow, 1, 3);
+        assert_eq!(pack.rows(), 1);
+        let (sign, nz) = pack.row(0);
+        assert_eq!(sign, &[0b010u64]);
+        assert_eq!(nz, &[0b110u64]);
     }
 
     #[test]
@@ -269,7 +420,7 @@ mod tests {
         let cols = BitplaneCols::pack_cols(&w, m, 1);
         let mut out = vec![0.0f32; 1];
         let mut stats = GateStats::default();
-        gated_xnor_gemm(&a, 1, &cols, &mut out, &mut stats);
+        gated_xnor_gemm(&a, 1, &cols, &mut out, &mut stats, &mut PackScratch::new());
         assert_eq!(stats.xnor, m as u64);
         assert_eq!(stats.resting(), 0);
         assert_eq!(stats.x_zero_fraction(), 0.0);
@@ -287,7 +438,7 @@ mod tests {
         let cols = BitplaneCols::pack_cols(&w, m, 1);
         let mut out = vec![9.0f32; 1];
         let mut stats = GateStats::default();
-        gated_xnor_gemm(&a, 1, &cols, &mut out, &mut stats);
+        gated_xnor_gemm(&a, 1, &cols, &mut out, &mut stats, &mut PackScratch::new());
         assert_eq!(out[0], 0.0);
         assert_eq!(stats.xnor, 0);
         assert_eq!(stats.bitcount, 0);
@@ -304,7 +455,7 @@ mod tests {
         let cols = BitplaneCols::pack_cols(&w, 3, 1);
         let mut out = vec![0.0f32; 1];
         let mut stats = GateStats::default();
-        gated_xnor_gemm(&x, 1, &cols, &mut out, &mut stats);
+        gated_xnor_gemm(&x, 1, &cols, &mut out, &mut stats, &mut PackScratch::new());
         assert_eq!(out[0], 1.0);
         assert_eq!(stats.xnor, 1);
         assert_eq!(stats.resting(), 2);

@@ -16,6 +16,19 @@
 //! by the model's actual weight shapes (`arch_from_weights`), so
 //! width-scaled artifacts work unchanged.
 //!
+//! Two things make the engine saturate the CPU instead of walking scalar
+//! loops: **packed-domain im2col** — each sample's conv patches are packed
+//! once into a reusable [`PackScratch`] bitplane pool and the whole patch
+//! matrix fires through the same column-tiled XNOR+popcount+zero-skip
+//! kernel dense layers use ([`bitplane::gated_packed_rows`]) — and
+//! **multi-core batching**: `infer_batch` shards the batch by contiguous
+//! sample range across scoped worker threads (`util::pool`), each with
+//! its own [`ShardState`] scratch. Per-shard [`GateStats`] merge back in
+//! shard order; every tally is an integer sum over disjoint samples, so
+//! logits and merged stats are bit-identical for any thread count. The
+//! per-pixel scalar conv walk survives as the cross-check oracle (and the
+//! fp fallback): `NativeEngine::force_scalar_path`.
+//!
 //! While it runs, the engine tallies the gated operations that *actually*
 //! fired per layer ([`GateStats`]); `hwsim::counts` cross-checks these
 //! measured rates against the Table 2 analytical predictions.
@@ -32,12 +45,20 @@ use crate::nn::params::{ModelState, ParamKind, ParamValue};
 use crate::runtime::exec::ExecEngine;
 use crate::runtime::manifest::Manifest;
 use crate::ternary::DiscreteSpace;
+use crate::util::pool;
 use bitplane::{
-    gated_row, gated_xnor_gemm, pack_row_into, scalar_gemm, words_for, BitplaneCols, GateStats,
+    gated_packed_rows, gated_xnor_gemm, scalar_gemm, BitplaneCols, GateStats, PackScratch,
 };
 
 /// Must match `python/compile/model.py::BN_EPS` (parity depends on it).
 const BN_EPS: f32 = 1e-4;
+
+/// Minimum *average* samples per shard under auto threading
+/// (`threads = 0`): workers are capped at `batch / MIN_AUTO_SHARD`, so a
+/// shard carries enough forward work to amortize its scoped spawn/join
+/// (~tens of µs; the ragged tail shard may run a couple of samples
+/// short). Explicit thread counts bypass the floor.
+const MIN_AUTO_SHARD: usize = 8;
 
 /// Activation discretization mode (mirrors the lowered graphs').
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -108,18 +129,46 @@ pub struct LayerGateReport {
     pub stats: GateStats,
 }
 
-/// Reusable conv scratch (patch gather + packed row planes). Sized lazily
+/// Reusable conv patch-gather scratch (one k·k·cin f32 row). Sized lazily
 /// per layer; capacity persists across `infer_batch` calls so the
 /// steady-state conv walk allocates nothing (same allocate-once discipline
-/// as `buf_a`/`buf_b`).
+/// as the shard buffers).
 #[derive(Default)]
 struct ConvScratch {
     patch: Vec<f32>,
-    sign: Vec<u64>,
-    nz: Vec<u64>,
 }
 
-/// The native backend: one network + one weight/BN snapshot.
+/// Everything one worker thread mutates while forwarding its sample
+/// range: ping-pong activation buffers, conv patch gather scratch, the
+/// packed-row pool, and this shard's per-layer gate tallies. One
+/// `ShardState` per worker; capacity persists across `infer_batch` calls
+/// so the steady-state forward allocates nothing on any thread.
+struct ShardState {
+    buf_a: Vec<f32>,
+    buf_b: Vec<f32>,
+    conv: ConvScratch,
+    pack: PackScratch,
+    gate: Vec<GateStats>,
+}
+
+impl ShardState {
+    fn new(n_layers: usize) -> Self {
+        ShardState {
+            buf_a: Vec::new(),
+            buf_b: Vec::new(),
+            conv: ConvScratch::default(),
+            pack: PackScratch::new(),
+            gate: vec![GateStats::default(); n_layers],
+        }
+    }
+}
+
+/// The native backend: one network + one weight/BN snapshot. The batch is
+/// sharded by contiguous sample range across `threads` scoped workers
+/// (`util::pool`), each with its own [`ShardState`]; per-shard gate
+/// tallies merge back in shard order, and because every tally is an
+/// integer sum over disjoint samples, logits *and* merged [`GateStats`]
+/// are bit-identical for any thread count.
 pub struct NativeEngine {
     arch: Arch,
     mode: ActMode,
@@ -128,18 +177,23 @@ pub struct NativeEngine {
     batch: usize,
     n_classes: usize,
     sample_len: usize,
+    /// largest per-sample activation numel across the network
+    max_sample_numel: usize,
+    /// requested worker count; 0 = auto (see [`NativeEngine::set_threads`])
+    threads: usize,
     layers: Vec<EngineLayer>,
+    /// merged tallies across shards and calls (exact: integer sums)
     gate: Vec<GateStats>,
-    buf_a: Vec<f32>,
-    buf_b: Vec<f32>,
+    shards: Vec<ShardState>,
     logits: Vec<f32>,
-    scratch: ConvScratch,
 }
 
 impl NativeEngine {
     /// Build an engine from a trained (or freshly initialized) model.
     /// `arch_name` must be a catalogue architecture; its layer dimensions
-    /// are overridden by the model's weight shapes.
+    /// are overridden by the model's weight shapes. `threads` is the
+    /// worker count `infer_batch` shards samples across (0 = auto, up to
+    /// one per core); see [`NativeEngine::set_threads`].
     pub fn from_model(
         arch_name: &str,
         method: Method,
@@ -147,6 +201,7 @@ impl NativeEngine {
         r: f32,
         batch: usize,
         n_classes: usize,
+        threads: usize,
     ) -> Result<NativeEngine> {
         if batch == 0 {
             return Err(anyhow!("native engine needs batch > 0"));
@@ -158,7 +213,7 @@ impl NativeEngine {
             .map(|d| d.shape.clone())
             .collect();
         let arch = arch_from_weights(arch_name, &weight_shapes).map_err(|e| anyhow!(e))?;
-        let max_numel = walk_dims(&arch, batch, n_classes)?;
+        let max_sample_numel = walk_dims(&arch, 1, n_classes)?;
 
         let mode = match method.graph_mode() {
             "fp" => ActMode::Fp,
@@ -279,14 +334,61 @@ impl NativeEngine {
             batch,
             n_classes,
             sample_len,
+            max_sample_numel,
+            threads,
             gate: vec![GateStats::default(); layers.len()],
             layers,
-            buf_a: vec![0.0; max_numel],
-            buf_b: vec![0.0; max_numel],
+            shards: Vec::new(),
             logits: vec![0.0; batch * n_classes],
-            scratch: ConvScratch::default(),
             arch,
         })
+    }
+
+    /// Re-shard subsequent `infer_batch` calls across `threads` workers.
+    /// 0 = auto: up to one per available core, capped so shards average
+    /// at least [`MIN_AUTO_SHARD`] samples — scoped spawn/join must
+    /// never dominate a tiny forward. An explicit count is honored
+    /// exactly (the parity tests and the bench sweep rely on that). Safe
+    /// to change between calls: logits and the merged [`GateStats`] are
+    /// bit-identical for every value (pinned by the parity tests) —
+    /// sharding only redistributes whole samples, and every tally is an
+    /// integer sum over them.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads;
+    }
+
+    /// Worker count for a `b`-sample call under the current setting.
+    fn effective_threads(&self, b: usize) -> usize {
+        let cap = if self.threads == 0 {
+            // floor division: shards average >= MIN_AUTO_SHARD samples
+            // (b = 9 -> 1 worker, b = 17 -> 2 workers at 9 + 8)
+            pool::resolve_threads(0).min((b / MIN_AUTO_SHARD).max(1))
+        } else {
+            self.threads
+        };
+        cap.min(b).max(1)
+    }
+
+    /// Strip the packed weight columns so every layer runs the scalar
+    /// oracle path (per-pixel conv walk + f64-accumulated GEMM). This is
+    /// the cross-check baseline for the im2col kernel tests — never
+    /// faster, always exact.
+    pub fn force_scalar_path(&mut self) {
+        for l in self.layers.iter_mut() {
+            l.cols = None;
+        }
+    }
+
+    /// Strip packed columns from Conv layers only, leaving dense layers
+    /// packed. The `perf` bench's conv A/B uses this arm so the measured
+    /// speedup isolates the conv lowering (im2col vs per-pixel scalar)
+    /// instead of folding in the unrelated dense-layer lowering.
+    pub fn force_scalar_conv(&mut self) {
+        for l in self.layers.iter_mut() {
+            if matches!(l.op, LinOp::Conv { .. }) {
+                l.cols = None;
+            }
+        }
     }
 
     /// Per-layer gated-op tallies for the XNOR-path layers, accumulated
@@ -323,6 +425,22 @@ impl NativeEngine {
         self.layers.iter().any(|l| l.cols.is_some())
     }
 
+    /// Grow the shard pool to `n_shards` workers whose ping-pong buffers
+    /// hold `chunk` samples each (capacity only ever grows — changing the
+    /// thread count between calls reuses what is already allocated).
+    fn ensure_shards(&mut self, n_shards: usize, chunk: usize) {
+        let need = chunk * self.max_sample_numel;
+        while self.shards.len() < n_shards {
+            self.shards.push(ShardState::new(self.layers.len()));
+        }
+        for sh in &mut self.shards[..n_shards] {
+            if sh.buf_a.len() < need {
+                sh.buf_a.resize(need, 0.0);
+                sh.buf_b.resize(need, 0.0);
+            }
+        }
+    }
+
     fn forward(&mut self, x: &[f32]) -> Result<()> {
         let b = self.batch;
         if x.len() != b * self.sample_len {
@@ -333,47 +451,35 @@ impl NativeEngine {
                 self.sample_len
             ));
         }
-        let mut cur = std::mem::take(&mut self.buf_a);
-        let mut nxt = std::mem::take(&mut self.buf_b);
-        cur[..x.len()].copy_from_slice(x);
-        let (mut h, mut w, mut c) = self.arch.input;
-        let mut wi = 0usize;
-        for li in 0..self.arch.layers.len() {
-            match self.arch.layers[li] {
-                Layer::Pool { size } => {
-                    let (oh, ow) = (h / size, w / size);
-                    let out = &mut nxt[..b * oh * ow * c];
-                    maxpool(&cur[..b * h * w * c], b, h, w, c, size, out);
-                    std::mem::swap(&mut cur, &mut nxt);
-                    h = oh;
-                    w = ow;
-                }
-                Layer::Flatten => {
-                    // NHWC is already contiguous per sample: pure reshape
-                    c = h * w * c;
-                    h = 1;
-                    w = 1;
-                }
-                Layer::Conv { .. } | Layer::Dense { .. } => {
-                    let el = &self.layers[wi];
-                    let stats = &mut self.gate[wi];
-                    let scratch = &mut self.scratch;
-                    let (oh, ow, oc) =
-                        run_linear(el, &cur[..b * h * w * c], b, h, w, c, &mut nxt, stats, scratch);
-                    std::mem::swap(&mut cur, &mut nxt);
-                    h = oh;
-                    w = ow;
-                    c = oc;
-                    if let Some(bn) = &el.bn {
-                        bn_quantize(&mut cur[..b * h * w * c], c, bn, self.mode, self.r, self.hl);
-                    }
-                    wi += 1;
-                }
+        // contiguous sample-range shards, at most one per worker thread;
+        // each writes a disjoint logits slice with its own ShardState
+        let t = self.effective_threads(b);
+        let chunk = pool::shard_chunk(b, t);
+        let n_shards = crate::util::div_ceil(b, chunk);
+        self.ensure_shards(n_shards, chunk);
+        for sh in self.shards[..n_shards].iter_mut() {
+            sh.gate.fill(GateStats::default());
+        }
+        let layers = &self.layers;
+        let arch = &self.arch;
+        let (mode, r, hl) = (self.mode, self.r, self.hl);
+        let (nc, sl) = (self.n_classes, self.sample_len);
+        let tasks: Vec<_> = x
+            .chunks(chunk * sl)
+            .zip(self.logits.chunks_mut(chunk * nc))
+            .zip(self.shards[..n_shards].iter_mut())
+            .map(|((xc, lc), shard)| {
+                move || forward_range(arch, layers, mode, r, hl, xc, xc.len() / sl, lc, shard)
+            })
+            .collect();
+        pool::scope_run(tasks);
+        // deterministic merge: shard order × layer index, integer sums —
+        // identical totals no matter how many workers ran
+        for sh in &self.shards[..n_shards] {
+            for (g, sg) in self.gate.iter_mut().zip(&sh.gate) {
+                g.merge(sg);
             }
         }
-        self.logits.copy_from_slice(&cur[..b * self.n_classes]);
-        self.buf_a = cur;
-        self.buf_b = nxt;
         Ok(())
     }
 }
@@ -389,6 +495,10 @@ impl ExecEngine for NativeEngine {
 
     fn n_classes(&self) -> usize {
         self.n_classes
+    }
+
+    fn threads(&self) -> usize {
+        self.effective_threads(self.batch)
     }
 
     fn infer_batch(&mut self, x: &[f32]) -> Result<&[f32]> {
@@ -410,6 +520,7 @@ pub fn native_engine_from_checkpoint(
     method: Method,
     r: f32,
     ckpt_path: &str,
+    threads: usize,
 ) -> Result<NativeEngine> {
     let mode = method.graph_mode();
     let infer_g = manifest
@@ -429,7 +540,7 @@ pub fn native_engine_from_checkpoint(
     // seed is irrelevant: restore() replaces every tensor or errors out
     let mut model = init_model(infer_g.params.clone(), bn_names, &bn_shapes, space, 0);
     checkpoint::load(&mut model, ckpt_path).map_err(|e| anyhow!(e))?;
-    NativeEngine::from_model(arch, method, &model, r, infer_g.batch, infer_g.n_classes)
+    NativeEngine::from_model(arch, method, &model, r, infer_g.batch, infer_g.n_classes, threads)
 }
 
 /// Validate the shape walk and return the largest per-batch activation
@@ -480,6 +591,75 @@ fn walk_dims(arch: &Arch, batch: usize, n_classes: usize) -> Result<usize> {
     Ok(max_numel)
 }
 
+/// Forward one contiguous sample range through the whole network into its
+/// disjoint logits slice. This is the per-worker body `infer_batch`
+/// shards: everything it mutates lives in `shard` or `logits`, so shards
+/// never contend. `x` holds `b` samples; `logits` holds exactly
+/// `b × n_classes` floats. Shapes were validated at construction
+/// (`walk_dims`), so the walk itself is infallible.
+#[allow(clippy::too_many_arguments)]
+fn forward_range(
+    arch: &Arch,
+    layers: &[EngineLayer],
+    mode: ActMode,
+    r: f32,
+    hl: f32,
+    x: &[f32],
+    b: usize,
+    logits: &mut [f32],
+    shard: &mut ShardState,
+) {
+    let mut cur = std::mem::take(&mut shard.buf_a);
+    let mut nxt = std::mem::take(&mut shard.buf_b);
+    cur[..x.len()].copy_from_slice(x);
+    let (mut h, mut w, mut c) = arch.input;
+    let mut wi = 0usize;
+    for li in 0..arch.layers.len() {
+        match arch.layers[li] {
+            Layer::Pool { size } => {
+                let (oh, ow) = (h / size, w / size);
+                let out = &mut nxt[..b * oh * ow * c];
+                maxpool(&cur[..b * h * w * c], b, h, w, c, size, out);
+                std::mem::swap(&mut cur, &mut nxt);
+                h = oh;
+                w = ow;
+            }
+            Layer::Flatten => {
+                // NHWC is already contiguous per sample: pure reshape
+                c = h * w * c;
+                h = 1;
+                w = 1;
+            }
+            Layer::Conv { .. } | Layer::Dense { .. } => {
+                let el = &layers[wi];
+                let (oh, ow, oc) = run_linear(
+                    el,
+                    &cur[..b * h * w * c],
+                    b,
+                    h,
+                    w,
+                    c,
+                    &mut nxt,
+                    &mut shard.gate[wi],
+                    &mut shard.conv,
+                    &mut shard.pack,
+                );
+                std::mem::swap(&mut cur, &mut nxt);
+                h = oh;
+                w = ow;
+                c = oc;
+                if let Some(bn) = &el.bn {
+                    bn_quantize(&mut cur[..b * h * w * c], c, bn, mode, r, hl);
+                }
+                wi += 1;
+            }
+        }
+    }
+    logits.copy_from_slice(&cur[..logits.len()]);
+    shard.buf_a = cur;
+    shard.buf_b = nxt;
+}
+
 /// Execute one weighted layer; returns the output (h, w, c).
 #[allow(clippy::too_many_arguments)]
 fn run_linear(
@@ -491,13 +671,14 @@ fn run_linear(
     c: usize,
     nxt: &mut [f32],
     stats: &mut GateStats,
-    scratch: &mut ConvScratch,
+    conv: &mut ConvScratch,
+    pack: &mut PackScratch,
 ) -> (usize, usize, usize) {
     match el.op {
         LinOp::Dense { m, n } => {
             debug_assert_eq!(h * w * c, m);
             if let Some(cols) = &el.cols {
-                gated_xnor_gemm(cur, b, cols, &mut nxt[..b * n], stats);
+                gated_xnor_gemm(cur, b, cols, &mut nxt[..b * n], stats, pack);
             } else {
                 scalar_gemm(cur, b, &el.w, m, n, &mut nxt[..b * n]);
             }
@@ -508,22 +689,38 @@ fn run_linear(
             let pad = if same { (k - 1) / 2 } else { 0 };
             let (oh, ow) = if same { (h, w) } else { (h - k + 1, w - k + 1) };
             let m = k * k * cin;
-            let words = words_for(m);
-            scratch.patch.resize(m, 0.0);
-            scratch.sign.resize(words, 0);
-            scratch.nz.resize(words, 0);
-            for s in 0..b {
-                let sample = &cur[s * h * w * cin..(s + 1) * h * w * cin];
-                for oy in 0..oh {
-                    for ox in 0..ow {
-                        gather_patch(sample, h, w, cin, k, pad, oy, ox, &mut scratch.patch);
-                        let base = ((s * oh + oy) * ow + ox) * cout;
-                        let out = &mut nxt[base..base + cout];
-                        if let Some(cols) = &el.cols {
-                            pack_row_into(&scratch.patch, &mut scratch.sign, &mut scratch.nz);
-                            gated_row(&scratch.sign, &scratch.nz, cols, out, stats);
-                        } else {
-                            scalar_gemm(&scratch.patch, 1, &el.w, m, cout, out);
+            conv.patch.resize(m, 0.0);
+            if let Some(cols) = &el.cols {
+                // packed-domain im2col: pack every patch of a sample once
+                // into the reusable bitplane scratch (one row per output
+                // pixel), then fire the whole patch matrix through the
+                // tiled XNOR kernel — conv becomes the same GEMM dense
+                // layers run, weight bitplanes streamed tile by tile
+                let rows = oh * ow;
+                for s in 0..b {
+                    let sample = &cur[s * h * w * cin..(s + 1) * h * w * cin];
+                    pack.reset(rows, m);
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            gather_patch(sample, h, w, cin, k, pad, oy, ox, &mut conv.patch);
+                            pack.set_row(oy * ow + ox, &conv.patch);
+                        }
+                    }
+                    // NHWC output: row = pixel, col = channel — exactly the
+                    // GEMM's (rows × cout) layout, written in place
+                    let out = &mut nxt[s * rows * cout..(s + 1) * rows * cout];
+                    gated_packed_rows(pack, cols, out, stats);
+                }
+            } else {
+                // scalar oracle walk (also the fp / multi-level fallback)
+                for s in 0..b {
+                    let sample = &cur[s * h * w * cin..(s + 1) * h * w * cin];
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            gather_patch(sample, h, w, cin, k, pad, oy, ox, &mut conv.patch);
+                            let base = ((s * oh + oy) * ow + ox) * cout;
+                            let out = &mut nxt[base..base + cout];
+                            scalar_gemm(&conv.patch, 1, &el.w, m, cout, out);
                         }
                     }
                 }
@@ -733,7 +930,7 @@ mod tests {
     fn gxnor_engine_runs_and_gates() {
         let model = tiny_mlp(DiscreteSpace::TERNARY, 5);
         let mut eng =
-            NativeEngine::from_model("mlp", Method::Gxnor, &model, 0.5, 4, 10).unwrap();
+            NativeEngine::from_model("mlp", Method::Gxnor, &model, 0.5, 4, 10, 1).unwrap();
         assert_eq!(eng.batch(), 4);
         assert_eq!(eng.n_classes(), 10);
         assert!(eng.has_packed_layers());
@@ -763,12 +960,10 @@ mod tests {
         // (the packed dot is an exact integer).
         let model = tiny_mlp(DiscreteSpace::TERNARY, 11);
         let mut packed =
-            NativeEngine::from_model("mlp", Method::Gxnor, &model, 0.5, 2, 10).unwrap();
+            NativeEngine::from_model("mlp", Method::Gxnor, &model, 0.5, 2, 10, 1).unwrap();
         let mut dense =
-            NativeEngine::from_model("mlp", Method::Gxnor, &model, 0.5, 2, 10).unwrap();
-        for l in dense.layers.iter_mut() {
-            l.cols = None;
-        }
+            NativeEngine::from_model("mlp", Method::Gxnor, &model, 0.5, 2, 10, 1).unwrap();
+        dense.force_scalar_path();
         let x = random_batch(2, 784, 9);
         let a = packed.infer_batch(&x).unwrap().to_vec();
         let b = dense.infer_batch(&x).unwrap().to_vec();
@@ -783,7 +978,7 @@ mod tests {
     #[test]
     fn bnn_engine_has_no_zero_activations() {
         let model = tiny_mlp(DiscreteSpace::BINARY, 3);
-        let mut eng = NativeEngine::from_model("mlp", Method::Bnn, &model, 0.5, 4, 10).unwrap();
+        let mut eng = NativeEngine::from_model("mlp", Method::Bnn, &model, 0.5, 4, 10, 1).unwrap();
         assert!(eng.has_packed_layers());
         let x = random_batch(4, 784, 2);
         eng.infer_batch(&x).unwrap();
@@ -803,7 +998,7 @@ mod tests {
         ] {
             let model = tiny_mlp(space, 8);
             let mut eng =
-                NativeEngine::from_model("mlp", method, &model, 0.5, 2, 10).unwrap();
+                NativeEngine::from_model("mlp", method, &model, 0.5, 2, 10, 1).unwrap();
             // fp activations: nothing runs packed
             assert!(!eng.has_packed_layers(), "{:?}", method);
             let x = random_batch(2, 784, 4);
@@ -863,14 +1058,32 @@ mod tests {
     fn rejects_malformed_models() {
         // wrong weighted-layer count for the arch
         let model = tiny_mlp(DiscreteSpace::TERNARY, 1);
-        assert!(NativeEngine::from_model("cnn_mnist", Method::Gxnor, &model, 0.5, 2, 10).is_err());
-        assert!(NativeEngine::from_model("mlp", Method::Gxnor, &model, 0.5, 0, 10).is_err());
-        assert!(NativeEngine::from_model("nope", Method::Gxnor, &model, 0.5, 2, 10).is_err());
+        assert!(
+            NativeEngine::from_model("cnn_mnist", Method::Gxnor, &model, 0.5, 2, 10, 1).is_err()
+        );
+        assert!(NativeEngine::from_model("mlp", Method::Gxnor, &model, 0.5, 0, 10, 1).is_err());
+        assert!(NativeEngine::from_model("nope", Method::Gxnor, &model, 0.5, 2, 10, 1).is_err());
     }
 
     #[test]
     fn cnn_topology_runs_natively() {
         // a narrow cnn_mnist: 8C5-MP2-8C5-MP2-8FC-10
+        let model = tiny_cnn(21);
+        let mut eng =
+            NativeEngine::from_model("cnn_mnist", Method::Gxnor, &model, 0.5, 2, 10, 1).unwrap();
+        let x = random_batch(2, 28 * 28, 6);
+        let logits = eng.infer_batch(&x).unwrap();
+        assert_eq!(logits.len(), 20);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // conv1 (fed ternarized maps) and both later layers run gated
+        let rep = eng.gate_report();
+        assert_eq!(rep.len(), 3);
+        assert!(rep[0].name.starts_with("conv1"), "{}", rep[0].name);
+        assert!(rep[0].stats.total > 0);
+    }
+
+    /// A narrow cnn_mnist model shared by the im2col / threading tests.
+    fn tiny_cnn(seed: u64) -> ModelState {
         let d = |name: &str, shape: Vec<usize>, kind, layer| ParamDesc {
             name: name.into(),
             shape,
@@ -878,7 +1091,7 @@ mod tests {
             layer,
         };
         use ParamKind::*;
-        let model = init_model(
+        init_model(
             vec![
                 d("W0", vec![5, 5, 1, 8], Weight, 0),
                 d("gamma0", vec![8], Gamma, 0),
@@ -901,18 +1114,76 @@ mod tests {
             ],
             &[8, 8, 8, 8, 8, 8],
             DiscreteSpace::TERNARY,
-            21,
-        );
+            seed,
+        )
+    }
+
+    /// The im2col conv must be bit-identical to the per-pixel scalar
+    /// oracle: both compute exact small-integer dots over ternary
+    /// operands, so even the f32 outputs agree exactly.
+    #[test]
+    fn im2col_conv_matches_scalar_conv_oracle() {
+        let model = tiny_cnn(29);
+        let mut packed =
+            NativeEngine::from_model("cnn_mnist", Method::Gxnor, &model, 0.5, 3, 10, 1).unwrap();
+        let mut oracle =
+            NativeEngine::from_model("cnn_mnist", Method::Gxnor, &model, 0.5, 3, 10, 1).unwrap();
+        oracle.force_scalar_path();
+        assert!(packed.has_packed_layers());
+        assert!(!oracle.has_packed_layers());
+        let mut rng = Prng::new(77);
+        for trial in 0..3 {
+            // random *ternary* inputs: the first conv stays on the scalar
+            // path in `packed` too, so every divergence would be im2col's
+            let x: Vec<f32> = (0..3 * 28 * 28).map(|_| rng.below(3) as f32 - 1.0).collect();
+            let a = packed.infer_batch(&x).unwrap().to_vec();
+            let b = oracle.infer_batch(&x).unwrap().to_vec();
+            assert_eq!(a, b, "trial {trial}: im2col diverges from scalar oracle");
+        }
+    }
+
+    /// Sharding the batch across workers must not change logits or the
+    /// merged gate tallies — including thread counts that do not divide
+    /// the batch (shard-boundary coverage) or exceed it.
+    #[test]
+    fn threaded_forward_is_bit_identical() {
+        let model = tiny_cnn(55);
+        let batch = 5usize;
+        let x = random_batch(batch, 28 * 28, 8);
+        let mut want_logits = Vec::new();
+        let mut want_gate = Vec::new();
+        for threads in [1usize, 2, 3, 7] {
+            let mut eng = NativeEngine::from_model(
+                "cnn_mnist",
+                Method::Gxnor,
+                &model,
+                0.5,
+                batch,
+                10,
+                threads,
+            )
+            .unwrap();
+            // two calls: accumulation across calls must shard-merge too
+            eng.infer_batch(&x).unwrap();
+            let logits = eng.infer_batch(&x).unwrap().to_vec();
+            let gate: Vec<GateStats> = eng.gate_report().iter().map(|r| r.stats).collect();
+            if threads == 1 {
+                want_logits = logits;
+                want_gate = gate;
+            } else {
+                assert_eq!(logits, want_logits, "threads={threads}: logits diverge");
+                assert_eq!(gate, want_gate, "threads={threads}: gate stats diverge");
+            }
+        }
+        // switching thread count on a live engine is equally exact
         let mut eng =
-            NativeEngine::from_model("cnn_mnist", Method::Gxnor, &model, 0.5, 2, 10).unwrap();
-        let x = random_batch(2, 28 * 28, 6);
-        let logits = eng.infer_batch(&x).unwrap();
-        assert_eq!(logits.len(), 20);
-        assert!(logits.iter().all(|v| v.is_finite()));
-        // conv1 (fed ternarized maps) and both later layers run gated
-        let rep = eng.gate_report();
-        assert_eq!(rep.len(), 3);
-        assert!(rep[0].name.starts_with("conv1"), "{}", rep[0].name);
-        assert!(rep[0].stats.total > 0);
+            NativeEngine::from_model("cnn_mnist", Method::Gxnor, &model, 0.5, batch, 10, 4)
+                .unwrap();
+        eng.infer_batch(&x).unwrap();
+        eng.set_threads(2);
+        let logits = eng.infer_batch(&x).unwrap().to_vec();
+        assert_eq!(logits, want_logits);
+        let gate: Vec<GateStats> = eng.gate_report().iter().map(|r| r.stats).collect();
+        assert_eq!(gate, want_gate);
     }
 }

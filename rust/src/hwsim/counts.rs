@@ -265,7 +265,7 @@ mod tests {
     /// bound this PR pins).
     #[test]
     fn native_kernel_gate_rate_matches_table2() {
-        use crate::engine::bitplane::{gated_xnor_gemm, BitplaneCols, GateStats};
+        use crate::engine::bitplane::{gated_xnor_gemm, BitplaneCols, GateStats, PackScratch};
         use crate::util::prng::Prng;
         let mut rng = Prng::new(23);
         let (rows, m, n) = (64usize, 128usize, 48usize);
@@ -275,7 +275,7 @@ mod tests {
         let cols = BitplaneCols::pack_cols(&w, m, n);
         let mut out = vec![0.0f32; rows * n];
         let mut stats = GateStats::default();
-        gated_xnor_gemm(&a, rows, &cols, &mut out, &mut stats);
+        gated_xnor_gemm(&a, rows, &cols, &mut out, &mut stats, &mut PackScratch::new());
         // measured zero-state probabilities of the actual tensors
         let pw0 = w.iter().filter(|&&v| v == 0.0).count() as f64 / w.len() as f64;
         let px0 = stats.x_zero_fraction();

@@ -20,7 +20,7 @@ use gxnor::coordinator::optimizer::OptKind;
 use gxnor::coordinator::trainer::{evaluate_engine, TrainConfig, Trainer};
 use gxnor::hwsim::report as hwreport;
 use gxnor::runtime::client::Runtime;
-use gxnor::runtime::exec::EngineKind;
+use gxnor::runtime::exec::{EngineKind, ExecEngine};
 use gxnor::runtime::manifest::Manifest;
 use gxnor::sweep;
 
@@ -76,6 +76,8 @@ fn train_cmd() -> Command {
         .opt("opt", "adam", "adam | sgd")
         .opt("update", "dst", "dst (paper) | hidden (Fig. 4a baseline: fp masters)")
         .opt("seed", "42", "RNG seed")
+        .opt("engine", "xla", "evaluation engine: xla | native")
+        .opt("threads", "0", "native-engine worker threads (0 = auto)")
         .opt("artifacts", "artifacts", "artifact directory")
         .opt("save", "", "checkpoint path to write after training")
         .flag("augment", "pad-4 + random crop + hflip (paper CIFAR recipe)")
@@ -128,6 +130,8 @@ fn parse_train_cfg(a: &gxnor::cli::Args) -> Result<TrainConfig> {
             .map_err(|e| anyhow!(e))?,
         augment: a.flag("augment") || file_cfg.bool("train.augment", false),
         dense_lr_scale: file_cfg.f64("train.dense_lr_scale", 0.5),
+        engine: EngineKind::parse(&s("engine", "train.engine", "xla")).map_err(|e| anyhow!(e))?,
+        threads: f("threads", "train.threads", 0.0) as usize,
         verbose: !a.flag("quiet"),
     })
 }
@@ -184,6 +188,7 @@ fn eval_cmd() -> Command {
         .opt("test-len", "1000", "test split size")
         .opt("r", "0.5", "zero-window half width")
         .opt("engine", "xla", "inference engine: xla (PJRT graph) | native (gated XNOR)")
+        .opt("threads", "0", "native-engine worker threads (0 = auto)")
         .opt("artifacts", "artifacts", "artifact directory")
 }
 
@@ -196,6 +201,7 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
     let dataset = a.opt_or("dataset", "synth_mnist");
     let test_len = a.opt_usize("test-len", 1000);
     let r = a.opt_f32("r", 0.5);
+    let threads = a.opt_usize("threads", 0);
     let ckpt = a.opt("ckpt").unwrap();
     let test = gxnor::data::open(&dataset, false, test_len).map_err(|e| anyhow!(e))?;
     println!("engine       : {}", engine.name());
@@ -204,8 +210,10 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
             // fully device-free: metadata from the manifest, weights from
             // the checkpoint — no PJRT client is ever created, and the
             // gate report reflects exactly the evaluation just performed
-            let mut eng =
-                gxnor::engine::native_engine_from_checkpoint(&manifest, &arch, method, r, ckpt)?;
+            let mut eng = gxnor::engine::native_engine_from_checkpoint(
+                &manifest, &arch, method, r, ckpt, threads,
+            )?;
+            println!("threads      : {}", eng.threads());
             let acc = evaluate_engine(&mut eng, test.as_ref())?;
             println!("test accuracy: {:.2}%", 100.0 * acc);
             for rep in eng.gate_report() {
@@ -228,6 +236,7 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
                 test_len,
                 r,
                 engine,
+                threads,
                 verbose: false,
                 ..Default::default()
             };
@@ -251,6 +260,7 @@ fn sweep_cmd() -> Command {
         .opt("dataset", "synth_mnist", "dataset")
         .opt("seed", "42", "RNG seed")
         .opt("engine", "xla", "evaluation engine: xla | native")
+        .opt("threads", "0", "native-engine worker threads (0 = auto)")
         .opt("artifacts", "artifacts", "artifact directory")
         .opt("csv", "", "write results CSV to this path")
 }
@@ -266,6 +276,7 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         dataset: a.opt_or("dataset", "synth_mnist"),
         seed: a.opt_u64("seed", 42),
         engine: EngineKind::parse(&a.opt_or("engine", "xla")).map_err(|e| anyhow!(e))?,
+        threads: a.opt_usize("threads", 0),
         verbose: false,
         ..Default::default()
     };

@@ -25,6 +25,15 @@ pub trait ExecEngine {
 
     fn n_classes(&self) -> usize;
 
+    /// Worker threads `infer_batch` shards the batch across. Backends
+    /// without a data-parallel path (the XLA graph executes as one
+    /// program) report 1; the native engine reports its `--threads`
+    /// setting. Purely informational — callers must not assume anything
+    /// beyond "results are independent of this value".
+    fn threads(&self) -> usize {
+        1
+    }
+
     /// Forward one batch (`batch × sample_len`, flattened NHWC) and return
     /// logits (`batch × n_classes`, row-major). The slice borrows the
     /// engine's pooled output buffer and is valid until the next call.
@@ -98,6 +107,26 @@ impl ExecEngine for XlaInferEngine<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn default_threads_is_one() {
+        struct Dummy;
+        impl ExecEngine for Dummy {
+            fn name(&self) -> &'static str {
+                "dummy"
+            }
+            fn batch(&self) -> usize {
+                1
+            }
+            fn n_classes(&self) -> usize {
+                1
+            }
+            fn infer_batch(&mut self, _x: &[f32]) -> Result<&[f32]> {
+                Ok(&[])
+            }
+        }
+        assert_eq!(Dummy.threads(), 1);
+    }
 
     #[test]
     fn engine_kind_parses() {

@@ -102,7 +102,7 @@ pub fn dst_update(
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     if w.len() >= PAR_THRESHOLD && threads > 1 {
         let nchunks = threads.min(8);
-        let chunk = (w.len() + nchunks - 1) / nchunks;
+        let chunk = crate::util::div_ceil(w.len(), nchunks);
         let mut total = DstStats::default();
         let results: Vec<DstStats> = std::thread::scope(|s| {
             let mut handles = Vec::new();

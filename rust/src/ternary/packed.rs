@@ -7,6 +7,15 @@
 //! expanded to f32 grid values only to cross the PJRT boundary.
 
 use crate::ternary::space::DiscreteSpace;
+use crate::util::div_ceil;
+
+/// u64 words holding `len` packed states of `bits` bits each — the
+/// bit-string counterpart of `engine::bitplane::words_for` (which counts
+/// one-bit lanes). Both ride `util::div_ceil` now instead of each module
+/// open-coding `(x + 63) / 64` over subtly different operands.
+const fn words_for_states(len: usize, bits: u32) -> usize {
+    div_ceil(len * bits as usize, 64)
+}
 
 /// A discrete tensor stored as bit-packed state indices.
 #[derive(Clone, Debug, PartialEq)]
@@ -24,7 +33,7 @@ impl PackedTensor {
         let len: usize = shape.iter().product();
         assert_eq!(len, values.len(), "shape/product mismatch");
         let bits = space.bits_per_state();
-        let mut data = vec![0u64; (len * bits as usize + 63) / 64];
+        let mut data = vec![0u64; words_for_states(len, bits)];
         for (i, &v) in values.iter().enumerate() {
             debug_assert!(space.contains(v), "off-grid value {v}");
             let idx = space.index_of(v) as u64;
@@ -38,7 +47,7 @@ impl PackedTensor {
         let len: usize = shape.iter().product();
         let zero_idx = space.index_of(0.0) as u64;
         let bits = space.bits_per_state();
-        let mut data = vec![0u64; (len * bits as usize + 63) / 64];
+        let mut data = vec![0u64; words_for_states(len, bits)];
         if zero_idx != 0 {
             for i in 0..len {
                 set_bits(&mut data, i, bits, zero_idx);
@@ -259,7 +268,7 @@ impl PackedTensor {
         let space = DiscreteSpace::new(n);
         let len: usize = shape.iter().product();
         let bits = space.bits_per_state();
-        if data.len() != (len * bits as usize + 63) / 64 {
+        if data.len() != words_for_states(len, bits) {
             return Err("packed payload size mismatch".into());
         }
         Ok(PackedTensor { space, shape, bits, data, len })

@@ -3,12 +3,24 @@
 
 pub mod json;
 pub mod plot;
+pub mod pool;
 pub mod prng;
 pub mod timer;
 
 pub use json::Json;
 pub use prng::Prng;
 pub use timer::Stopwatch;
+
+/// Ceiling division: the number of `b`-sized chunks covering `a`. The
+/// shared home the packing word-count helpers delegate to
+/// (`engine::bitplane::words_for`, `ternary::packed::words_for_states`,
+/// `util::pool::shard_chunk`, DST chunking) instead of each open-coding
+/// `(a + b - 1) / b` over subtly different operands. Plain call sites
+/// may equally use std's `usize::div_ceil`, which this wraps (`const`,
+/// so array dimensions can use it too).
+pub const fn div_ceil(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
 
 /// Index of the first maximal element under `f32::total_cmp` (NaN-safe;
 /// first occurrence wins on exact ties, matching `jnp.argmax`). Shared by
@@ -25,7 +37,21 @@ pub fn argmax(xs: &[f32]) -> usize {
 
 #[cfg(test)]
 mod tests {
-    use super::argmax;
+    use super::{argmax, div_ceil};
+
+    #[test]
+    fn div_ceil_matches_definition() {
+        assert_eq!(div_ceil(0, 64), 0);
+        assert_eq!(div_ceil(1, 64), 1);
+        assert_eq!(div_ceil(64, 64), 1);
+        assert_eq!(div_ceil(65, 64), 2);
+        assert_eq!(div_ceil(128, 64), 2);
+        for a in 0..200usize {
+            for b in 1..10usize {
+                assert_eq!(div_ceil(a, b), a.div_ceil(b), "{a}/{b}");
+            }
+        }
+    }
 
     #[test]
     fn argmax_first_max_wins_and_handles_nan() {

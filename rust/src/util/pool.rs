@@ -1,0 +1,157 @@
+//! Dependency-free scoped-thread worker pool (no rayon in the offline
+//! vendor set — see DESIGN.md §2).
+//!
+//! The model is deliberately minimal: a caller splits its work into a
+//! `Vec` of closures (one per shard, each owning `&mut` access to a
+//! disjoint slice of the output) and [`scope_run`]/[`scope_map`] execute
+//! them on `std::thread::scope` workers — the same borrow-friendly
+//! scoped-thread pattern `data::prefetch` uses, so shards may freely
+//! capture references into the caller's stack. The final closure always
+//! runs inline on the calling thread (the caller's core works instead of
+//! idling in `join`; `n` shards cost `n − 1` spawns), which also makes
+//! the single-shard case exactly the serial code path: determinism
+//! arguments only ever need to reason about *how work is split*, never
+//! about how it is executed.
+//!
+//! [`shard_chunk`] is the canonical splitter: contiguous index ranges of
+//! `div_ceil(n, parts)` items, so `slice::chunks(shard_chunk(..) * stride)`
+//! on two parallel buffers always produces aligned shard pairs. The
+//! native engine shards `infer_batch` by sample range this way; per-shard
+//! `GateStats` merge back in shard order, and because every tally is an
+//! integer sum over disjoint sample sets, the merged totals are identical
+//! for any thread count (pinned by the engine parity tests).
+
+use crate::util::div_ceil;
+
+/// Worker threads to use for `requested` (0 = one per available core).
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Contiguous-shard chunk length: splitting `n` items into chunks of this
+/// size yields at most `parts` shards, all but the last of equal size.
+/// Always >= 1 so degenerate inputs (n = 0, parts > n) stay well-formed.
+pub fn shard_chunk(n: usize, parts: usize) -> usize {
+    div_ceil(n.max(1), parts.max(1))
+}
+
+/// Run the closures concurrently on scoped threads, returning their
+/// results in task order. The final task always runs inline on the
+/// calling thread — the caller's core does the last shard instead of
+/// idling in `join`, and `n` shards cost only `n - 1` spawns per call. A
+/// panicking task propagates its panic to the caller.
+pub fn scope_map<T, F>(tasks: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let mut tasks = tasks;
+    let Some(last) = tasks.pop() else {
+        return Vec::new();
+    };
+    if tasks.is_empty() {
+        return vec![last()];
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = tasks.into_iter().map(|t| s.spawn(t)).collect();
+        let last_out = last();
+        let mut out: Vec<T> = handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
+            .collect();
+        out.push(last_out);
+        out
+    })
+}
+
+/// [`scope_map`] for side-effecting shards (each closure owns `&mut`
+/// access to its disjoint output slice).
+pub fn scope_run<F>(tasks: Vec<F>)
+where
+    F: FnOnce() + Send,
+{
+    scope_map(tasks);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn resolve_threads_zero_is_auto() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+        assert_eq!(resolve_threads(1), 1);
+    }
+
+    #[test]
+    fn shard_chunk_covers_exactly() {
+        for n in 0..40usize {
+            for parts in 1..9usize {
+                let chunk = shard_chunk(n, parts);
+                assert!(chunk >= 1, "n={n} parts={parts}");
+                let shards = if n == 0 { 0 } else { n.div_ceil(chunk) };
+                assert!(shards <= parts, "n={n} parts={parts}: {shards} shards");
+                // chunks cover [0, n) exactly, in order, no overlap
+                let total: usize = (0..shards).map(|i| chunk.min(n - i * chunk)).sum();
+                assert_eq!(total, n, "n={n} parts={parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn scope_map_preserves_task_order() {
+        let tasks: Vec<_> = (0..8usize).map(|i| move || i * 10).collect();
+        assert_eq!(scope_map(tasks), vec![0, 10, 20, 30, 40, 50, 60, 70]);
+        let none: Vec<fn() -> usize> = Vec::new();
+        assert_eq!(scope_map(none), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn scope_run_executes_every_shard_with_disjoint_writes() {
+        let mut out = vec![0usize; 10];
+        let chunk = shard_chunk(out.len(), 3);
+        assert_eq!(chunk, 4);
+        let tasks: Vec<_> = out
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(si, slice)| {
+                move || {
+                    for (j, v) in slice.iter_mut().enumerate() {
+                        *v = si * 100 + j;
+                    }
+                }
+            })
+            .collect();
+        scope_run(tasks);
+        assert_eq!(out, vec![0, 1, 2, 3, 100, 101, 102, 103, 200, 201]);
+    }
+
+    #[test]
+    fn single_task_runs_inline() {
+        // a lone task must execute on the calling thread (no spawn)
+        let caller = std::thread::current().id();
+        let got = scope_map(vec![move || std::thread::current().id() == caller]);
+        assert_eq!(got, vec![true]);
+    }
+
+    #[test]
+    fn panics_propagate_to_caller() {
+        static RAN: AtomicUsize = AtomicUsize::new(0);
+        let r = std::panic::catch_unwind(|| {
+            scope_run(vec![
+                (|| {
+                    RAN.fetch_add(1, Ordering::SeqCst);
+                }) as fn(),
+                (|| panic!("shard failed")) as fn(),
+            ]);
+        });
+        assert!(r.is_err());
+        assert_eq!(RAN.load(Ordering::SeqCst), 1);
+    }
+}

@@ -9,7 +9,7 @@ use gxnor::coordinator::checkpoint;
 use gxnor::coordinator::method::Method;
 use gxnor::coordinator::trainer::{evaluate_engine, TrainConfig, Trainer};
 use gxnor::data::{self, Dataset};
-use gxnor::engine::bitplane::{gated_xnor_gemm, scalar_gemm, BitplaneCols, GateStats};
+use gxnor::engine::bitplane::{gated_xnor_gemm, scalar_gemm, BitplaneCols, GateStats, PackScratch};
 use gxnor::engine::NativeEngine;
 use gxnor::hwsim::counts::{gate_rate_matches, gxnor_resting_probability};
 use gxnor::nn::init::init_model;
@@ -56,7 +56,7 @@ fn prop_gated_xnor_matches_scalar_gemm_all_spaces() {
         let mut got = vec![0.0f32; rows * n];
         let mut want = vec![0.0f32; rows * n];
         let mut stats = GateStats::default();
-        gated_xnor_gemm(&a, rows, &cols, &mut got, &mut stats);
+        gated_xnor_gemm(&a, rows, &cols, &mut got, &mut stats, &mut PackScratch::new());
         scalar_gemm(&a, rows, &w, m, n, &mut want);
         if got != want {
             return Err(format!("N={n_space} rows={rows} m={m} n={n}: kernel != reference"));
@@ -97,7 +97,7 @@ fn prop_gate_rate_tracks_analytic_prediction() {
         let cols = BitplaneCols::pack_cols(&w, m, n);
         let mut out = vec![0.0f32; rows * n];
         let mut stats = GateStats::default();
-        gated_xnor_gemm(&a, rows, &cols, &mut out, &mut stats);
+        gated_xnor_gemm(&a, rows, &cols, &mut out, &mut stats, &mut PackScratch::new());
         let pw0 = w.iter().filter(|&&v| v == 0.0).count() as f64 / w.len() as f64;
         let px0 = stats.x_zero_fraction();
         if !gate_rate_matches(stats.resting_rate(), pw0, px0, 0.02) {
@@ -212,7 +212,7 @@ fn native_engine_runs_every_method() {
     let ds = data::open("synth_mnist", false, 37).unwrap();
     for method in methods {
         let model = tiny_mlp_model(method.weight_space(), 9);
-        let mut eng = NativeEngine::from_model("mlp", method, &model, 0.5, 8, 10).unwrap();
+        let mut eng = NativeEngine::from_model("mlp", method, &model, 0.5, 8, 10, 1).unwrap();
         let acc = evaluate_engine(&mut eng, ds.as_ref()).unwrap();
         assert!((0.0..=1.0).contains(&acc), "{}: acc {acc}", method.name());
         // packed path fires exactly for the packed-activation methods
@@ -231,6 +231,92 @@ fn native_engine_runs_every_method() {
                     gxnor_resting_probability(rep.w_zero_fraction, s.x_zero_fraction())
                 );
             }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threaded-vs-single-thread parity (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+/// Thread counts the parity suite sweeps: 1 (the serial reference), 2,
+/// and 7 (coprime with typical batch sizes, so shards end ragged). CI
+/// adds one more via `GXNOR_THREADS` (the workflow exports 3) to exercise
+/// a shard boundary no local run used.
+fn parity_thread_counts() -> Vec<usize> {
+    let mut counts = vec![1usize, 2, 7];
+    if let Some(n) = std::env::var("GXNOR_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+    {
+        if !counts.contains(&n) {
+            counts.push(n);
+        }
+    }
+    counts
+}
+
+/// Sharding `infer_batch` across workers must be invisible: logits and
+/// the merged per-layer / total `GateStats` are bit-identical for every
+/// thread count, for every Table 1 method, including batches the thread
+/// count does not divide and thread counts exceeding the batch.
+#[test]
+fn prop_threaded_infer_batch_is_bit_identical() {
+    let methods = [Method::Gxnor, Method::Bnn, Method::Bwn, Method::Twn, Method::Fp];
+    property("threaded infer parity", 10, |g: &mut Gen| {
+        let method = *g.choose(&methods);
+        let batch = g.usize_in(1, 14);
+        let seed = g.u64();
+        let model = tiny_mlp_model(method.weight_space(), seed);
+        let x = g.vec_f32(batch * 784, -1.0, 1.0);
+        let mut runs: Vec<(usize, Vec<f32>, Vec<GateStats>, GateStats)> = Vec::new();
+        for threads in parity_thread_counts() {
+            let mut eng = NativeEngine::from_model("mlp", method, &model, 0.5, batch, 10, threads)
+                .map_err(|e| e.to_string())?;
+            // two calls: tallies must also merge exactly across calls
+            eng.infer_batch(&x).map_err(|e| e.to_string())?;
+            let logits = eng.infer_batch(&x).map_err(|e| e.to_string())?.to_vec();
+            let stats: Vec<GateStats> = eng.gate_report().iter().map(|r| r.stats).collect();
+            runs.push((threads, logits, stats, eng.total_gate_stats()));
+        }
+        let (_, wl, ws, wt) = &runs[0];
+        for (threads, logits, stats, total) in &runs[1..] {
+            if logits != wl {
+                return Err(format!(
+                    "{} batch={batch} threads={threads}: logits diverge",
+                    method.name()
+                ));
+            }
+            if stats != ws || total != wt {
+                return Err(format!(
+                    "{} batch={batch} threads={threads}: gate stats diverge",
+                    method.name()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Same invariant through the full evaluation loop (prefetched batches,
+/// padded final batch): accuracy and merged GateStats must not depend on
+/// the engine's thread count.
+#[test]
+fn evaluate_engine_is_thread_count_invariant() {
+    let ds = data::open("synth_mnist", false, 43).unwrap(); // 43 % 8 != 0
+    let model = tiny_mlp_model(Some(DiscreteSpace::TERNARY), 17);
+    let mut want: Option<(f64, GateStats)> = None;
+    for threads in parity_thread_counts() {
+        let mut eng =
+            NativeEngine::from_model("mlp", Method::Gxnor, &model, 0.5, 8, 10, threads).unwrap();
+        let acc = evaluate_engine(&mut eng, ds.as_ref()).unwrap();
+        let total = eng.total_gate_stats();
+        if let Some((wa, wt)) = want {
+            assert_eq!(acc, wa, "threads={threads}: accuracy diverges");
+            assert_eq!(total, wt, "threads={threads}: merged stats diverge");
+        } else {
+            want = Some((acc, total));
         }
     }
 }
@@ -273,21 +359,27 @@ fn native_engine_from_checkpoint_is_device_free() {
     checkpoint::save(&model, &tmp_s).unwrap();
 
     let mut eng =
-        gxnor::engine::native_engine_from_checkpoint(&m, "mlp", Method::Gxnor, 0.5, &tmp_s)
+        gxnor::engine::native_engine_from_checkpoint(&m, "mlp", Method::Gxnor, 0.5, &tmp_s, 1)
             .unwrap();
     assert_eq!(eng.batch(), 16);
     assert_eq!(eng.n_classes(), 10);
     let ds = data::open("synth_mnist", false, 50).unwrap();
     let acc = evaluate_engine(&mut eng, ds.as_ref()).unwrap();
     // identical weights through the direct constructor: same accuracy
-    let mut direct = NativeEngine::from_model("mlp", Method::Gxnor, &model, 0.5, 16, 10).unwrap();
+    let mut direct =
+        NativeEngine::from_model("mlp", Method::Gxnor, &model, 0.5, 16, 10, 1).unwrap();
     let acc_direct = evaluate_engine(&mut direct, ds.as_ref()).unwrap();
     assert_eq!(acc, acc_direct);
     // unknown arch/mode is a clean error, not a panic
-    assert!(
-        gxnor::engine::native_engine_from_checkpoint(&m, "cnn_mnist", Method::Gxnor, 0.5, &tmp_s)
-            .is_err()
-    );
+    assert!(gxnor::engine::native_engine_from_checkpoint(
+        &m,
+        "cnn_mnist",
+        Method::Gxnor,
+        0.5,
+        &tmp_s,
+        1
+    )
+    .is_err());
     std::fs::remove_file(&tmp).unwrap();
 }
 
