@@ -44,45 +44,44 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let want = |name: &str| filters.is_empty() || filters.iter().any(|f| f == name);
 
-    let manifest = Manifest::load("artifacts").map_err(anyhow::Error::msg)?;
-    let mut rt = Runtime::new()?;
-    println!("gxnor bench harness — platform {}\n", rt.platform());
+    // artifacts and a PJRT backend gate the XLA-graph sections; the
+    // native engine's sections (and the micro benches) run everywhere,
+    // so `cargo bench -- perf` is useful even on a stub build.
+    let manifest = Manifest::load("artifacts").ok();
+    let mut rt = Runtime::new().ok();
+    println!(
+        "gxnor bench harness — platform {}\n",
+        rt.as_ref().map(|r| r.platform()).unwrap_or_else(|| "none (xla stub)".into())
+    );
 
-    if want("table1") {
-        bench_table1(&mut rt, &manifest)?;
-    }
-    if want("table2") {
-        bench_table2(&mut rt, &manifest)?;
-    }
-    if want("fig7") {
-        bench_fig7(&mut rt, &manifest)?;
-    }
-    if want("fig8") {
-        bench_sweep(&mut rt, &manifest, "fig8", "m", &[0.5, 1.0, 2.0, 3.0, 5.0, 10.0])?;
-    }
-    if want("fig9") {
-        bench_sweep(&mut rt, &manifest, "fig9", "a", &[0.1, 0.25, 0.5, 1.0, 2.0])?;
-    }
-    if want("fig10") {
-        bench_sweep(
-            &mut rt,
-            &manifest,
-            "fig10",
-            "r",
-            &[0.05, 0.2, 0.35, 0.5, 0.65, 0.8, 0.95],
-        )?;
-    }
-    if want("fig13") {
-        bench_fig13(&mut rt, &manifest)?;
-    }
-    if want("fig4") {
-        bench_fig4(&mut rt, &manifest)?;
+    let graph_sections: &[(&str, SectionFn)] = &[
+        ("table1", bench_table1 as SectionFn),
+        ("table2", bench_table2),
+        ("fig7", bench_fig7),
+        ("fig8", |rt, m| bench_sweep(rt, m, "fig8", "m", &[0.5, 1.0, 2.0, 3.0, 5.0, 10.0])),
+        ("fig9", |rt, m| bench_sweep(rt, m, "fig9", "a", &[0.1, 0.25, 0.5, 1.0, 2.0])),
+        ("fig10", |rt, m| {
+            bench_sweep(rt, m, "fig10", "r", &[0.05, 0.2, 0.35, 0.5, 0.65, 0.8, 0.95])
+        }),
+        ("fig13", bench_fig13),
+        ("fig4", bench_fig4),
+    ];
+    for (name, f) in graph_sections {
+        if !want(name) {
+            continue;
+        }
+        match (rt.as_mut(), manifest.as_ref()) {
+            (Some(rt), Some(m)) => f(rt, m)?,
+            _ => println!("skipping {name}: needs artifacts + a PJRT backend\n"),
+        }
     }
     if want("perf") {
-        bench_perf(&mut rt, &manifest)?;
+        bench_perf(rt.as_mut(), manifest.as_ref())?;
     }
     Ok(())
 }
+
+type SectionFn = fn(&mut Runtime, &Manifest) -> anyhow::Result<()>;
 
 fn base_cfg() -> TrainConfig {
     TrainConfig {
@@ -305,7 +304,7 @@ fn bench_fig4(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> {
 // §Perf micro-benchmarks
 // ---------------------------------------------------------------------------
 
-fn bench_perf(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> {
+fn bench_perf(mut rt: Option<&mut Runtime>, manifest: Option<&Manifest>) -> anyhow::Result<()> {
     println!("== perf: hot-path micro-benchmarks (EXPERIMENTS.md §Perf) ==\n");
 
     // DST update throughput (the L3 hot path)
@@ -366,46 +365,68 @@ fn bench_perf(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> {
     );
 
     // graph execution latency: train + infer steps, b100 MLP and CNN
-    for gname in ["mlp_multi_b100_train", "cnn_mnist_multi_b100_train"] {
-        let g = match manifest.get(gname) {
-            Ok(g) => g.clone(),
-            Err(_) => continue,
-        };
-        rt.load(&g)?;
-        let x = vec![0.1f32; g.batch * g.sample_len()];
-        let labels = vec![0i32; g.batch];
-        let params: Vec<Vec<f32>> = g.params.iter().map(|p| vec![0.0f32; p.numel()]).collect();
-        let bns: Vec<Vec<f32>> = g
-            .bn_state
-            .iter()
-            .map(|s| if s.name.starts_with("rvar") { vec![1.0; s.numel()] } else { vec![0.0; s.numel()] })
-            .collect();
-        let mut args: Vec<Arg> = vec![
-            Arg::F32(&x),
-            Arg::I32(&labels),
-            Arg::Scalar(0.5),
-            Arg::Scalar(0.5),
-            Arg::Scalar(1.0),
-        ];
-        for p in &params {
-            args.push(Arg::F32(p));
+    // (needs artifacts + a PJRT backend; skipped silently otherwise)
+    if let (Some(rt), Some(manifest)) = (rt.as_deref_mut(), manifest) {
+        for gname in ["mlp_multi_b100_train", "cnn_mnist_multi_b100_train"] {
+            let g = match manifest.get(gname) {
+                Ok(g) => g.clone(),
+                Err(_) => continue,
+            };
+            rt.load(&g)?;
+            let x = vec![0.1f32; g.batch * g.sample_len()];
+            let labels = vec![0i32; g.batch];
+            let params: Vec<Vec<f32>> =
+                g.params.iter().map(|p| vec![0.0f32; p.numel()]).collect();
+            let bns: Vec<Vec<f32>> = g
+                .bn_state
+                .iter()
+                .map(|s| {
+                    if s.name.starts_with("rvar") {
+                        vec![1.0; s.numel()]
+                    } else {
+                        vec![0.0; s.numel()]
+                    }
+                })
+                .collect();
+            let mut args: Vec<Arg> = vec![
+                Arg::F32(&x),
+                Arg::I32(&labels),
+                Arg::Scalar(0.5),
+                Arg::Scalar(0.5),
+                Arg::Scalar(1.0),
+            ];
+            for p in &params {
+                args.push(Arg::F32(p));
+            }
+            for s in &bns {
+                args.push(Arg::F32(s));
+            }
+            // warmup
+            rt.execute(&g, &args)?;
+            let (exec_ms, min_ms, _) = time_iters(10, || {
+                rt.execute(&g, &args).unwrap();
+            });
+            println!(
+                "{:<17}: {:>8.1} ms / step (min {:.1} ms, batch {})",
+                gname, exec_ms, min_ms, g.batch
+            );
         }
-        for s in &bns {
-            args.push(Arg::F32(s));
-        }
-        // warmup
-        rt.execute(&g, &args)?;
-        let (exec_ms, min_ms, _) = time_iters(10, || {
-            rt.execute(&g, &args).unwrap();
-        });
-        println!(
-            "{:<17}: {:>8.1} ms / step (min {:.1} ms, batch {})",
-            gname, exec_ms, min_ms, g.batch
-        );
     }
     println!();
-    bench_step_loop(rt, manifest)?;
-    bench_infer(rt, manifest)?;
+    let xla_step = match (rt.as_deref_mut(), manifest) {
+        (Some(rt), Some(m)) => Some(bench_step_loop(rt, m)?),
+        _ => {
+            println!("(xla step A/B skipped: needs artifacts + a PJRT backend)\n");
+            None
+        }
+    };
+    let native_step = bench_native_step()?;
+    write_bench_step(xla_step, &native_step)?;
+    if let (Some(rt), Some(m)) = (rt.as_deref_mut(), manifest) {
+        bench_infer(rt, m)?;
+    } else {
+        println!("(inference A/B skipped: needs artifacts + a PJRT backend)\n");
+    }
     Ok(())
 }
 
@@ -751,9 +772,10 @@ fn measure_steps(
     })
 }
 
-/// Steps/sec on the mlp train graph, legacy vs pooled boundary, recorded
-/// machine-readably in `BENCH_step.json` so later PRs regress against it.
-fn bench_step_loop(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> {
+/// Steps/sec on the mlp train graph, legacy vs pooled boundary. Returns
+/// the `xla` object of `BENCH_step.json` (schema v2); the caller merges
+/// it with the native step bench and writes the file.
+fn bench_step_loop(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<Json> {
     println!("== perf: step-loop boundary A/B (BENCH_step.json) ==\n");
     let cfg = TrainConfig { epochs: 1, train_len: 2000, test_len: 400, ..base_cfg() };
     let train =
@@ -782,8 +804,7 @@ fn bench_step_loop(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> 
     );
     println!("speedup          : {speedup:.2}x (pooled vs legacy)\n");
 
-    let doc = Json::Obj(vec![
-        ("schema".into(), Json::Str("bench_step.v1".into())),
+    Ok(Json::Obj(vec![
         ("graph".into(), Json::Str(graph_name)),
         ("steps_measured".into(), Json::Num(STEPS as f64)),
         ("baseline".into(), baseline.to_json()),
@@ -800,6 +821,177 @@ fn bench_step_loop(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> 
             ]),
         ),
         ("speedup_pooled_vs_baseline".into(), Json::Num(speedup)),
+    ]))
+}
+
+// ---------------------------------------------------------------------------
+// §Perf native training step: device-free DST step + thread-scaling sweep
+// ---------------------------------------------------------------------------
+
+/// One thread count's measurement of the native training step.
+struct NativeStepPoint {
+    threads: usize,
+    steps_per_sec: f64,
+    p50_ms: f64,
+    exec_ms: f64,
+    update_ms: f64,
+}
+
+/// Results of the native step bench (the `native` half of
+/// `BENCH_step.json` v2).
+struct NativeStepBench {
+    arch: String,
+    batch: usize,
+    steps: usize,
+    scaling: Vec<NativeStepPoint>,
+    /// final model bytes identical across every thread count — the
+    /// determinism guarantee measured, not assumed
+    trajectory_identical: bool,
+    packed_weight_bytes: usize,
+    bitplane_bytes: usize,
+    weight_f32_mirror_bytes: usize,
+}
+
+/// Run N native DST training steps on a fixed batch at 1/2/4 worker
+/// threads (fresh trainer per count, same seed) and verify the final
+/// model is bit-identical across the sweep. Fully device-free.
+fn bench_native_step() -> anyhow::Result<NativeStepBench> {
+    use gxnor::coordinator::trainer::NativeTrainer;
+    println!("== perf: native DST training step (device-free) ==\n");
+    const STEPS: usize = 20;
+    let ds = gxnor::data::open("synth_mnist", true, 2000).map_err(anyhow::Error::msg)?;
+    let mut scaling = Vec::new();
+    let mut fingerprint: Option<Vec<u8>> = None;
+    let mut identical = true;
+    let mut mem = (0usize, 0usize, 0usize);
+    let mut arch_batch = (String::new(), 0usize);
+    for threads in [1usize, 2, 4] {
+        let cfg = TrainConfig {
+            method: Method::Gxnor,
+            threads,
+            verbose: false,
+            ..Default::default()
+        };
+        let mut tr = NativeTrainer::new(None, cfg)?;
+        let b = tr.batch_size();
+        let sl = ds.sample_len();
+        let mut x = vec![0.0f32; b * sl];
+        let mut y = vec![0i32; b];
+        for i in 0..b {
+            y[i] = ds.fill(i % ds.len(), &mut x[i * sl..(i + 1) * sl]) as i32;
+        }
+        let lr = 1e-3;
+        for _ in 0..3 {
+            tr.step(&x, &y, b, lr)?; // warmup: first-touch + initial packs
+        }
+        tr.sw_exec.reset();
+        tr.sw_update.reset();
+        let mut per_step = Vec::with_capacity(STEPS);
+        let t0 = Instant::now();
+        for _ in 0..STEPS {
+            let ts = Instant::now();
+            tr.step(&x, &y, b, lr)?;
+            per_step.push(ts.elapsed().as_secs_f64() * 1e3);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let point = NativeStepPoint {
+            threads,
+            steps_per_sec: STEPS as f64 / wall.max(1e-12),
+            p50_ms: percentile(&per_step, 50.0),
+            exec_ms: tr.sw_exec.mean_ms(),
+            update_ms: tr.sw_update.mean_ms(),
+        };
+        println!(
+            "  threads {threads}: {:>7.2} steps/s  p50 {:.1} ms  (fwd+bwd {:.1} ms, DST {:.2} ms)",
+            point.steps_per_sec, point.p50_ms, point.exec_ms, point.update_ms
+        );
+        scaling.push(point);
+        let fp = tr.model.fingerprint();
+        if let Some(want) = &fingerprint {
+            if *want != fp {
+                identical = false;
+            }
+        } else {
+            fingerprint = Some(fp);
+        }
+        let (packed, _) = tr.model.weight_memory_bytes();
+        mem = (packed, tr.engine_bitplane_bytes(), 0);
+        arch_batch = (tr.config().arch.clone(), b);
+    }
+    let s1 = scaling[0].steps_per_sec;
+    let s4 = scaling[2].steps_per_sec;
+    println!(
+        "  4-thread speedup {:.2}x over 1 thread; trained model bit-identical across \
+         threads: {identical}\n",
+        s4 / s1.max(1e-12)
+    );
+    Ok(NativeStepBench {
+        arch: arch_batch.0,
+        batch: arch_batch.1,
+        steps: STEPS,
+        scaling,
+        trajectory_identical: identical,
+        packed_weight_bytes: mem.0,
+        bitplane_bytes: mem.1,
+        weight_f32_mirror_bytes: mem.2,
+    })
+}
+
+/// Assemble and write `BENCH_step.json` schema v2: the XLA step A/B
+/// (when a backend exists — `null` on stub builds) next to the native
+/// training step's thread-scaling sweep, plus the cross-engine speedup.
+fn write_bench_step(xla: Option<Json>, native: &NativeStepBench) -> anyhow::Result<()> {
+    let xla_pooled_sps = xla.as_ref().and_then(|x| {
+        x.get("pooled")
+            .and_then(|p| p.get("steps_per_sec"))
+            .and_then(Json::as_f64)
+    });
+    let native_best = native
+        .scaling
+        .iter()
+        .map(|p| p.steps_per_sec)
+        .fold(0.0f64, f64::max);
+    let native_obj = Json::Obj(vec![
+        ("arch".into(), Json::Str(native.arch.clone())),
+        ("batch".into(), Json::Num(native.batch as f64)),
+        ("steps_measured".into(), Json::Num(native.steps as f64)),
+        (
+            "thread_scaling".into(),
+            Json::Arr(
+                native
+                    .scaling
+                    .iter()
+                    .map(|p| {
+                        Json::Obj(vec![
+                            ("threads".into(), Json::Num(p.threads as f64)),
+                            ("steps_per_sec".into(), Json::Num(p.steps_per_sec)),
+                            ("step_p50_ms".into(), Json::Num(p.p50_ms)),
+                            ("exec_ms".into(), Json::Num(p.exec_ms)),
+                            ("update_ms".into(), Json::Num(p.update_ms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "trajectory_bit_identical_across_threads".into(),
+            Json::Bool(native.trajectory_identical),
+        ),
+        ("weight_f32_mirror_bytes".into(), Json::Num(native.weight_f32_mirror_bytes as f64)),
+        ("packed_weight_bytes".into(), Json::Num(native.packed_weight_bytes as f64)),
+        ("bitplane_bytes".into(), Json::Num(native.bitplane_bytes as f64)),
+    ]);
+    let doc = Json::Obj(vec![
+        ("schema".into(), Json::Str("bench_step.v2".into())),
+        ("xla".into(), xla.unwrap_or(Json::Null)),
+        ("native".into(), native_obj),
+        (
+            "native_vs_xla_step_speedup".into(),
+            match xla_pooled_sps {
+                Some(x) if x > 0.0 => Json::Num(native_best / x),
+                _ => Json::Null,
+            },
+        ),
     ]);
     let text = doc.to_string();
     std::fs::write("BENCH_step.json", &text)?;
@@ -807,6 +999,6 @@ fn bench_step_loop(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> 
     if std::path::Path::new("../ROADMAP.md").exists() {
         std::fs::write("../BENCH_step.json", &text)?;
     }
-    println!("wrote BENCH_step.json\n");
+    println!("wrote BENCH_step.json (schema v2)\n");
     Ok(())
 }

@@ -16,4 +16,7 @@ pub use hidden::HiddenWeights;
 pub use method::Method;
 pub use optimizer::{Optimizer, OptKind};
 pub use schedule::LrSchedule;
-pub use trainer::{evaluate_engine, StepStats, TrainConfig, TrainReport, Trainer, UpdateRule};
+pub use trainer::{
+    evaluate_engine, run_training, run_training_native, NativeTrainer, StepStats, TrainConfig,
+    TrainReport, Trainer, UpdateRule,
+};

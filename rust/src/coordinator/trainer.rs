@@ -23,6 +23,15 @@
 //!   (shuffle, procedural fill, augment) while the graph executes batch
 //!   *k*, reproducing the serial iterator's per-epoch RNG streams exactly,
 //!   so the training trajectory is bit-identical to the serial loop.
+//!
+//! Since §Perf iteration 10 the step loop also runs **fully native**
+//! (`--engine native` → [`NativeTrainer`]): forward-with-cache +
+//! ternary-operand backward in `engine::NativeTrainEngine`, DST applied
+//! directly to the packed 2-bit states (`ternary::dst_update_packed`) —
+//! no PJRT boundary, no f32 weight tensor anywhere in the loop. Both
+//! backends drive one shared epoch loop (`drive_epochs` via the
+//! private `LoopBackend` trait), so schedules, metrics and evaluation
+//! cadence are identical and the XLA path survives as the A/B baseline.
 
 use anyhow::{anyhow, Result};
 
@@ -30,15 +39,16 @@ use crate::coordinator::hidden::HiddenWeights;
 use crate::coordinator::method::Method;
 use crate::coordinator::optimizer::{OptKind, Optimizer};
 use crate::coordinator::schedule::LrSchedule;
-use crate::data::{AugmentCfg, Dataset, Item, Prefetcher};
-use crate::engine::NativeEngine;
+use crate::data::{AugmentCfg, Batch, Dataset, Item, Prefetcher};
+use crate::engine::{NativeEngine, NativeTrainEngine};
 use crate::metrics::Recorder;
+use crate::nn::arch::{build_arch, param_descs};
 use crate::nn::init::init_model;
-use crate::nn::params::{ModelState, ParamKind, ParamValue};
+use crate::nn::params::{ModelState, ParamDesc, ParamKind, ParamValue};
 use crate::runtime::client::{Arg, ExecBuffers, Runtime};
 use crate::runtime::exec::{EngineKind, ExecEngine, XlaInferEngine};
 use crate::runtime::manifest::{GraphMeta, Manifest};
-use crate::ternary::{dst_update, DiscreteSpace, DstStats};
+use crate::ternary::{dst_update, dst_update_packed, DiscreteSpace, DstStats};
 use crate::util::argmax;
 use crate::util::prng::Prng;
 use crate::util::timer::{percentile, Stopwatch};
@@ -102,6 +112,10 @@ pub struct TrainConfig {
     /// `GateStats` are thread-count-invariant, so this is purely a
     /// throughput knob.
     pub threads: usize,
+    /// batch size for the native training engine (`--batch N`; 0 = take
+    /// the manifest graph's batch, or 100 without a manifest). The XLA
+    /// path ignores this: its batch is baked into the lowered graph.
+    pub batch: usize,
     /// print progress lines
     pub verbose: bool,
 }
@@ -127,6 +141,7 @@ impl Default for TrainConfig {
             dense_lr_scale: 0.5,
             engine: EngineKind::Xla,
             threads: 0,
+            batch: 0,
             verbose: false,
         }
     }
@@ -155,6 +170,13 @@ pub struct TrainReport {
     pub fp32_bytes: usize,
     /// fp32 bytes held by hidden masters (0 under DST — the paper's claim)
     pub hidden_fp32_bytes: usize,
+    /// fp32 bytes of *expanded weight mirrors* held across the step loop:
+    /// the XLA path keeps one f32 expansion per discrete tensor to feed
+    /// the PJRT boundary; the native DST path keeps **none** — weights
+    /// stay 2-bit packed and DST streams them in place. Asserting this is
+    /// exactly 0 under `--engine native` is the memory-accounting
+    /// satellite's numerical form of the hidden-weight-free claim.
+    pub weight_f32_mirror_bytes: usize,
     pub step_time_ms: f64,
     pub exec_time_ms: f64,
     pub dst_time_ms: f64,
@@ -226,18 +248,7 @@ impl<'rt> Trainer<'rt> {
             .unwrap_or(DiscreteSpace::TERNARY); // placeholder for fp; unused
         let mut model = init_model(descs, bn_names, &bn_shapes, space, cfg.seed);
         if cfg.method.weight_space().is_none() {
-            // fp baseline: replace packed weights with dense Glorot init
-            let mut rng = Prng::new(cfg.seed ^ 0xF9);
-            for (d, v) in model.descs.iter().zip(model.values.iter_mut()) {
-                if d.kind == ParamKind::Weight {
-                    let fan_in: usize =
-                        d.shape[..d.shape.len() - 1].iter().product::<usize>().max(1);
-                    let std = (2.0 / fan_in as f32).sqrt();
-                    *v = ParamValue::Dense(
-                        (0..d.numel()).map(|_| rng.normal_f32() * std).collect(),
-                    );
-                }
-            }
+            densify_fp_weights(&mut model, cfg.seed);
         }
         let param_f32: Vec<Vec<f32>> = model.values.iter().map(|v| v.to_f32()).collect();
         // hidden-weight baseline: seed masters from the initial discrete states
@@ -533,91 +544,181 @@ impl<'rt> Trainer<'rt> {
     /// prefetch worker while the graph executes batch k; the trajectory is
     /// bit-identical to the serial loop (same per-epoch RNG streams).
     pub fn run(&mut self, train: &dyn Dataset, test: &dyn Dataset) -> Result<TrainReport> {
-        let schedule = LrSchedule::new(self.cfg.lr_start, self.cfg.lr_fin, self.cfg.epochs);
-        let aug = if self.cfg.augment {
-            AugmentCfg::paper()
-        } else {
-            AugmentCfg::none()
-        };
-        let b = self.train_g.batch;
-        let epochs = self.cfg.epochs;
-        let seed = self.cfg.seed;
-        let verbose = self.cfg.verbose;
-        self.sync_from_model();
-        let mut rec = Recorder::new();
-        let mut steps = 0u64;
-        let mut step_ms: Vec<f64> = Vec::with_capacity(epochs * (train.len() / b.max(1)));
-        let t0 = std::time::Instant::now();
-        std::thread::scope(|scope| -> Result<()> {
-            let mut pf =
-                Prefetcher::spawn_train(scope, train, b, seed, aug, epochs, PREFETCH_DEPTH);
-            let mut lr = schedule.lr_at(0);
-            let mut ep_loss = 0.0;
-            let mut ep_acc = 0.0;
-            let mut n = 0usize;
-            while let Some(item) = pf.next() {
-                match item {
-                    Item::Batch(batch) => {
-                        let ts = std::time::Instant::now();
-                        let s = self.step(&batch.x, &batch.y, lr)?;
-                        step_ms.push(ts.elapsed().as_secs_f64() * 1e3);
-                        pf.recycle(batch);
-                        ep_loss += s.loss;
-                        ep_acc += s.acc;
-                        n += 1;
-                        steps += 1;
-                        rec.push("loss", s.loss);
-                        rec.push("train_acc", s.acc);
-                        rec.push("act_sparsity", s.sparsity);
-                        for (j, &v) in s.sparsity_per_layer.iter().enumerate() {
-                            rec.push(&format!("act_sparsity_l{j}"), v);
-                        }
-                        rec.push("dst_rate", s.dst.transition_rate());
-                    }
-                    Item::EpochEnd { epoch } => {
-                        let test_acc = self.evaluate(test)?;
-                        rec.push("epoch_loss", ep_loss / n.max(1) as f64);
-                        rec.push("epoch_train_acc", ep_acc / n.max(1) as f64);
-                        rec.push("test_acc", test_acc);
-                        rec.push("test_err", 1.0 - test_acc);
-                        rec.push("lr", lr);
-                        if verbose {
-                            println!(
-                                "epoch {epoch:>3}  lr {lr:.2e}  loss {:>8.4}  train {:5.1}%  test {:5.1}%  spars {:.2}",
-                                ep_loss / n.max(1) as f64,
-                                100.0 * ep_acc / n.max(1) as f64,
-                                100.0 * test_acc,
-                                rec.last("act_sparsity").unwrap_or(0.0),
-                            );
-                        }
-                        ep_loss = 0.0;
-                        ep_acc = 0.0;
-                        n = 0;
-                        lr = schedule.lr_at(epoch as usize + 1);
-                    }
-                }
-            }
-            Ok(())
-        })?;
-        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let cfg = self.cfg.clone();
+        let out = drive_epochs(self, &cfg, train, test)?;
         let (packed, fp32) = self.model.weight_memory_bytes();
+        // the PJRT boundary holds one f32 expansion per discrete tensor
+        let mirror: usize = self
+            .model
+            .values
+            .iter()
+            .zip(&self.param_f32)
+            .filter(|(v, _)| matches!(v, ParamValue::Discrete(_)))
+            .map(|(_, f)| f.len() * 4)
+            .sum();
         Ok(TrainReport {
-            test_acc: rec.last("test_acc").unwrap_or(0.0),
-            final_train_loss: rec.last("epoch_loss").unwrap_or(f64::NAN),
+            test_acc: out.rec.last("test_acc").unwrap_or(0.0),
+            final_train_loss: out.rec.last("epoch_loss").unwrap_or(f64::NAN),
             weight_zero_fraction: self.model.weight_zero_fraction(),
-            mean_act_sparsity: rec.tail_mean("act_sparsity", 50),
+            mean_act_sparsity: out.rec.tail_mean("act_sparsity", 50),
             packed_bytes: packed,
             fp32_bytes: fp32,
             hidden_fp32_bytes: self.hidden.iter().flatten().map(|h| h.fp32_bytes()).sum(),
-            step_time_ms: wall_ms / steps.max(1) as f64,
+            weight_f32_mirror_bytes: mirror,
+            step_time_ms: out.wall_ms / out.steps.max(1) as f64,
             exec_time_ms: self.sw_exec.mean_ms(),
             dst_time_ms: self.sw_update.mean_ms(),
             marshal_time_ms: self.sw_marshal.mean_ms(),
-            step_p50_ms: percentile(&step_ms, 50.0),
-            step_p99_ms: percentile(&step_ms, 99.0),
-            steps_per_sec: steps as f64 / (wall_ms / 1e3).max(1e-9),
-            recorder: rec,
+            step_p50_ms: percentile(&out.step_ms, 50.0),
+            step_p99_ms: percentile(&out.step_ms, 99.0),
+            steps_per_sec: out.steps as f64 / (out.wall_ms / 1e3).max(1e-9),
+            recorder: out.rec,
         })
+    }
+}
+
+impl LoopBackend for Trainer<'_> {
+    fn loop_batch_size(&self) -> usize {
+        self.train_g.batch
+    }
+
+    fn pad_final_batch(&self) -> bool {
+        // the lowered graph has a fixed batch dimension and no masking
+        false
+    }
+
+    fn prepare_run(&mut self) -> Result<()> {
+        self.sync_from_model();
+        Ok(())
+    }
+
+    fn step_batch(&mut self, b: &Batch, lr: f64) -> Result<StepStats> {
+        debug_assert_eq!(b.valid, b.y.len(), "XLA path never sees padded batches");
+        self.step(&b.x, &b.y, lr)
+    }
+
+    fn eval_split(&mut self, ds: &dyn Dataset) -> Result<f64> {
+        self.evaluate(ds)
+    }
+}
+
+/// One training backend drivable by [`drive_epochs`]: the XLA-graph
+/// [`Trainer`] and the device-free [`NativeTrainer`] share the epoch loop
+/// (LR schedule, prefetch, metric recording, per-epoch evaluation) and
+/// differ only in how a batch steps and how evaluation runs.
+trait LoopBackend {
+    fn loop_batch_size(&self) -> usize;
+    /// Whether the prefetcher pads the final partial batch (the backend
+    /// masks pad rows) or drops it.
+    fn pad_final_batch(&self) -> bool;
+    fn prepare_run(&mut self) -> Result<()>;
+    fn step_batch(&mut self, b: &Batch, lr: f64) -> Result<StepStats>;
+    fn eval_split(&mut self, ds: &dyn Dataset) -> Result<f64>;
+}
+
+/// What [`drive_epochs`] hands back for report assembly.
+struct LoopOutcome {
+    rec: Recorder,
+    steps: u64,
+    step_ms: Vec<f64>,
+    wall_ms: f64,
+}
+
+/// The epoch loop both backends run: prefetched batches, the paper's
+/// per-epoch exponential LR decay, per-epoch test evaluation, metric
+/// recording. Extracted verbatim from the original `Trainer::run`, so
+/// XLA trajectories are unchanged by the refactor.
+fn drive_epochs<B: LoopBackend + ?Sized>(
+    be: &mut B,
+    cfg: &TrainConfig,
+    train: &dyn Dataset,
+    test: &dyn Dataset,
+) -> Result<LoopOutcome> {
+    let schedule = LrSchedule::new(cfg.lr_start, cfg.lr_fin, cfg.epochs);
+    let aug = if cfg.augment {
+        AugmentCfg::paper()
+    } else {
+        AugmentCfg::none()
+    };
+    let b = be.loop_batch_size();
+    let epochs = cfg.epochs;
+    let seed = cfg.seed;
+    let verbose = cfg.verbose;
+    be.prepare_run()?;
+    let mut rec = Recorder::new();
+    let mut steps = 0u64;
+    let mut step_ms: Vec<f64> = Vec::with_capacity(epochs * (train.len() / b.max(1)));
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| -> Result<()> {
+        let mut pf = if be.pad_final_batch() {
+            Prefetcher::spawn_train_padded(scope, train, b, seed, aug, epochs, PREFETCH_DEPTH)
+        } else {
+            Prefetcher::spawn_train(scope, train, b, seed, aug, epochs, PREFETCH_DEPTH)
+        };
+        let mut lr = schedule.lr_at(0);
+        let mut ep_loss = 0.0;
+        let mut ep_acc = 0.0;
+        let mut n = 0usize;
+        while let Some(item) = pf.next() {
+            match item {
+                Item::Batch(batch) => {
+                    let ts = std::time::Instant::now();
+                    let s = be.step_batch(&batch, lr)?;
+                    step_ms.push(ts.elapsed().as_secs_f64() * 1e3);
+                    pf.recycle(batch);
+                    ep_loss += s.loss;
+                    ep_acc += s.acc;
+                    n += 1;
+                    steps += 1;
+                    rec.push("loss", s.loss);
+                    rec.push("train_acc", s.acc);
+                    rec.push("act_sparsity", s.sparsity);
+                    for (j, &v) in s.sparsity_per_layer.iter().enumerate() {
+                        rec.push(&format!("act_sparsity_l{j}"), v);
+                    }
+                    rec.push("dst_rate", s.dst.transition_rate());
+                }
+                Item::EpochEnd { epoch } => {
+                    let test_acc = be.eval_split(test)?;
+                    rec.push("epoch_loss", ep_loss / n.max(1) as f64);
+                    rec.push("epoch_train_acc", ep_acc / n.max(1) as f64);
+                    rec.push("test_acc", test_acc);
+                    rec.push("test_err", 1.0 - test_acc);
+                    rec.push("lr", lr);
+                    if verbose {
+                        println!(
+                            "epoch {epoch:>3}  lr {lr:.2e}  loss {:>8.4}  train {:5.1}%  test {:5.1}%  spars {:.2}",
+                            ep_loss / n.max(1) as f64,
+                            100.0 * ep_acc / n.max(1) as f64,
+                            100.0 * test_acc,
+                            rec.last("act_sparsity").unwrap_or(0.0),
+                        );
+                    }
+                    ep_loss = 0.0;
+                    ep_acc = 0.0;
+                    n = 0;
+                    lr = schedule.lr_at(epoch as usize + 1);
+                }
+            }
+        }
+        Ok(())
+    })?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    Ok(LoopOutcome { rec, steps, step_ms, wall_ms })
+}
+
+/// fp baseline: replace packed weights with a dense Glorot init (the
+/// discrete-space uniform init makes no sense for continuous weights).
+/// Shared by the XLA and native trainers so the fp starting points are
+/// identical.
+fn densify_fp_weights(model: &mut ModelState, seed: u64) {
+    let mut rng = Prng::new(seed ^ 0xF9);
+    for (d, v) in model.descs.iter().zip(model.values.iter_mut()) {
+        if d.kind == ParamKind::Weight {
+            let fan_in: usize = d.shape[..d.shape.len() - 1].iter().product::<usize>().max(1);
+            let std = (2.0 / fan_in as f32).sqrt();
+            *v = ParamValue::Dense((0..d.numel()).map(|_| rng.normal_f32() * std).collect());
+        }
     }
 }
 
@@ -651,10 +752,347 @@ pub fn evaluate_engine(engine: &mut dyn ExecEngine, ds: &dyn Dataset) -> Result<
     Ok(correct as f64 / total.max(1) as f64)
 }
 
+// ===========================================================================
+// Native DST trainer: the step loop with no PJRT boundary at all
+// ===========================================================================
+
+/// Batch size when no manifest pins one (mirrors the b100 graphs).
+const DEFAULT_NATIVE_BATCH: usize = 100;
+
+/// The fully native training coordinator: forward, backward and the DST
+/// update all run in-process (`engine::NativeTrainEngine` +
+/// `ternary::dst_update_packed`) — no PJRT device, no lowered graphs,
+/// and **no f32 weight tensor anywhere in the step loop**. Discrete
+/// weights live packed (2-bit ternary / 1-bit binary); the engine's
+/// bitplanes derive from those states directly and are rebuilt only when
+/// a DST update actually moved a state (`DstStats::transitions > 0`),
+/// mirroring the XLA path's refill-skip.
+///
+/// Gradients, DST transitions, logits and BN statistics are bit-identical
+/// for any `TrainConfig::threads` value — see `NativeTrainEngine`'s
+/// determinism notes and `tests/train_native.rs`.
+pub struct NativeTrainer {
+    pub model: ModelState,
+    engine: NativeTrainEngine,
+    opt: Optimizer,
+    cfg: TrainConfig,
+    rng: Prng,
+    /// scratch for optimizer increments (gradient-side state, not weights)
+    dw_buf: Vec<f32>,
+    /// param i's engine bitplanes are stale (DST moved a state)
+    dirty: Vec<bool>,
+    batch: usize,
+    n_classes: usize,
+    /// discrete-tensor DST update events (steps × tensors)
+    dst_updates: u64,
+    /// update events that moved ≥ 1 state — the upper bound on repacks
+    transitioned_updates: u64,
+    pub sw_exec: Stopwatch,
+    pub sw_update: Stopwatch,
+}
+
+impl NativeTrainer {
+    /// Build a native trainer. With a manifest, parameter shapes, batch
+    /// and class count come from the matching train graph (so runs are
+    /// comparable with the XLA path); without one, shapes come from the
+    /// catalogue architecture ([`param_descs`]) — fully device- and
+    /// artifact-free. `cfg.batch > 0` overrides the batch either way.
+    pub fn new(manifest: Option<&Manifest>, cfg: TrainConfig) -> Result<Self> {
+        let mode = cfg.method.graph_mode();
+        let g = manifest.and_then(|m| {
+            m.graphs
+                .iter()
+                .find(|g| g.arch == cfg.arch && g.mode == mode && g.kind == "train" && g.batch > 16)
+                .or_else(|| {
+                    m.graphs
+                        .iter()
+                        .find(|g| g.arch == cfg.arch && g.mode == mode && g.kind == "train")
+                })
+        });
+        let (descs, bn_names, bn_lens, g_batch, n_classes) = match g {
+            Some(g) => (
+                g.params.clone(),
+                g.bn_state.iter().map(|s| s.name.clone()).collect::<Vec<_>>(),
+                g.bn_state.iter().map(|s| s.numel()).collect::<Vec<_>>(),
+                g.batch,
+                g.n_classes,
+            ),
+            None => {
+                let arch = build_arch(&cfg.arch).map_err(|e| anyhow!(e))?;
+                let (d, names, lens) = param_descs(&arch);
+                (d, names, lens, DEFAULT_NATIVE_BATCH, 10)
+            }
+        };
+        let batch = if cfg.batch > 0 { cfg.batch } else { g_batch };
+        Self::from_descs(cfg, descs, bn_names, &bn_lens, batch, n_classes)
+    }
+
+    /// Build from explicit parameter descriptors — the entry the tests,
+    /// benches and parity harnesses use for full control over shapes.
+    pub fn from_descs(
+        cfg: TrainConfig,
+        descs: Vec<ParamDesc>,
+        bn_names: Vec<String>,
+        bn_lens: &[usize],
+        batch: usize,
+        n_classes: usize,
+    ) -> Result<Self> {
+        if cfg.update_rule == UpdateRule::Hidden {
+            return Err(anyhow!(
+                "--engine native trains with the paper's DST only; the hidden-weight \
+                 baseline (Fig. 4a) keeps f32 masters — use --engine xla"
+            ));
+        }
+        let space = cfg.method.weight_space().unwrap_or(DiscreteSpace::TERNARY);
+        let mut model = init_model(descs, bn_names, bn_lens, space, cfg.seed);
+        if cfg.method.weight_space().is_none() {
+            densify_fp_weights(&mut model, cfg.seed);
+        }
+        let engine = NativeTrainEngine::new(
+            &cfg.arch,
+            cfg.method,
+            &model.descs,
+            batch,
+            n_classes,
+            cfg.r,
+            cfg.a,
+            cfg.threads,
+        )?;
+        let max_numel = model.descs.iter().map(|d| d.numel()).max().unwrap_or(0);
+        let opt = Optimizer::new(cfg.opt, model.values.len());
+        // same stream derivation as the XLA trainer: under a shared seed
+        // the DST draws line up step for step and tensor for tensor
+        let rng = Prng::new(cfg.seed ^ 0xD57);
+        let dirty = vec![true; model.values.len()];
+        Ok(NativeTrainer {
+            engine,
+            opt,
+            rng,
+            dw_buf: vec![0.0; max_numel],
+            dirty,
+            batch,
+            n_classes,
+            dst_updates: 0,
+            transitioned_updates: 0,
+            sw_exec: Stopwatch::new(),
+            sw_update: Stopwatch::new(),
+            cfg,
+            model,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// Weight-bitplane rebuilds the engine performed after the initial
+    /// packs. Invariant (asserted in tests): within one run this never
+    /// exceeds [`NativeTrainer::transitioned_update_count`] — tensors
+    /// with zero DST transitions are never repacked.
+    pub fn repack_count(&self) -> u64 {
+        self.engine.repack_count()
+    }
+
+    /// Discrete-tensor DST update events so far (steps × tensors).
+    pub fn dst_update_count(&self) -> u64 {
+        self.dst_updates
+    }
+
+    /// DST update events that moved at least one state.
+    pub fn transitioned_update_count(&self) -> u64 {
+        self.transitioned_updates
+    }
+
+    /// Bytes of derived weight bitplanes the engine holds (the only
+    /// weight-side memory beyond the packed states themselves).
+    pub fn engine_bitplane_bytes(&self) -> usize {
+        self.engine.bitplane_bytes()
+    }
+
+    pub fn set_threads(&mut self, threads: usize) {
+        self.cfg.threads = threads;
+        self.engine.set_threads(threads);
+    }
+
+    /// Mark every weight tensor stale (e.g. after loading a checkpoint
+    /// into `self.model`) so the engine rebuilds its bitplanes on the
+    /// next step. Note: the resulting repacks are externally caused, so
+    /// calling this mid-life loosens the repack ≤ transitioned-updates
+    /// invariant by one repack per discrete tensor.
+    pub fn sync_from_model(&mut self) {
+        self.dirty.fill(true);
+    }
+
+    /// One native training step on the leading `valid` rows: forward with
+    /// cache, ternary-operand backward, Adam/SGD preconditioning, DST
+    /// **directly on the packed states**, BN running-stat EMA. Rows ≥
+    /// `valid` (prefetcher padding) contribute nothing — a padded partial
+    /// batch trains exactly like a batch of `valid` samples.
+    pub fn step(&mut self, x: &[f32], labels: &[i32], valid: usize, lr: f64) -> Result<StepStats> {
+        self.sw_exec.start();
+        let outs = self.engine.step(x, labels, valid, &self.model, &mut self.dirty)?;
+        self.sw_exec.stop();
+
+        self.sw_update.start();
+        self.opt.begin_step();
+        let n_params = self.model.descs.len();
+        let mut dst_stats = DstStats::default();
+        for i in 0..n_params {
+            let grad = &outs[3 + i];
+            let desc = &self.model.descs[i];
+            match &mut self.model.values[i] {
+                ParamValue::Discrete(packed) => {
+                    debug_assert_eq!(desc.kind, ParamKind::Weight);
+                    // the increment is gradient-side state; the weights
+                    // themselves never leave the packed domain
+                    let dw = &mut self.dw_buf[..grad.len()];
+                    self.opt.increment(i, grad, lr, dw);
+                    let stats =
+                        dst_update_packed(packed, dw, self.cfg.m, &mut self.rng, self.cfg.threads);
+                    self.dst_updates += 1;
+                    if stats.transitions > 0 {
+                        self.dirty[i] = true;
+                        self.transitioned_updates += 1;
+                    }
+                    dst_stats.merge(&stats);
+                }
+                ParamValue::Dense(dense) => {
+                    let scale = if desc.kind == ParamKind::Weight {
+                        1.0 // fp baseline weights use the full LR
+                    } else {
+                        self.cfg.dense_lr_scale
+                    };
+                    self.opt.apply_dense(i, dense, grad, lr * scale);
+                }
+            }
+        }
+        let bn_off = 3 + n_params;
+        for (j, s) in self.model.bn_state.iter_mut().enumerate() {
+            s.copy_from_slice(&outs[bn_off + j]);
+        }
+        self.sw_update.stop();
+
+        let loss = outs[0][0] as f64;
+        let acc = outs[1][0] as f64 / valid as f64;
+        let spars = &outs[2];
+        let sparsity = if spars.is_empty() {
+            0.0
+        } else {
+            spars.iter().map(|&v| v as f64).sum::<f64>() / spars.len() as f64
+        };
+        Ok(StepStats {
+            loss,
+            acc,
+            sparsity,
+            sparsity_per_layer: spars.iter().map(|&v| v as f64).collect(),
+            dst: dst_stats,
+        })
+    }
+
+    /// Accuracy over a dataset on a fresh inference-engine snapshot of
+    /// the current model (packed weights → bitplanes, BN running stats →
+    /// folded thresholds). Device-free, like everything else here.
+    pub fn evaluate(&mut self, ds: &dyn Dataset) -> Result<f64> {
+        let mut eng = NativeEngine::from_model(
+            &self.cfg.arch,
+            self.cfg.method,
+            &self.model,
+            self.cfg.r,
+            self.batch,
+            self.n_classes,
+            self.cfg.threads,
+        )?;
+        evaluate_engine(&mut eng, ds)
+    }
+
+    /// Full run through the shared epoch loop (`drive_epochs`), with
+    /// the prefetcher's **padded** final batch so every training sample
+    /// contributes exactly once per epoch (pad rows are masked out of
+    /// loss, gradients and BN statistics).
+    pub fn run(&mut self, train: &dyn Dataset, test: &dyn Dataset) -> Result<TrainReport> {
+        if train.len() < self.batch {
+            return Err(anyhow!(
+                "train split ({} samples) smaller than the batch ({}); lower --batch",
+                train.len(),
+                self.batch
+            ));
+        }
+        if train.sample_len() != self.engine.sample_len() {
+            return Err(anyhow!(
+                "dataset sample length {} != network input {}",
+                train.sample_len(),
+                self.engine.sample_len()
+            ));
+        }
+        let cfg = self.cfg.clone();
+        let out = drive_epochs(self, &cfg, train, test)?;
+        let (packed, fp32) = self.model.weight_memory_bytes();
+        Ok(TrainReport {
+            test_acc: out.rec.last("test_acc").unwrap_or(0.0),
+            final_train_loss: out.rec.last("epoch_loss").unwrap_or(f64::NAN),
+            weight_zero_fraction: self.model.weight_zero_fraction(),
+            mean_act_sparsity: out.rec.tail_mean("act_sparsity", 50),
+            packed_bytes: packed,
+            fp32_bytes: fp32,
+            // the paper's claim, numerically: no masters, no mirrors
+            hidden_fp32_bytes: 0,
+            weight_f32_mirror_bytes: 0,
+            step_time_ms: out.wall_ms / out.steps.max(1) as f64,
+            exec_time_ms: self.sw_exec.mean_ms(),
+            dst_time_ms: self.sw_update.mean_ms(),
+            marshal_time_ms: 0.0, // there is no boundary to marshal across
+            step_p50_ms: percentile(&out.step_ms, 50.0),
+            step_p99_ms: percentile(&out.step_ms, 99.0),
+            steps_per_sec: out.steps as f64 / (out.wall_ms / 1e3).max(1e-9),
+            recorder: out.rec,
+        })
+    }
+}
+
+impl LoopBackend for NativeTrainer {
+    fn loop_batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn pad_final_batch(&self) -> bool {
+        true
+    }
+
+    fn prepare_run(&mut self) -> Result<()> {
+        // construction already marks every tensor dirty, and the step loop
+        // keeps the engine's bitplanes exact thereafter; re-marking here
+        // would repack every tensor on a second run() and spuriously break
+        // the repack ≤ transitioned-updates invariant. External model
+        // mutation (checkpoint load) must call sync_from_model explicitly.
+        Ok(())
+    }
+
+    fn step_batch(&mut self, b: &Batch, lr: f64) -> Result<StepStats> {
+        self.step(&b.x, &b.y, b.valid, lr)
+    }
+
+    fn eval_split(&mut self, ds: &dyn Dataset) -> Result<f64> {
+        self.evaluate(ds)
+    }
+}
+
 /// Convenience: open datasets, build a trainer, run, return the report.
 pub fn run_training(rt: &mut Runtime, manifest: &Manifest, cfg: TrainConfig) -> Result<TrainReport> {
     let train = crate::data::open(&cfg.dataset, true, cfg.train_len).map_err(|e| anyhow!(e))?;
     let test = crate::data::open(&cfg.dataset, false, cfg.test_len).map_err(|e| anyhow!(e))?;
     let mut tr = Trainer::new(rt, manifest, cfg)?;
+    tr.run(train.as_ref(), test.as_ref())
+}
+
+/// [`run_training`]'s native twin: no `Runtime`, manifest optional
+/// (shapes fall back to the catalogue architecture without one).
+pub fn run_training_native(manifest: Option<&Manifest>, cfg: TrainConfig) -> Result<TrainReport> {
+    let train = crate::data::open(&cfg.dataset, true, cfg.train_len).map_err(|e| anyhow!(e))?;
+    let test = crate::data::open(&cfg.dataset, false, cfg.test_len).map_err(|e| anyhow!(e))?;
+    let mut tr = NativeTrainer::new(manifest, cfg)?;
     tr.run(train.as_ref(), test.as_ref())
 }

@@ -78,6 +78,42 @@ impl<'a> BatchIter<'a> {
         true
     }
 
+    /// Like [`BatchIter::next_batch`], but the epoch's final partial
+    /// batch is **padded, not dropped**: returns `Some(valid)` with the
+    /// leading `valid` rows real (shuffled + augmented, identical stream
+    /// to `next_batch`) and the tail repeating the last valid sample.
+    /// Returns `None` at the epoch boundary (then reshuffles, exactly
+    /// like `next_batch` returning `false`). Consumers must mask rows
+    /// ≥ `valid` — the native trainer zeroes their loss and gradient
+    /// contribution, so a padded batch trains as a batch of `valid`.
+    pub fn next_batch_padded(&mut self, x: &mut [f32], y: &mut [i32]) -> Option<usize> {
+        let sample_len = self.ds.sample_len();
+        assert_eq!(x.len(), self.batch * sample_len);
+        assert_eq!(y.len(), self.batch);
+        let remaining = self.order.len() - self.pos;
+        if remaining == 0 {
+            self.epoch += 1;
+            self.reshuffle();
+            return None;
+        }
+        let valid = remaining.min(self.batch);
+        let (h, w, c) = self.ds.shape();
+        for b in 0..valid {
+            let idx = self.order[self.pos + b] as usize;
+            let out = &mut x[b * sample_len..(b + 1) * sample_len];
+            y[b] = self.ds.fill(idx, out) as i32;
+            if !self.aug.is_noop() {
+                augment(out, h, w, c, &self.aug, &mut self.rng);
+            }
+        }
+        for b in valid..self.batch {
+            x.copy_within((valid - 1) * sample_len..valid * sample_len, b * sample_len);
+            y[b] = y[valid - 1];
+        }
+        self.pos += valid;
+        Some(valid)
+    }
+
     /// Iterate the whole dataset once without shuffling or augmentation
     /// (evaluation). Calls `f(batch_x, batch_y)` per full batch.
     pub fn for_eval(
@@ -149,6 +185,38 @@ mod tests {
         assert_eq!(x1, x2);
         let (x3, _) = run(8);
         assert_ne!(x1, x3);
+    }
+
+    /// The padded iterator must replay `next_batch`'s exact stream for
+    /// the full batches and then append one padded partial batch.
+    #[test]
+    fn padded_iterator_extends_drop_last_stream() {
+        let ds = SynthDigits::new(1, 50); // 3 full batches of 16 + 2 left
+        let batch = 16;
+        let mut a = BatchIter::new(&ds, batch, 9, AugmentCfg::paper());
+        let mut b = BatchIter::new(&ds, batch, 9, AugmentCfg::paper());
+        let mut xa = vec![0.0; batch * 784];
+        let mut ya = vec![0; batch];
+        let mut xb = xa.clone();
+        let mut yb = ya.clone();
+        for i in 0..3 {
+            assert!(a.next_batch(&mut xa, &mut ya));
+            assert_eq!(b.next_batch_padded(&mut xb, &mut yb), Some(batch), "batch {i}");
+            assert_eq!(xa, xb, "batch {i}: pixels diverge");
+            assert_eq!(ya, yb, "batch {i}: labels diverge");
+        }
+        // drop-last epoch ends here; padded epoch adds the 2 leftovers
+        assert_eq!(b.next_batch_padded(&mut xb, &mut yb), Some(2));
+        // tail rows replicate the last valid sample
+        for r in 2..batch {
+            assert_eq!(yb[r], yb[1], "row {r}");
+            assert_eq!(xb[r * 784..(r + 1) * 784], xb[784..2 * 784], "row {r}");
+        }
+        // both iterators agree the epoch is over and reshuffle identically
+        assert!(!a.next_batch(&mut xa, &mut ya));
+        assert_eq!(b.next_batch_padded(&mut xb, &mut yb), None);
+        assert_eq!(a.epoch(), 1);
+        assert_eq!(b.epoch(), 1);
     }
 
     #[test]

@@ -56,7 +56,9 @@ pub struct Prefetcher<'scope> {
 impl<'scope> Prefetcher<'scope> {
     /// Shuffled, augmented epochs — the training path. Emits
     /// `Item::EpochEnd` after each epoch's last full batch and shuts down
-    /// after `epochs` epochs.
+    /// after `epochs` epochs. The final partial batch of each epoch is
+    /// dropped, as in the reference implementation (the lowered graphs
+    /// have a fixed batch dimension and no masking).
     pub fn spawn_train<'env>(
         scope: &'scope Scope<'scope, 'env>,
         ds: &'env dyn Dataset,
@@ -65,6 +67,40 @@ impl<'scope> Prefetcher<'scope> {
         aug: AugmentCfg,
         epochs: usize,
         depth: usize,
+    ) -> Prefetcher<'scope> {
+        Self::spawn_train_inner(scope, ds, batch, seed, aug, epochs, depth, false)
+    }
+
+    /// [`Prefetcher::spawn_train`] with the epoch's final partial batch
+    /// **padded, not dropped** (`Batch::valid` marks the real rows, the
+    /// tail repeats the last valid sample). The native trainer rides
+    /// this: it masks rows ≥ `valid` out of the loss, the gradients and
+    /// the BN statistics, so every training sample contributes exactly
+    /// once per epoch. The full batches are byte-identical to the
+    /// drop-last stream (pinned by `padded_train_extends_drop_last`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_train_padded<'env>(
+        scope: &'scope Scope<'scope, 'env>,
+        ds: &'env dyn Dataset,
+        batch: usize,
+        seed: u64,
+        aug: AugmentCfg,
+        epochs: usize,
+        depth: usize,
+    ) -> Prefetcher<'scope> {
+        Self::spawn_train_inner(scope, ds, batch, seed, aug, epochs, depth, true)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn spawn_train_inner<'env>(
+        scope: &'scope Scope<'scope, 'env>,
+        ds: &'env dyn Dataset,
+        batch: usize,
+        seed: u64,
+        aug: AugmentCfg,
+        epochs: usize,
+        depth: usize,
+        pad_final: bool,
     ) -> Prefetcher<'scope> {
         let (tx, rx) = channel::<Item>();
         let (tx_back, rx_back) = channel::<Batch>();
@@ -82,15 +118,25 @@ impl<'scope> Prefetcher<'scope> {
                             Err(_) => return, // consumer gone
                         },
                     };
-                    if it.next_batch(&mut buf.x, &mut buf.y) {
-                        buf.epoch = epoch;
-                        buf.valid = batch;
-                        if tx.send(Item::Batch(buf)).is_err() {
-                            return;
-                        }
+                    let filled = if pad_final {
+                        it.next_batch_padded(&mut buf.x, &mut buf.y)
+                    } else if it.next_batch(&mut buf.x, &mut buf.y) {
+                        Some(batch)
                     } else {
-                        spare = Some(buf); // untouched: first buffer of next epoch
-                        break;
+                        None
+                    };
+                    match filled {
+                        Some(valid) => {
+                            buf.epoch = epoch;
+                            buf.valid = valid;
+                            if tx.send(Item::Batch(buf)).is_err() {
+                                return;
+                            }
+                        }
+                        None => {
+                            spare = Some(buf); // untouched: first buffer of next epoch
+                            break;
+                        }
                     }
                 }
                 if tx.send(Item::EpochEnd { epoch }).is_err() {
@@ -234,6 +280,56 @@ mod tests {
             assert_eq!(a.2, b.2, "batch {i}: labels diverge");
             assert_eq!(a.1, b.1, "batch {i}: pixels diverge");
         }
+    }
+
+    /// The padded train stream must replay the drop-last stream's full
+    /// batches exactly and append one partial batch per epoch with
+    /// `valid` marking the real rows.
+    #[test]
+    fn padded_train_extends_drop_last() {
+        let ds = SynthDigits::new(1, 43); // 2 full batches of 16 + 11 left
+        let batch = 16;
+        let seed = 5u64;
+        let epochs = 2usize;
+        let aug = AugmentCfg::paper();
+        let collect = |padded: bool| {
+            let mut got: Vec<(u64, usize, Vec<f32>, Vec<i32>)> = Vec::new();
+            std::thread::scope(|scope| {
+                let mut pf = if padded {
+                    Prefetcher::spawn_train_padded(scope, &ds, batch, seed, aug, epochs, 2)
+                } else {
+                    Prefetcher::spawn_train(scope, &ds, batch, seed, aug, epochs, 2)
+                };
+                while let Some(item) = pf.next() {
+                    if let Item::Batch(b) = item {
+                        got.push((b.epoch, b.valid, b.x.clone(), b.y.clone()));
+                        pf.recycle(b);
+                    }
+                }
+            });
+            got
+        };
+        let plain = collect(false);
+        let padded = collect(true);
+        assert_eq!(plain.len(), 4); // 2 epochs × 2 full batches
+        assert_eq!(padded.len(), 6); // + 1 partial per epoch
+        let mut pi = 0usize;
+        for p in &padded {
+            if p.1 == batch {
+                let q = &plain[pi];
+                assert_eq!((p.0, p.1), (q.0, q.3.len()), "batch {pi}");
+                assert_eq!(p.3, q.3, "labels diverge at full batch {pi}");
+                assert_eq!(p.2, q.2, "pixels diverge at full batch {pi}");
+                pi += 1;
+            } else {
+                assert_eq!(p.1, 11, "partial batch valid count");
+                // pad rows repeat the last valid sample
+                for r in 11..batch {
+                    assert_eq!(p.3[r], p.3[10]);
+                }
+            }
+        }
+        assert_eq!(pi, plain.len());
     }
 
     #[test]

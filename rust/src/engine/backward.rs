@@ -1,0 +1,658 @@
+//! Ternary-operand backward kernels for the native training engine.
+//!
+//! Every GEMM in the backward pass has one operand that is already a
+//! sign/nonzero bitplane: the weights (always ternary/binary under the
+//! paper's methods) or the cached ternary activations. Both backward
+//! matmuls therefore reduce to **gate-controlled ±accumulation of f32
+//! values with zero multiplies**, the backward twin of the forward
+//! gated-XNOR unit:
+//!
+//! * `dX = dY·Wᵀ` — [`f32_rows_times_tern_cols`]: each output element
+//!   streams one packed weight row (planes over the output-channel lanes,
+//!   [`BitplaneCols::pack_rows_of`]) against the f32 cotangent row,
+//!   adding/subtracting gated lanes. Words whose nonzero plane is empty
+//!   are skipped outright — the event-driven zero-state gate at word
+//!   granularity, now in the backward pass.
+//! * `dW = Xᵀ·dY` — [`accum_dw_packed`]: the cached activation bitplanes
+//!   ([`PackScratch`], packed once in the forward) are walked row by row;
+//!   every set lane axpys the f32 `dY` row into its `dW` row with the
+//!   plane's sign. The kernel takes a *word range* of fan-in lanes so
+//!   workers own disjoint `dW` row blocks: each gradient element is
+//!   accumulated by exactly one worker in global batch-row order, which
+//!   is what makes the merged gradient bit-identical for any thread
+//!   count (no cross-worker floating-point reduction exists at all).
+//!
+//! Accumulation is f64 throughout. Because the ternary operand only ever
+//! contributes ±1 (exact in f64) and lanes are visited in ascending
+//! order, both kernels are **exactly** equal to the gated f64 scalar
+//! oracles ([`f32_rows_times_tern_cols_oracle`], [`accum_dw_scalar`]) —
+//! the property tests assert `==`, not tolerance.
+//!
+//! The rest of the file is the non-GEMM backward math: the paper's
+//! rectangular/triangular derivative window for the quantizer (eqs. 7/8,
+//! mirroring `python/compile/kernels/ref.py::quantize_bwd`), the L2-SVM
+//! squared-hinge loss gradient, BatchNorm train-mode backward in
+//! channel-sharded form, and max-pool gradient routing with XLA's
+//! first-max tie order.
+
+use super::bitplane::{BitplaneCols, PackScratch};
+use super::ActMode;
+
+// ---------------------------------------------------------------------------
+// Ternary-operand GEMM kernels
+// ---------------------------------------------------------------------------
+
+/// Gated signed sum of one packed plane pair against an f32 vector:
+/// `Σ_lane ±f[lane]` over set lanes, +/− by the sign plane, f64
+/// accumulation in ascending lane order, whole words skipped when their
+/// nonzero plane is empty. Lanes past `f.len()` must be clear (packing
+/// guarantees it).
+#[inline]
+pub fn gated_signed_sum(sign: &[u64], nz: &[u64], f: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for (wi, (&sw, &zw)) in sign.iter().zip(nz).enumerate() {
+        let mut gate = zw;
+        if gate == 0 {
+            continue; // every unit in this word rests
+        }
+        let base = wi * 64;
+        while gate != 0 {
+            let b = gate.trailing_zeros() as usize;
+            let v = f[base + b] as f64;
+            if (sw >> b) & 1 == 1 {
+                acc += v;
+            } else {
+                acc -= v;
+            }
+            gate &= gate - 1;
+        }
+    }
+    acc
+}
+
+/// `out[r, j] = Σ_i a[r, i] · T[i, j]` where the ternary matrix is packed
+/// as per-column planes over its `planes.m` fan-in lanes. Serves two
+/// call sites with one kernel:
+///
+/// * forward layers fed f32 inputs with ternary weights (`planes` =
+///   weight columns, `k = fan_in`);
+/// * backward `dX = dY·Wᵀ` (`planes` = weight *rows* via
+///   [`BitplaneCols::pack_rows_of`], `k = n_out`, out lanes = fan-in).
+pub fn f32_rows_times_tern_cols(a: &[f32], rows: usize, planes: &BitplaneCols, out: &mut [f32]) {
+    let k = planes.m;
+    let n = planes.n;
+    assert_eq!(a.len(), rows * k);
+    assert_eq!(out.len(), rows * n);
+    for r in 0..rows {
+        let ar = &a[r * k..(r + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let (s, z) = planes.col(j);
+            *o = gated_signed_sum(s, z, ar) as f32;
+        }
+    }
+}
+
+/// Gated f64 scalar oracle for [`f32_rows_times_tern_cols`]: identical
+/// gating (zero ternary entries skipped) and identical ascending-index
+/// accumulation order, so the packed kernel matches it bit for bit.
+pub fn f32_rows_times_tern_cols_oracle(
+    a: &[f32],
+    rows: usize,
+    t: &[f32],
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), rows * k);
+    assert_eq!(t.len(), k * n);
+    assert_eq!(out.len(), rows * n);
+    for r in 0..rows {
+        let ar = &a[r * k..(r + 1) * k];
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for (i, &av) in ar.iter().enumerate() {
+                let w = t[i * n + j];
+                debug_assert!(w == -1.0 || w == 0.0 || w == 1.0, "non-ternary operand {w}");
+                if w > 0.0 {
+                    acc += av as f64;
+                } else if w < 0.0 {
+                    acc -= av as f64;
+                }
+            }
+            out[r * n + j] = acc as f32;
+        }
+    }
+}
+
+/// `dW[i, j] += Σ_r X[r, i] · dY[r, j]` for the fan-in lanes covered by
+/// words `[word_lo, word_hi)` of the packed activation rows, written into
+/// the caller's `dw` block (row-major over `hi_lane − lo_lane` rows of
+/// `n`, f64). Rows are walked in ascending global order; a worker owns
+/// its lane range outright, so sharding the word ranges across threads
+/// changes nothing about any accumulated value.
+pub fn accum_dw_packed(
+    pack: &PackScratch,
+    rows: usize,
+    dy: &[f32],
+    n: usize,
+    word_lo: usize,
+    word_hi: usize,
+    dw: &mut [f64],
+) {
+    let words = pack.words();
+    let hi = word_hi.min(words);
+    let lane_lo = word_lo * 64;
+    assert!(dy.len() >= rows * n);
+    for r in 0..rows {
+        let (s, z) = pack.row(r);
+        let dyr = &dy[r * n..(r + 1) * n];
+        for wi in word_lo..hi {
+            let mut gate = z[wi];
+            if gate == 0 {
+                continue;
+            }
+            let sw = s[wi];
+            let base = wi * 64 - lane_lo;
+            while gate != 0 {
+                let b = gate.trailing_zeros() as usize;
+                let drow = &mut dw[(base + b) * n..(base + b) * n + n];
+                if (sw >> b) & 1 == 1 {
+                    for (d, &g) in drow.iter_mut().zip(dyr) {
+                        *d += g as f64;
+                    }
+                } else {
+                    for (d, &g) in drow.iter_mut().zip(dyr) {
+                        *d -= g as f64;
+                    }
+                }
+                gate &= gate - 1;
+            }
+        }
+    }
+}
+
+/// Scalar `dW` accumulation for f32 inputs (first layer, fp modes), over
+/// the lane range `[lane_lo, lane_hi)`, into the caller's `dw` block.
+/// Exact-zero inputs are skipped with the same gating semantics as the
+/// packed kernel, so for ternary-valued f32 inputs this doubles as the
+/// packed kernel's bit-exact oracle (±1·g is exact in f64).
+#[allow(clippy::too_many_arguments)]
+pub fn accum_dw_scalar(
+    x: &[f32],
+    rows: usize,
+    m: usize,
+    dy: &[f32],
+    n: usize,
+    lane_lo: usize,
+    lane_hi: usize,
+    dw: &mut [f64],
+) {
+    assert!(x.len() >= rows * m);
+    assert!(dy.len() >= rows * n);
+    for r in 0..rows {
+        let xr = &x[r * m..(r + 1) * m];
+        let dyr = &dy[r * n..(r + 1) * n];
+        for i in lane_lo..lane_hi.min(m) {
+            let xv = xr[i] as f64;
+            if xv == 0.0 {
+                continue;
+            }
+            let drow = &mut dw[(i - lane_lo) * n..(i - lane_lo) * n + n];
+            for (d, &g) in drow.iter_mut().zip(dyr) {
+                *d += xv * g as f64;
+            }
+        }
+    }
+}
+
+/// `out[r, i] = Σ_j dy[r, j] · w[i, j]` with a dense f32 weight matrix
+/// (`w` row-major m × n) — the `dX` fallback for the fp baseline's dense
+/// weights. f64 accumulation in ascending `j` order.
+pub fn f32_rows_times_dense_rows(
+    dy: &[f32],
+    rows: usize,
+    w: &[f32],
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(dy.len(), rows * n);
+    assert_eq!(w.len(), m * n);
+    assert_eq!(out.len(), rows * m);
+    for r in 0..rows {
+        let dyr = &dy[r * n..(r + 1) * n];
+        for i in 0..m {
+            let wr = &w[i * n..(i + 1) * n];
+            let mut acc = 0.0f64;
+            for (&g, &wv) in dyr.iter().zip(wr) {
+                acc += g as f64 * wv as f64;
+            }
+            out[r * m + i] = acc as f32;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantizer derivative (eqs. 7/8) and loss
+// ---------------------------------------------------------------------------
+
+/// Approximate derivative of the quantizer at pre-activation `y` — the
+/// paper's rectangular window (eq. 7): a pulse of half-width `a` and
+/// height `1/(2a)` centred on every discontinuity of `phi_r`
+/// (`|y| = r + k·step`, `k = 0..hl−1`). `bin` mode uses the BNN
+/// straight-through hardtanh window; `fp` is the identity derivative.
+/// Mirrors `python/compile/kernels/ref.py::quantize_bwd` (rect window).
+#[inline]
+pub fn quant_bwd(y: f32, r: f32, a: f32, hl: f32, mode: ActMode) -> f32 {
+    match mode {
+        ActMode::Fp => 1.0,
+        ActMode::Bin => {
+            if y.abs() <= 1.0 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        ActMode::Multi => {
+            let step = (1.0 - r) / hl;
+            let u = y.abs() - r;
+            let k = (u / step).round().clamp(0.0, hl - 1.0);
+            let dist = (u - k * step).abs();
+            if dist <= a {
+                1.0 / (2.0 * a)
+            } else {
+                0.0
+            }
+        }
+    }
+}
+
+/// One row of the L2-SVM squared hinge loss [23] and its gradient:
+/// `loss_r = Σ_c max(0, 1 − t·o)²` with targets `t ∈ {−1, +1}`;
+/// `dlogits[c] = −2·t·margin·inv_rows` (the mean's `1/rows` folded in).
+/// Returns the row's (un-normalized) loss contribution.
+pub fn svm_row_loss_grad(
+    logits: &[f32],
+    label: i32,
+    inv_rows: f32,
+    dlogits: &mut [f32],
+) -> f64 {
+    let mut loss = 0.0f64;
+    for (c, (&o, d)) in logits.iter().zip(dlogits.iter_mut()).enumerate() {
+        let t = if c as i32 == label { 1.0f32 } else { -1.0 };
+        let margin = (1.0 - t * o).max(0.0);
+        loss += margin as f64 * margin as f64;
+        *d = -2.0 * t * margin * inv_rows;
+    }
+    loss
+}
+
+// ---------------------------------------------------------------------------
+// BatchNorm train-mode backward (channel-sharded form)
+// ---------------------------------------------------------------------------
+
+/// Per-channel backward sums over a channel-last tensor for channels
+/// `[c0, c1)`: `out[(c−c0)·2] += Σ dy`, `out[(c−c0)·2+1] += Σ dy·x̂`
+/// with `x̂ = (z − mean)·inv_std`. One worker owns a channel range and
+/// walks all rows in order — the two sums feed `dbeta`/`dgamma` and the
+/// `dz` correction terms, and are bit-identical for any channel sharding.
+#[allow(clippy::too_many_arguments)]
+pub fn bn_bwd_channel_sums(
+    dy: &[f32],
+    z: &[f32],
+    mean: &[f32],
+    inv_std: &[f32],
+    channels: usize,
+    c0: usize,
+    c1: usize,
+    out: &mut [f64],
+) {
+    assert_eq!(dy.len(), z.len());
+    debug_assert_eq!(dy.len() % channels, 0);
+    assert_eq!(out.len(), (c1 - c0) * 2);
+    for (dyr, zr) in dy.chunks_exact(channels).zip(z.chunks_exact(channels)) {
+        for c in c0..c1 {
+            let g = dyr[c] as f64;
+            let xhat = ((zr[c] - mean[c]) * inv_std[c]) as f64;
+            out[(c - c0) * 2] += g;
+            out[(c - c0) * 2 + 1] += g * xhat;
+        }
+    }
+}
+
+/// Elementwise BN backward over a row range, given the pre-divided
+/// per-channel terms: `dz = gamma·inv_std·(dy − s1/N − x̂·(s2/N))` where
+/// `s1 = Σ dy`, `s2 = Σ dy·x̂` over the whole (masked) batch. Writes in
+/// place over `dy`.
+#[allow(clippy::too_many_arguments)]
+pub fn bn_bwd_dz_rows(
+    dy: &mut [f32],
+    z: &[f32],
+    gamma: &[f32],
+    mean: &[f32],
+    inv_std: &[f32],
+    s1_over_n: &[f32],
+    s2_over_n: &[f32],
+    channels: usize,
+) {
+    assert_eq!(dy.len(), z.len());
+    for (dyr, zr) in dy.chunks_exact_mut(channels).zip(z.chunks_exact(channels)) {
+        for c in 0..channels {
+            let xhat = (zr[c] - mean[c]) * inv_std[c];
+            dyr[c] = gamma[c] * inv_std[c] * (dyr[c] - s1_over_n[c] - xhat * s2_over_n[c]);
+        }
+    }
+}
+
+/// Train-mode BN forward statistics for channels `[c0, c1)`: two-pass
+/// mean then biased variance (matching `jnp.var`), f64 sums over all
+/// rows in order. `out[(c−c0)·2] = mean`, `out[(c−c0)·2+1] = var`.
+pub fn bn_fwd_channel_stats(
+    z: &[f32],
+    channels: usize,
+    c0: usize,
+    c1: usize,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(z.len() % channels, 0);
+    assert_eq!(out.len(), (c1 - c0) * 2);
+    let rows = z.len() / channels;
+    let n = rows.max(1) as f64;
+    for c in c0..c1 {
+        let mut sum = 0.0f64;
+        for zr in z.chunks_exact(channels) {
+            sum += zr[c] as f64;
+        }
+        out[(c - c0) * 2] = sum / n;
+    }
+    for c in c0..c1 {
+        let mean = out[(c - c0) * 2];
+        let mut sq = 0.0f64;
+        for zr in z.chunks_exact(channels) {
+            let d = zr[c] as f64 - mean;
+            sq += d * d;
+        }
+        out[(c - c0) * 2 + 1] = sq / n;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Max-pool backward and conv patch scatter
+// ---------------------------------------------------------------------------
+
+/// Route one sample's pooled gradient back to the argmax of each window.
+/// Tie order is XLA's `SelectAndScatter` with a `GE` select: the *first*
+/// maximum in window scan order (ky, then kx) wins — ties are common
+/// here because pooling runs over quantized ternary activations.
+pub fn maxpool_bwd_sample(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    size: usize,
+    dy: &[f32],
+    dx: &mut [f32],
+) {
+    let (oh, ow) = (h / size, w / size);
+    assert_eq!(x.len(), h * w * c);
+    assert_eq!(dy.len(), oh * ow * c);
+    assert_eq!(dx.len(), h * w * c);
+    dx.fill(0.0);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ch in 0..c {
+                let mut best = f32::NEG_INFINITY;
+                let mut bi = 0usize;
+                for ky in 0..size {
+                    for kx in 0..size {
+                        let idx = ((oy * size + ky) * w + ox * size + kx) * c + ch;
+                        if x[idx] > best {
+                            best = x[idx];
+                            bi = idx;
+                        }
+                    }
+                }
+                dx[bi] += dy[(oy * ow + ox) * c + ch];
+            }
+        }
+    }
+}
+
+/// Scatter-add one conv patch gradient back into the sample image — the
+/// exact inverse walk of `gather_patch` (HWIO patch order, zero-padding
+/// positions dropped).
+#[allow(clippy::too_many_arguments)]
+pub fn scatter_patch_add(
+    dpatch: &[f32],
+    h: usize,
+    w: usize,
+    cin: usize,
+    k: usize,
+    pad: usize,
+    oy: usize,
+    ox: usize,
+    dx: &mut [f32],
+) {
+    let mut idx = 0usize;
+    for ky in 0..k {
+        let iy = oy as isize + ky as isize - pad as isize;
+        for kx in 0..k {
+            let ix = ox as isize + kx as isize - pad as isize;
+            if iy >= 0 && iy < h as isize && ix >= 0 && ix < w as isize {
+                let base = ((iy as usize) * w + ix as usize) * cin;
+                for ci in 0..cin {
+                    dx[base + ci] += dpatch[idx + ci];
+                }
+            }
+            idx += cin;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::gather_patch;
+    use crate::util::prng::Prng;
+
+    fn random_ternary(rng: &mut Prng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.below(3) as f32 - 1.0).collect()
+    }
+
+    #[test]
+    fn f32_times_tern_cols_matches_oracle_exactly() {
+        let mut rng = Prng::new(3);
+        for &(rows, k, n) in &[(1usize, 1usize, 1usize), (3, 63, 5), (2, 64, 8), (4, 130, 17)] {
+            let a: Vec<f32> = (0..rows * k).map(|_| rng.normal_f32()).collect();
+            let t = random_ternary(&mut rng, k * n);
+            let planes = BitplaneCols::pack_cols(&t, k, n);
+            let mut got = vec![0.0f32; rows * n];
+            let mut want = vec![0.0f32; rows * n];
+            f32_rows_times_tern_cols(&a, rows, &planes, &mut got);
+            f32_rows_times_tern_cols_oracle(&a, rows, &t, k, n, &mut want);
+            assert_eq!(got, want, "rows={rows} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn dx_through_packed_rows_matches_transposed_oracle() {
+        // dX = dY·Wᵀ via pack_rows_of must equal the oracle on Wᵀ
+        let mut rng = Prng::new(5);
+        let (rows, m, n) = (3usize, 70usize, 9usize);
+        let w = random_ternary(&mut rng, m * n);
+        let dy: Vec<f32> = (0..rows * n).map(|_| rng.normal_f32()).collect();
+        let wrows = BitplaneCols::pack_rows_of(&w, m, n);
+        let mut got = vec![0.0f32; rows * m];
+        f32_rows_times_tern_cols(&dy, rows, &wrows, &mut got);
+        let mut wt = vec![0.0f32; n * m];
+        for i in 0..m {
+            for j in 0..n {
+                wt[j * m + i] = w[i * n + j];
+            }
+        }
+        let mut want = vec![0.0f32; rows * m];
+        f32_rows_times_tern_cols_oracle(&dy, rows, &wt, n, m, &mut want);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn accum_dw_packed_matches_scalar_and_is_shard_invariant() {
+        let mut rng = Prng::new(7);
+        let (rows, m, n) = (5usize, 200usize, 7usize);
+        let x = random_ternary(&mut rng, rows * m);
+        let dy: Vec<f32> = (0..rows * n).map(|_| rng.normal_f32()).collect();
+        let mut pack = PackScratch::new();
+        pack.pack_rows(&x, rows, m);
+        let words = pack.words();
+
+        // one shard covering everything
+        let mut whole = vec![0.0f64; m * n];
+        accum_dw_packed(&pack, rows, &dy, n, 0, words, &mut whole);
+
+        // the scalar oracle (ternary x as f32: ±1·g is exact in f64)
+        let mut oracle = vec![0.0f64; m * n];
+        accum_dw_scalar(&x, rows, m, &dy, n, 0, m, &mut oracle);
+        assert_eq!(whole, oracle);
+
+        // word-range sharding must reproduce the same values bit for bit
+        for split in [1usize, 2] {
+            let mut sharded = vec![0.0f64; m * n];
+            let mut w0 = 0;
+            while w0 < words {
+                let w1 = (w0 + split).min(words);
+                let lane_lo = w0 * 64;
+                let lane_hi = (w1 * 64).min(m);
+                accum_dw_packed(
+                    &pack,
+                    rows,
+                    &dy,
+                    n,
+                    w0,
+                    w1,
+                    &mut sharded[lane_lo * n..lane_hi * n],
+                );
+                w0 = w1;
+            }
+            assert_eq!(sharded, whole, "split={split}");
+        }
+    }
+
+    #[test]
+    fn dense_dx_fallback_matches_definition() {
+        let mut rng = Prng::new(11);
+        let (rows, m, n) = (2usize, 5usize, 4usize);
+        let w: Vec<f32> = (0..m * n).map(|_| rng.normal_f32()).collect();
+        let dy: Vec<f32> = (0..rows * n).map(|_| rng.normal_f32()).collect();
+        let mut out = vec![0.0f32; rows * m];
+        f32_rows_times_dense_rows(&dy, rows, &w, m, n, &mut out);
+        for r in 0..rows {
+            for i in 0..m {
+                let want: f64 = (0..n).map(|j| dy[r * n + j] as f64 * w[i * n + j] as f64).sum();
+                assert!((out[r * m + i] as f64 - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn rect_window_matches_reference_points() {
+        // hl = 1, r = 0.5, a = 0.5: pulse on |y| ∈ [0, 1] around |y| = 0.5
+        let m = ActMode::Multi;
+        assert_eq!(quant_bwd(0.5, 0.5, 0.5, 1.0, m), 1.0);
+        assert_eq!(quant_bwd(-0.5, 0.5, 0.5, 1.0, m), 1.0);
+        assert_eq!(quant_bwd(0.0, 0.5, 0.5, 1.0, m), 1.0); // dist = 0.5 <= a
+        assert_eq!(quant_bwd(1.1, 0.5, 0.5, 1.0, m), 0.0); // dist = 0.6 > a
+        assert_eq!(quant_bwd(-3.0, 0.5, 0.5, 1.0, m), 0.0);
+        // narrower pulse: a = 0.2 -> height 2.5
+        assert_eq!(quant_bwd(0.6, 0.5, 0.2, 1.0, m), 2.5);
+        assert_eq!(quant_bwd(0.9, 0.5, 0.2, 1.0, m), 0.0);
+        // hl = 2: discontinuities at |y| = 0.5 and 0.75 (step 0.25)
+        assert_eq!(quant_bwd(0.74, 0.5, 0.05, 2.0, m), 10.0);
+        assert_eq!(quant_bwd(0.62, 0.5, 0.05, 2.0, m), 0.0);
+        // bin: hardtanh window
+        assert_eq!(quant_bwd(0.9, 0.5, 0.5, 1.0, ActMode::Bin), 1.0);
+        assert_eq!(quant_bwd(-1.2, 0.5, 0.5, 1.0, ActMode::Bin), 0.0);
+        assert_eq!(quant_bwd(7.0, 0.5, 0.5, 1.0, ActMode::Fp), 1.0);
+    }
+
+    #[test]
+    fn svm_loss_and_grad_hand_example() {
+        // 3 classes, label 1, logits [2, 0.5, -2]:
+        // t = [-1, +1, -1]; margins = [max(0,1+2), max(0,1-0.5), max(0,1-2)]
+        //                           = [3, 0.5, 0]
+        let logits = [2.0f32, 0.5, -2.0];
+        let mut d = [0.0f32; 3];
+        let loss = svm_row_loss_grad(&logits, 1, 1.0, &mut d);
+        assert!((loss - (9.0 + 0.25)).abs() < 1e-9);
+        assert_eq!(d, [6.0, -1.0, 0.0]); // -2·t·margin
+        // inv_rows folds the batch mean into the gradient
+        let mut d2 = [0.0f32; 3];
+        svm_row_loss_grad(&logits, 1, 0.25, &mut d2);
+        assert_eq!(d2, [1.5, -0.25, 0.0]);
+    }
+
+    #[test]
+    fn bn_stats_and_backward_are_consistent() {
+        // two rows, one channel: z = [1, 3] -> mean 2, var 1
+        let z = [1.0f32, 3.0];
+        let mut stats = vec![0.0f64; 2];
+        bn_fwd_channel_stats(&z, 1, 0, 1, &mut stats);
+        assert!((stats[0] - 2.0).abs() < 1e-12);
+        assert!((stats[1] - 1.0).abs() < 1e-12);
+        let mean = [2.0f32];
+        let inv_std = [1.0f32]; // eps ignored for the hand check
+        let dy = [1.0f32, 0.0];
+        let mut sums = vec![0.0f64; 2];
+        bn_bwd_channel_sums(&dy, &z, &mean, &inv_std, 1, 0, 1, &mut sums);
+        assert!((sums[0] - 1.0).abs() < 1e-12); // Σ dy
+        assert!((sums[1] + 1.0).abs() < 1e-12); // Σ dy·x̂, x̂ = [-1, 1]
+        // dz = gamma·inv_std·(dy − s1/N − x̂·s2/N), N = 2
+        let mut g = dy;
+        bn_bwd_dz_rows(&mut g, &z, &[1.0], &mean, &inv_std, &[0.5], &[-0.5], 1);
+        assert!((g[0] - (1.0 - 0.5 - 0.5)).abs() < 1e-6, "{g:?}"); // x̂=-1
+        assert!((g[1] - (0.0 - 0.5 + 0.5)).abs() < 1e-6, "{g:?}"); // x̂=+1
+    }
+
+    #[test]
+    fn maxpool_bwd_routes_to_first_max() {
+        // 2x2 window with a tie: both 1.0 — first in scan order wins
+        let x = [1.0f32, 1.0, 0.0, -1.0];
+        let mut dx = [9.0f32; 4];
+        maxpool_bwd_sample(&x, 2, 2, 1, 2, &[5.0], &mut dx);
+        assert_eq!(dx, [5.0, 0.0, 0.0, 0.0]);
+        // strict max elsewhere
+        let x2 = [0.0f32, 1.0, 2.0, -1.0];
+        let mut dx2 = [0.0f32; 4];
+        maxpool_bwd_sample(&x2, 2, 2, 1, 2, &[3.0], &mut dx2);
+        assert_eq!(dx2, [0.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn scatter_patch_inverts_gather() {
+        // gradient identity: scatter(gather-mask) accumulates each pixel
+        // once per window it appears in
+        let (h, w, cin, k, pad) = (4usize, 4usize, 2usize, 3usize, 1usize);
+        let mut rng = Prng::new(19);
+        let sample: Vec<f32> = (0..h * w * cin).map(|_| rng.normal_f32()).collect();
+        let mut patch = vec![0.0f32; k * k * cin];
+        let mut dx = vec![0.0f32; h * w * cin];
+        let mut counts = vec![0.0f32; h * w * cin];
+        for oy in 0..h {
+            for ox in 0..w {
+                gather_patch(&sample, h, w, cin, k, pad, oy, ox, &mut patch);
+                // dpatch = patch: scatter accumulates v · (#windows covering)
+                scatter_patch_add(&patch, h, w, cin, k, pad, oy, ox, &mut dx);
+                let ones = vec![1.0f32; k * k * cin];
+                scatter_patch_add(&ones, h, w, cin, k, pad, oy, ox, &mut counts);
+            }
+        }
+        for i in 0..dx.len() {
+            assert!(
+                (dx[i] - sample[i] * counts[i]).abs() < 1e-4,
+                "pixel {i}: {} vs {}",
+                dx[i],
+                sample[i] * counts[i]
+            );
+        }
+    }
+}

@@ -48,6 +48,12 @@ pub fn pack_row_into(vals: &[f32], sign: &mut [u64], nz: &mut [u64]) {
 /// The columns of a row-major (m × n) weight matrix, each packed into
 /// sign/nonzero planes (done once at engine load; HWIO conv weights
 /// flatten to exactly this layout with m = k·k·cin).
+///
+/// The struct is direction-agnostic: it holds `n` plane pairs of `m`
+/// lanes each. [`BitplaneCols::pack_rows_of`] packs the *rows* of a
+/// matrix instead (n lanes per plane, m planes) — the layout the
+/// backward pass streams for `dX = dY·Wᵀ`, where each output element
+/// walks one weight row across its output-channel lanes.
 pub struct BitplaneCols {
     sign: Vec<u64>,
     nz: Vec<u64>,
@@ -79,6 +85,80 @@ impl BitplaneCols {
             }
         }
         BitplaneCols { sign, nz, m, n, words }
+    }
+
+    /// Pack the *rows* of a row-major (rows × lanes) matrix: one plane
+    /// pair per row, `lanes` lanes each. `col(i)` then returns row `i`'s
+    /// planes. This is the weight layout of the backward `dX` kernel.
+    pub fn pack_rows_of(w: &[f32], rows: usize, lanes: usize) -> Self {
+        assert_eq!(w.len(), rows * lanes, "weight matrix shape mismatch");
+        let words = words_for(lanes);
+        let mut sign = vec![0u64; words * rows];
+        let mut nz = vec![0u64; words * rows];
+        for i in 0..rows {
+            let (lo, hi) = (i * words, (i + 1) * words);
+            pack_row_into(&w[i * lanes..(i + 1) * lanes], &mut sign[lo..hi], &mut nz[lo..hi]);
+        }
+        BitplaneCols { sign, nz, m: lanes, n: rows, words }
+    }
+
+    /// [`BitplaneCols::pack_cols`] reading grid values straight out of a
+    /// packed discrete tensor — no f32 expansion of the weights is ever
+    /// materialized (the training engine's no-hidden-weight path). The
+    /// tensor must hold at most three states (binary/ternary).
+    pub fn pack_cols_from_packed(p: &crate::ternary::PackedTensor, m: usize, n: usize) -> Self {
+        assert_eq!(p.len(), m * n, "packed tensor shape mismatch");
+        assert!(p.space().n_states() <= 3, "bitplanes need a binary/ternary space");
+        let words = words_for(m);
+        let mut sign = vec![0u64; words * n];
+        let mut nz = vec![0u64; words * n];
+        for i in 0..m {
+            let wi = i / 64;
+            let b = 1u64 << (i % 64);
+            for j in 0..n {
+                let v = p.get(i * n + j);
+                if v > 0.0 {
+                    sign[j * words + wi] |= b;
+                }
+                if v != 0.0 {
+                    nz[j * words + wi] |= b;
+                }
+            }
+        }
+        BitplaneCols { sign, nz, m, n, words }
+    }
+
+    /// [`BitplaneCols::pack_rows_of`] straight out of a packed tensor
+    /// (row-major rows × lanes), again without any f32 weight buffer.
+    pub fn pack_rows_from_packed(
+        p: &crate::ternary::PackedTensor,
+        rows: usize,
+        lanes: usize,
+    ) -> Self {
+        assert_eq!(p.len(), rows * lanes, "packed tensor shape mismatch");
+        assert!(p.space().n_states() <= 3, "bitplanes need a binary/ternary space");
+        let words = words_for(lanes);
+        let mut sign = vec![0u64; words * rows];
+        let mut nz = vec![0u64; words * rows];
+        for i in 0..rows {
+            let base = i * words;
+            for j in 0..lanes {
+                let v = p.get(i * lanes + j);
+                let b = 1u64 << (j % 64);
+                if v > 0.0 {
+                    sign[base + j / 64] |= b;
+                }
+                if v != 0.0 {
+                    nz[base + j / 64] |= b;
+                }
+            }
+        }
+        BitplaneCols { sign, nz, m: lanes, n: rows, words }
+    }
+
+    /// Bytes held by the sign + nonzero planes (memory accounting).
+    pub fn plane_bytes(&self) -> usize {
+        (self.sign.len() + self.nz.len()) * 8
     }
 
     /// (sign, nonzero) planes of column `j`.
@@ -223,6 +303,53 @@ impl PackScratch {
     pub fn rows(&self) -> usize {
         self.rows
     }
+
+    /// Plane words per row (current `reset` width).
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    /// Split the current `rows` into disjoint mutable row-range views of
+    /// `rows_per_chunk` rows each (the last may be shorter), so scoped
+    /// workers can pack disjoint row ranges of one shared scratch in
+    /// parallel — the training engine fills the whole batch's activation
+    /// planes this way and the backward pass then streams them.
+    pub fn split_rows_mut(&mut self, rows_per_chunk: usize) -> Vec<PackRowsMut<'_>> {
+        let words = self.words;
+        let lim = self.rows * words;
+        let step = rows_per_chunk.max(1) * words;
+        if lim == 0 || words == 0 {
+            return Vec::new();
+        }
+        self.sign[..lim]
+            .chunks_mut(step)
+            .zip(self.nz[..lim].chunks_mut(step))
+            .map(|(sign, nz)| PackRowsMut { sign, nz, words })
+            .collect()
+    }
+}
+
+/// A disjoint mutable row range of a [`PackScratch`] (see
+/// [`PackScratch::split_rows_mut`]). Row indices are local to the view.
+pub struct PackRowsMut<'a> {
+    sign: &'a mut [u64],
+    nz: &'a mut [u64],
+    words: usize,
+}
+
+impl PackRowsMut<'_> {
+    pub fn rows(&self) -> usize {
+        self.sign.len() / self.words
+    }
+
+    /// Pack one row of grid values ({-1, 0, +1}); `row` is local to this
+    /// view and `vals` must match the scratch's lane width.
+    pub fn set_row(&mut self, row: usize, vals: &[f32]) {
+        debug_assert!(row < self.rows());
+        debug_assert_eq!(words_for(vals.len()), self.words, "row width mismatch");
+        let (lo, hi) = (row * self.words, (row + 1) * self.words);
+        pack_row_into(vals, &mut self.sign[lo..hi], &mut self.nz[lo..hi]);
+    }
 }
 
 /// Bytes of weight bit-planes a column tile may occupy: half a typical
@@ -249,12 +376,30 @@ pub fn gated_packed_rows(
     out: &mut [f32],
     stats: &mut GateStats,
 ) {
-    let rows = pack.rows;
+    gated_packed_rows_range(pack, 0, pack.rows, cols, out, stats);
+}
+
+/// [`gated_packed_rows`] over the row range `[r0, r1)` only, writing into
+/// `out` sized `(r1 − r0) × n`. This is the unit the training engine's
+/// data-parallel forward shards across workers: each shard runs the same
+/// tiled walk over its own rows, and because every dot is an exact
+/// integer, the concatenated result (and any stats merge) is identical to
+/// one full-range call for every split.
+pub fn gated_packed_rows_range(
+    pack: &PackScratch,
+    r0: usize,
+    r1: usize,
+    cols: &BitplaneCols,
+    out: &mut [f32],
+    stats: &mut GateStats,
+) {
+    let rows = r1 - r0;
     let n = cols.n;
+    debug_assert!(r1 <= pack.rows);
     debug_assert_eq!(pack.words, cols.words, "row/column plane width mismatch");
     assert_eq!(out.len(), rows * n);
     let m = cols.m as u64;
-    for row in 0..rows {
+    for row in r0..r1 {
         let (_, nz) = pack.row(row);
         stats.x_nonzero += nz.iter().map(|w| w.count_ones() as u64).sum::<u64>();
         stats.x_count += m;
@@ -263,9 +408,9 @@ pub fn gated_packed_rows(
     let mut j0 = 0;
     while j0 < n {
         let j1 = (j0 + tile).min(n);
-        for row in 0..rows {
+        for row in r0..r1 {
             let (rs, rn) = pack.row(row);
-            let orow = &mut out[row * n..row * n + n];
+            let orow = &mut out[(row - r0) * n..(row - r0) * n + n];
             for j in j0..j1 {
                 let (ws, wn) = cols.col(j);
                 let (dot, active) = gated_dot(rs, rn, ws, wn);
@@ -460,6 +605,72 @@ mod tests {
         assert_eq!(stats.xnor, 1);
         assert_eq!(stats.resting(), 2);
         assert_eq!(stats.bitcount, 1);
+    }
+
+    #[test]
+    fn pack_rows_of_matches_cols_of_transpose() {
+        let mut rng = Prng::new(9);
+        let (m, n) = (70usize, 130usize);
+        let w = random_ternary(&mut rng, m * n);
+        let mut wt = vec![0.0f32; n * m];
+        for i in 0..m {
+            for j in 0..n {
+                wt[j * m + i] = w[i * n + j];
+            }
+        }
+        // rows of w == cols of wᵀ, plane for plane
+        let rows = BitplaneCols::pack_rows_of(&w, m, n);
+        let cols_t = BitplaneCols::pack_cols(&wt, n, m);
+        assert_eq!(rows.m, n);
+        assert_eq!(rows.n, m);
+        for i in 0..m {
+            assert_eq!(rows.col(i), cols_t.col(i), "row {i}");
+        }
+    }
+
+    #[test]
+    fn packing_from_packed_tensor_matches_f32_packing() {
+        use crate::ternary::{DiscreteSpace, PackedTensor};
+        let mut rng = Prng::new(31);
+        for space in [DiscreteSpace::TERNARY, DiscreteSpace::BINARY] {
+            let (m, n) = (67usize, 9usize);
+            let vals: Vec<f32> =
+                (0..m * n).map(|_| space.state(rng.below(space.n_states()))).collect();
+            let p = PackedTensor::pack(&vals, &[m, n], space);
+            let a = BitplaneCols::pack_cols(&vals, m, n);
+            let b = BitplaneCols::pack_cols_from_packed(&p, m, n);
+            for j in 0..n {
+                assert_eq!(a.col(j), b.col(j), "col {j}");
+            }
+            let c = BitplaneCols::pack_rows_of(&vals, m, n);
+            let d = BitplaneCols::pack_rows_from_packed(&p, m, n);
+            for i in 0..m {
+                assert_eq!(c.col(i), d.col(i), "row {i}");
+            }
+            assert!(b.plane_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn split_rows_mut_packs_like_set_row() {
+        let mut rng = Prng::new(13);
+        let (rows, m) = (11usize, 90usize);
+        let a = random_ternary(&mut rng, rows * m);
+        let mut serial = PackScratch::new();
+        serial.pack_rows(&a, rows, m);
+        let mut par = PackScratch::new();
+        par.reset(rows, m);
+        let chunks = par.split_rows_mut(4); // 4, 4, 3 rows
+        assert_eq!(chunks.len(), 3);
+        for (ci, mut ch) in chunks.into_iter().enumerate() {
+            for r in 0..ch.rows() {
+                let g = ci * 4 + r;
+                ch.set_row(r, &a[g * m..(g + 1) * m]);
+            }
+        }
+        for r in 0..rows {
+            assert_eq!(par.row(r), serial.row(r), "row {r}");
+        }
     }
 
     #[test]

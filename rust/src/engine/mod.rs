@@ -32,7 +32,18 @@
 //! While it runs, the engine tallies the gated operations that *actually*
 //! fired per layer ([`GateStats`]); `hwsim::counts` cross-checks these
 //! measured rates against the Table 2 analytical predictions.
+//!
+//! **Training** runs natively too: [`NativeTrainEngine`] is the
+//! forward-with-cache + backward half of the paper's DST training loop —
+//! train-mode BatchNorm (batch statistics, not the folded thresholds),
+//! the rectangular-window straight-through derivative, and
+//! ternary-operand backward GEMMs ([`backward`]) where the weight or
+//! activation side streams as the same sign/nonzero bitplanes the
+//! forward uses. Weight bitplanes are built **directly from the packed
+//! 2-bit states** and rebuilt only when a DST update actually moved a
+//! state, so the step loop never materializes an f32 weight tensor.
 
+pub mod backward;
 pub mod bitplane;
 
 use anyhow::{anyhow, Result};
@@ -46,12 +57,16 @@ use crate::runtime::exec::ExecEngine;
 use crate::runtime::manifest::Manifest;
 use crate::ternary::DiscreteSpace;
 use crate::util::pool;
+use crate::nn::params::ParamDesc;
 use bitplane::{
     gated_packed_rows, gated_xnor_gemm, scalar_gemm, BitplaneCols, GateStats, PackScratch,
 };
 
 /// Must match `python/compile/model.py::BN_EPS` (parity depends on it).
 const BN_EPS: f32 = 1e-4;
+
+/// Must match `python/compile/model.py::BN_MOMENTUM` (running-stat EMA).
+const BN_MOMENTUM: f32 = 0.9;
 
 /// Minimum *average* samples per shard under auto threading
 /// (`threads = 0`): workers are capped at `batch / MIN_AUTO_SHARD`, so a
@@ -62,7 +77,7 @@ const MIN_AUTO_SHARD: usize = 8;
 
 /// Activation discretization mode (mirrors the lowered graphs').
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum ActMode {
+pub enum ActMode {
     /// Full-precision activations (fp/bwn/twn baselines).
     Fp,
     /// sign(x) into {-1, +1} (BNN family).
@@ -733,7 +748,7 @@ fn run_linear(
 /// Gather one k×k×cin patch (NHWC, zero padding) into `out` in HWIO row
 /// order, matching the flattened weight layout.
 #[allow(clippy::too_many_arguments)]
-fn gather_patch(
+pub(crate) fn gather_patch(
     sample: &[f32],
     h: usize,
     w: usize,
@@ -884,6 +899,1131 @@ fn bn_quantize(z: &mut [f32], channels: usize, bn: &BnFold, mode: ActMode, r: f3
                 ActMode::Multi => phi_multi(y, r, hl),
             };
         }
+    }
+}
+
+// ===========================================================================
+// Native training engine: forward-with-cache + ternary-operand backward
+// ===========================================================================
+
+/// Contiguous index ranges covering `n` items, at most one per resolved
+/// worker. Used by every phase of the training engine; because each
+/// output element is owned by exactly one range and computed in a fixed
+/// iteration order, the *results* never depend on how many ranges this
+/// returns — sharding is purely a throughput knob.
+fn shard_ranges(n: usize, threads: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let chunk = shard_len(n, threads);
+    (0..n).step_by(chunk).map(|s| (s, (s + chunk).min(n))).collect()
+}
+
+/// Items per shard for `n` items on the resolved worker count — the
+/// chunk length fed to `chunks`/`chunks_mut` when building task lists.
+fn shard_len(n: usize, threads: usize) -> usize {
+    let t = pool::resolve_threads(threads).min(n.max(1));
+    pool::shard_chunk(n, t)
+}
+
+/// Dense (f32) parameter slice, or a descriptive error.
+fn dense_param(model: &crate::nn::params::ModelState, idx: usize) -> Result<&[f32]> {
+    match &model.values[idx] {
+        ParamValue::Dense(v) => Ok(v),
+        ParamValue::Discrete(_) => Err(anyhow!("param {idx}: expected dense f32 values")),
+    }
+}
+
+/// One weighted layer of the training engine. The weight itself lives in
+/// the trainer's `ModelState` (packed 2-bit states for discrete methods,
+/// dense f32 for the fp baseline); the engine holds only the derived
+/// bitplanes, rebuilt when a DST update actually moved a state.
+struct TrainLayer {
+    name: String,
+    op: LinOp,
+    /// index of this arch layer in `arch.layers`
+    arch_idx: usize,
+    /// param index of the weight tensor
+    w_param: usize,
+    /// param index of gamma (beta = gamma + 1); hidden layers only
+    gamma_param: Option<usize>,
+    /// weights live in a binary/ternary space (bitplane-packable)
+    w_ternary: bool,
+    /// weight columns over fan-in lanes — forward operand
+    cols: Option<BitplaneCols>,
+    /// weight rows over output-channel lanes — `dX = dY·Wᵀ` operand
+    wrows: Option<BitplaneCols>,
+    /// this layer's GEMM input rows are packed ternary activations
+    acts_packed: bool,
+}
+
+/// Per-weighted-layer forward cache: everything backprop needs.
+#[derive(Default)]
+struct WCache {
+    /// linear output (pre-BN), GEMM rows × out channels
+    z: Vec<f32>,
+    /// BN output (pre-quantization) — the rectangular window's argument
+    y: Vec<f32>,
+    /// train-mode batch statistics (masked to the valid rows)
+    mean: Vec<f32>,
+    var: Vec<f32>,
+    inv_std: Vec<f32>,
+    /// packed GEMM input rows (dense rows / conv im2col patches) — the
+    /// ternary operand `dW = Xᵀ·dY` streams, packed once in the forward
+    x_pack: PackScratch,
+    /// f32 im2col patch matrix for conv layers fed real-valued inputs
+    x_patches: Vec<f32>,
+}
+
+/// Forward activations retained for the backward pass.
+struct TrainCache {
+    /// copy of the batch input (valid rows)
+    xin: Vec<f32>,
+    /// output activation of every arch layer (post-quant for hidden
+    /// weighted layers, raw logits for the last, pooled/flattened maps
+    /// for the rest), valid rows × numel
+    acts: Vec<Vec<f32>>,
+    wl: Vec<WCache>,
+    /// per-hidden-layer zero-activation fraction of this step
+    spars: Vec<f32>,
+}
+
+/// The native DST training engine: train-mode forward with cache plus
+/// ternary-operand backward, no PJRT boundary and no f32 weight tensor
+/// anywhere in the step loop.
+///
+/// **Determinism:** every parallel phase shards *output ownership* —
+/// logits/activations by sample range, `dW` rows by fan-in word range,
+/// BN reductions by channel range — and each owner accumulates in a
+/// fixed (global batch-row) order with no cross-worker floating-point
+/// reduction anywhere. Gradients, loss, BN statistics and therefore DST
+/// transitions are bit-identical for **any** thread count, including
+/// `threads = 0` (auto); the shard layout is invisible by construction,
+/// not by tolerance. Pinned by `tests/train_native.rs`.
+pub struct NativeTrainEngine {
+    arch: Arch,
+    mode: ActMode,
+    r: f32,
+    a: f32,
+    hl: f32,
+    batch: usize,
+    n_classes: usize,
+    sample_len: usize,
+    threads: usize,
+    n_params: usize,
+    wl: Vec<TrainLayer>,
+    /// output (h, w, c) of every arch layer
+    dims: Vec<(usize, usize, usize)>,
+    cache: TrainCache,
+    gbuf_a: Vec<f32>,
+    gbuf_b: Vec<f32>,
+    /// f64 gradient accumulator for the largest weight tensor
+    dw64: Vec<f64>,
+    /// step outputs, graph-layout: [loss, ncorrect, spars, grads…, bn…]
+    outs: Vec<Vec<f32>>,
+    /// weight-bitplane rebuilds since construction (excludes the initial
+    /// packs) — the repack-skip satellite's counter: must stay ≤ the
+    /// number of DST updates that actually moved a state
+    repack_count: u64,
+}
+
+impl NativeTrainEngine {
+    /// Build a training engine for `arch_name` with layer dimensions
+    /// taken from the weight shapes in `descs` (manifest params or
+    /// [`crate::nn::arch::param_descs`]). Weight *values* are not needed
+    /// here — bitplanes are built lazily from the model on the first
+    /// step (every tensor starts dirty).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        arch_name: &str,
+        method: Method,
+        descs: &[ParamDesc],
+        batch: usize,
+        n_classes: usize,
+        r: f32,
+        a: f32,
+        threads: usize,
+    ) -> Result<NativeTrainEngine> {
+        if batch == 0 {
+            return Err(anyhow!("native training engine needs batch > 0"));
+        }
+        if let Some(space) = method.weight_space() {
+            if space.n_states() > 3 {
+                return Err(anyhow!(
+                    "native training supports fp, binary and ternary weight spaces; \
+                     {} has {} states — use --engine xla",
+                    method.name(),
+                    space.n_states()
+                ));
+            }
+        }
+        let weight_shapes: Vec<Vec<usize>> = descs
+            .iter()
+            .filter(|d| d.kind == ParamKind::Weight)
+            .map(|d| d.shape.clone())
+            .collect();
+        let arch = arch_from_weights(arch_name, &weight_shapes).map_err(|e| anyhow!(e))?;
+        let mode = match method.graph_mode() {
+            "fp" => ActMode::Fp,
+            "bin" => ActMode::Bin,
+            _ => ActMode::Multi,
+        };
+        let hl = method.hl();
+        let w_ternary = method.weight_space().is_some();
+        let acts_packable = mode == ActMode::Bin || (mode == ActMode::Multi && hl == 1.0);
+
+        // dims walk (and shape validation) over the arch layers
+        let (mut h, mut w, mut c) = arch.input;
+        let sample_len = h * w * c;
+        let mut dims = Vec::with_capacity(arch.layers.len());
+        let mut max_numel = sample_len;
+        for (li, l) in arch.layers.iter().enumerate() {
+            match *l {
+                Layer::Conv { cin, cout, k, same } => {
+                    if c != cin {
+                        return Err(anyhow!("layer {li}: conv expects {cin} channels, got {c}"));
+                    }
+                    if !same && (h < k || w < k) {
+                        return Err(anyhow!("layer {li}: {h}x{w} input below {k}x{k} kernel"));
+                    }
+                    let (oh, ow) = if same { (h, w) } else { (h - k + 1, w - k + 1) };
+                    h = oh;
+                    w = ow;
+                    c = cout;
+                }
+                Layer::Pool { size } => {
+                    h /= size;
+                    w /= size;
+                }
+                Layer::Flatten => {
+                    c = h * w * c;
+                    h = 1;
+                    w = 1;
+                }
+                Layer::Dense { din, dout } => {
+                    if h * w * c != din {
+                        return Err(anyhow!(
+                            "layer {li}: dense expects {din} inputs, got {}",
+                            h * w * c
+                        ));
+                    }
+                    h = 1;
+                    w = 1;
+                    c = dout;
+                }
+            }
+            dims.push((h, w, c));
+            max_numel = max_numel.max(h * w * c);
+        }
+        if h != 1 || w != 1 || c != n_classes {
+            return Err(anyhow!("network output {h}x{w}x{c} != {n_classes} classes"));
+        }
+
+        // weighted-layer metadata + param-order validation
+        let geo = geometry(&arch);
+        let weighted: Vec<(usize, Layer)> = arch
+            .layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| matches!(l, Layer::Conv { .. } | Layer::Dense { .. }))
+            .map(|(i, l)| (i, *l))
+            .collect();
+        let n_w = weighted.len();
+        if n_w == 0 {
+            return Err(anyhow!("arch {arch_name} has no weighted layers"));
+        }
+        let mut wl = Vec::with_capacity(n_w);
+        let mut pi = 0usize;
+        for (li, (arch_idx, l)) in weighted.iter().enumerate() {
+            let wdesc = descs
+                .get(pi)
+                .ok_or_else(|| anyhow!("param list ends before weight of layer {li}"))?;
+            if wdesc.kind != ParamKind::Weight {
+                return Err(anyhow!(
+                    "param order: expected weight at index {pi}, found {:?}",
+                    wdesc.name
+                ));
+            }
+            let w_param = pi;
+            pi += 1;
+            let op = match *l {
+                Layer::Dense { din, dout } => LinOp::Dense { m: din, n: dout },
+                Layer::Conv { cin, cout, k, same } => LinOp::Conv { k, cin, cout, same },
+                _ => unreachable!(),
+            };
+            let n_out = match op {
+                LinOp::Dense { n, .. } => n,
+                LinOp::Conv { cout, .. } => cout,
+            };
+            let hidden = li + 1 < n_w;
+            let gamma_param = if hidden {
+                let g = descs
+                    .get(pi)
+                    .ok_or_else(|| anyhow!("param list ends before gamma of layer {li}"))?;
+                let b = descs
+                    .get(pi + 1)
+                    .ok_or_else(|| anyhow!("param list ends before beta of layer {li}"))?;
+                if g.kind != ParamKind::Gamma || b.kind != ParamKind::Beta {
+                    return Err(anyhow!(
+                        "param order: expected gamma/beta after {:?}, found {:?}/{:?}",
+                        wdesc.name,
+                        g.name,
+                        b.name
+                    ));
+                }
+                if g.numel() != n_out || b.numel() != n_out {
+                    return Err(anyhow!("BN shape mismatch at layer {li}"));
+                }
+                let gp = pi;
+                pi += 2;
+                Some(gp)
+            } else {
+                None
+            };
+            wl.push(TrainLayer {
+                name: geo[li].name.clone(),
+                op,
+                arch_idx: *arch_idx,
+                w_param,
+                gamma_param,
+                w_ternary,
+                cols: None,
+                wrows: None,
+                acts_packed: *arch_idx > 0 && w_ternary && acts_packable,
+            });
+        }
+        if pi != descs.len() {
+            return Err(anyhow!(
+                "arch {arch_name} uses {pi} params, descriptor list has {}",
+                descs.len()
+            ));
+        }
+        let n_params = descs.len();
+        let n_hidden = n_w - 1;
+
+        // cache + output buffers, allocated once
+        let acts: Vec<Vec<f32>> = dims
+            .iter()
+            .map(|&(h, w, c)| vec![0.0f32; batch * h * w * c])
+            .collect();
+        let wcaches: Vec<WCache> = wl
+            .iter()
+            .map(|l| {
+                let (oh, ow, oc) = dims[l.arch_idx];
+                let out_numel = batch * oh * ow * oc;
+                let bn_ch = if l.gamma_param.is_some() { oc } else { 0 };
+                WCache {
+                    z: vec![0.0; out_numel],
+                    y: vec![0.0; if bn_ch > 0 { out_numel } else { 0 }],
+                    mean: vec![0.0; bn_ch],
+                    var: vec![0.0; bn_ch],
+                    inv_std: vec![0.0; bn_ch],
+                    x_pack: PackScratch::new(),
+                    x_patches: Vec::new(),
+                }
+            })
+            .collect();
+        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(3 + n_params + 2 * n_hidden);
+        outs.push(vec![0.0]); // loss
+        outs.push(vec![0.0]); // ncorrect
+        outs.push(vec![0.0; n_hidden]); // sparsity per hidden layer
+        for d in descs {
+            outs.push(vec![0.0; d.numel()]);
+        }
+        for l in &wl {
+            if let Some(gp) = l.gamma_param {
+                let ch = descs[gp].numel();
+                outs.push(vec![0.0; ch]); // new rmean
+                outs.push(vec![0.0; ch]); // new rvar
+            }
+        }
+        let max_w_numel = descs
+            .iter()
+            .filter(|d| d.kind == ParamKind::Weight)
+            .map(|d| d.numel())
+            .max()
+            .unwrap_or(0);
+
+        Ok(NativeTrainEngine {
+            mode,
+            r,
+            a,
+            hl,
+            batch,
+            n_classes,
+            sample_len,
+            threads,
+            n_params,
+            cache: TrainCache {
+                xin: vec![0.0; batch * sample_len],
+                acts,
+                wl: wcaches,
+                spars: vec![0.0; n_hidden],
+            },
+            gbuf_a: vec![0.0; batch * max_numel],
+            gbuf_b: vec![0.0; batch * max_numel],
+            dw64: vec![0.0; max_w_numel],
+            outs,
+            repack_count: 0,
+            wl,
+            dims,
+            arch,
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    pub fn sample_len(&self) -> usize {
+        self.sample_len
+    }
+
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads;
+    }
+
+    /// Weight-bitplane rebuilds since construction, *excluding* the
+    /// initial packs. The repack-skip invariant — repacks ≤ DST updates
+    /// that moved a state — is asserted over this counter in the tests.
+    pub fn repack_count(&self) -> u64 {
+        self.repack_count
+    }
+
+    /// Bytes held by the derived weight bitplanes (sign/nz planes for the
+    /// forward and dX operands) — the engine's entire weight-side
+    /// footprint beyond the trainer's packed 2-bit states.
+    pub fn bitplane_bytes(&self) -> usize {
+        self.wl
+            .iter()
+            .map(|l| {
+                l.cols.as_ref().map_or(0, |c| c.plane_bytes())
+                    + l.wrows.as_ref().map_or(0, |c| c.plane_bytes())
+            })
+            .sum()
+    }
+
+    /// Number of step outputs and their layout, mirroring the lowered
+    /// train graph: `[loss, ncorrect, sparsity, grads…, new_bn_state…]`.
+    pub fn n_outputs(&self) -> usize {
+        self.outs.len()
+    }
+
+    /// One full training forward+backward on the first `valid` samples of
+    /// `x`. `dirty[i]` marks weight params whose packed states changed
+    /// since the engine last saw them (DST transitions > 0); only those
+    /// get their bitplanes rebuilt — the repack-skip satellite — and the
+    /// flag is cleared here. Rows ≥ `valid` (prefetcher padding) are
+    /// never read: they contribute nothing to loss, gradients or BN
+    /// statistics, so a padded partial batch trains exactly like a batch
+    /// of `valid` samples.
+    pub fn step(
+        &mut self,
+        x: &[f32],
+        labels: &[i32],
+        valid: usize,
+        model: &crate::nn::params::ModelState,
+        dirty: &mut [bool],
+    ) -> Result<&[Vec<f32>]> {
+        if valid == 0 || valid > self.batch {
+            return Err(anyhow!("valid rows {valid} outside 1..={}", self.batch));
+        }
+        if x.len() < valid * self.sample_len {
+            return Err(anyhow!(
+                "batch input {} floats < {valid}x{}",
+                x.len(),
+                self.sample_len
+            ));
+        }
+        if labels.len() < valid {
+            return Err(anyhow!("labels {} < valid rows {valid}", labels.len()));
+        }
+        if model.values.len() != self.n_params || dirty.len() != self.n_params {
+            return Err(anyhow!("model/dirty param count mismatch"));
+        }
+        let n_hidden = self.wl.len() - 1;
+        if model.bn_state.len() != 2 * n_hidden {
+            return Err(anyhow!(
+                "model carries {} BN state tensors, arch needs {}",
+                model.bn_state.len(),
+                2 * n_hidden
+            ));
+        }
+        self.refresh_weight_planes(model, dirty)?;
+        self.forward_cached(x, valid, model)?;
+        self.backward(labels, valid, model)?;
+        Ok(&self.outs)
+    }
+
+    /// Rebuild the bitplanes of dirty ternary weight tensors straight
+    /// from their packed states (no f32 expansion anywhere).
+    fn refresh_weight_planes(
+        &mut self,
+        model: &crate::nn::params::ModelState,
+        dirty: &mut [bool],
+    ) -> Result<()> {
+        for l in self.wl.iter_mut() {
+            if !l.w_ternary || !dirty[l.w_param] {
+                continue;
+            }
+            let (m, n) = match l.op {
+                LinOp::Dense { m, n } => (m, n),
+                LinOp::Conv { k, cin, cout, .. } => (k * k * cin, cout),
+            };
+            let packed = match &model.values[l.w_param] {
+                ParamValue::Discrete(p) => p,
+                ParamValue::Dense(_) => {
+                    return Err(anyhow!("{}: ternary method with dense weights", l.name))
+                }
+            };
+            if packed.len() != m * n {
+                return Err(anyhow!("{}: weight numel {} != {m}x{n}", l.name, packed.len()));
+            }
+            let had = l.cols.is_some();
+            l.cols = Some(BitplaneCols::pack_cols_from_packed(packed, m, n));
+            l.wrows = Some(BitplaneCols::pack_rows_from_packed(packed, m, n));
+            if had {
+                self.repack_count += 1;
+            }
+            dirty[l.w_param] = false;
+        }
+        Ok(())
+    }
+
+    /// Train-mode forward over the valid rows, retaining everything the
+    /// backward pass needs: per-layer activations, pre-BN `z`, pre-quant
+    /// `y` (the rectangular window's argument), masked batch statistics,
+    /// and the packed activation planes that become `dW`'s ternary
+    /// operand.
+    fn forward_cached(
+        &mut self,
+        x: &[f32],
+        valid: usize,
+        model: &crate::nn::params::ModelState,
+    ) -> Result<()> {
+        let threads = self.threads;
+        let (mode, r, hl) = (self.mode, self.r, self.hl);
+        let sl = self.sample_len;
+        let TrainCache { xin, acts, wl: wcaches, spars } = &mut self.cache;
+        xin[..valid * sl].copy_from_slice(&x[..valid * sl]);
+        let mut wi = 0usize;
+        for li in 0..self.arch.layers.len() {
+            let (in_h, in_w, in_c) = if li == 0 { self.arch.input } else { self.dims[li - 1] };
+            let in_numel = in_h * in_w * in_c;
+            let (prev, rest) = acts.split_at_mut(li);
+            let cur = &mut rest[0];
+            let xs: &[f32] = if li == 0 {
+                &xin[..valid * in_numel]
+            } else {
+                &prev[li - 1][..valid * in_numel]
+            };
+            match self.arch.layers[li] {
+                Layer::Pool { size } => {
+                    let (oh, ow, oc) = self.dims[li];
+                    let out_n = oh * ow * oc;
+                    let chunk = shard_len(valid, threads);
+                    let tasks: Vec<_> = xs
+                        .chunks(chunk * in_numel)
+                        .zip(cur[..valid * out_n].chunks_mut(chunk * out_n))
+                        .map(|(xc, oc_chunk)| {
+                            let b = xc.len() / in_numel;
+                            move || maxpool(xc, b, in_h, in_w, in_c, size, oc_chunk)
+                        })
+                        .collect();
+                    pool::scope_run(tasks);
+                }
+                Layer::Flatten => {
+                    cur[..valid * in_numel].copy_from_slice(xs);
+                }
+                Layer::Conv { .. } | Layer::Dense { .. } => {
+                    let l = &self.wl[wi];
+                    let wc = &mut wcaches[wi];
+                    let (oh, ow, n) = self.dims[li];
+                    let (m, pix) = match l.op {
+                        LinOp::Dense { m, .. } => (m, 1usize),
+                        LinOp::Conv { k, cin, .. } => (k * k * cin, oh * ow),
+                    };
+                    let rows = valid * pix;
+
+                    // 1. GEMM input representation (cached for backward)
+                    if l.acts_packed {
+                        wc.x_pack.reset(rows, m);
+                        match l.op {
+                            LinOp::Dense { .. } => {
+                                let chunk = shard_len(rows, threads);
+                                let tasks: Vec<_> = wc
+                                    .x_pack
+                                    .split_rows_mut(chunk)
+                                    .into_iter()
+                                    .zip(xs.chunks(chunk * m))
+                                    .map(|(mut pr, xc)| {
+                                        move || {
+                                            for rl in 0..pr.rows() {
+                                                pr.set_row(rl, &xc[rl * m..(rl + 1) * m]);
+                                            }
+                                        }
+                                    })
+                                    .collect();
+                                pool::scope_run(tasks);
+                            }
+                            LinOp::Conv { k, cin, same, .. } => {
+                                let pad = if same { (k - 1) / 2 } else { 0 };
+                                let chunk = shard_len(valid, threads);
+                                let tasks: Vec<_> = wc
+                                    .x_pack
+                                    .split_rows_mut(chunk * pix)
+                                    .into_iter()
+                                    .zip(xs.chunks(chunk * in_numel))
+                                    .map(|(mut pr, xc)| {
+                                        move || {
+                                            let b = xc.len() / in_numel;
+                                            let mut patch = vec![0.0f32; m];
+                                            for s in 0..b {
+                                                let sample =
+                                                    &xc[s * in_numel..(s + 1) * in_numel];
+                                                for oy in 0..oh {
+                                                    for ox in 0..ow {
+                                                        gather_patch(
+                                                            sample, in_h, in_w, cin, k, pad,
+                                                            oy, ox, &mut patch,
+                                                        );
+                                                        pr.set_row(
+                                                            s * pix + oy * ow + ox,
+                                                            &patch,
+                                                        );
+                                                    }
+                                                }
+                                            }
+                                        }
+                                    })
+                                    .collect();
+                                pool::scope_run(tasks);
+                            }
+                        }
+                    } else if let LinOp::Conv { k, cin, same, .. } = l.op {
+                        // f32 patches (first conv layer; fp modes)
+                        let pad = if same { (k - 1) / 2 } else { 0 };
+                        if wc.x_patches.len() < rows * m {
+                            wc.x_patches.resize(rows * m, 0.0);
+                        }
+                        let chunk = shard_len(valid, threads);
+                        let tasks: Vec<_> = wc.x_patches[..rows * m]
+                            .chunks_mut(chunk * pix * m)
+                            .zip(xs.chunks(chunk * in_numel))
+                            .map(|(pc, xc)| {
+                                move || {
+                                    let b = xc.len() / in_numel;
+                                    for s in 0..b {
+                                        let sample = &xc[s * in_numel..(s + 1) * in_numel];
+                                        for oy in 0..oh {
+                                            for ox in 0..ow {
+                                                let row = s * pix + oy * ow + ox;
+                                                gather_patch(
+                                                    sample,
+                                                    in_h,
+                                                    in_w,
+                                                    cin,
+                                                    k,
+                                                    pad,
+                                                    oy,
+                                                    ox,
+                                                    &mut pc[row * m..(row + 1) * m],
+                                                );
+                                            }
+                                        }
+                                    }
+                                }
+                            })
+                            .collect();
+                        pool::scope_run(tasks);
+                    }
+
+                    // 2. z = input × W (rows × n)
+                    {
+                        let zs = &mut wc.z[..rows * n];
+                        let chunk = shard_len(rows, threads);
+                        if l.acts_packed {
+                            // the same L1-tiled XNOR+popcount kernel the
+                            // inference engine runs, sharded by row range
+                            // (exact integer dots: split-invisible)
+                            let pack = &wc.x_pack;
+                            let cols = l
+                                .cols
+                                .as_ref()
+                                .ok_or_else(|| anyhow!("{}: weight planes not built", l.name))?;
+                            let tasks: Vec<_> = zs
+                                .chunks_mut(chunk * n)
+                                .enumerate()
+                                .map(|(ci, zc)| {
+                                    let r0 = ci * chunk;
+                                    move || {
+                                        let r1 = r0 + zc.len() / n;
+                                        let mut stats = GateStats::default();
+                                        bitplane::gated_packed_rows_range(
+                                            pack, r0, r1, cols, zc, &mut stats,
+                                        );
+                                    }
+                                })
+                                .collect();
+                            pool::scope_run(tasks);
+                        } else if l.w_ternary {
+                            let cols = l
+                                .cols
+                                .as_ref()
+                                .ok_or_else(|| anyhow!("{}: weight planes not built", l.name))?;
+                            let xsrc: &[f32] = match l.op {
+                                LinOp::Dense { .. } => xs,
+                                LinOp::Conv { .. } => &wc.x_patches[..rows * m],
+                            };
+                            let tasks: Vec<_> = zs
+                                .chunks_mut(chunk * n)
+                                .zip(xsrc.chunks(chunk * m))
+                                .map(|(zc, xc)| {
+                                    move || {
+                                        let b = xc.len() / m;
+                                        backward::f32_rows_times_tern_cols(xc, b, cols, zc);
+                                    }
+                                })
+                                .collect();
+                            pool::scope_run(tasks);
+                        } else {
+                            let wsl = dense_param(model, l.w_param)?;
+                            let xsrc: &[f32] = match l.op {
+                                LinOp::Dense { .. } => xs,
+                                LinOp::Conv { .. } => &wc.x_patches[..rows * m],
+                            };
+                            let tasks: Vec<_> = zs
+                                .chunks_mut(chunk * n)
+                                .zip(xsrc.chunks(chunk * m))
+                                .map(|(zc, xc)| {
+                                    move || {
+                                        let b = xc.len() / m;
+                                        scalar_gemm(xc, b, wsl, m, n, zc);
+                                    }
+                                })
+                                .collect();
+                            pool::scope_run(tasks);
+                        }
+                    }
+
+                    // 3. BN (batch statistics over the valid rows) + quant,
+                    //    or raw logits for the output layer
+                    if let Some(gp) = l.gamma_param {
+                        let gamma = dense_param(model, gp)?;
+                        let beta = dense_param(model, gp + 1)?;
+                        let z = &wc.z[..rows * n];
+                        let mut sums = vec![0.0f64; 2 * n];
+                        {
+                            let cchunk = shard_len(n, threads);
+                            let tasks: Vec<_> = sums
+                                .chunks_mut(2 * cchunk)
+                                .enumerate()
+                                .map(|(ci, sc)| {
+                                    let c0 = ci * cchunk;
+                                    let c1 = (c0 + sc.len() / 2).min(n);
+                                    move || backward::bn_fwd_channel_stats(z, n, c0, c1, sc)
+                                })
+                                .collect();
+                            pool::scope_run(tasks);
+                        }
+                        for ch in 0..n {
+                            wc.mean[ch] = sums[2 * ch] as f32;
+                            wc.var[ch] = sums[2 * ch + 1] as f32;
+                            wc.inv_std[ch] = 1.0 / (wc.var[ch] + BN_EPS).sqrt();
+                        }
+                        // y = (z − mean)·inv_std·gamma + beta; h = quant(y)
+                        let (mean, inv_std) = (&wc.mean, &wc.inv_std);
+                        let y = &mut wc.y[..rows * n];
+                        let h_out = &mut cur[..rows * n];
+                        let chunk = shard_len(rows, threads);
+                        let tasks: Vec<_> = y
+                            .chunks_mut(chunk * n)
+                            .zip(h_out.chunks_mut(chunk * n))
+                            .zip(z.chunks(chunk * n))
+                            .map(|((yc, hc), zc)| {
+                                move || -> u64 {
+                                    let mut zeros = 0u64;
+                                    for ((yrow, hrow), zrow) in yc
+                                        .chunks_exact_mut(n)
+                                        .zip(hc.chunks_exact_mut(n))
+                                        .zip(zc.chunks_exact(n))
+                                    {
+                                        for ch in 0..n {
+                                            let yv = (zrow[ch] - mean[ch]) * inv_std[ch]
+                                                * gamma[ch]
+                                                + beta[ch];
+                                            yrow[ch] = yv;
+                                            let q = match mode {
+                                                ActMode::Fp => yv,
+                                                ActMode::Bin => {
+                                                    if yv >= 0.0 {
+                                                        1.0
+                                                    } else {
+                                                        -1.0
+                                                    }
+                                                }
+                                                ActMode::Multi => phi_multi(yv, r, hl),
+                                            };
+                                            hrow[ch] = q;
+                                            zeros += (q == 0.0) as u64;
+                                        }
+                                    }
+                                    zeros
+                                }
+                            })
+                            .collect();
+                        let zeros: u64 = pool::scope_map(tasks).into_iter().sum();
+                        spars[wi] = zeros as f32 / (rows * n) as f32;
+                    } else {
+                        cur[..rows * n].copy_from_slice(&wc.z[..rows * n]);
+                    }
+                    wi += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Backward pass: loss gradient, then a reverse walk of the arch with
+    /// the ternary-operand GEMMs of [`backward`]. Fills `outs`.
+    fn backward(
+        &mut self,
+        labels: &[i32],
+        valid: usize,
+        model: &crate::nn::params::ModelState,
+    ) -> Result<()> {
+        let threads = self.threads;
+        let (mode, r, a, hl) = (self.mode, self.r, self.a, self.hl);
+        let nc = self.n_classes;
+        let cache = &self.cache;
+        let outs = &mut self.outs;
+        let dw64 = &mut self.dw64;
+        let ga = &mut self.gbuf_a;
+        let gb = &mut self.gbuf_b;
+
+        // sparsity straight from the forward
+        outs[2].copy_from_slice(&cache.spars);
+
+        // loss + dlogits
+        let last_li = self.wl.last().map(|l| l.arch_idx).unwrap();
+        let logits = &cache.acts[last_li][..valid * nc];
+        let inv = 1.0f32 / valid as f32;
+        let mut loss = 0.0f64;
+        let mut ncorrect = 0u32;
+        for row in 0..valid {
+            let lrow = &logits[row * nc..(row + 1) * nc];
+            loss += backward::svm_row_loss_grad(
+                lrow,
+                labels[row],
+                inv,
+                &mut ga[row * nc..(row + 1) * nc],
+            );
+            if crate::util::argmax(lrow) as i32 == labels[row] {
+                ncorrect += 1;
+            }
+        }
+        outs[0][0] = (loss / valid as f64) as f32;
+        outs[1][0] = ncorrect as f32;
+
+        // reverse arch walk; `ga` holds the gradient w.r.t. the current
+        // layer's output, `gb` receives the gradient w.r.t. its input
+        let mut wi = self.wl.len();
+        for li in (0..self.arch.layers.len()).rev() {
+            let (ih, iw, ic) = if li == 0 { self.arch.input } else { self.dims[li - 1] };
+            let in_numel = ih * iw * ic;
+            let (qh, qw, qc) = self.dims[li];
+            match self.arch.layers[li] {
+                Layer::Flatten => { /* pure reshape: gradient unchanged */ }
+                Layer::Pool { size } => {
+                    let xs: &[f32] = if li == 0 {
+                        &cache.xin[..valid * in_numel]
+                    } else {
+                        &cache.acts[li - 1][..valid * in_numel]
+                    };
+                    let out_n = qh * qw * qc;
+                    let g = &ga[..valid * out_n];
+                    let chunk = shard_len(valid, threads);
+                    let tasks: Vec<_> = gb[..valid * in_numel]
+                        .chunks_mut(chunk * in_numel)
+                        .zip(xs.chunks(chunk * in_numel))
+                        .zip(g.chunks(chunk * out_n))
+                        .map(|((dxc, xc), gc)| {
+                            move || {
+                                let b = xc.len() / in_numel;
+                                for s in 0..b {
+                                    backward::maxpool_bwd_sample(
+                                        &xc[s * in_numel..(s + 1) * in_numel],
+                                        ih,
+                                        iw,
+                                        ic,
+                                        size,
+                                        &gc[s * out_n..(s + 1) * out_n],
+                                        &mut dxc[s * in_numel..(s + 1) * in_numel],
+                                    );
+                                }
+                            }
+                        })
+                        .collect();
+                    pool::scope_run(tasks);
+                    std::mem::swap(ga, gb);
+                }
+                Layer::Conv { .. } | Layer::Dense { .. } => {
+                    wi -= 1;
+                    let l = &self.wl[wi];
+                    let wc = &cache.wl[wi];
+                    let (m, n, pix) = match l.op {
+                        LinOp::Dense { m, n } => (m, n, 1usize),
+                        LinOp::Conv { k, cin, cout, .. } => (k * k * cin, cout, qh * qw),
+                    };
+                    let rows = valid * pix;
+
+                    // quantizer window + BN backward (hidden layers)
+                    if let Some(gp) = l.gamma_param {
+                        let y = &wc.y[..rows * n];
+                        {
+                            // g ← g · quant'(y), elementwise
+                            let gsl = &mut ga[..rows * n];
+                            let chunk = shard_len(rows, threads);
+                            let tasks: Vec<_> = gsl
+                                .chunks_mut(chunk * n)
+                                .zip(y.chunks(chunk * n))
+                                .map(|(gc, yc)| {
+                                    move || {
+                                        for (gv, &yv) in gc.iter_mut().zip(yc) {
+                                            *gv *= backward::quant_bwd(yv, r, a, hl, mode);
+                                        }
+                                    }
+                                })
+                                .collect();
+                            pool::scope_run(tasks);
+                        }
+                        let z = &wc.z[..rows * n];
+                        let (mean, inv_std) = (&wc.mean, &wc.inv_std);
+                        let mut sums = vec![0.0f64; 2 * n];
+                        {
+                            let g = &ga[..rows * n];
+                            let cchunk = shard_len(n, threads);
+                            let tasks: Vec<_> = sums
+                                .chunks_mut(2 * cchunk)
+                                .enumerate()
+                                .map(|(ci, sc)| {
+                                    let c0 = ci * cchunk;
+                                    let c1 = (c0 + sc.len() / 2).min(n);
+                                    move || {
+                                        backward::bn_bwd_channel_sums(
+                                            g, z, mean, inv_std, n, c0, c1, sc,
+                                        )
+                                    }
+                                })
+                                .collect();
+                            pool::scope_run(tasks);
+                        }
+                        // dgamma = Σ dy·x̂, dbeta = Σ dy
+                        for ch in 0..n {
+                            outs[3 + gp][ch] = sums[2 * ch + 1] as f32;
+                            outs[3 + gp + 1][ch] = sums[2 * ch] as f32;
+                        }
+                        let gamma = dense_param(model, gp)?;
+                        let nf = rows as f64;
+                        let s1n: Vec<f32> = (0..n).map(|ch| (sums[2 * ch] / nf) as f32).collect();
+                        let s2n: Vec<f32> =
+                            (0..n).map(|ch| (sums[2 * ch + 1] / nf) as f32).collect();
+                        let chunk = shard_len(rows, threads);
+                        let (s1r, s2r) = (&s1n, &s2n);
+                        let tasks: Vec<_> = ga[..rows * n]
+                            .chunks_mut(chunk * n)
+                            .zip(z.chunks(chunk * n))
+                            .map(|(gc, zc)| {
+                                move || {
+                                    backward::bn_bwd_dz_rows(
+                                        gc, zc, gamma, mean, inv_std, s1r, s2r, n,
+                                    )
+                                }
+                            })
+                            .collect();
+                        pool::scope_run(tasks);
+                    }
+
+                    // dW = Xᵀ·dY, f64, fan-in ownership sharding
+                    {
+                        let wslot = &mut dw64[..m * n];
+                        wslot.fill(0.0);
+                        let g = &ga[..rows * n];
+                        if l.acts_packed {
+                            let pack = &wc.x_pack;
+                            let words = pack.words();
+                            let wranges = shard_ranges(words, threads);
+                            let mut rest: &mut [f64] = wslot;
+                            let mut tasks = Vec::with_capacity(wranges.len());
+                            for &(w0, w1) in &wranges {
+                                let lane_lo = w0 * 64;
+                                let lane_hi = (w1 * 64).min(m);
+                                let (chunk, r2) = rest.split_at_mut((lane_hi - lane_lo) * n);
+                                rest = r2;
+                                tasks.push(move || {
+                                    backward::accum_dw_packed(pack, rows, g, n, w0, w1, chunk)
+                                });
+                            }
+                            pool::scope_run(tasks);
+                        } else {
+                            let xsrc: &[f32] = match l.op {
+                                LinOp::Dense { .. } => {
+                                    if li == 0 {
+                                        &cache.xin[..valid * m]
+                                    } else {
+                                        &cache.acts[li - 1][..valid * m]
+                                    }
+                                }
+                                LinOp::Conv { .. } => &wc.x_patches[..rows * m],
+                            };
+                            let lranges = shard_ranges(m, threads);
+                            let mut rest: &mut [f64] = wslot;
+                            let mut tasks = Vec::with_capacity(lranges.len());
+                            for &(l0, l1) in &lranges {
+                                let (chunk, r2) = rest.split_at_mut((l1 - l0) * n);
+                                rest = r2;
+                                tasks.push(move || {
+                                    backward::accum_dw_scalar(xsrc, rows, m, g, n, l0, l1, chunk)
+                                });
+                            }
+                            pool::scope_run(tasks);
+                        }
+                        let go = &mut outs[3 + l.w_param];
+                        for (o, &v) in go.iter_mut().zip(wslot.iter()) {
+                            *o = v as f32;
+                        }
+                    }
+
+                    // dX = dY·Wᵀ — not needed below the first weighted layer
+                    if wi == 0 {
+                        break;
+                    }
+                    let g = &ga[..rows * n];
+                    match l.op {
+                        LinOp::Dense { .. } => {
+                            let chunk = shard_len(rows, threads);
+                            if let Some(wrows) = &l.wrows {
+                                let tasks: Vec<_> = gb[..rows * m]
+                                    .chunks_mut(chunk * m)
+                                    .zip(g.chunks(chunk * n))
+                                    .map(|(oc, gc)| {
+                                        move || {
+                                            let b = gc.len() / n;
+                                            backward::f32_rows_times_tern_cols(
+                                                gc, b, wrows, oc,
+                                            );
+                                        }
+                                    })
+                                    .collect();
+                                pool::scope_run(tasks);
+                            } else {
+                                let wsl = dense_param(model, l.w_param)?;
+                                let tasks: Vec<_> = gb[..rows * m]
+                                    .chunks_mut(chunk * m)
+                                    .zip(g.chunks(chunk * n))
+                                    .map(|(oc, gc)| {
+                                        move || {
+                                            let b = gc.len() / n;
+                                            backward::f32_rows_times_dense_rows(
+                                                gc, b, wsl, m, n, oc,
+                                            );
+                                        }
+                                    })
+                                    .collect();
+                                pool::scope_run(tasks);
+                            }
+                        }
+                        LinOp::Conv { k, cin, same, .. } => {
+                            let pad = if same { (k - 1) / 2 } else { 0 };
+                            let wrows = l.wrows.as_ref();
+                            let wsl: Option<&[f32]> = if wrows.is_none() {
+                                Some(dense_param(model, l.w_param)?)
+                            } else {
+                                None
+                            };
+                            let chunk = shard_len(valid, threads);
+                            let out_n = pix * n;
+                            let tasks: Vec<_> = gb[..valid * in_numel]
+                                .chunks_mut(chunk * in_numel)
+                                .zip(g.chunks(chunk * out_n))
+                                .map(|(dxc, gc)| {
+                                    move || {
+                                        let b = gc.len() / out_n;
+                                        let mut dpatch = vec![0.0f32; m];
+                                        for s in 0..b {
+                                            let dx = &mut dxc[s * in_numel..(s + 1) * in_numel];
+                                            dx.fill(0.0);
+                                            for oy in 0..qh {
+                                                for ox in 0..qw {
+                                                    let gr = &gc[(s * pix + oy * qw + ox) * n..]
+                                                        [..n];
+                                                    match (wrows, wsl) {
+                                                        (Some(wr), _) => {
+                                                            backward::f32_rows_times_tern_cols(
+                                                                gr,
+                                                                1,
+                                                                wr,
+                                                                &mut dpatch,
+                                                            )
+                                                        }
+                                                        (None, Some(ws)) => {
+                                                            backward::f32_rows_times_dense_rows(
+                                                                gr,
+                                                                1,
+                                                                ws,
+                                                                m,
+                                                                n,
+                                                                &mut dpatch,
+                                                            )
+                                                        }
+                                                        _ => unreachable!(),
+                                                    }
+                                                    backward::scatter_patch_add(
+                                                        &dpatch, ih, iw, cin, k, pad, oy, ox,
+                                                        dx,
+                                                    );
+                                                }
+                                            }
+                                        }
+                                    }
+                                })
+                                .collect();
+                            pool::scope_run(tasks);
+                        }
+                    }
+                    std::mem::swap(ga, gb);
+                }
+            }
+        }
+
+        // BN running-state EMA (masked batch stats, matching the graph)
+        let mut out_idx = 3 + self.n_params;
+        let mut bn_idx = 0usize;
+        for (wi2, l) in self.wl.iter().enumerate() {
+            if l.gamma_param.is_none() {
+                continue;
+            }
+            let wc = &cache.wl[wi2];
+            let old_mean = &model.bn_state[2 * bn_idx];
+            let old_var = &model.bn_state[2 * bn_idx + 1];
+            {
+                let (o_mean, o_var) = {
+                    let (a0, b0) = outs.split_at_mut(out_idx + 1);
+                    (&mut a0[out_idx], &mut b0[0])
+                };
+                for ch in 0..wc.mean.len() {
+                    o_mean[ch] = BN_MOMENTUM * old_mean[ch] + (1.0 - BN_MOMENTUM) * wc.mean[ch];
+                    o_var[ch] = BN_MOMENTUM * old_var[ch] + (1.0 - BN_MOMENTUM) * wc.var[ch];
+                }
+            }
+            out_idx += 2;
+            bn_idx += 1;
+        }
+        Ok(())
     }
 }
 

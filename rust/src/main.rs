@@ -17,7 +17,7 @@ use gxnor::cli::Command;
 use gxnor::coordinator::checkpoint;
 use gxnor::coordinator::method::Method;
 use gxnor::coordinator::optimizer::OptKind;
-use gxnor::coordinator::trainer::{evaluate_engine, TrainConfig, Trainer};
+use gxnor::coordinator::trainer::{evaluate_engine, NativeTrainer, TrainConfig, Trainer};
 use gxnor::hwsim::report as hwreport;
 use gxnor::runtime::client::Runtime;
 use gxnor::runtime::exec::{EngineKind, ExecEngine};
@@ -76,8 +76,9 @@ fn train_cmd() -> Command {
         .opt("opt", "adam", "adam | sgd")
         .opt("update", "dst", "dst (paper) | hidden (Fig. 4a baseline: fp masters)")
         .opt("seed", "42", "RNG seed")
-        .opt("engine", "xla", "evaluation engine: xla | native")
+        .opt("engine", "xla", "training+eval engine: xla (PJRT graphs) | native (device-free DST)")
         .opt("threads", "0", "native-engine worker threads (0 = auto)")
+        .opt("batch", "0", "native-engine batch size (0 = manifest batch, else 100)")
         .opt("artifacts", "artifacts", "artifact directory")
         .opt("save", "", "checkpoint path to write after training")
         .flag("augment", "pad-4 + random crop + hflip (paper CIFAR recipe)")
@@ -132,6 +133,7 @@ fn parse_train_cfg(a: &gxnor::cli::Args) -> Result<TrainConfig> {
         dense_lr_scale: file_cfg.f64("train.dense_lr_scale", 0.5),
         engine: EngineKind::parse(&s("engine", "train.engine", "xla")).map_err(|e| anyhow!(e))?,
         threads: f("threads", "train.threads", 0.0) as usize,
+        batch: f("batch", "train.batch", 0.0) as usize,
         verbose: !a.flag("quiet"),
     })
 }
@@ -139,7 +141,47 @@ fn parse_train_cfg(a: &gxnor::cli::Args) -> Result<TrainConfig> {
 fn cmd_train(argv: &[String]) -> Result<()> {
     let a = train_cmd().parse(argv).map_err(|e| anyhow!(e))?;
     let cfg = parse_train_cfg(&a)?;
-    let manifest = Manifest::load(&a.opt_or("artifacts", "artifacts")).map_err(|e| anyhow!(e))?;
+    let save = a.opt_or("save", "");
+    let art = a.opt_or("artifacts", "artifacts");
+    let train = gxnor::data::open(&cfg.dataset, true, cfg.train_len).map_err(|e| anyhow!(e))?;
+    let test = gxnor::data::open(&cfg.dataset, false, cfg.test_len).map_err(|e| anyhow!(e))?;
+
+    if cfg.engine == EngineKind::Native {
+        // fully device-free: no PJRT client, no lowered graphs; the
+        // manifest (when present) only contributes shapes and batch size
+        let manifest = Manifest::load(&art).ok();
+        println!(
+            "engine=native arch={} method={} dataset={}{}",
+            cfg.arch,
+            cfg.method.name(),
+            cfg.dataset,
+            if manifest.is_some() { "" } else { " (no artifacts: catalogue shapes)" }
+        );
+        let mut trainer = NativeTrainer::new(manifest.as_ref(), cfg)?;
+        println!("native batch {} ({} threads)", trainer.batch_size(), trainer.config().threads);
+        let report = trainer.run(train.as_ref(), test.as_ref())?;
+        print_train_report(&report);
+        println!(
+            "step-loop mem : {} B f32 weight mirrors + {} B fp32 masters (DST runs in the \
+             packed domain); {} B derived weight bitplanes",
+            report.weight_f32_mirror_bytes,
+            report.hidden_fp32_bytes,
+            trainer.engine_bitplane_bytes()
+        );
+        println!(
+            "repack-skip   : {} bitplane rebuilds over {} DST updates ({} moved a state)",
+            trainer.repack_count(),
+            trainer.dst_update_count(),
+            trainer.transitioned_update_count()
+        );
+        if !save.is_empty() {
+            checkpoint::save(&trainer.model, &save).map_err(|e| anyhow!(e))?;
+            println!("checkpoint    : {save}");
+        }
+        return Ok(());
+    }
+
+    let manifest = Manifest::load(&art).map_err(|e| anyhow!(e))?;
     let mut rt = Runtime::new()?;
     println!(
         "platform={} arch={} method={} dataset={}",
@@ -148,12 +190,23 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         cfg.method.name(),
         cfg.dataset
     );
-    let train = gxnor::data::open(&cfg.dataset, true, cfg.train_len).map_err(|e| anyhow!(e))?;
-    let test = gxnor::data::open(&cfg.dataset, false, cfg.test_len).map_err(|e| anyhow!(e))?;
-    let save = a.opt_or("save", "");
     let mut trainer = Trainer::new(&mut rt, &manifest, cfg)?;
     println!("graph: {} (batch {})", trainer.graph_name(), trainer.batch_size());
     let report = trainer.run(train.as_ref(), test.as_ref())?;
+    print_train_report(&report);
+    println!(
+        "step-loop mem : {} B f32 weight mirrors (PJRT boundary expansions)",
+        report.weight_f32_mirror_bytes
+    );
+    if !save.is_empty() {
+        checkpoint::save(&trainer.model, &save).map_err(|e| anyhow!(e))?;
+        println!("checkpoint    : {save}");
+    }
+    Ok(())
+}
+
+/// Summary block shared by the XLA and native train paths.
+fn print_train_report(report: &gxnor::coordinator::TrainReport) {
     println!("\ntest accuracy : {:.2}%", 100.0 * report.test_acc);
     println!("act sparsity  : {:.3}", report.mean_act_sparsity);
     println!("w zero frac   : {:.3}", report.weight_zero_fraction);
@@ -164,7 +217,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         report.fp32_bytes as f64 / report.packed_bytes.max(1) as f64
     );
     println!(
-        "per-step      : {:.1} ms total ({:.1} ms graph exec, {:.2} ms DST+update, {:.3} ms marshal)",
+        "per-step      : {:.1} ms total ({:.1} ms exec, {:.2} ms DST+update, {:.3} ms marshal)",
         report.step_time_ms, report.exec_time_ms, report.dst_time_ms, report.marshal_time_ms
     );
     println!(
@@ -172,11 +225,6 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         report.step_p50_ms, report.step_p99_ms, report.steps_per_sec
     );
     println!("loss curve    : {}", report.recorder.sparkline("loss", 60));
-    if !save.is_empty() {
-        checkpoint::save(&trainer.model, &save).map_err(|e| anyhow!(e))?;
-        println!("checkpoint    : {save}");
-    }
-    Ok(())
 }
 
 fn eval_cmd() -> Command {

@@ -118,6 +118,55 @@ pub fn arch_from_weights(name: &str, shapes: &[Vec<usize>]) -> Result<Arch, Stri
     Ok(arch)
 }
 
+/// Trainable parameter descriptors for an architecture, mirroring
+/// `python/compile/model.py::param_descs`: per weighted layer the weight
+/// `W{i}` (HWIO for conv, `[din, dout]` for dense); hidden layers add
+/// BatchNorm affine `gamma{i}`/`beta{i}` plus running state
+/// `rmean{i}`/`rvar{i}`. Returns `(params, bn_names, bn_lens)`. This is
+/// how the native training engine bootstraps **without a manifest** —
+/// the same order the lowered graphs use, so checkpoints interoperate.
+pub fn param_descs(
+    arch: &Arch,
+) -> (Vec<crate::nn::params::ParamDesc>, Vec<String>, Vec<usize>) {
+    use crate::nn::params::{ParamDesc, ParamKind};
+    let weighted: Vec<&Layer> = arch
+        .layers
+        .iter()
+        .filter(|l| matches!(l, Layer::Conv { .. } | Layer::Dense { .. }))
+        .collect();
+    let n_w = weighted.len();
+    let mut params = Vec::new();
+    let mut bn_names = Vec::new();
+    let mut bn_lens = Vec::new();
+    for (i, l) in weighted.iter().enumerate() {
+        let (shape, ch) = match **l {
+            Layer::Conv { cin, cout, k, .. } => (vec![k, k, cin, cout], cout),
+            Layer::Dense { din, dout } => (vec![din, dout], dout),
+            _ => unreachable!(),
+        };
+        params.push(ParamDesc { name: format!("W{i}"), shape, kind: ParamKind::Weight, layer: i });
+        if i + 1 < n_w {
+            params.push(ParamDesc {
+                name: format!("gamma{i}"),
+                shape: vec![ch],
+                kind: ParamKind::Gamma,
+                layer: i,
+            });
+            params.push(ParamDesc {
+                name: format!("beta{i}"),
+                shape: vec![ch],
+                kind: ParamKind::Beta,
+                layer: i,
+            });
+            bn_names.push(format!("rmean{i}"));
+            bn_names.push(format!("rvar{i}"));
+            bn_lens.push(ch);
+            bn_lens.push(ch);
+        }
+    }
+    (params, bn_names, bn_lens)
+}
+
 /// One weighted layer's compute geometry after shape propagation.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct LayerGeometry {
@@ -240,6 +289,30 @@ mod tests {
         assert_eq!(a.layers[3], Layer::Dense { din: 32, dout: 10 });
         let g = geometry(&a);
         assert_eq!(g[0].neuron_evals, 32);
+    }
+
+    #[test]
+    fn param_descs_mirror_python_ordering() {
+        use crate::nn::params::ParamKind;
+        let arch = build_arch("cnn_mnist").unwrap();
+        let (params, bn_names, bn_lens) = param_descs(&arch);
+        // 4 weighted layers, 3 hidden with BN: 4 W + 3×(gamma, beta)
+        assert_eq!(params.len(), 4 + 6);
+        let names: Vec<&str> = params.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["W0", "gamma0", "beta0", "W1", "gamma1", "beta1", "W2", "gamma2", "beta2", "W3"]
+        );
+        assert_eq!(params[0].shape, vec![5, 5, 1, 32]);
+        assert_eq!(params[0].kind, ParamKind::Weight);
+        assert_eq!(params[1].shape, vec![32]);
+        assert_eq!(params[6].shape, vec![1024, 512]);
+        assert_eq!(bn_names, ["rmean0", "rvar0", "rmean1", "rvar1", "rmean2", "rvar2"]);
+        assert_eq!(bn_lens, [32, 32, 64, 64, 512, 512]);
+        // mlp: last layer has no BN
+        let (p2, n2, _) = param_descs(&build_arch("mlp").unwrap());
+        assert_eq!(p2.len(), 3 + 4);
+        assert_eq!(n2.len(), 4);
     }
 
     #[test]

@@ -145,6 +145,31 @@ impl ModelState {
         }
     }
 
+    /// Exact byte snapshot of the full trainable + BN state: packed
+    /// tensors via their serialized form, dense tensors and running
+    /// stats as raw little-endian f32 bits. Two models are bit-identical
+    /// iff their fingerprints are equal — the determinism tests and the
+    /// bench's thread-scaling trajectory check compare these.
+    pub fn fingerprint(&self) -> Vec<u8> {
+        let mut bytes = Vec::new();
+        for v in &self.values {
+            match v {
+                ParamValue::Discrete(p) => p.serialize(&mut bytes),
+                ParamValue::Dense(d) => {
+                    for x in d {
+                        bytes.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+        }
+        for s in &self.bn_state {
+            for x in s {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        bytes
+    }
+
     /// Histogram over weight states (aggregated across tensors).
     pub fn weight_histogram(&self) -> Vec<u64> {
         let mut h = vec![0u64; self.space.n_states()];

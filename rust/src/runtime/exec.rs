@@ -9,6 +9,12 @@
 //! the bench harness — talks to [`ExecEngine`] only, so the two paths can
 //! be selected per run (`--engine xla|native`) and A/B'd on identical
 //! checkpoints (`BENCH_infer.json`).
+//!
+//! [`EngineKind`] also selects the *training* backend: `--engine native`
+//! on `gxnor train` routes to `coordinator::trainer::NativeTrainer`
+//! (device-free DST step loop, `engine::NativeTrainEngine`), while `xla`
+//! keeps the lowered train graph through the pooled boundary as the A/B
+//! baseline (`BENCH_step.json` v2 compares the two).
 
 use anyhow::Result;
 

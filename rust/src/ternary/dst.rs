@@ -18,6 +18,7 @@
 //! throughput and `ptest` checks its invariants against the same vectors
 //! as the Python twins (python/tests/test_dst.py).
 
+use crate::ternary::packed::PackedTensor;
 use crate::ternary::space::DiscreteSpace;
 use crate::util::prng::Prng;
 
@@ -164,6 +165,91 @@ pub fn dst_update_with_uniforms(
     stats
 }
 
+/// DST applied **directly to the packed state storage** — the native
+/// training engine's update path. The weight tensor stays 2-bit (ternary)
+/// or 1-bit (binary) end to end: states stream through word-aligned
+/// chunks ([`PackedTensor::state_chunks_mut`]), each unpacked into a
+/// small per-chunk buffer, stepped with
+/// [`dst_update_with_uniforms`], and repacked — at no point does a
+/// full-tensor f32 weight copy exist (Remark 2, kept literal in the step
+/// loop). Layouts whose states straddle words (e.g. the 3-bit N=2 space)
+/// fall back to per-state access.
+///
+/// Uniform consumption is identical to [`dst_update`] (one `fill_uniform_x4`
+/// over the whole tensor up front), so for the same RNG state the packed
+/// and f32 paths produce bit-identical next states and statistics — pinned
+/// by `packed_update_matches_f32_update`. Large tensors run their chunks
+/// on scoped workers, honoring the caller's `threads` knob (0 = auto, the
+/// same contract as `util::pool::resolve_threads`); every state is stepped
+/// by exactly one worker with its own pre-drawn uniform and the statistics
+/// are integer sums, so the result is bit-identical for any thread count.
+pub fn dst_update_packed(
+    p: &mut PackedTensor,
+    dw: &[f32],
+    m: f32,
+    rng: &mut Prng,
+    threads: usize,
+) -> DstStats {
+    assert_eq!(p.len(), dw.len(), "weight/increment length mismatch");
+    let space = p.space();
+    let mut u = vec![0.0f32; dw.len()];
+    rng.fill_uniform_x4(&mut u);
+
+    const PAR_THRESHOLD: usize = 200_000;
+    let threads = crate::util::pool::resolve_threads(threads);
+    let chunk_states = if p.len() >= PAR_THRESHOLD && threads > 1 {
+        crate::util::div_ceil(p.len(), threads.min(8))
+    } else {
+        p.len().max(1)
+    };
+    if let Some(chunks) = p.state_chunks_mut(chunk_states) {
+        let mut tasks = Vec::with_capacity(chunks.len());
+        let mut off = 0usize;
+        for chunk in chunks {
+            let len = chunk.len();
+            let dwc = &dw[off..off + len];
+            let uc = &u[off..off + len];
+            off += len;
+            tasks.push(move || {
+                let mut chunk = chunk;
+                let mut buf = vec![0.0f32; chunk.len()];
+                chunk.unpack_into(&mut buf);
+                let stats = dst_update_with_uniforms(&mut buf, dwc, uc, space, m);
+                chunk.repack_from(&buf);
+                stats
+            });
+        }
+        let mut total = DstStats::default();
+        for s in crate::util::pool::scope_map(tasks) {
+            total.merge(&s);
+        }
+        return total;
+    }
+    // straddling layout: stream through a fixed-size window via get/set
+    let mut total = DstStats::default();
+    let mut buf = [0.0f32; 64];
+    let mut start = 0usize;
+    while start < p.len() {
+        let len = 64.min(p.len() - start);
+        for (j, b) in buf[..len].iter_mut().enumerate() {
+            *b = p.get(start + j);
+        }
+        let stats = dst_update_with_uniforms(
+            &mut buf[..len],
+            &dw[start..start + len],
+            &u[start..start + len],
+            space,
+            m,
+        );
+        for (j, &b) in buf[..len].iter().enumerate() {
+            p.set(start + j, b);
+        }
+        total.merge(&stats);
+        start += len;
+    }
+    total
+}
+
 /// Reference (scalar) DST for one weight with an explicit uniform draw —
 /// used by the property/equivalence tests to pin semantics independently of
 /// RNG consumption order.
@@ -307,6 +393,43 @@ mod tests {
         }
         let mean: f32 = w.iter().sum::<f32>() / n as f32;
         assert!(mean > 0.2, "mean={mean}");
+    }
+
+    /// The packed-domain update must be bit-identical to the f32 update
+    /// under the same RNG state — same next states, same statistics —
+    /// including the parallel chunked path (large ternary tensors), the
+    /// binary layout, and the straddling-layout fallback (N=2, 3-bit).
+    #[test]
+    fn packed_update_matches_f32_update() {
+        for (n, len) in [(1u32, 250_007usize), (0, 10_001), (1, 777), (2, 501)] {
+            let space = DiscreteSpace::new(n);
+            let mut rng = Prng::new(100 + n as u64 + len as u64);
+            let vals: Vec<f32> =
+                (0..len).map(|_| space.state(rng.below(space.n_states()))).collect();
+            let dw: Vec<f32> = (0..len).map(|_| rng.normal_f32() * 0.8).collect();
+
+            let mut w = vals.clone();
+            let mut rng_a = Prng::new(9);
+            let stats_f32 = dst_update(&mut w, &dw, space, 3.0, &mut rng_a);
+
+            let mut p = PackedTensor::pack(&vals, &[len], space);
+            let mut rng_b = Prng::new(9);
+            let stats_packed = dst_update_packed(&mut p, &dw, 3.0, &mut rng_b, 0);
+
+            assert_eq!(stats_f32, stats_packed, "N={n} len={len}: stats diverge");
+            assert_eq!(p.unpack(), w, "N={n} len={len}: states diverge");
+        }
+    }
+
+    #[test]
+    fn packed_update_zero_increment_is_identity() {
+        let space = DiscreteSpace::TERNARY;
+        let vals = vec![-1.0f32, 0.0, 1.0, 0.0];
+        let mut p = PackedTensor::pack(&vals, &[4], space);
+        let mut rng = Prng::new(0);
+        let stats = dst_update_packed(&mut p, &[0.0; 4], 3.0, &mut rng, 1);
+        assert_eq!(stats.transitions, 0);
+        assert_eq!(p.unpack(), vals);
     }
 
     #[test]

@@ -7,6 +7,6 @@ pub mod dst;
 pub mod packed;
 pub mod space;
 
-pub use dst::{dst_update, DstStats};
-pub use packed::PackedTensor;
+pub use dst::{dst_update, dst_update_packed, DstStats};
+pub use packed::{PackedTensor, StateChunkMut};
 pub use space::DiscreteSpace;

@@ -104,42 +104,42 @@ impl PackedTensor {
     /// states per u64, no cross-word straddling (64 % 2 == 0).
     pub fn unpack_into(&self, out: &mut [f32]) {
         assert_eq!(out.len(), self.len);
-        if self.bits == 2 {
-            let dz = self.space.dz();
-            for (wi, chunk) in out.chunks_mut(32).enumerate() {
-                let mut word = self.data[wi];
-                for o in chunk {
-                    *o = (word & 3) as f32 * dz - 1.0;
-                    word >>= 2;
-                }
-            }
-            return;
-        }
-        for (i, o) in out.iter_mut().enumerate() {
-            *o = self.space.state(get_bits(&self.data, i, self.bits) as usize);
-        }
+        unpack_words(self.space, self.bits, &self.data, out);
     }
 
     /// Re-pack from updated grid values (after a DST step).
     /// Same 2-bit word-at-a-time fast path as `unpack_into`.
     pub fn repack_from(&mut self, values: &[f32]) {
         assert_eq!(values.len(), self.len);
-        if self.bits == 2 {
-            // ternary states are exactly representable: v + 1.0 ∈ {0, 1, 2}
-            for (wi, chunk) in values.chunks(32).enumerate() {
-                let mut word = 0u64;
-                for (j, &v) in chunk.iter().enumerate() {
-                    debug_assert!(self.space.contains(v), "off-grid value {v}");
-                    word |= ((v + 1.0) as u64) << (2 * j);
-                }
-                self.data[wi] = word;
-            }
-            return;
+        repack_words(self.space, self.bits, &mut self.data, values);
+    }
+
+    /// Split the tensor into word-aligned mutable state chunks of about
+    /// `chunk_states` states each (rounded up to whole u64 words; the last
+    /// chunk carries the remainder). Returns `None` when states straddle
+    /// word boundaries (bit widths that do not divide 64 — e.g. the 3-bit
+    /// N=2 layout), in which case callers fall back to per-state access.
+    ///
+    /// This is the packed-domain DST's streaming surface: each chunk can
+    /// be unpacked into a small stack-sized buffer, stepped, and repacked
+    /// by an independent worker, so the update never materializes a
+    /// full-tensor f32 weight copy (the paper's Remark 2, kept literal in
+    /// the training hot loop).
+    pub fn state_chunks_mut(&mut self, chunk_states: usize) -> Option<Vec<StateChunkMut<'_>>> {
+        if self.bits == 0 || 64 % self.bits != 0 {
+            return None;
         }
-        for (i, &v) in values.iter().enumerate() {
-            debug_assert!(self.space.contains(v), "off-grid value {v}");
-            set_bits(&mut self.data, i, self.bits, self.space.index_of(v) as u64);
+        let spw = (64 / self.bits) as usize; // states per word
+        let chunk_words = div_ceil(chunk_states.max(1), spw);
+        let mut out = Vec::new();
+        let mut remaining = self.len;
+        for data in self.data.chunks_mut(chunk_words) {
+            let len = remaining.min(data.len() * spw);
+            out.push(StateChunkMut { space: self.space, bits: self.bits, data, len });
+            remaining -= len;
         }
+        debug_assert_eq!(remaining, 0);
+        Some(out)
     }
 
     /// Histogram over state indices (sparsity/distribution diagnostics;
@@ -272,6 +272,79 @@ impl PackedTensor {
             return Err("packed payload size mismatch".into());
         }
         Ok(PackedTensor { space, shape, bits, data, len })
+    }
+}
+
+/// A word-aligned mutable range of packed states (see
+/// [`PackedTensor::state_chunks_mut`]). State indices are local to the
+/// chunk; unused tail bits of the final word are don't-care padding.
+pub struct StateChunkMut<'a> {
+    space: DiscreteSpace,
+    bits: u32,
+    data: &'a mut [u64],
+    len: usize,
+}
+
+impl StateChunkMut<'_> {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Expand this chunk's states into `out` (length [`StateChunkMut::len`]).
+    pub fn unpack_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len);
+        unpack_words(self.space, self.bits, self.data, out);
+    }
+
+    /// Re-pack updated grid values over this chunk.
+    pub fn repack_from(&mut self, values: &[f32]) {
+        assert_eq!(values.len(), self.len);
+        repack_words(self.space, self.bits, self.data, values);
+    }
+}
+
+/// Shared word-walk behind `unpack_into` (tensor and chunk views): `out`
+/// determines how many states are read.
+fn unpack_words(space: DiscreteSpace, bits: u32, data: &[u64], out: &mut [f32]) {
+    if bits == 2 {
+        let dz = space.dz();
+        for (wi, chunk) in out.chunks_mut(32).enumerate() {
+            let mut word = data[wi];
+            for o in chunk {
+                *o = (word & 3) as f32 * dz - 1.0;
+                word >>= 2;
+            }
+        }
+        return;
+    }
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = space.state(get_bits(data, i, bits) as usize);
+    }
+}
+
+/// Shared word-walk behind `repack_from`. The 2-bit fast path rewrites
+/// whole words; tail bits past `values.len()` in the final word are
+/// padding in every caller, so zeroing them is harmless.
+fn repack_words(space: DiscreteSpace, bits: u32, data: &mut [u64], values: &[f32]) {
+    if bits == 2 {
+        // ternary states are exactly representable: v + 1.0 ∈ {0, 1, 2}
+        for (wi, chunk) in values.chunks(32).enumerate() {
+            let mut word = 0u64;
+            for (j, &v) in chunk.iter().enumerate() {
+                debug_assert!(space.contains(v), "off-grid value {v}");
+                word |= ((v + 1.0) as u64) << (2 * j);
+            }
+            data[wi] = word;
+        }
+        return;
+    }
+    for (i, &v) in values.iter().enumerate() {
+        debug_assert!(space.contains(v), "off-grid value {v}");
+        set_bits(data, i, bits, space.index_of(v) as u64);
     }
 }
 
@@ -438,6 +511,35 @@ mod tests {
         crate::ternary::dst::dst_update(&mut w, &dw, space, 3.0, &mut rng);
         p.repack_from(&w);
         assert_eq!(p.unpack(), w);
+    }
+
+    /// Chunked streaming access must see exactly the tensor's states, in
+    /// order, and chunk-local repacks must land in the right global slots.
+    #[test]
+    fn state_chunks_roundtrip_and_mutate() {
+        for n in [0u32, 1, 2] {
+            let space = DiscreteSpace::new(n);
+            let len = 300usize; // straddles several words for every width
+            let vals = random_grid(space, len, 70 + n as u64);
+            let mut p = PackedTensor::pack(&vals, &[len], space);
+            let chunks = p.state_chunks_mut(70);
+            if space.bits_per_state() == 3 {
+                // N=2 states straddle words: chunking must refuse
+                assert!(chunks.is_none());
+                continue;
+            }
+            let mut seen = Vec::new();
+            for mut c in chunks.unwrap() {
+                let mut buf = vec![0.0f32; c.len()];
+                c.unpack_into(&mut buf);
+                // write back a mutated copy: every state hops to state 0
+                let mutated = vec![space.state(0); c.len()];
+                c.repack_from(&mutated);
+                seen.extend_from_slice(&buf);
+            }
+            assert_eq!(seen, vals, "N={n}: chunk walk differs from tensor");
+            assert_eq!(p.unpack(), vec![space.state(0); len], "N={n}: repack misplaced");
+        }
     }
 
     #[test]
