@@ -7,30 +7,38 @@
 //! memory cost (bits/weight), showing the accuracy-vs-hardware trade the
 //! paper's Section 3.D uses to pick a space for a given platform.
 //!
+//! It runs **device-free** on the native multi-bitplane engine: no
+//! lowered artifacts and no PJRT client are needed (a manifest, when
+//! present, only contributes shapes/batch size).
+//!
 //! ```sh
-//! make artifacts && cargo run --release --example multilevel
+//! cargo run --release --example multilevel
 //! ```
 
-use gxnor::coordinator::trainer::TrainConfig;
-use gxnor::runtime::client::Runtime;
+use gxnor::coordinator::trainer::{TrainBackend, TrainConfig};
+use gxnor::runtime::exec::EngineKind;
 use gxnor::runtime::manifest::Manifest;
 use gxnor::sweep;
 use gxnor::ternary::DiscreteSpace;
 
 fn main() -> anyhow::Result<()> {
-    let manifest = Manifest::load("artifacts").map_err(anyhow::Error::msg)?;
-    let mut rt = Runtime::new()?;
+    let manifest = Manifest::load("artifacts").ok();
+    if manifest.is_none() {
+        println!("no artifacts/manifest.json: using catalogue shapes (fully device-free)");
+    }
+    let mut backend = TrainBackend::Native { manifest: manifest.as_ref() };
     let base = TrainConfig {
         train_len: 3000,
         test_len: 800,
         epochs: 3,
+        engine: EngineKind::Native,
         verbose: false,
         ..Default::default()
     };
     // a diagonal + the paper's sweet spot (N1=6, N2=4)
     let grid: Vec<(u32, u32)> = vec![(1, 1), (2, 2), (3, 3), (4, 4), (6, 4)];
     println!("training the (N1, N2) grid {grid:?} (3 epochs each)…\n");
-    let points = sweep::sweep_levels(&mut rt, &manifest, &base, &grid)?;
+    let points = sweep::sweep_levels(&mut backend, &base, &grid)?;
 
     println!(
         "{:<12} {:>10} {:>12} {:>12} {:>14}",

@@ -8,7 +8,7 @@
 //! make artifacts && cargo run --release --example sparsity_sweep
 //! ```
 
-use gxnor::coordinator::trainer::TrainConfig;
+use gxnor::coordinator::trainer::{TrainBackend, TrainConfig};
 use gxnor::hwsim::{expected_counts, EnergyModel, NetArch};
 use gxnor::runtime::client::Runtime;
 use gxnor::runtime::manifest::Manifest;
@@ -17,6 +17,7 @@ use gxnor::sweep;
 fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load("artifacts").map_err(anyhow::Error::msg)?;
     let mut rt = Runtime::new()?;
+    let mut backend = TrainBackend::Xla { rt: &mut rt, manifest: &manifest };
     let base = TrainConfig {
         train_len: 3000,
         test_len: 800,
@@ -26,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     };
     let rs = [0.05, 0.2, 0.35, 0.5, 0.65, 0.8, 0.95];
     println!("sweeping zero-window r over {rs:?} (3 epochs each)…\n");
-    let points = sweep::sweep_scalar(&mut rt, &manifest, &base, "r", &rs)?;
+    let points = sweep::sweep_scalar(&mut backend, &base, "r", &rs)?;
     let energy = EnergyModel::default();
     let m = 1000u64;
     let fp_base = expected_counts(NetArch::FullPrecision, m, 0.0, 0.0);
@@ -45,7 +46,7 @@ fn main() -> anyhow::Result<()> {
         );
         println!(
             "{:>6.2} {:>9.2}% {:>14.3} {:>11.1}% {:>12.5}",
-            p.value,
+            p.value.unwrap_or(f64::NAN),
             100.0 * p.test_acc,
             p.act_sparsity,
             100.0 * counts.resting_probability(),

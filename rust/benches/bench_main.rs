@@ -22,7 +22,9 @@
 use std::time::Instant;
 
 use gxnor::coordinator::method::Method;
-use gxnor::coordinator::trainer::{evaluate_engine, run_training, TrainConfig, Trainer};
+use gxnor::coordinator::trainer::{
+    evaluate_engine, run_training, TrainBackend, TrainConfig, Trainer,
+};
 use gxnor::data::Dataset;
 use gxnor::engine::bitplane::GateStats;
 use gxnor::engine::NativeEngine;
@@ -223,10 +225,13 @@ fn bench_sweep(
 ) -> anyhow::Result<()> {
     println!("== {fig}: sweep of {param} (paper Fig. {}) ==\n", &fig[3..]);
     let base = base_cfg();
-    let points = sweep::sweep_scalar(rt, manifest, &base, param, values)?;
+    let mut backend = TrainBackend::Xla { rt, manifest };
+    let points = sweep::sweep_scalar(&mut backend, &base, param, values)?;
     print!("{}", sweep::render_table(&format!("{fig}: {param}"), &points));
     if let Some(b) = sweep::best(&points) {
-        let interior = b.value > values[0] && b.value < values[values.len() - 1];
+        let interior = b
+            .value
+            .is_some_and(|v| v > values[0] && v < values[values.len() - 1]);
         println!(
             "best: {} ({:.2}%) — {}\n",
             b.label,
@@ -249,7 +254,8 @@ fn bench_fig13(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> {
     println!("== fig13: discrete-space grid (paper Fig. 13) ==\n");
     let base = base_cfg();
     let grid: Vec<(u32, u32)> = vec![(0, 0), (1, 1), (2, 2), (3, 3), (4, 4), (6, 4)];
-    let points = sweep::sweep_levels(rt, manifest, &base, &grid)?;
+    let mut backend = TrainBackend::Xla { rt, manifest };
+    let points = sweep::sweep_levels(&mut backend, &base, &grid)?;
     print!("{}", sweep::render_table("fig13: N1,N2", &points));
     if let Some(b) = sweep::best(&points) {
         println!(

@@ -31,20 +31,38 @@ impl Args {
         self.opt(name).unwrap_or(default).to_string()
     }
 
-    pub fn opt_f32(&self, name: &str, default: f32) -> f32 {
-        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    /// Parse option `name` as `T`, or `default` when absent. A present
+    /// but unparsable value is an **error naming the flag and the bad
+    /// value** — `--epochs abc` must not silently train the default
+    /// number of epochs.
+    fn opt_parsed<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+        kind: &str,
+    ) -> Result<T, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("--{name}: invalid value {s:?} (expected {kind})")),
+        }
     }
 
-    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
-        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    pub fn opt_f32(&self, name: &str, default: f32) -> Result<f32, String> {
+        self.opt_parsed(name, default, "a number")
     }
 
-    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
-        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        self.opt_parsed(name, default, "a number")
     }
 
-    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
-        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        self.opt_parsed(name, default, "a non-negative integer")
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        self.opt_parsed(name, default, "a non-negative integer")
     }
 
     pub fn flag(&self, name: &str) -> bool {
@@ -168,7 +186,7 @@ mod tests {
     #[test]
     fn defaults_applied() {
         let a = cmd().parse(&argv(&["--dataset", "mnist"])).unwrap();
-        assert_eq!(a.opt_usize("epochs", 0), 10);
+        assert_eq!(a.opt_usize("epochs", 0).unwrap(), 10);
         assert_eq!(a.opt_or("method", ""), "gxnor");
         assert!(!a.flag("verbose"));
     }
@@ -179,7 +197,7 @@ mod tests {
             .parse(&argv(&["--dataset=svhn", "--epochs", "3", "--verbose"]))
             .unwrap();
         assert_eq!(a.opt_or("dataset", ""), "svhn");
-        assert_eq!(a.opt_usize("epochs", 0), 3);
+        assert_eq!(a.opt_usize("epochs", 0).unwrap(), 3);
         assert!(a.flag("verbose"));
     }
 
@@ -204,13 +222,26 @@ mod tests {
         assert_eq!(a.positional, vec!["ckpt.bin"]);
     }
 
+    /// A present but malformed numeric value is an error naming the flag
+    /// and the value — never a silent fall-back to the default.
     #[test]
-    fn numeric_parsers() {
+    fn numeric_parsers_reject_bad_values() {
         let a = cmd()
             .parse(&argv(&["--dataset", "x", "--epochs", "bad"]))
             .unwrap();
-        assert_eq!(a.opt_usize("epochs", 42), 42); // fallback on parse failure
-        assert_eq!(a.opt_f32("epochs", 1.5), 1.5);
+        let err = a.opt_usize("epochs", 42).unwrap_err();
+        assert!(err.contains("--epochs") && err.contains("bad"), "{err}");
+        assert!(a.opt_f32("epochs", 1.5).is_err());
+        assert!(a.opt_f64("epochs", 1.5).is_err());
+        assert!(a.opt_u64("epochs", 1).is_err());
+        // absent option (no declared default): the caller's default
+        let b = Args::default();
+        assert_eq!(b.opt_usize("epochs", 42).unwrap(), 42);
+        assert_eq!(b.opt_f64("lr", 0.5).unwrap(), 0.5);
+        // valid values parse
+        let c = cmd().parse(&argv(&["--dataset", "x", "--epochs", "7"])).unwrap();
+        assert_eq!(c.opt_usize("epochs", 0).unwrap(), 7);
+        assert_eq!(c.opt_f32("epochs", 0.0).unwrap(), 7.0);
     }
 
     #[test]

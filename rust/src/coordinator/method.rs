@@ -43,8 +43,16 @@ impl Method {
                     let (a, b) = rest
                         .split_once(',')
                         .ok_or("multi method needs N1,N2 (e.g. multi:6,4)")?;
-                    let n1 = a.parse().map_err(|_| format!("bad N1 {a:?}"))?;
-                    let n2 = b.parse().map_err(|_| format!("bad N2 {b:?}"))?;
+                    let n1: u32 = a.parse().map_err(|_| format!("bad N1 {a:?}"))?;
+                    let n2: u32 = b.parse().map_err(|_| format!("bad N2 {b:?}"))?;
+                    // DiscreteSpace::new asserts N <= 15 (state-index
+                    // width); reject here with a clean error instead of
+                    // panicking when the space is first constructed
+                    if n1 > 15 || n2 > 15 {
+                        return Err(format!(
+                            "multi:{n1},{n2}: N1/N2 must be <= 15 (Z_N state index)"
+                        ));
+                    }
                     return Ok(Method::Multi { n1, n2 });
                 }
                 Err(format!(
@@ -105,6 +113,9 @@ mod tests {
         }
         assert!(Method::parse("nope").is_err());
         assert!(Method::parse("multi:6").is_err());
+        // N > 15 would panic DiscreteSpace::new later — clean error here
+        assert!(Method::parse("multi:16,2").is_err());
+        assert!(Method::parse("multi:2,16").is_err());
     }
 
     #[test]

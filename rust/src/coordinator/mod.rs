@@ -17,6 +17,6 @@ pub use method::Method;
 pub use optimizer::{Optimizer, OptKind};
 pub use schedule::LrSchedule;
 pub use trainer::{
-    evaluate_engine, run_training, run_training_native, NativeTrainer, StepStats, TrainConfig,
-    TrainReport, Trainer, UpdateRule,
+    evaluate_engine, run_training, run_training_any, run_training_native, NativeTrainer,
+    StepStats, TrainBackend, TrainConfig, TrainReport, Trainer, UpdateRule,
 };

@@ -763,7 +763,9 @@ const DEFAULT_NATIVE_BATCH: usize = 100;
 /// update all run in-process (`engine::NativeTrainEngine` +
 /// `ternary::dst_update_packed`) — no PJRT device, no lowered graphs,
 /// and **no f32 weight tensor anywhere in the step loop**. Discrete
-/// weights live packed (2-bit ternary / 1-bit binary); the engine's
+/// weights live packed (1-bit binary, 2-bit ternary, up to 7-bit for the
+/// multi-level `Z_N` spaces of Fig. 13 — every `multi:N1,N2` method runs
+/// here); the engine's
 /// bitplanes derive from those states directly and are rebuilt only when
 /// a DST update actually moved a state (`DstStats::transitions > 0`),
 /// mirroring the XLA path's refill-skip.
@@ -1095,4 +1097,34 @@ pub fn run_training_native(manifest: Option<&Manifest>, cfg: TrainConfig) -> Res
     let test = crate::data::open(&cfg.dataset, false, cfg.test_len).map_err(|e| anyhow!(e))?;
     let mut tr = NativeTrainer::new(manifest, cfg)?;
     tr.run(train.as_ref(), test.as_ref())
+}
+
+/// One training backend with its backend-specific context, so callers
+/// that run many jobs (the sweep harness, the benches) dispatch once:
+/// the XLA path needs a live PJRT runtime plus the artifact manifest,
+/// the native path is fully device-free and treats the manifest as an
+/// optional source of shapes/batch size.
+pub enum TrainBackend<'a> {
+    /// Lowered train graph on the PJRT client.
+    Xla { rt: &'a mut Runtime, manifest: &'a Manifest },
+    /// Device-free native DST step loop ([`NativeTrainer`]).
+    Native { manifest: Option<&'a Manifest> },
+}
+
+impl TrainBackend<'_> {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrainBackend::Xla { .. } => "xla",
+            TrainBackend::Native { .. } => "native",
+        }
+    }
+}
+
+/// Run one training job on whichever backend the caller holds —
+/// [`run_training`] or [`run_training_native`], one dispatch point.
+pub fn run_training_any(backend: &mut TrainBackend<'_>, cfg: TrainConfig) -> Result<TrainReport> {
+    match backend {
+        TrainBackend::Xla { rt, manifest } => run_training(rt, manifest, cfg),
+        TrainBackend::Native { manifest } => run_training_native(*manifest, cfg),
+    }
 }

@@ -1,11 +1,15 @@
 //! Ternary-operand backward kernels for the native training engine.
 //!
 //! Every GEMM in the backward pass has one operand that is already a
-//! sign/nonzero bitplane: the weights (always ternary/binary under the
-//! paper's methods) or the cached ternary activations. Both backward
-//! matmuls therefore reduce to **gate-controlled ±accumulation of f32
-//! values with zero multiplies**, the backward twin of the forward
-//! gated-XNOR unit:
+//! sign/nonzero bitplane: the weights (discrete under every non-fp
+//! method) or the cached quantized activations. Both backward matmuls
+//! therefore reduce to **gate-controlled ±accumulation of f32 values
+//! with zero multiplies**, the backward twin of the forward gated-XNOR
+//! unit. Multi-level (`Z_N`, N ≥ 2) operands ride the same kernels
+//! through their magnitude digit planes (`bitplane::PlaneSpec`): the
+//! per-lane weight becomes `±q` and one power-of-two grid scale is
+//! applied at the end, which stays *exactly* equal to the f64 scalar
+//! oracles because every product and the scaling are exact in f64:
 //!
 //! * `dX = dY·Wᵀ` — [`f32_rows_times_tern_cols`]: each output element
 //!   streams one packed weight row (planes over the output-channel lanes,
@@ -70,32 +74,83 @@ pub fn gated_signed_sum(sign: &[u64], nz: &[u64], f: &[f32]) -> f64 {
     acc
 }
 
-/// `out[r, j] = Σ_i a[r, i] · T[i, j]` where the ternary matrix is packed
-/// as per-column planes over its `planes.m` fan-in lanes. Serves two
-/// call sites with one kernel:
+/// [`gated_signed_sum`] for a multi-bitplane operand: per set lane the
+/// integer magnitude `q` is gathered from the digit planes and the f32
+/// value accumulates with weight `±q` (f64, ascending lane order; the
+/// caller applies the grid scale once at the end — exact, the scale is a
+/// power of two and commutes with every rounding).
+#[inline]
+fn gated_signed_sum_multi(sign: &[u64], nz: &[u64], mag: &[&[u64]], f: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for (wi, (&sw, &zw)) in sign.iter().zip(nz).enumerate() {
+        let mut gate = zw;
+        if gate == 0 {
+            continue; // every unit in this word rests
+        }
+        let base = wi * 64;
+        while gate != 0 {
+            let b = gate.trailing_zeros() as usize;
+            let mut q = 0u64;
+            for (p, m) in mag.iter().enumerate() {
+                q |= ((m[wi] >> b) & 1) << p;
+            }
+            let v = f[base + b] as f64 * q as f64;
+            if (sw >> b) & 1 == 1 {
+                acc += v;
+            } else {
+                acc -= v;
+            }
+            gate &= gate - 1;
+        }
+    }
+    acc
+}
+
+/// `out[r, j] = Σ_i a[r, i] · T[i, j]` where the discrete matrix is
+/// packed as per-column planes over its `planes.m` fan-in lanes —
+/// ternary/binary single-plane or any multi-bitplane `Z_N` layout.
+/// Serves two call sites with one kernel:
 ///
-/// * forward layers fed f32 inputs with ternary weights (`planes` =
+/// * forward layers fed f32 inputs with discrete weights (`planes` =
 ///   weight columns, `k = fan_in`);
 /// * backward `dX = dY·Wᵀ` (`planes` = weight *rows* via
-///   [`BitplaneCols::pack_rows_of`], `k = n_out`, out lanes = fan-in).
+///   [`BitplaneCols::pack_rows_of`] / `pack_rows_from_packed`,
+///   `k = n_out`, out lanes = fan-in).
 pub fn f32_rows_times_tern_cols(a: &[f32], rows: usize, planes: &BitplaneCols, out: &mut [f32]) {
     let k = planes.m;
     let n = planes.n;
     assert_eq!(a.len(), rows * k);
     assert_eq!(out.len(), rows * n);
-    for r in 0..rows {
-        let ar = &a[r * k..(r + 1) * k];
-        let orow = &mut out[r * n..(r + 1) * n];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let (s, z) = planes.col(j);
-            *o = gated_signed_sum(s, z, ar) as f32;
+    if planes.n_mag() == 0 {
+        for r in 0..rows {
+            let ar = &a[r * k..(r + 1) * k];
+            let orow = &mut out[r * n..(r + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let (s, z) = planes.col(j);
+                *o = gated_signed_sum(s, z, ar) as f32;
+            }
+        }
+        return;
+    }
+    let scale = planes.scale() as f64;
+    let mut mags: Vec<&[u64]> = Vec::new();
+    // column-outer walk so each column's digit-plane list is built once,
+    // not once per (row, column)
+    for j in 0..n {
+        let (s, z) = planes.col(j);
+        planes.fill_col_mag(j, &mut mags);
+        for r in 0..rows {
+            let ar = &a[r * k..(r + 1) * k];
+            out[r * n + j] = (gated_signed_sum_multi(s, z, &mags, ar) * scale) as f32;
         }
     }
 }
 
 /// Gated f64 scalar oracle for [`f32_rows_times_tern_cols`]: identical
-/// gating (zero ternary entries skipped) and identical ascending-index
-/// accumulation order, so the packed kernel matches it bit for bit.
+/// gating (zero entries skipped) and identical ascending-index
+/// accumulation order, so the packed kernel matches it bit for bit —
+/// for ternary operands *and* every multi-level grid (grid values are
+/// sign·q·2^{−k}, so each product and the final scaling are exact).
 pub fn f32_rows_times_tern_cols_oracle(
     a: &[f32],
     rows: usize,
@@ -113,11 +168,8 @@ pub fn f32_rows_times_tern_cols_oracle(
             let mut acc = 0.0f64;
             for (i, &av) in ar.iter().enumerate() {
                 let w = t[i * n + j];
-                debug_assert!(w == -1.0 || w == 0.0 || w == 1.0, "non-ternary operand {w}");
-                if w > 0.0 {
-                    acc += av as f64;
-                } else if w < 0.0 {
-                    acc -= av as f64;
+                if w != 0.0 {
+                    acc += av as f64 * w as f64;
                 }
             }
             out[r * n + j] = acc as f32;
@@ -144,6 +196,9 @@ pub fn accum_dw_packed(
     let hi = word_hi.min(words);
     let lane_lo = word_lo * 64;
     assert!(dy.len() >= rows * n);
+    if pack.n_mag() > 0 {
+        return accum_dw_packed_multi(pack, rows, dy, n, word_lo, hi, dw);
+    }
     for r in 0..rows {
         let (s, z) = pack.row(r);
         let dyr = &dy[r * n..(r + 1) * n];
@@ -165,6 +220,54 @@ pub fn accum_dw_packed(
                     for (d, &g) in drow.iter_mut().zip(dyr) {
                         *d -= g as f64;
                     }
+                }
+                gate &= gate - 1;
+            }
+        }
+    }
+}
+
+/// [`accum_dw_packed`] over a multi-bitplane activation layout: per set
+/// lane the coefficient `±q·scale` (the lane's exact f64 grid value) axpys
+/// the `dY` row — the same per-element expression as the scalar oracle's
+/// `dw += x·g`, so the two remain bit-identical.
+fn accum_dw_packed_multi(
+    pack: &PackScratch,
+    rows: usize,
+    dy: &[f32],
+    n: usize,
+    word_lo: usize,
+    word_hi: usize,
+    dw: &mut [f64],
+) {
+    let lane_lo = word_lo * 64;
+    let scale = pack.scale() as f64;
+    let mut mags: Vec<&[u64]> = Vec::new();
+    for r in 0..rows {
+        let (s, z) = pack.row(r);
+        pack.fill_row_mag(r, &mut mags);
+        let dyr = &dy[r * n..(r + 1) * n];
+        for wi in word_lo..word_hi {
+            let mut gate = z[wi];
+            if gate == 0 {
+                continue;
+            }
+            let sw = s[wi];
+            let base = wi * 64 - lane_lo;
+            while gate != 0 {
+                let b = gate.trailing_zeros() as usize;
+                let mut q = 0u64;
+                for (p, m) in mags.iter().enumerate() {
+                    q |= ((m[wi] >> b) & 1) << p;
+                }
+                let coef = if (sw >> b) & 1 == 1 {
+                    q as f64 * scale
+                } else {
+                    -(q as f64) * scale
+                };
+                let drow = &mut dw[(base + b) * n..(base + b) * n + n];
+                for (d, &g) in drow.iter_mut().zip(dyr) {
+                    *d += coef * g as f64;
                 }
                 gate &= gate - 1;
             }
@@ -257,7 +360,10 @@ pub fn quant_bwd(y: f32, r: f32, a: f32, hl: f32, mode: ActMode) -> f32 {
         ActMode::Multi => {
             let step = (1.0 - r) / hl;
             let u = y.abs() - r;
-            let k = (u / step).round().clamp(0.0, hl - 1.0);
+            // hl < 1 (the N2 = 0 space) has a single discontinuity (k = 0);
+            // the raw `hl - 1` would be negative and f32::clamp panics on
+            // an inverted range
+            let k = (u / step).round().clamp(0.0, (hl - 1.0).max(0.0));
             let dist = (u - k * step).abs();
             if dist <= a {
                 1.0 / (2.0 * a)

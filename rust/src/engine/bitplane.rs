@@ -17,6 +17,29 @@
 //! zero-state gate at word granularity. [`GateStats`] counts the ops that
 //! actually fired so the hwsim's Table 2 predictions can be cross-checked
 //! against executed reality (`hwsim::counts::gate_rate_matches`).
+//!
+//! # Multi-bitplane decomposition (eq. 2 / Fig. 13 spaces)
+//!
+//! The same kernels cover every `Z_N` space via a **signed magnitude
+//! decomposition**: a value v on the `Z_N` grid is `sign · q · dz` with
+//! `q ∈ {0, …, 2^{N−1}}`, so one shared sign plane plus the `N` binary
+//! digit planes of `q` (LSB first) represent the whole space; the nonzero
+//! plane is the OR of the digit planes and keeps serving as the
+//! word-granular zero-skip gate. A dot product of two such vectors is a
+//! short sum of the ternary word kernel over digit-plane pairs:
+//!
+//! ```text
+//! Σᵢ aᵢ·wᵢ = dz_a·dz_w · Σ_{p,q} 2^{p+q} · [2·pop(agree & aₚ & w_q) − pop(aₚ & w_q)]
+//! ```
+//!
+//! Binary and ternary are the degenerate cases with a single digit plane
+//! (`q ∈ {0, 1}`) that *is* the nonzero plane and `dz = 1` — exactly the
+//! layout above, so nothing changes on the hot path. [`PlaneSpec`] names
+//! a side's layout; every integer partial dot is exact, so multi-level
+//! results equal the f64 scalar oracle bit for bit (the scale factors are
+//! powers of two and commute with rounding).
+
+use crate::ternary::DiscreteSpace;
 
 /// u64 words needed to hold `m` lanes.
 pub const fn words_for(m: usize) -> usize {
@@ -45,6 +68,101 @@ pub fn pack_row_into(vals: &[f32], sign: &mut [u64], nz: &mut [u64]) {
     }
 }
 
+/// Bit-plane layout of one packed operand side: a grid value is
+/// `sign · q · scale` with the magnitude `q` spread over `mag_planes`
+/// binary digit planes (LSB first). `mag_planes == 0` is the
+/// binary/ternary layout, where `q ∈ {0, 1}` and the nonzero plane *is*
+/// the single digit plane (weight 2^0) — the hot path stays untouched.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlaneSpec {
+    /// explicit magnitude digit planes (0 = binary/ternary single-plane)
+    pub mag_planes: u32,
+    /// grid spacing dz: a packed value is sign · q · scale
+    pub scale: f32,
+    /// 1/scale — exact, both are powers of two
+    pub inv_scale: f32,
+}
+
+impl PlaneSpec {
+    /// The binary/ternary layout: sign + nonzero planes only, unit scale.
+    pub const SINGLE: PlaneSpec = PlaneSpec { mag_planes: 0, scale: 1.0, inv_scale: 1.0 };
+
+    /// Layout for values on the `space` grid. `Z_N` with N ≥ 2 needs the
+    /// N digit planes of `q ∈ [0, 2^{N−1}]` and scale `dz = 2^{1−N}`.
+    pub fn for_space(space: DiscreteSpace) -> PlaneSpec {
+        if space.n_states() <= 3 {
+            PlaneSpec::SINGLE
+        } else {
+            PlaneSpec {
+                mag_planes: space.n(),
+                scale: space.dz(),
+                inv_scale: space.half_levels(),
+            }
+        }
+    }
+
+    /// Layout for the phi_r quantizer's outputs at half-level count `hl`
+    /// (= 2^{N−1} for the `Z_N` activation space): values `sign · j / hl`
+    /// with `j ∈ 0..=hl`. `hl <= 1` (binary/ternary/N=0) packs single-plane.
+    pub fn for_levels(hl: f32) -> PlaneSpec {
+        if hl <= 1.0 {
+            PlaneSpec::SINGLE
+        } else {
+            debug_assert!(hl.log2().fract() == 0.0, "hl {hl} is not a power of two");
+            PlaneSpec { mag_planes: hl.log2() as u32 + 1, scale: 1.0 / hl, inv_scale: hl }
+        }
+    }
+}
+
+/// Quantize a grid value to its integer digit magnitude `q = |v|·inv_scale`,
+/// asserting (debug) that `v` lies on the grid and `q` fits `planes` digit
+/// planes — the one lane→planes encoding both packers share.
+#[inline]
+fn lane_magnitude(v: f32, inv_scale: f32, planes: usize) -> u64 {
+    let q = (v.abs() * inv_scale).round() as u64;
+    debug_assert!(
+        (q as f32 / inv_scale - v.abs()).abs() < 1e-5 && q < (1u64 << planes),
+        "off-grid value {v} in multi-bitplane pack"
+    );
+    q
+}
+
+/// [`pack_row_into`]'s multi-plane twin: grid values of spacing
+/// `1/inv_scale` become sign/nonzero planes plus the digit planes of the
+/// integer magnitude `q = |v|·inv_scale`. Lanes past `vals.len()` are
+/// cleared in every plane.
+pub fn pack_row_multi_into(
+    vals: &[f32],
+    inv_scale: f32,
+    sign: &mut [u64],
+    nz: &mut [u64],
+    mag: &mut [&mut [u64]],
+) {
+    let words = words_for(vals.len());
+    sign[..words].fill(0);
+    nz[..words].fill(0);
+    for m in mag.iter_mut() {
+        m[..words].fill(0);
+    }
+    for (i, &v) in vals.iter().enumerate() {
+        let q = lane_magnitude(v, inv_scale, mag.len());
+        if q == 0 {
+            continue;
+        }
+        let wi = i / 64;
+        let b = 1u64 << (i % 64);
+        nz[wi] |= b;
+        if v > 0.0 {
+            sign[wi] |= b;
+        }
+        for (p, m) in mag.iter_mut().enumerate() {
+            if (q >> p) & 1 == 1 {
+                m[wi] |= b;
+            }
+        }
+    }
+}
+
 /// The columns of a row-major (m × n) weight matrix, each packed into
 /// sign/nonzero planes (done once at engine load; HWIO conv weights
 /// flatten to exactly this layout with m = k·k·cin).
@@ -57,6 +175,11 @@ pub fn pack_row_into(vals: &[f32], sign: &mut [u64], nz: &mut [u64]) {
 pub struct BitplaneCols {
     sign: Vec<u64>,
     nz: Vec<u64>,
+    /// magnitude digit planes (LSB first), each `words * n` like `sign`;
+    /// empty for the binary/ternary layout where `nz` is the digit plane
+    mag: Vec<Vec<u64>>,
+    /// grid spacing dz of the packed values (1.0 for binary/ternary)
+    scale: f32,
     pub m: usize,
     pub n: usize,
     pub words: usize,
@@ -84,7 +207,81 @@ impl BitplaneCols {
                 }
             }
         }
-        BitplaneCols { sign, nz, m, n, words }
+        BitplaneCols { sign, nz, mag: Vec::new(), scale: 1.0, m, n, words }
+    }
+
+    /// [`BitplaneCols::pack_cols`] for values on an arbitrary `Z_N` grid:
+    /// binary/ternary spaces take the single-plane fast layout, wider
+    /// spaces get the multi-bitplane magnitude decomposition.
+    pub fn pack_cols_space(w: &[f32], m: usize, n: usize, space: DiscreteSpace) -> Self {
+        let spec = PlaneSpec::for_space(space);
+        if spec.mag_planes == 0 {
+            return Self::pack_cols(w, m, n);
+        }
+        assert_eq!(w.len(), m * n, "weight matrix shape mismatch");
+        let words = words_for(m);
+        let mut cols = BitplaneCols {
+            sign: vec![0u64; words * n],
+            nz: vec![0u64; words * n],
+            mag: vec![vec![0u64; words * n]; spec.mag_planes as usize],
+            scale: spec.scale,
+            m,
+            n,
+            words,
+        };
+        for i in 0..m {
+            for (j, &v) in w[i * n..(i + 1) * n].iter().enumerate() {
+                cols.set_lane_multi(j * words, i, v, spec.inv_scale);
+            }
+        }
+        cols
+    }
+
+    /// [`BitplaneCols::pack_rows_of`] for an arbitrary `Z_N` grid.
+    pub fn pack_rows_space(w: &[f32], rows: usize, lanes: usize, space: DiscreteSpace) -> Self {
+        let spec = PlaneSpec::for_space(space);
+        if spec.mag_planes == 0 {
+            return Self::pack_rows_of(w, rows, lanes);
+        }
+        assert_eq!(w.len(), rows * lanes, "weight matrix shape mismatch");
+        let words = words_for(lanes);
+        let mut cols = BitplaneCols {
+            sign: vec![0u64; words * rows],
+            nz: vec![0u64; words * rows],
+            mag: vec![vec![0u64; words * rows]; spec.mag_planes as usize],
+            scale: spec.scale,
+            m: lanes,
+            n: rows,
+            words,
+        };
+        for i in 0..rows {
+            for (j, &v) in w[i * lanes..(i + 1) * lanes].iter().enumerate() {
+                cols.set_lane_multi(i * words, j, v, spec.inv_scale);
+            }
+        }
+        cols
+    }
+
+    /// Set one lane of one plane-pair column: `base` addresses the
+    /// column's first word, `lane` the bit. Used by the `_space` packers;
+    /// the lane encoding is [`lane_magnitude`], shared with the row packer.
+    #[inline]
+    fn set_lane_multi(&mut self, base: usize, lane: usize, v: f32, inv_scale: f32) {
+        let q = lane_magnitude(v, inv_scale, self.mag.len());
+        if q == 0 {
+            return;
+        }
+        let wi = base + lane / 64;
+        let b = 1u64 << (lane % 64);
+        self.nz[wi] |= b;
+        if v > 0.0 {
+            self.sign[wi] |= b;
+        }
+        for (p, m) in self.mag.iter_mut().enumerate() {
+            if (q >> p) & 1 == 1 {
+                m[wi] |= b;
+            }
+        }
     }
 
     /// Pack the *rows* of a row-major (rows × lanes) matrix: one plane
@@ -99,66 +296,90 @@ impl BitplaneCols {
             let (lo, hi) = (i * words, (i + 1) * words);
             pack_row_into(&w[i * lanes..(i + 1) * lanes], &mut sign[lo..hi], &mut nz[lo..hi]);
         }
-        BitplaneCols { sign, nz, m: lanes, n: rows, words }
+        BitplaneCols { sign, nz, mag: Vec::new(), scale: 1.0, m: lanes, n: rows, words }
     }
 
     /// [`BitplaneCols::pack_cols`] reading grid values straight out of a
     /// packed discrete tensor — no f32 expansion of the weights is ever
-    /// materialized (the training engine's no-hidden-weight path). The
-    /// tensor must hold at most three states (binary/ternary).
+    /// materialized (the training engine's no-hidden-weight path). Any
+    /// `Z_N` space works: wider-than-ternary spaces take the
+    /// multi-bitplane layout.
     pub fn pack_cols_from_packed(p: &crate::ternary::PackedTensor, m: usize, n: usize) -> Self {
         assert_eq!(p.len(), m * n, "packed tensor shape mismatch");
-        assert!(p.space().n_states() <= 3, "bitplanes need a binary/ternary space");
+        let spec = PlaneSpec::for_space(p.space());
         let words = words_for(m);
-        let mut sign = vec![0u64; words * n];
-        let mut nz = vec![0u64; words * n];
+        let mut cols = BitplaneCols {
+            sign: vec![0u64; words * n],
+            nz: vec![0u64; words * n],
+            mag: vec![vec![0u64; words * n]; spec.mag_planes as usize],
+            scale: spec.scale,
+            m,
+            n,
+            words,
+        };
         for i in 0..m {
             let wi = i / 64;
             let b = 1u64 << (i % 64);
             for j in 0..n {
                 let v = p.get(i * n + j);
-                if v > 0.0 {
-                    sign[j * words + wi] |= b;
-                }
-                if v != 0.0 {
-                    nz[j * words + wi] |= b;
+                if spec.mag_planes == 0 {
+                    if v > 0.0 {
+                        cols.sign[j * words + wi] |= b;
+                    }
+                    if v != 0.0 {
+                        cols.nz[j * words + wi] |= b;
+                    }
+                } else {
+                    cols.set_lane_multi(j * words, i, v, spec.inv_scale);
                 }
             }
         }
-        BitplaneCols { sign, nz, m, n, words }
+        cols
     }
 
     /// [`BitplaneCols::pack_rows_of`] straight out of a packed tensor
-    /// (row-major rows × lanes), again without any f32 weight buffer.
+    /// (row-major rows × lanes), again without any f32 weight buffer and
+    /// for any `Z_N` space.
     pub fn pack_rows_from_packed(
         p: &crate::ternary::PackedTensor,
         rows: usize,
         lanes: usize,
     ) -> Self {
         assert_eq!(p.len(), rows * lanes, "packed tensor shape mismatch");
-        assert!(p.space().n_states() <= 3, "bitplanes need a binary/ternary space");
+        let spec = PlaneSpec::for_space(p.space());
         let words = words_for(lanes);
-        let mut sign = vec![0u64; words * rows];
-        let mut nz = vec![0u64; words * rows];
+        let mut cols = BitplaneCols {
+            sign: vec![0u64; words * rows],
+            nz: vec![0u64; words * rows],
+            mag: vec![vec![0u64; words * rows]; spec.mag_planes as usize],
+            scale: spec.scale,
+            m: lanes,
+            n: rows,
+            words,
+        };
         for i in 0..rows {
             let base = i * words;
             for j in 0..lanes {
                 let v = p.get(i * lanes + j);
-                let b = 1u64 << (j % 64);
-                if v > 0.0 {
-                    sign[base + j / 64] |= b;
-                }
-                if v != 0.0 {
-                    nz[base + j / 64] |= b;
+                if spec.mag_planes == 0 {
+                    let b = 1u64 << (j % 64);
+                    if v > 0.0 {
+                        cols.sign[base + j / 64] |= b;
+                    }
+                    if v != 0.0 {
+                        cols.nz[base + j / 64] |= b;
+                    }
+                } else {
+                    cols.set_lane_multi(base, j, v, spec.inv_scale);
                 }
             }
         }
-        BitplaneCols { sign, nz, m: lanes, n: rows, words }
+        cols
     }
 
-    /// Bytes held by the sign + nonzero planes (memory accounting).
+    /// Bytes held by the sign + nonzero (+ magnitude) planes.
     pub fn plane_bytes(&self) -> usize {
-        (self.sign.len() + self.nz.len()) * 8
+        (self.sign.len() + self.nz.len() + self.mag.iter().map(Vec::len).sum::<usize>()) * 8
     }
 
     /// (sign, nonzero) planes of column `j`.
@@ -166,6 +387,39 @@ impl BitplaneCols {
     pub fn col(&self, j: usize) -> (&[u64], &[u64]) {
         let s = j * self.words;
         (&self.sign[s..s + self.words], &self.nz[s..s + self.words])
+    }
+
+    /// Explicit magnitude digit planes (0 = binary/ternary layout).
+    #[inline]
+    pub fn n_mag(&self) -> u32 {
+        self.mag.len() as u32
+    }
+
+    /// Grid spacing of the packed values (1.0 for binary/ternary).
+    #[inline]
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Fill `buf` with column `j`'s magnitude digit-plane slices (LSB
+    /// first); the single-plane layout contributes its nonzero plane with
+    /// digit weight 2^0.
+    pub fn fill_col_mag<'a>(&'a self, j: usize, buf: &mut Vec<&'a [u64]>) {
+        buf.clear();
+        self.append_col_mag(j, buf);
+    }
+
+    /// [`BitplaneCols::fill_col_mag`] without the clear — the tiled
+    /// kernel batches one tile's columns into a flat pool this way.
+    pub fn append_col_mag<'a>(&'a self, j: usize, buf: &mut Vec<&'a [u64]>) {
+        let s = j * self.words;
+        if self.mag.is_empty() {
+            buf.push(&self.nz[s..s + self.words]);
+        } else {
+            for m in &self.mag {
+                buf.push(&m[s..s + self.words]);
+            }
+        }
     }
 }
 
@@ -186,6 +440,50 @@ pub fn gated_dot(a_sign: &[u64], a_nz: &[u64], w_sign: &[u64], w_nz: &[u64]) -> 
         let fired = gate.count_ones() as i64;
         dot += 2 * agree.count_ones() as i64 - fired;
         active += fired as u64;
+    }
+    (dot, active)
+}
+
+/// [`gated_dot`] generalized to multi-bitplane operands: `a_mag`/`w_mag`
+/// are the magnitude digit-plane lists (LSB first; pass the nonzero plane
+/// alone for a binary/ternary side). Returns the exact integer
+/// `Σᵢ signᵢ·qa_i·qw_i` — the dot in units of `scale_a · scale_w` — plus
+/// the active (both-nonzero) lane count. Whole words rest on the union
+/// gate exactly like the ternary kernel; the digit-pair loop is the
+/// "short sum of word kernels" of the module docs.
+pub fn gated_dot_planes(
+    a_sign: &[u64],
+    a_nz: &[u64],
+    a_mag: &[&[u64]],
+    w_sign: &[u64],
+    w_nz: &[u64],
+    w_mag: &[&[u64]],
+) -> (i64, u64) {
+    let mut dot = 0i64;
+    let mut active = 0u64;
+    for k in 0..w_sign.len() {
+        let gate = a_nz[k] & w_nz[k];
+        if gate == 0 {
+            // every unit in this word rests: no XNOR, no accumulate
+            continue;
+        }
+        active += gate.count_ones() as u64;
+        let agree = !(a_sign[k] ^ w_sign[k]);
+        for (p, ap) in a_mag.iter().enumerate() {
+            let apk = ap[k];
+            if apk == 0 {
+                continue;
+            }
+            for (q, wq) in w_mag.iter().enumerate() {
+                let g = apk & wq[k];
+                if g == 0 {
+                    continue;
+                }
+                let fired = g.count_ones() as i64;
+                let pos = (agree & g).count_ones() as i64;
+                dot += (2 * pos - fired) << (p + q);
+            }
+        }
     }
     (dot, active)
 }
@@ -253,41 +551,87 @@ impl GateStats {
 pub struct PackScratch {
     sign: Vec<u64>,
     nz: Vec<u64>,
+    /// magnitude digit planes (multi-bitplane layouts only); capacity is
+    /// kept across `reset_spec` calls like the sign/nz planes
+    mag: Vec<Vec<u64>>,
+    /// current layout: 0 digit planes = binary/ternary
+    n_mag: u32,
+    scale: f32,
+    inv_scale: f32,
     words: usize,
     rows: usize,
 }
 
 impl PackScratch {
     pub fn new() -> Self {
-        Self::default()
+        PackScratch { scale: 1.0, inv_scale: 1.0, ..Default::default() }
     }
 
-    /// Size for `rows` rows of `m` lanes, reusing capacity. Row contents
-    /// are garbage until written by `set_row`.
+    /// Size for `rows` rows of `m` lanes in the binary/ternary layout,
+    /// reusing capacity. Row contents are garbage until written by
+    /// `set_row`.
     pub fn reset(&mut self, rows: usize, m: usize) {
+        self.reset_spec(rows, m, PlaneSpec::SINGLE);
+    }
+
+    /// [`PackScratch::reset`] with an explicit plane layout (the
+    /// multi-level engine's activation spaces). Capacity only ever grows,
+    /// including the digit-plane pool.
+    pub fn reset_spec(&mut self, rows: usize, m: usize, spec: PlaneSpec) {
         self.words = words_for(m);
         self.rows = rows;
+        self.n_mag = spec.mag_planes;
+        self.scale = spec.scale;
+        self.inv_scale = spec.inv_scale;
         let need = rows * self.words;
         if self.sign.len() < need {
             self.sign.resize(need, 0);
             self.nz.resize(need, 0);
         }
+        while self.mag.len() < spec.mag_planes as usize {
+            self.mag.push(Vec::new());
+        }
+        for plane in &mut self.mag[..spec.mag_planes as usize] {
+            if plane.len() < need {
+                plane.resize(need, 0);
+            }
+        }
     }
 
-    /// Pack one row of grid values ({-1, 0, +1}); `vals` must have exactly
-    /// the lane count `reset` was given (tail lanes of the last word are
-    /// cleared, so stale bits from a previous, wider use cannot leak).
+    /// Pack one row of grid values onto the current layout's planes;
+    /// `vals` must have exactly the lane count `reset` was given (tail
+    /// lanes of the last word are cleared, so stale bits from a previous,
+    /// wider use cannot leak).
     pub fn set_row(&mut self, row: usize, vals: &[f32]) {
         debug_assert!(row < self.rows);
         debug_assert_eq!(words_for(vals.len()), self.words, "row width mismatch");
         let (lo, hi) = (row * self.words, (row + 1) * self.words);
-        pack_row_into(vals, &mut self.sign[lo..hi], &mut self.nz[lo..hi]);
+        if self.n_mag == 0 {
+            pack_row_into(vals, &mut self.sign[lo..hi], &mut self.nz[lo..hi]);
+        } else {
+            let mut mags: Vec<&mut [u64]> = self.mag[..self.n_mag as usize]
+                .iter_mut()
+                .map(|m| &mut m[lo..hi])
+                .collect();
+            pack_row_multi_into(
+                vals,
+                self.inv_scale,
+                &mut self.sign[lo..hi],
+                &mut self.nz[lo..hi],
+                &mut mags,
+            );
+        }
     }
 
-    /// Pack a full row-major (rows × m) matrix.
+    /// Pack a full row-major (rows × m) matrix (binary/ternary layout).
     pub fn pack_rows(&mut self, a: &[f32], rows: usize, m: usize) {
+        self.pack_rows_spec(a, rows, m, PlaneSpec::SINGLE);
+    }
+
+    /// Pack a full row-major (rows × m) matrix onto `spec`'s planes.
+    pub fn pack_rows_spec(&mut self, a: &[f32], rows: usize, m: usize, spec: PlaneSpec) {
         assert_eq!(a.len(), rows * m);
-        self.reset(rows, m);
+        self.reset_spec(rows, m, spec);
         for row in 0..rows {
             self.set_row(row, &a[row * m..(row + 1) * m]);
         }
@@ -298,6 +642,32 @@ impl PackScratch {
     pub fn row(&self, i: usize) -> (&[u64], &[u64]) {
         let s = i * self.words;
         (&self.sign[s..s + self.words], &self.nz[s..s + self.words])
+    }
+
+    /// Explicit magnitude digit planes of the current layout.
+    #[inline]
+    pub fn n_mag(&self) -> u32 {
+        self.n_mag
+    }
+
+    /// Grid spacing of the current layout (1.0 for binary/ternary).
+    #[inline]
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Fill `buf` with row `i`'s magnitude digit-plane slices (LSB first);
+    /// the single-plane layout contributes its nonzero plane (weight 2^0).
+    pub fn fill_row_mag<'a>(&'a self, i: usize, buf: &mut Vec<&'a [u64]>) {
+        buf.clear();
+        let s = i * self.words;
+        if self.n_mag == 0 {
+            buf.push(&self.nz[s..s + self.words]);
+        } else {
+            for m in &self.mag[..self.n_mag as usize] {
+                buf.push(&m[s..s + self.words]);
+            }
+        }
     }
 
     pub fn rows(&self) -> usize {
@@ -313,18 +683,28 @@ impl PackScratch {
     /// `rows_per_chunk` rows each (the last may be shorter), so scoped
     /// workers can pack disjoint row ranges of one shared scratch in
     /// parallel — the training engine fills the whole batch's activation
-    /// planes this way and the backward pass then streams them.
+    /// planes this way and the backward pass then streams them. Views
+    /// carry the current plane layout, digit planes included.
     pub fn split_rows_mut(&mut self, rows_per_chunk: usize) -> Vec<PackRowsMut<'_>> {
         let words = self.words;
+        let (n_mag, inv_scale) = (self.n_mag, self.inv_scale);
         let lim = self.rows * words;
         let step = rows_per_chunk.max(1) * words;
         if lim == 0 || words == 0 {
             return Vec::new();
         }
+        let mut mag_chunks: Vec<_> = self.mag[..n_mag as usize]
+            .iter_mut()
+            .map(|m| m[..lim].chunks_mut(step))
+            .collect();
         self.sign[..lim]
             .chunks_mut(step)
             .zip(self.nz[..lim].chunks_mut(step))
-            .map(|(sign, nz)| PackRowsMut { sign, nz, words })
+            .map(|(sign, nz)| {
+                let mag: Vec<&mut [u64]> =
+                    mag_chunks.iter_mut().map(|c| c.next().unwrap()).collect();
+                PackRowsMut { sign, nz, mag, words, inv_scale }
+            })
             .collect()
     }
 }
@@ -334,7 +714,9 @@ impl PackScratch {
 pub struct PackRowsMut<'a> {
     sign: &'a mut [u64],
     nz: &'a mut [u64],
+    mag: Vec<&'a mut [u64]>,
     words: usize,
+    inv_scale: f32,
 }
 
 impl PackRowsMut<'_> {
@@ -342,13 +724,25 @@ impl PackRowsMut<'_> {
         self.sign.len() / self.words
     }
 
-    /// Pack one row of grid values ({-1, 0, +1}); `row` is local to this
-    /// view and `vals` must match the scratch's lane width.
+    /// Pack one row of grid values onto the view's plane layout; `row` is
+    /// local to this view and `vals` must match the scratch's lane width.
     pub fn set_row(&mut self, row: usize, vals: &[f32]) {
         debug_assert!(row < self.rows());
         debug_assert_eq!(words_for(vals.len()), self.words, "row width mismatch");
         let (lo, hi) = (row * self.words, (row + 1) * self.words);
-        pack_row_into(vals, &mut self.sign[lo..hi], &mut self.nz[lo..hi]);
+        if self.mag.is_empty() {
+            pack_row_into(vals, &mut self.sign[lo..hi], &mut self.nz[lo..hi]);
+        } else {
+            let mut mags: Vec<&mut [u64]> =
+                self.mag.iter_mut().map(|m| &mut m[lo..hi]).collect();
+            pack_row_multi_into(
+                vals,
+                self.inv_scale,
+                &mut self.sign[lo..hi],
+                &mut self.nz[lo..hi],
+                &mut mags,
+            );
+        }
     }
 }
 
@@ -356,11 +750,13 @@ impl PackRowsMut<'_> {
 /// 32 KiB L1d, leaving the other half for the streaming activation rows.
 const TILE_BYTES: usize = 16 * 1024;
 
-/// Columns per tile for a given plane width: sign + nz cost 16 bytes per
-/// word per column. Wide layers (large fan-in) get narrow tiles; the
-/// clamp keeps degenerate shapes sane.
-fn col_tile(words: usize) -> usize {
-    (TILE_BYTES / (16 * words.max(1))).clamp(4, 256)
+/// Columns per tile for a given plane width: each column costs
+/// `8 · planes_per_col` bytes per word (sign + nz = 2 planes for the
+/// binary/ternary layout; multi-level layouts add their digit planes).
+/// Wide layers (large fan-in) get narrow tiles; the clamp keeps
+/// degenerate shapes sane.
+fn col_tile(words: usize, planes_per_col: usize) -> usize {
+    (TILE_BYTES / (8 * planes_per_col.max(1) * words.max(1))).clamp(4, 256)
 }
 
 /// Every packed row against every weight column, tiled over output-column
@@ -404,17 +800,44 @@ pub fn gated_packed_rows_range(
         stats.x_nonzero += nz.iter().map(|w| w.count_ones() as u64).sum::<u64>();
         stats.x_count += m;
     }
-    let tile = col_tile(cols.words);
+    // multi-bitplane operands carry a grid scale; the hot binary/ternary
+    // case keeps the raw integer path (scale product is exactly 1.0 there)
+    let multi = pack.n_mag() > 0 || cols.n_mag() > 0;
+    let scale = pack.scale() as f64 * cols.scale() as f64;
+    let mut amag: Vec<&[u64]> = Vec::new();
+    // per-tile pool of column digit-plane slices, hoisted out of the row
+    // loop (they depend on j alone): `wstride` slices per column, flat
+    let wstride = (cols.n_mag() as usize).max(1);
+    let mut wplanes: Vec<&[u64]> = Vec::new();
+    // the tile budget counts every plane a column streams (2 for
+    // binary/ternary — identical tiling to before — plus digit planes)
+    let tile = col_tile(cols.words, 2 + cols.n_mag() as usize);
     let mut j0 = 0;
     while j0 < n {
         let j1 = (j0 + tile).min(n);
+        if multi {
+            wplanes.clear();
+            for j in j0..j1 {
+                cols.append_col_mag(j, &mut wplanes);
+            }
+        }
         for row in r0..r1 {
             let (rs, rn) = pack.row(row);
+            if multi {
+                pack.fill_row_mag(row, &mut amag);
+            }
             let orow = &mut out[(row - r0) * n..(row - r0) * n + n];
             for j in j0..j1 {
                 let (ws, wn) = cols.col(j);
-                let (dot, active) = gated_dot(rs, rn, ws, wn);
-                orow[j] = dot as f32;
+                let (dot, active) = if multi {
+                    let wmag = &wplanes[(j - j0) * wstride..(j - j0 + 1) * wstride];
+                    gated_dot_planes(rs, rn, &amag, ws, wn, wmag)
+                } else {
+                    gated_dot(rs, rn, ws, wn)
+                };
+                // exact: the integer dot times a power-of-two scale rounds
+                // exactly like the f64 scalar oracle's sum of products
+                orow[j] = if multi { (dot as f64 * scale) as f32 } else { dot as f32 };
                 stats.xnor += active;
                 if active > 0 {
                     stats.bitcount += 1;
@@ -442,6 +865,24 @@ pub fn gated_xnor_gemm(
 ) {
     assert_eq!(a.len(), rows * cols.m);
     pack.pack_rows(a, rows, cols.m);
+    gated_packed_rows(pack, cols, out, stats);
+}
+
+/// [`gated_xnor_gemm`] for rows on an arbitrary discrete grid: the input
+/// rows are packed onto `spec`'s planes (digit planes included) before
+/// firing through the same tiled kernel. Binary/ternary `spec`s reduce to
+/// `gated_xnor_gemm` exactly.
+pub fn gated_gemm_spec(
+    a: &[f32],
+    rows: usize,
+    spec: PlaneSpec,
+    cols: &BitplaneCols,
+    out: &mut [f32],
+    stats: &mut GateStats,
+    pack: &mut PackScratch,
+) {
+    assert_eq!(a.len(), rows * cols.m);
+    pack.pack_rows_spec(a, rows, cols.m, spec);
     gated_packed_rows(pack, cols, out, stats);
 }
 
@@ -668,6 +1109,135 @@ mod tests {
                 ch.set_row(r, &a[g * m..(g + 1) * m]);
             }
         }
+        for r in 0..rows {
+            assert_eq!(par.row(r), serial.row(r), "row {r}");
+        }
+    }
+
+    #[test]
+    fn plane_spec_layouts() {
+        assert_eq!(PlaneSpec::for_space(DiscreteSpace::BINARY), PlaneSpec::SINGLE);
+        assert_eq!(PlaneSpec::for_space(DiscreteSpace::TERNARY), PlaneSpec::SINGLE);
+        let s2 = PlaneSpec::for_space(DiscreteSpace::new(2));
+        assert_eq!((s2.mag_planes, s2.scale, s2.inv_scale), (2, 0.5, 2.0));
+        let s4 = PlaneSpec::for_space(DiscreteSpace::new(4));
+        assert_eq!((s4.mag_planes, s4.scale, s4.inv_scale), (4, 0.125, 8.0));
+        // activation layouts: hl = 2^{N-1}
+        assert_eq!(PlaneSpec::for_levels(0.5), PlaneSpec::SINGLE);
+        assert_eq!(PlaneSpec::for_levels(1.0), PlaneSpec::SINGLE);
+        let l2 = PlaneSpec::for_levels(2.0);
+        assert_eq!((l2.mag_planes, l2.scale), (2, 0.5));
+        assert_eq!(PlaneSpec::for_levels(8.0).mag_planes, 4);
+    }
+
+    /// The multi-bitplane GEMM must equal the f64 scalar reference
+    /// **exactly** for every (weight space, activation space) pairing,
+    /// including mixed single-plane × multi-plane sides and ragged shapes.
+    #[test]
+    fn multi_bitplane_gemm_matches_scalar_reference() {
+        use crate::ternary::DiscreteSpace;
+        let mut rng = Prng::new(23);
+        let mut pack = PackScratch::new();
+        for &(wn, an) in &[(2u32, 2u32), (3, 1), (1, 3), (0, 2), (4, 4), (2, 0), (6, 4)] {
+            let (wspace, aspace) = (DiscreteSpace::new(wn), DiscreteSpace::new(an));
+            for &(rows, m, n) in &[(1usize, 1usize, 1usize), (3, 63, 5), (2, 130, 17), (4, 70, 9)]
+            {
+                let a: Vec<f32> =
+                    (0..rows * m).map(|_| aspace.state(rng.below(aspace.n_states()))).collect();
+                let w: Vec<f32> =
+                    (0..m * n).map(|_| wspace.state(rng.below(wspace.n_states()))).collect();
+                let cols = BitplaneCols::pack_cols_space(&w, m, n, wspace);
+                let mut got = vec![0.0f32; rows * n];
+                let mut want = vec![0.0f32; rows * n];
+                let mut stats = GateStats::default();
+                gated_gemm_spec(
+                    &a,
+                    rows,
+                    PlaneSpec::for_space(aspace),
+                    &cols,
+                    &mut got,
+                    &mut stats,
+                    &mut pack,
+                );
+                scalar_gemm(&a, rows, &w, m, n, &mut want);
+                assert_eq!(got, want, "w=Z_{wn} a=Z_{an} rows={rows} m={m} n={n}");
+                assert_eq!(stats.total, (rows * m * n) as u64);
+                assert_eq!(stats.evals, (rows * n) as u64);
+                // active = lanes where both operands are non-zero, exactly
+                let xnor: u64 = (0..rows)
+                    .flat_map(|r| (0..n).map(move |j| (r, j)))
+                    .map(|(r, j)| {
+                        (0..m)
+                            .filter(|&i| a[r * m + i] != 0.0 && w[i * n + j] != 0.0)
+                            .count() as u64
+                    })
+                    .sum();
+                assert_eq!(stats.xnor, xnor, "w=Z_{wn} a=Z_{an}");
+            }
+        }
+    }
+
+    /// Packing multi-level planes straight from a `PackedTensor` must
+    /// behave exactly like packing the unpacked f32 grid values.
+    #[test]
+    fn multi_packing_from_packed_tensor_matches_f32_packing() {
+        use crate::ternary::{DiscreteSpace, PackedTensor};
+        let mut rng = Prng::new(37);
+        for wn in [2u32, 3, 6] {
+            let space = DiscreteSpace::new(wn);
+            let (m, n) = (67usize, 9usize);
+            let vals: Vec<f32> =
+                (0..m * n).map(|_| space.state(rng.below(space.n_states()))).collect();
+            let p = PackedTensor::pack(&vals, &[m, n], space);
+            let a = BitplaneCols::pack_cols_space(&vals, m, n, space);
+            let b = BitplaneCols::pack_cols_from_packed(&p, m, n);
+            let c = BitplaneCols::pack_rows_space(&vals, m, n, space);
+            let d = BitplaneCols::pack_rows_from_packed(&p, m, n);
+            // drive both through the kernel on shared activations
+            let acts: Vec<f32> = (0..2 * m).map(|_| rng.below(3) as f32 - 1.0).collect();
+            let mut pack = PackScratch::new();
+            let (mut oa, mut ob) = (vec![0.0f32; 2 * n], vec![0.0f32; 2 * n]);
+            let mut stats = GateStats::default();
+            gated_xnor_gemm(&acts, 2, &a, &mut oa, &mut stats, &mut pack);
+            gated_xnor_gemm(&acts, 2, &b, &mut ob, &mut stats, &mut pack);
+            assert_eq!(oa, ob, "N={wn}: cols packing diverges");
+            assert_eq!(a.plane_bytes(), b.plane_bytes());
+            for i in 0..m {
+                assert_eq!(c.col(i), d.col(i), "N={wn} row {i}");
+            }
+            assert_eq!(c.n_mag(), wn);
+            assert_eq!(c.scale(), space.dz());
+        }
+    }
+
+    /// split_rows_mut must carry the digit planes: parallel-style chunked
+    /// packing of a multi-level matrix equals serial set_row packing,
+    /// verified through the kernel.
+    #[test]
+    fn split_rows_mut_packs_multi_planes() {
+        use crate::ternary::DiscreteSpace;
+        let space = DiscreteSpace::new(2);
+        let spec = PlaneSpec::for_space(space);
+        let mut rng = Prng::new(41);
+        let (rows, m) = (11usize, 90usize);
+        let a: Vec<f32> = (0..rows * m).map(|_| space.state(rng.below(5))).collect();
+        let mut serial = PackScratch::new();
+        serial.pack_rows_spec(&a, rows, m, spec);
+        let mut par = PackScratch::new();
+        par.reset_spec(rows, m, spec);
+        for (ci, mut ch) in par.split_rows_mut(4).into_iter().enumerate() {
+            for r in 0..ch.rows() {
+                let g = ci * 4 + r;
+                ch.set_row(r, &a[g * m..(g + 1) * m]);
+            }
+        }
+        let w: Vec<f32> = (0..m * 3).map(|_| space.state(rng.below(5))).collect();
+        let cols = BitplaneCols::pack_cols_space(&w, m, 3, space);
+        let (mut oa, mut ob) = (vec![0.0f32; rows * 3], vec![0.0f32; rows * 3]);
+        let mut stats = GateStats::default();
+        gated_packed_rows(&serial, &cols, &mut oa, &mut stats);
+        gated_packed_rows(&par, &cols, &mut ob, &mut stats);
+        assert_eq!(oa, ob);
         for r in 0..rows {
             assert_eq!(par.row(r), serial.row(r), "row {r}");
         }

@@ -2,14 +2,20 @@
 //! executed instead of merely analyzed).
 //!
 //! The engine runs the forward pass directly in the packed domain: hidden
-//! activations are ternarized into sign/nonzero bit planes, BatchNorm is
+//! activations are quantized into bit planes (sign/nonzero for ternary and
+//! binary; sign plus magnitude digit planes for the multi-level `Z_N`
+//! spaces of eq. 2 / Fig. 13 — see `bitplane::PlaneSpec`), BatchNorm is
 //! folded into per-channel thresholds at load time, and every Dense/Conv
-//! layer whose operands are ternary (or binary) evaluates via word-parallel
+//! layer whose operands are discrete evaluates via word-parallel
 //! XNOR + popcount with the zero-state gate — words where either nonzero
-//! plane is empty are skipped outright. Layers fed full-precision values
-//! (the input layer; every layer under the `fp` activation modes) fall
-//! back to an f64-accumulated scalar GEMM/conv so *every* Table 1 method
-//! runs natively and can be paritied against the XLA infer graph.
+//! plane is empty are skipped outright, and multi-level operands add a
+//! short digit-plane-pair sum over the same word kernel. Binary and
+//! ternary are the 0-/1-plane special cases, exactly the paper's
+//! subsumption claim. Layers fed full-precision values (the input layer;
+//! every layer under the `fp` activation modes) fall back to an
+//! f64-accumulated scalar GEMM/conv so *every* Table 1 method **and every
+//! `multi:N1,N2` space** runs natively and can be paritied against the
+//! XLA infer graph.
 //!
 //! Shape propagation is driven by [`crate::nn::arch`]: the topology comes
 //! from the named architecture with weighted-layer dimensions overridden
@@ -59,7 +65,8 @@ use crate::ternary::DiscreteSpace;
 use crate::util::pool;
 use crate::nn::params::ParamDesc;
 use bitplane::{
-    gated_packed_rows, gated_xnor_gemm, scalar_gemm, BitplaneCols, GateStats, PackScratch,
+    gated_gemm_spec, gated_packed_rows, scalar_gemm, BitplaneCols, GateStats, PackScratch,
+    PlaneSpec,
 };
 
 /// Must match `python/compile/model.py::BN_EPS` (parity depends on it).
@@ -196,6 +203,9 @@ pub struct NativeEngine {
     max_sample_numel: usize,
     /// requested worker count; 0 = auto (see [`NativeEngine::set_threads`])
     threads: usize,
+    /// bit-plane layout of the quantized activations (single-plane for
+    /// binary/ternary, digit planes for multi-level spaces)
+    act_spec: PlaneSpec,
     layers: Vec<EngineLayer>,
     /// merged tallies across shards and calls (exact: integer sums)
     gate: Vec<GateStats>,
@@ -236,10 +246,15 @@ impl NativeEngine {
             _ => ActMode::Multi,
         };
         let hl = method.hl();
-        // the XNOR path needs ternary/binary activations, i.e. the sign of
-        // every quantized value plus a zero gate — exactly hl == 1 (gxnor,
-        // multi:N,1) or the binary sign activation
-        let acts_packable = mode == ActMode::Bin || (mode == ActMode::Multi && hl == 1.0);
+        // every quantized activation packs: binary/ternary as sign + zero
+        // gate, multi-level (hl > 1) as sign + magnitude digit planes —
+        // only real-valued (fp-mode) activations stay un-packable
+        let acts_packable = mode == ActMode::Bin || mode == ActMode::Multi;
+        let act_spec = if mode == ActMode::Multi {
+            PlaneSpec::for_levels(hl)
+        } else {
+            PlaneSpec::SINGLE
+        };
 
         let weighted: Vec<Layer> = arch
             .layers
@@ -284,9 +299,11 @@ impl NativeEngine {
                     n
                 ));
             }
-            let (w_ternary, w_zero_fraction) = match wval {
-                ParamValue::Discrete(p) => (p.space().n_states() <= 3, p.zero_fraction()),
-                ParamValue::Dense(_) => (false, 0.0),
+            // any discrete space packs: ternary/binary single-plane or
+            // the multi-bitplane magnitude decomposition
+            let (w_space, w_zero_fraction) = match wval {
+                ParamValue::Discrete(p) => (Some(p.space()), p.zero_fraction()),
+                ParamValue::Dense(_) => (None, 0.0),
             };
             let hidden = li + 1 < n_w;
             let bn = if hidden {
@@ -324,11 +341,11 @@ impl NativeEngine {
             };
             // the first weighted layer always sees the raw (real-valued)
             // input, so only deeper layers can run in the packed domain
-            let xnor = li > 0 && w_ternary && acts_packable;
-            let cols = if xnor {
-                Some(BitplaneCols::pack_cols(&w, m, n))
-            } else {
-                None
+            let cols = match w_space {
+                Some(space) if li > 0 && acts_packable => {
+                    Some(BitplaneCols::pack_cols_space(&w, m, n, space))
+                }
+                _ => None,
             };
             layers.push(EngineLayer {
                 name: geo[li].name.clone(),
@@ -351,6 +368,7 @@ impl NativeEngine {
             sample_len,
             max_sample_numel,
             threads,
+            act_spec,
             gate: vec![GateStats::default(); layers.len()],
             layers,
             shards: Vec::new(),
@@ -478,13 +496,16 @@ impl NativeEngine {
         let layers = &self.layers;
         let arch = &self.arch;
         let (mode, r, hl) = (self.mode, self.r, self.hl);
+        let spec = self.act_spec;
         let (nc, sl) = (self.n_classes, self.sample_len);
         let tasks: Vec<_> = x
             .chunks(chunk * sl)
             .zip(self.logits.chunks_mut(chunk * nc))
             .zip(self.shards[..n_shards].iter_mut())
             .map(|((xc, lc), shard)| {
-                move || forward_range(arch, layers, mode, r, hl, xc, xc.len() / sl, lc, shard)
+                move || {
+                    forward_range(arch, layers, mode, r, hl, spec, xc, xc.len() / sl, lc, shard)
+                }
             })
             .collect();
         pool::scope_run(tasks);
@@ -619,6 +640,7 @@ fn forward_range(
     mode: ActMode,
     r: f32,
     hl: f32,
+    act_spec: PlaneSpec,
     x: &[f32],
     b: usize,
     logits: &mut [f32],
@@ -654,6 +676,7 @@ fn forward_range(
                     h,
                     w,
                     c,
+                    act_spec,
                     &mut nxt,
                     &mut shard.gate[wi],
                     &mut shard.conv,
@@ -684,6 +707,7 @@ fn run_linear(
     h: usize,
     w: usize,
     c: usize,
+    act_spec: PlaneSpec,
     nxt: &mut [f32],
     stats: &mut GateStats,
     conv: &mut ConvScratch,
@@ -693,7 +717,7 @@ fn run_linear(
         LinOp::Dense { m, n } => {
             debug_assert_eq!(h * w * c, m);
             if let Some(cols) = &el.cols {
-                gated_xnor_gemm(cur, b, cols, &mut nxt[..b * n], stats, pack);
+                gated_gemm_spec(cur, b, act_spec, cols, &mut nxt[..b * n], stats, pack);
             } else {
                 scalar_gemm(cur, b, &el.w, m, n, &mut nxt[..b * n]);
             }
@@ -714,7 +738,7 @@ fn run_linear(
                 let rows = oh * ow;
                 for s in 0..b {
                     let sample = &cur[s * h * w * cin..(s + 1) * h * w * cin];
-                    pack.reset(rows, m);
+                    pack.reset_spec(rows, m, act_spec);
                     for oy in 0..oh {
                         for ox in 0..ow {
                             gather_patch(sample, h, w, cin, k, pad, oy, ox, &mut conv.patch);
@@ -727,7 +751,7 @@ fn run_linear(
                     gated_packed_rows(pack, cols, out, stats);
                 }
             } else {
-                // scalar oracle walk (also the fp / multi-level fallback)
+                // scalar oracle walk (also the fp / first-layer fallback)
                 for s in 0..b {
                     let sample = &cur[s * h * w * cin..(s + 1) * h * w * cin];
                     for oy in 0..oh {
@@ -947,8 +971,9 @@ struct TrainLayer {
     w_param: usize,
     /// param index of gamma (beta = gamma + 1); hidden layers only
     gamma_param: Option<usize>,
-    /// weights live in a binary/ternary space (bitplane-packable)
-    w_ternary: bool,
+    /// weights live on a discrete Z_N grid (bitplane-packable; N >= 2
+    /// spaces use the multi-bitplane magnitude decomposition)
+    w_discrete: bool,
     /// weight columns over fan-in lanes — forward operand
     cols: Option<BitplaneCols>,
     /// weight rows over output-channel lanes — `dX = dY·Wᵀ` operand
@@ -1006,6 +1031,9 @@ pub struct NativeTrainEngine {
     r: f32,
     a: f32,
     hl: f32,
+    /// bit-plane layout of the quantized activations (digit planes for
+    /// multi-level spaces; see [`PlaneSpec`])
+    act_spec: PlaneSpec,
     batch: usize,
     n_classes: usize,
     sample_len: usize,
@@ -1047,16 +1075,6 @@ impl NativeTrainEngine {
         if batch == 0 {
             return Err(anyhow!("native training engine needs batch > 0"));
         }
-        if let Some(space) = method.weight_space() {
-            if space.n_states() > 3 {
-                return Err(anyhow!(
-                    "native training supports fp, binary and ternary weight spaces; \
-                     {} has {} states — use --engine xla",
-                    method.name(),
-                    space.n_states()
-                ));
-            }
-        }
         let weight_shapes: Vec<Vec<usize>> = descs
             .iter()
             .filter(|d| d.kind == ParamKind::Weight)
@@ -1069,8 +1087,15 @@ impl NativeTrainEngine {
             _ => ActMode::Multi,
         };
         let hl = method.hl();
-        let w_ternary = method.weight_space().is_some();
-        let acts_packable = mode == ActMode::Bin || (mode == ActMode::Multi && hl == 1.0);
+        let w_discrete = method.weight_space().is_some();
+        // binary/ternary *and* multi-level quantized activations pack;
+        // only fp-mode (real-valued) activations stay un-packable
+        let acts_packable = mode == ActMode::Bin || mode == ActMode::Multi;
+        let act_spec = if mode == ActMode::Multi {
+            PlaneSpec::for_levels(hl)
+        } else {
+            PlaneSpec::SINGLE
+        };
 
         // dims walk (and shape validation) over the arch layers
         let (mut h, mut w, mut c) = arch.input;
@@ -1186,10 +1211,10 @@ impl NativeTrainEngine {
                 arch_idx: *arch_idx,
                 w_param,
                 gamma_param,
-                w_ternary,
+                w_discrete,
                 cols: None,
                 wrows: None,
-                acts_packed: *arch_idx > 0 && w_ternary && acts_packable,
+                acts_packed: *arch_idx > 0 && w_discrete && acts_packable,
             });
         }
         if pi != descs.len() {
@@ -1249,6 +1274,7 @@ impl NativeTrainEngine {
             r,
             a,
             hl,
+            act_spec,
             batch,
             n_classes,
             sample_len,
@@ -1367,7 +1393,7 @@ impl NativeTrainEngine {
         dirty: &mut [bool],
     ) -> Result<()> {
         for l in self.wl.iter_mut() {
-            if !l.w_ternary || !dirty[l.w_param] {
+            if !l.w_discrete || !dirty[l.w_param] {
                 continue;
             }
             let (m, n) = match l.op {
@@ -1377,7 +1403,7 @@ impl NativeTrainEngine {
             let packed = match &model.values[l.w_param] {
                 ParamValue::Discrete(p) => p,
                 ParamValue::Dense(_) => {
-                    return Err(anyhow!("{}: ternary method with dense weights", l.name))
+                    return Err(anyhow!("{}: discrete method with dense weights", l.name))
                 }
             };
             if packed.len() != m * n {
@@ -1407,6 +1433,7 @@ impl NativeTrainEngine {
     ) -> Result<()> {
         let threads = self.threads;
         let (mode, r, hl) = (self.mode, self.r, self.hl);
+        let act_spec = self.act_spec;
         let sl = self.sample_len;
         let TrainCache { xin, acts, wl: wcaches, spars } = &mut self.cache;
         xin[..valid * sl].copy_from_slice(&x[..valid * sl]);
@@ -1451,7 +1478,7 @@ impl NativeTrainEngine {
 
                     // 1. GEMM input representation (cached for backward)
                     if l.acts_packed {
-                        wc.x_pack.reset(rows, m);
+                        wc.x_pack.reset_spec(rows, m, act_spec);
                         match l.op {
                             LinOp::Dense { .. } => {
                                 let chunk = shard_len(rows, threads);
@@ -1570,7 +1597,7 @@ impl NativeTrainEngine {
                                 })
                                 .collect();
                             pool::scope_run(tasks);
-                        } else if l.w_ternary {
+                        } else if l.w_discrete {
                             let cols = l
                                 .cols
                                 .as_ref()

@@ -17,7 +17,9 @@ use gxnor::cli::Command;
 use gxnor::coordinator::checkpoint;
 use gxnor::coordinator::method::Method;
 use gxnor::coordinator::optimizer::OptKind;
-use gxnor::coordinator::trainer::{evaluate_engine, NativeTrainer, TrainConfig, Trainer};
+use gxnor::coordinator::trainer::{
+    evaluate_engine, NativeTrainer, TrainBackend, TrainConfig, Trainer,
+};
 use gxnor::hwsim::report as hwreport;
 use gxnor::runtime::client::Runtime;
 use gxnor::runtime::exec::{EngineKind, ExecEngine};
@@ -105,35 +107,37 @@ fn parse_train_cfg(a: &gxnor::cli::Args) -> Result<TrainConfig> {
             _ => file_cfg.str(key, &a.opt_or(cli, def)),
         }
     };
-    let f = |cli: &str, key: &str, def: f64| -> f64 {
-        let cli_v = a.opt_f64(cli, def);
-        if (cli_v - def).abs() > 1e-12 {
+    // a malformed numeric value is an error naming the flag, never a
+    // silent fall-back to the default (`--epochs abc` used to train 3)
+    let f = |cli: &str, key: &str, def: f64| -> Result<f64> {
+        let cli_v = a.opt_f64(cli, def).map_err(|e| anyhow!(e))?;
+        Ok(if (cli_v - def).abs() > 1e-12 {
             cli_v
         } else {
             file_cfg.f64(key, cli_v)
-        }
+        })
     };
     Ok(TrainConfig {
         arch: s("arch", "train.arch", "mlp"),
         method: Method::parse(&s("method", "train.method", "gxnor")).map_err(|e| anyhow!(e))?,
         dataset: s("dataset", "train.dataset", "synth_mnist"),
-        train_len: f("train-len", "train.train_len", 4000.0) as usize,
-        test_len: f("test-len", "train.test_len", 1000.0) as usize,
-        epochs: f("epochs", "train.epochs", 5.0) as usize,
-        seed: f("seed", "train.seed", 42.0) as u64,
-        r: f("r", "train.r", 0.5) as f32,
-        a: f("a", "train.a", 0.5) as f32,
-        m: f("m", "train.m", 3.0) as f32,
-        lr_start: f("lr-start", "train.lr_start", 0.02),
-        lr_fin: f("lr-fin", "train.lr_fin", 0.001),
+        train_len: f("train-len", "train.train_len", 4000.0)? as usize,
+        test_len: f("test-len", "train.test_len", 1000.0)? as usize,
+        epochs: f("epochs", "train.epochs", 5.0)? as usize,
+        seed: f("seed", "train.seed", 42.0)? as u64,
+        r: f("r", "train.r", 0.5)? as f32,
+        a: f("a", "train.a", 0.5)? as f32,
+        m: f("m", "train.m", 3.0)? as f32,
+        lr_start: f("lr-start", "train.lr_start", 0.02)?,
+        lr_fin: f("lr-fin", "train.lr_fin", 0.001)?,
         opt: OptKind::parse(&s("opt", "train.opt", "adam")).map_err(|e| anyhow!(e))?,
         update_rule: gxnor::coordinator::UpdateRule::parse(&s("update", "train.update", "dst"))
             .map_err(|e| anyhow!(e))?,
         augment: a.flag("augment") || file_cfg.bool("train.augment", false),
         dense_lr_scale: file_cfg.f64("train.dense_lr_scale", 0.5),
         engine: EngineKind::parse(&s("engine", "train.engine", "xla")).map_err(|e| anyhow!(e))?,
-        threads: f("threads", "train.threads", 0.0) as usize,
-        batch: f("batch", "train.batch", 0.0) as usize,
+        threads: f("threads", "train.threads", 0.0)? as usize,
+        batch: f("batch", "train.batch", 0.0)? as usize,
         verbose: !a.flag("quiet"),
     })
 }
@@ -247,9 +251,9 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
     let arch = a.opt_or("arch", "mlp");
     let method = Method::parse(&a.opt_or("method", "gxnor")).map_err(|e| anyhow!(e))?;
     let dataset = a.opt_or("dataset", "synth_mnist");
-    let test_len = a.opt_usize("test-len", 1000);
-    let r = a.opt_f32("r", 0.5);
-    let threads = a.opt_usize("threads", 0);
+    let test_len = a.opt_usize("test-len", 1000).map_err(|e| anyhow!(e))?;
+    let r = a.opt_f32("r", 0.5).map_err(|e| anyhow!(e))?;
+    let threads = a.opt_usize("threads", 0).map_err(|e| anyhow!(e))?;
     let ckpt = a.opt("ckpt").unwrap();
     let test = gxnor::data::open(&dataset, false, test_len).map_err(|e| anyhow!(e))?;
     println!("engine       : {}", engine.name());
@@ -307,7 +311,7 @@ fn sweep_cmd() -> Command {
         .opt("test-len", "800", "test split size")
         .opt("dataset", "synth_mnist", "dataset")
         .opt("seed", "42", "RNG seed")
-        .opt("engine", "xla", "evaluation engine: xla | native")
+        .opt("engine", "xla", "sweep engine: xla (PJRT graphs) | native (device-free, all grids)")
         .opt("threads", "0", "native-engine worker threads (0 = auto)")
         .opt("artifacts", "artifacts", "artifact directory")
         .opt("csv", "", "write results CSV to this path")
@@ -315,42 +319,79 @@ fn sweep_cmd() -> Command {
 
 fn cmd_sweep(argv: &[String]) -> Result<()> {
     let a = sweep_cmd().parse(argv).map_err(|e| anyhow!(e))?;
-    let manifest = Manifest::load(&a.opt_or("artifacts", "artifacts")).map_err(|e| anyhow!(e))?;
-    let mut rt = Runtime::new()?;
+    let engine = EngineKind::parse(&a.opt_or("engine", "xla")).map_err(|e| anyhow!(e))?;
+    let art = a.opt_or("artifacts", "artifacts");
     let base = TrainConfig {
-        epochs: a.opt_usize("epochs", 3),
-        train_len: a.opt_usize("train-len", 3000),
-        test_len: a.opt_usize("test-len", 800),
+        epochs: a.opt_usize("epochs", 3).map_err(|e| anyhow!(e))?,
+        train_len: a.opt_usize("train-len", 3000).map_err(|e| anyhow!(e))?,
+        test_len: a.opt_usize("test-len", 800).map_err(|e| anyhow!(e))?,
         dataset: a.opt_or("dataset", "synth_mnist"),
-        seed: a.opt_u64("seed", 42),
-        engine: EngineKind::parse(&a.opt_or("engine", "xla")).map_err(|e| anyhow!(e))?,
-        threads: a.opt_usize("threads", 0),
+        seed: a.opt_u64("seed", 42).map_err(|e| anyhow!(e))?,
+        engine,
+        threads: a.opt_usize("threads", 0).map_err(|e| anyhow!(e))?,
         verbose: false,
         ..Default::default()
     };
+    // the `--engine` dispatch: the native branch is fully device-free —
+    // no PJRT client is ever constructed, and the manifest (when present)
+    // only contributes shapes and batch size
+    let manifest_opt: Option<Manifest>;
+    let mut rt_slot: Option<Runtime> = None;
+    let mut backend = match engine {
+        EngineKind::Native => {
+            manifest_opt = Manifest::load(&art).ok();
+            println!(
+                "engine=native{}",
+                if manifest_opt.is_some() { "" } else { " (no artifacts: catalogue shapes)" }
+            );
+            TrainBackend::Native { manifest: manifest_opt.as_ref() }
+        }
+        EngineKind::Xla => {
+            manifest_opt = Some(Manifest::load(&art).map_err(|e| anyhow!(e))?);
+            rt_slot = Some(Runtime::new()?);
+            let rt = rt_slot.as_mut().unwrap();
+            println!("engine=xla platform={}", rt.platform());
+            TrainBackend::Xla { rt, manifest: manifest_opt.as_ref().unwrap() }
+        }
+    };
     let param = a.opt_or("param", "m");
+    // --grid/--values declare "" as their CLI default, and declared
+    // defaults are seeded into the parsed options — so "present but
+    // empty" means "use the built-in default", not "parse the empty
+    // string" (which used to abort `gxnor sweep --param levels`)
+    let or_default = |name: &str, def: &str| -> String {
+        match a.opt(name) {
+            Some(v) if !v.is_empty() => v.to_string(),
+            _ => def.to_string(),
+        }
+    };
     let points = if param == "levels" {
-        let grid_s = a.opt_or("grid", "0,0;1,1;2,2;3,3;6,4");
+        let grid_s = or_default("grid", "0,0;1,1;2,2;3,3;6,4");
         let grid: Vec<(u32, u32)> = grid_s
             .split(';')
             .map(|p| {
                 let (x, y) = p.split_once(',').ok_or_else(|| anyhow!("bad grid point {p:?}"))?;
-                Ok((x.trim().parse()?, y.trim().parse()?))
+                let (n1, n2): (u32, u32) = (x.trim().parse()?, y.trim().parse()?);
+                if n1 > 15 || n2 > 15 {
+                    // DiscreteSpace::new asserts N <= 15: fail the whole
+                    // sweep up front instead of panicking mid-grid
+                    return Err(anyhow!("grid point {p:?}: N1/N2 must be <= 15"));
+                }
+                Ok((n1, n2))
             })
             .collect::<Result<_>>()?;
-        sweep::sweep_levels(&mut rt, &manifest, &base, &grid)?
+        sweep::sweep_levels(&mut backend, &base, &grid)?
     } else {
         let default_vals = match param.as_str() {
             "m" => "0.5,1,2,3,5,10",
             "a" => "0.1,0.25,0.5,1.0,2.0",
             _ => "0.05,0.2,0.5,0.8,0.95",
         };
-        let vals: Vec<f64> = a
-            .opt_or("values", default_vals)
+        let vals: Vec<f64> = or_default("values", default_vals)
             .split(',')
             .map(|s| s.trim().parse::<f64>())
             .collect::<Result<_, _>>()?;
-        sweep::sweep_scalar(&mut rt, &manifest, &base, &param, &vals)?
+        sweep::sweep_scalar(&mut backend, &base, &param, &vals)?
     };
     print!("{}", sweep::render_table(&format!("sweep {param}"), &points));
     if let Some(bp) = sweep::best(&points) {
@@ -358,14 +399,7 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
     }
     let csv = a.opt_or("csv", "");
     if !csv.is_empty() {
-        let mut s = String::from("label,value,test_acc,act_sparsity,w_zero_frac\n");
-        for p in &points {
-            s.push_str(&format!(
-                "{},{},{},{},{}\n",
-                p.label, p.value, p.test_acc, p.act_sparsity, p.weight_zero_fraction
-            ));
-        }
-        std::fs::write(&csv, s)?;
+        std::fs::write(&csv, sweep::render_csv(&points))?;
         println!("wrote {csv}");
     }
     Ok(())
@@ -381,8 +415,16 @@ fn hwsim_cmd() -> Command {
 
 fn cmd_hwsim(argv: &[String]) -> Result<()> {
     let a = hwsim_cmd().parse(argv).map_err(|e| anyhow!(e))?;
-    println!("{}", hwreport::table2(a.opt_u64("m", 100), a.opt_f64("pw0", 1.0 / 3.0), a.opt_f64("px0", 1.0 / 3.0)));
-    let (nominal, mean) = hwreport::fig12_example(a.opt_usize("trials", 10000), 7);
+    println!(
+        "{}",
+        hwreport::table2(
+            a.opt_u64("m", 100).map_err(|e| anyhow!(e))?,
+            a.opt_f64("pw0", 1.0 / 3.0).map_err(|e| anyhow!(e))?,
+            a.opt_f64("px0", 1.0 / 3.0).map_err(|e| anyhow!(e))?,
+        )
+    );
+    let (nominal, mean) =
+        hwreport::fig12_example(a.opt_usize("trials", 10000).map_err(|e| anyhow!(e))?, 7);
     println!(
         "Fig. 12 example: {nominal} nominal XNOR ops -> {mean:.2} active on average \
          (paper: 21 -> 9)"

@@ -1,15 +1,15 @@
 //! Parameter-sweep harness for the paper's ablation figures:
 //! Fig. 8 (m), Fig. 9 (a), Fig. 10 (r -> activation sparsity),
-//! Fig. 13 (N1 x N2 grid). Each point is a short training run on the MLP
-//! graphs; r/a/hl are runtime scalars, so every point reuses the same
-//! compiled executable.
+//! Fig. 13 (N1 x N2 grid). Each point is a short training run; r/a/hl are
+//! runtime scalars, so on the XLA backend every point reuses the same
+//! compiled executable, while the native backend runs every point — the
+//! full (N1, N2) grid included — with no manifest and no PJRT client
+//! ([`TrainBackend`] / `run_training_any`).
 
 use anyhow::Result;
 
 use crate::coordinator::method::Method;
-use crate::coordinator::trainer::{run_training, TrainConfig};
-use crate::runtime::client::Runtime;
-use crate::runtime::manifest::Manifest;
+use crate::coordinator::trainer::{run_training_any, TrainBackend, TrainConfig};
 
 /// Which hyper-parameter a sweep varies.
 #[derive(Clone, Debug, PartialEq)]
@@ -25,7 +25,12 @@ pub enum SweepParam {
 #[derive(Clone, Debug)]
 pub struct SweepPoint {
     pub label: String,
-    pub value: f64,
+    /// swept scalar value — `None` for (N1, N2) grid points, which carry
+    /// [`SweepPoint::levels`] instead (the old `n1·100 + n2` encoding
+    /// collided for N2 ≥ 100 and is gone)
+    pub value: Option<f64>,
+    /// the (N1, N2) pair of a levels-grid point
+    pub levels: Option<(u32, u32)>,
     pub test_acc: f64,
     pub act_sparsity: f64,
     pub weight_zero_fraction: f64,
@@ -33,8 +38,7 @@ pub struct SweepPoint {
 
 /// Run a 1-D sweep of `param` over `values` with a common base config.
 pub fn sweep_scalar(
-    rt: &mut Runtime,
-    manifest: &Manifest,
+    backend: &mut TrainBackend<'_>,
     base: &TrainConfig,
     param: &str,
     values: &[f64],
@@ -48,10 +52,11 @@ pub fn sweep_scalar(
             "r" => cfg.r = v as f32,
             other => anyhow::bail!("unknown sweep param {other:?} (m|a|r)"),
         }
-        let rep = run_training(rt, manifest, cfg)?;
+        let rep = run_training_any(backend, cfg)?;
         out.push(SweepPoint {
             label: format!("{param}={v}"),
-            value: v,
+            value: Some(v),
+            levels: None,
             test_acc: rep.test_acc,
             act_sparsity: rep.mean_act_sparsity,
             weight_zero_fraction: rep.weight_zero_fraction,
@@ -60,10 +65,11 @@ pub fn sweep_scalar(
     Ok(out)
 }
 
-/// Fig. 13: accuracy over the (N1, N2) grid.
+/// Fig. 13: accuracy over the (N1, N2) grid. On the native backend every
+/// point runs device-free — multi-level weight spaces and activations
+/// execute on the multi-bitplane kernels.
 pub fn sweep_levels(
-    rt: &mut Runtime,
-    manifest: &Manifest,
+    backend: &mut TrainBackend<'_>,
     base: &TrainConfig,
     grid: &[(u32, u32)],
 ) -> Result<Vec<SweepPoint>> {
@@ -71,10 +77,11 @@ pub fn sweep_levels(
     for &(n1, n2) in grid {
         let mut cfg = base.clone();
         cfg.method = Method::Multi { n1, n2 };
-        let rep = run_training(rt, manifest, cfg)?;
+        let rep = run_training_any(backend, cfg)?;
         out.push(SweepPoint {
             label: format!("N1={n1},N2={n2}"),
-            value: (n1 * 100 + n2) as f64,
+            value: None,
+            levels: Some((n1, n2)),
             test_acc: rep.test_acc,
             act_sparsity: rep.mean_act_sparsity,
             weight_zero_fraction: rep.weight_zero_fraction,
@@ -84,24 +91,69 @@ pub fn sweep_levels(
 }
 
 /// Render sweep points as an aligned text table (benches print this).
+/// Levels-grid points get explicit N1/N2 columns.
 pub fn render_table(title: &str, points: &[SweepPoint]) -> String {
     use std::fmt::Write as _;
+    let has_levels = points.iter().any(|p| p.levels.is_some());
     let mut s = String::new();
     let _ = writeln!(s, "== {title} ==");
-    let _ = writeln!(
-        s,
-        "{:<16} {:>10} {:>14} {:>14}",
-        "point", "test_acc", "act_sparsity", "w_zero_frac"
-    );
-    for p in points {
+    if has_levels {
         let _ = writeln!(
             s,
-            "{:<16} {:>9.2}% {:>14.3} {:>14.3}",
-            p.label,
-            100.0 * p.test_acc,
-            p.act_sparsity,
-            p.weight_zero_fraction
+            "{:<16} {:>4} {:>4} {:>10} {:>14} {:>14}",
+            "point", "N1", "N2", "test_acc", "act_sparsity", "w_zero_frac"
         );
+    } else {
+        let _ = writeln!(
+            s,
+            "{:<16} {:>10} {:>14} {:>14}",
+            "point", "test_acc", "act_sparsity", "w_zero_frac"
+        );
+    }
+    for p in points {
+        if has_levels {
+            let (n1, n2) = p
+                .levels
+                .map(|(a, b)| (a.to_string(), b.to_string()))
+                .unwrap_or_default();
+            let _ = writeln!(
+                s,
+                "{:<16} {:>4} {:>4} {:>9.2}% {:>14.3} {:>14.3}",
+                p.label,
+                n1,
+                n2,
+                100.0 * p.test_acc,
+                p.act_sparsity,
+                p.weight_zero_fraction
+            );
+        } else {
+            let _ = writeln!(
+                s,
+                "{:<16} {:>9.2}% {:>14.3} {:>14.3}",
+                p.label,
+                100.0 * p.test_acc,
+                p.act_sparsity,
+                p.weight_zero_fraction
+            );
+        }
+    }
+    s
+}
+
+/// One CSV line per point, `label,value,n1,n2,test_acc,act_sparsity,
+/// w_zero_frac` with empty fields where a column does not apply.
+pub fn render_csv(points: &[SweepPoint]) -> String {
+    let mut s = String::from("label,value,n1,n2,test_acc,act_sparsity,w_zero_frac\n");
+    for p in points {
+        let value = p.value.map(|v| v.to_string()).unwrap_or_default();
+        let (n1, n2) = p
+            .levels
+            .map(|(a, b)| (a.to_string(), b.to_string()))
+            .unwrap_or_default();
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{}\n",
+            p.label, value, n1, n2, p.test_acc, p.act_sparsity, p.weight_zero_fraction
+        ));
     }
     s
 }
@@ -116,11 +168,39 @@ pub fn best(points: &[SweepPoint]) -> Option<&SweepPoint> {
 mod tests {
     use super::*;
 
+    fn pt(label: &str, value: f64, acc: f64) -> SweepPoint {
+        SweepPoint {
+            label: label.into(),
+            value: Some(value),
+            levels: None,
+            test_acc: acc,
+            act_sparsity: 0.3,
+            weight_zero_fraction: 0.3,
+        }
+    }
+
     fn pts() -> Vec<SweepPoint> {
+        vec![pt("m=1", 1.0, 0.7), pt("m=3", 3.0, 0.9), pt("m=10", 10.0, 0.85)]
+    }
+
+    fn level_pts() -> Vec<SweepPoint> {
         vec![
-            SweepPoint { label: "m=1".into(), value: 1.0, test_acc: 0.7, act_sparsity: 0.3, weight_zero_fraction: 0.3 },
-            SweepPoint { label: "m=3".into(), value: 3.0, test_acc: 0.9, act_sparsity: 0.35, weight_zero_fraction: 0.31 },
-            SweepPoint { label: "m=10".into(), value: 10.0, test_acc: 0.85, act_sparsity: 0.4, weight_zero_fraction: 0.29 },
+            SweepPoint {
+                label: "N1=1,N2=1".into(),
+                value: None,
+                levels: Some((1, 1)),
+                test_acc: 0.8,
+                act_sparsity: 0.4,
+                weight_zero_fraction: 0.33,
+            },
+            SweepPoint {
+                label: "N1=6,N2=130".into(),
+                value: None,
+                levels: Some((6, 130)),
+                test_acc: 0.9,
+                act_sparsity: 0.1,
+                weight_zero_fraction: 0.2,
+            },
         ]
     }
 
@@ -136,5 +216,23 @@ mod tests {
         assert!(t.contains("fig8"));
         assert!(t.contains("m=1") && t.contains("m=3") && t.contains("m=10"));
         assert!(t.contains("90.00%"));
+    }
+
+    /// (N1, N2) are carried explicitly: no `n1·100 + n2` collision even
+    /// for N2 ≥ 100, and the table grows dedicated columns.
+    #[test]
+    fn levels_points_carry_n1_n2_explicitly() {
+        let pts = level_pts();
+        assert_eq!(pts[1].levels, Some((6, 130)));
+        assert_eq!(pts[1].value, None);
+        let t = render_table("fig13", &pts);
+        assert!(t.contains(" N1 ") && t.contains(" N2 "), "{t}");
+        assert!(t.contains("130"), "{t}");
+        let csv = render_csv(&pts);
+        assert!(csv.starts_with("label,value,n1,n2,"));
+        assert!(csv.contains("N1=6,N2=130,,6,130,0.9,"), "{csv}");
+        // scalar sweeps leave the level columns empty instead
+        let csv2 = render_csv(&pts());
+        assert!(csv2.contains("m=3,3,,,0.9,"), "{csv2}");
     }
 }

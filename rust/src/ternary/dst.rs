@@ -166,14 +166,15 @@ pub fn dst_update_with_uniforms(
 }
 
 /// DST applied **directly to the packed state storage** — the native
-/// training engine's update path. The weight tensor stays 2-bit (ternary)
-/// or 1-bit (binary) end to end: states stream through word-aligned
-/// chunks ([`PackedTensor::state_chunks_mut`]), each unpacked into a
-/// small per-chunk buffer, stepped with
-/// [`dst_update_with_uniforms`], and repacked — at no point does a
-/// full-tensor f32 weight copy exist (Remark 2, kept literal in the step
-/// loop). Layouts whose states straddle words (e.g. the 3-bit N=2 space)
-/// fall back to per-state access.
+/// training engine's update path. The weight tensor stays bit-packed
+/// (1-bit binary, 2-bit ternary, up to the 7-bit Z_6 layout) end to end:
+/// states stream through word-aligned chunks
+/// ([`PackedTensor::state_chunks_mut`], which aligns chunk boundaries to
+/// 64-state multiples so *every* bit width chunks cleanly, straddling
+/// layouts included), each unpacked into a small per-chunk buffer,
+/// stepped with [`dst_update_with_uniforms`], and repacked — at no point
+/// does a full-tensor f32 weight copy exist (Remark 2, kept literal in
+/// the step loop).
 ///
 /// Uniform consumption is identical to [`dst_update`] (one `fill_uniform_x4`
 /// over the whole tensor up front), so for the same RNG state the packed
@@ -202,50 +203,26 @@ pub fn dst_update_packed(
     } else {
         p.len().max(1)
     };
-    if let Some(chunks) = p.state_chunks_mut(chunk_states) {
-        let mut tasks = Vec::with_capacity(chunks.len());
-        let mut off = 0usize;
-        for chunk in chunks {
-            let len = chunk.len();
-            let dwc = &dw[off..off + len];
-            let uc = &u[off..off + len];
-            off += len;
-            tasks.push(move || {
-                let mut chunk = chunk;
-                let mut buf = vec![0.0f32; chunk.len()];
-                chunk.unpack_into(&mut buf);
-                let stats = dst_update_with_uniforms(&mut buf, dwc, uc, space, m);
-                chunk.repack_from(&buf);
-                stats
-            });
-        }
-        let mut total = DstStats::default();
-        for s in crate::util::pool::scope_map(tasks) {
-            total.merge(&s);
-        }
-        return total;
+    let chunks = p.state_chunks_mut(chunk_states);
+    let mut tasks = Vec::with_capacity(chunks.len());
+    let mut off = 0usize;
+    for chunk in chunks {
+        let len = chunk.len();
+        let dwc = &dw[off..off + len];
+        let uc = &u[off..off + len];
+        off += len;
+        tasks.push(move || {
+            let mut chunk = chunk;
+            let mut buf = vec![0.0f32; chunk.len()];
+            chunk.unpack_into(&mut buf);
+            let stats = dst_update_with_uniforms(&mut buf, dwc, uc, space, m);
+            chunk.repack_from(&buf);
+            stats
+        });
     }
-    // straddling layout: stream through a fixed-size window via get/set
     let mut total = DstStats::default();
-    let mut buf = [0.0f32; 64];
-    let mut start = 0usize;
-    while start < p.len() {
-        let len = 64.min(p.len() - start);
-        for (j, b) in buf[..len].iter_mut().enumerate() {
-            *b = p.get(start + j);
-        }
-        let stats = dst_update_with_uniforms(
-            &mut buf[..len],
-            &dw[start..start + len],
-            &u[start..start + len],
-            space,
-            m,
-        );
-        for (j, &b) in buf[..len].iter().enumerate() {
-            p.set(start + j, b);
-        }
-        total.merge(&stats);
-        start += len;
+    for s in crate::util::pool::scope_map(tasks) {
+        total.merge(&s);
     }
     total
 }
@@ -397,11 +374,20 @@ mod tests {
 
     /// The packed-domain update must be bit-identical to the f32 update
     /// under the same RNG state — same next states, same statistics —
-    /// including the parallel chunked path (large ternary tensors), the
-    /// binary layout, and the straddling-layout fallback (N=2, 3-bit).
+    /// including the parallel chunked path (large tensors, ternary *and*
+    /// the straddling 3-bit N=2 layout), the binary layout, and the
+    /// wider multi-level layouts (4-bit N=3, 7-bit N=6).
     #[test]
     fn packed_update_matches_f32_update() {
-        for (n, len) in [(1u32, 250_007usize), (0, 10_001), (1, 777), (2, 501)] {
+        for (n, len) in [
+            (1u32, 250_007usize),
+            (0, 10_001),
+            (1, 777),
+            (2, 501),
+            (2, 250_007),
+            (3, 2048),
+            (6, 777),
+        ] {
             let space = DiscreteSpace::new(n);
             let mut rng = Prng::new(100 + n as u64 + len as u64);
             let vals: Vec<f32> =

@@ -115,31 +115,34 @@ impl PackedTensor {
     }
 
     /// Split the tensor into word-aligned mutable state chunks of about
-    /// `chunk_states` states each (rounded up to whole u64 words; the last
-    /// chunk carries the remainder). Returns `None` when states straddle
-    /// word boundaries (bit widths that do not divide 64 — e.g. the 3-bit
-    /// N=2 layout), in which case callers fall back to per-state access.
+    /// `chunk_states` states each (the last chunk carries the remainder).
+    /// Works for **every** bit width, straddling layouts included: chunk
+    /// boundaries land on state indices that are multiples of 64, and 64
+    /// states of `b` bits occupy exactly `b` whole u64 words, so each
+    /// chunk owns its words outright and any in-chunk straddling stays
+    /// in-chunk.
     ///
     /// This is the packed-domain DST's streaming surface: each chunk can
     /// be unpacked into a small stack-sized buffer, stepped, and repacked
     /// by an independent worker, so the update never materializes a
     /// full-tensor f32 weight copy (the paper's Remark 2, kept literal in
     /// the training hot loop).
-    pub fn state_chunks_mut(&mut self, chunk_states: usize) -> Option<Vec<StateChunkMut<'_>>> {
-        if self.bits == 0 || 64 % self.bits != 0 {
-            return None;
+    pub fn state_chunks_mut(&mut self, chunk_states: usize) -> Vec<StateChunkMut<'_>> {
+        if self.len == 0 {
+            return Vec::new();
         }
-        let spw = (64 / self.bits) as usize; // states per word
-        let chunk_words = div_ceil(chunk_states.max(1), spw);
+        // round the chunk up to a multiple of 64 states = `bits` words
+        let block_states = div_ceil(chunk_states.max(1), 64) * 64;
+        let chunk_words = (block_states / 64) * self.bits as usize;
         let mut out = Vec::new();
         let mut remaining = self.len;
         for data in self.data.chunks_mut(chunk_words) {
-            let len = remaining.min(data.len() * spw);
+            let len = remaining.min(block_states);
             out.push(StateChunkMut { space: self.space, bits: self.bits, data, len });
             remaining -= len;
         }
         debug_assert_eq!(remaining, 0);
-        Some(out)
+        out
     }
 
     /// Histogram over state indices (sparsity/distribution diagnostics;
@@ -514,29 +517,34 @@ mod tests {
     }
 
     /// Chunked streaming access must see exactly the tensor's states, in
-    /// order, and chunk-local repacks must land in the right global slots.
+    /// order, and chunk-local repacks must land in the right global slots
+    /// — for **every** bit width, including the straddling 3-bit (N=2)
+    /// and 7-bit (N=6) layouts, which chunk on 64-state boundaries.
     #[test]
     fn state_chunks_roundtrip_and_mutate() {
-        for n in [0u32, 1, 2] {
+        for n in [0u32, 1, 2, 3, 6] {
             let space = DiscreteSpace::new(n);
             let len = 300usize; // straddles several words for every width
             let vals = random_grid(space, len, 70 + n as u64);
             let mut p = PackedTensor::pack(&vals, &[len], space);
             let chunks = p.state_chunks_mut(70);
-            if space.bits_per_state() == 3 {
-                // N=2 states straddle words: chunking must refuse
-                assert!(chunks.is_none());
-                continue;
-            }
             let mut seen = Vec::new();
-            for mut c in chunks.unwrap() {
+            let mut lens = Vec::new();
+            for mut c in chunks {
                 let mut buf = vec![0.0f32; c.len()];
                 c.unpack_into(&mut buf);
                 // write back a mutated copy: every state hops to state 0
                 let mutated = vec![space.state(0); c.len()];
                 c.repack_from(&mutated);
                 seen.extend_from_slice(&buf);
+                lens.push(c.len());
             }
+            // chunk boundaries land on 64-state multiples (word-aligned
+            // for any width); only the final chunk may be ragged
+            for &l in &lens[..lens.len() - 1] {
+                assert_eq!(l % 64, 0, "N={n}: interior chunk of {l} states");
+            }
+            assert_eq!(lens.iter().sum::<usize>(), len, "N={n}");
             assert_eq!(seen, vals, "N={n}: chunk walk differs from tensor");
             assert_eq!(p.unpack(), vec![space.state(0); len], "N={n}: repack misplaced");
         }

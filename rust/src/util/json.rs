@@ -94,7 +94,13 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literal: emitting `NaN` or
+                    // `inf` produces an unparsable document (TrainReport's
+                    // final_train_loss defaults to NaN and flows into the
+                    // bench output). Non-finite serializes as null.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -364,6 +370,24 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("\"abc").is_err());
+        // JSON has no NaN/Infinity literals — and we never emit them
+        assert!(Json::parse("NaN").is_err());
+        assert!(Json::parse("inf").is_err());
+    }
+
+    /// Non-finite numbers serialize as `null` (valid JSON) and round-trip
+    /// through the parser; finite neighbours are untouched.
+    #[test]
+    fn non_finite_numbers_serialize_as_null_and_roundtrip() {
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let doc = Json::obj(vec![("loss", Json::Num(v)), ("acc", Json::Num(0.5))]);
+            let text = doc.to_string();
+            assert_eq!(text, r#"{"loss":null,"acc":0.5}"#);
+            let back = Json::parse(&text).unwrap();
+            assert_eq!(back.get("loss"), Some(&Json::Null));
+            assert_eq!(back.get("acc").and_then(Json::as_f64), Some(0.5));
+        }
+        assert_eq!(Json::Num(1e300).to_string(), "1e300");
     }
 
     #[test]

@@ -286,9 +286,10 @@ fn fd_gradients_cnn() {
 /// packed model — for the packed-activation methods on both topologies.
 #[test]
 fn training_is_bit_identical_across_thread_counts() {
-    let cases: [(&str, Method); 3] = [
+    let cases: [(&str, Method); 4] = [
         ("mlp", Method::Gxnor),
         ("mlp", Method::Bnn),
+        ("mlp", Method::Multi { n1: 2, n2: 2 }),
         ("cnn_mnist", Method::Gxnor),
     ];
     for (arch, method) in cases {
@@ -478,11 +479,23 @@ fn native_gxnor_training_learns_synth_digits() {
     assert!(report.weight_zero_fraction > 0.0 && report.weight_zero_fraction < 1.0);
 }
 
-/// Every weight-space method the native trainer supports completes a
-/// short run; multi-level weight spaces are cleanly rejected.
+/// Every method the native trainer supports — including the multi-level
+/// `multi:N1,N2` spaces of Fig. 13, on the multi-bitplane kernels —
+/// completes a short run with a finite loss and no f32 weight mirrors.
 #[test]
 fn native_trainer_method_coverage() {
-    for method in [Method::Gxnor, Method::Bnn, Method::Twn, Method::Bwn, Method::Fp] {
+    for method in [
+        Method::Gxnor,
+        Method::Bnn,
+        Method::Twn,
+        Method::Bwn,
+        Method::Fp,
+        Method::Multi { n1: 2, n2: 2 },
+        Method::Multi { n1: 3, n2: 2 },
+        Method::Multi { n1: 0, n2: 2 },
+        Method::Multi { n1: 1, n2: 0 }, // hl = 0.5: single-window quant_bwd
+        Method::Multi { n1: 6, n2: 4 },
+    ] {
         let (descs, names, lens) = mlp_descs(16);
         let mut cfg = base_cfg(method, 2, 9);
         cfg.train_len = 48;
@@ -499,12 +512,11 @@ fn native_trainer_method_coverage() {
         let report = tr.run(train.as_ref(), test.as_ref()).unwrap();
         assert!(report.final_train_loss.is_finite(), "{:?}", method);
         assert!((0.0..=1.0).contains(&report.test_acc), "{:?}", method);
+        // Remark 2 holds for every state count, not just ternary
+        assert_eq!(report.weight_f32_mirror_bytes, 0, "{:?}", method);
+        assert_eq!(report.hidden_fp32_bytes, 0, "{:?}", method);
     }
-    // multi-level weights need the XLA path — clean error, not a panic
-    let (descs, names, lens) = mlp_descs(16);
-    let cfg = base_cfg(Method::Multi { n1: 3, n2: 2 }, 1, 9);
-    assert!(NativeTrainer::from_descs(cfg, descs, names, &lens, 8, 10).is_err());
-    // so does the hidden-weight baseline
+    // the hidden-weight baseline keeps fp masters — clean error, not a panic
     let (descs, names, lens) = mlp_descs(16);
     let mut cfg = base_cfg(Method::Gxnor, 1, 9);
     cfg.update_rule = gxnor::coordinator::UpdateRule::Hidden;
