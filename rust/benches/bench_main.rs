@@ -15,6 +15,14 @@
 //! | fig10   | Fig. 10 — activation sparsity vs accuracy                 |
 //! | fig13   | Fig. 13 — (N1, N2) discrete-space grid                    |
 //! | perf    | §Perf — DST throughput, packing, exec latency, data rate  |
+//! | kernels | bitplane lane micro-benches → BENCH_kernels.json          |
+//!
+//! The `kernels` section is the perf-regression harness: fixed
+//! invocation/iteration counts with a warmup discard, a 1/4/8 lane-width
+//! sweep of every hot bitplane kernel, and a compare mode —
+//! `cargo bench -- kernels --baseline <BENCH_kernels.json> [--threshold 0.10]`
+//! — that diffs per-kernel ns/iter against a previous run and exits
+//! nonzero when any kernel regresses past the threshold.
 //!
 //! Budgets are sized for ~minutes, not paper-scale epochs: the claims
 //! checked are *orderings and shapes*, recorded in EXPERIMENTS.md.
@@ -26,7 +34,8 @@ use gxnor::coordinator::trainer::{
     evaluate_engine, run_training, TrainBackend, TrainConfig, Trainer,
 };
 use gxnor::data::Dataset;
-use gxnor::engine::bitplane::GateStats;
+use gxnor::engine::backward;
+use gxnor::engine::bitplane::{self, BitplaneCols, GateStats, PackScratch, PlaneSpec};
 use gxnor::engine::NativeEngine;
 use gxnor::hwsim::report::{fig12_example, table2};
 use gxnor::metrics::Recorder;
@@ -35,15 +44,39 @@ use gxnor::runtime::exec::ExecEngine as _;
 use gxnor::runtime::manifest::Manifest;
 use gxnor::sweep;
 use gxnor::ternary::{dst_update, DiscreteSpace, PackedTensor};
-use gxnor::util::json::Json;
+use gxnor::util::json::{self, Json};
 use gxnor::util::prng::Prng;
 use gxnor::util::timer::{percentile, time_iters};
 
 fn main() -> anyhow::Result<()> {
-    let filters: Vec<String> = std::env::args()
-        .skip(1)
-        .filter(|a| !a.starts_with("--"))
-        .collect();
+    // explicit arg walk: `--baseline <json>` / `--threshold <frac>` consume
+    // a value (and accept `--flag=value`); any other `--flag` (cargo passes
+    // some through) is ignored; bare words are section filters. A plain
+    // `filter(|a| !a.starts_with("--"))` would misread a baseline path as a
+    // section filter, so the loop owns the cursor.
+    let mut filters: Vec<String> = Vec::new();
+    let mut baseline: Option<String> = None;
+    let mut threshold = 0.10f64;
+    let mut argv = std::env::args().skip(1);
+    while let Some(a) = argv.next() {
+        if let Some(v) = a.strip_prefix("--baseline=") {
+            baseline = Some(v.to_string());
+        } else if a == "--baseline" {
+            baseline = Some(
+                argv.next()
+                    .ok_or_else(|| anyhow::anyhow!("--baseline needs a BENCH_kernels.json path"))?,
+            );
+        } else if let Some(v) = a.strip_prefix("--threshold=") {
+            threshold = v.parse().map_err(|e| anyhow::anyhow!("--threshold: {e}"))?;
+        } else if a == "--threshold" {
+            let v = argv
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("--threshold needs a fraction, e.g. 0.10"))?;
+            threshold = v.parse().map_err(|e| anyhow::anyhow!("--threshold: {e}"))?;
+        } else if !a.starts_with("--") {
+            filters.push(a);
+        }
+    }
     let want = |name: &str| filters.is_empty() || filters.iter().any(|f| f == name);
 
     // artifacts and a PJRT backend gate the XLA-graph sections; the
@@ -76,6 +109,9 @@ fn main() -> anyhow::Result<()> {
             (Some(rt), Some(m)) => f(rt, m)?,
             _ => println!("skipping {name}: needs artifacts + a PJRT backend\n"),
         }
+    }
+    if want("kernels") {
+        bench_kernels(baseline.as_deref(), threshold)?;
     }
     if want("perf") {
         bench_perf(rt.as_mut(), manifest.as_ref())?;
@@ -560,6 +596,7 @@ fn bench_infer(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> {
     native_obj.push(("resting_fraction".into(), Json::Num(gate.resting_rate())));
     let doc = Json::Obj(vec![
         ("schema".into(), Json::Str("bench_infer.v2".into())),
+        ("provenance".into(), json::provenance(gxnor::engine::bitplane::LANE_WORDS)),
         ("graph".into(), Json::Str(graph)),
         ("batch".into(), Json::Num(batch as f64)),
         ("samples".into(), Json::Num(n)),
@@ -989,6 +1026,7 @@ fn write_bench_step(xla: Option<Json>, native: &NativeStepBench) -> anyhow::Resu
     ]);
     let doc = Json::Obj(vec![
         ("schema".into(), Json::Str("bench_step.v2".into())),
+        ("provenance".into(), json::provenance(gxnor::engine::bitplane::LANE_WORDS)),
         ("xla".into(), xla.unwrap_or(Json::Null)),
         ("native".into(), native_obj),
         (
@@ -1006,5 +1044,383 @@ fn write_bench_step(xla: Option<Json>, native: &NativeStepBench) -> anyhow::Resu
         std::fs::write("../BENCH_step.json", &text)?;
     }
     println!("wrote BENCH_step.json (schema v2)\n");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// kernels: bitplane lane micro-benchmarks + perf-regression harness
+// ---------------------------------------------------------------------------
+
+/// Kept measurement invocations per kernel (after warmup).
+const KERNEL_INVOCATIONS: usize = 5;
+/// Leading invocations discarded (first-touch, branch/µop caches).
+const KERNEL_WARMUP: usize = 1;
+
+/// One kernel's measurement: fixed iteration count, per-invocation mean.
+struct KernelResult {
+    name: &'static str,
+    shape: String,
+    iters: usize,
+    /// mean ns per iteration over the kept invocations
+    ns_per_iter: f64,
+    /// best (minimum) kept invocation — the low-noise number
+    min_ns_per_iter: f64,
+    /// 64-bit plane words streamed per second at the mean rate
+    words_per_sec: f64,
+    /// deterministic output fingerprint; equality across lane widths is
+    /// the exactness contract measured, not assumed
+    checksum: f64,
+}
+
+/// Time `f` for `KERNEL_WARMUP + KERNEL_INVOCATIONS` invocations of
+/// `iters` calls each, discarding the warmup. `f` returns a checksum so
+/// the optimizer cannot dead-code the kernel; `black_box` pins it.
+fn run_kernel(
+    name: &'static str,
+    shape: String,
+    iters: usize,
+    words_per_iter: usize,
+    mut f: impl FnMut() -> f64,
+) -> KernelResult {
+    let mut kept: Vec<f64> = Vec::with_capacity(KERNEL_INVOCATIONS);
+    let mut checksum = 0.0f64;
+    for inv in 0..KERNEL_WARMUP + KERNEL_INVOCATIONS {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            // black_box pins every call's result; keeping the *last* value
+            // (identical every call — the kernels are deterministic) keeps
+            // the checksum independent of the iteration count, so groups
+            // benched at different budgets still compare bit-for-bit
+            checksum = std::hint::black_box(f());
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / iters.max(1) as f64;
+        if inv >= KERNEL_WARMUP {
+            kept.push(ns);
+        }
+    }
+    let mean = kept.iter().sum::<f64>() / kept.len() as f64;
+    let min = kept.iter().cloned().fold(f64::INFINITY, f64::min);
+    KernelResult {
+        name,
+        shape,
+        iters,
+        ns_per_iter: mean,
+        min_ns_per_iter: min,
+        words_per_sec: words_per_iter as f64 * 1e9 / mean.max(1e-9),
+        checksum,
+    }
+}
+
+/// The `kernels` bench section: a 1/4/8 lane-width sweep of the hot
+/// bitplane kernels (forward dot + GEMM, multi-bitplane GEMM, backward
+/// dX/dW, row packing) against their scalar baselines, written to
+/// `BENCH_kernels.json` (schema `bench_kernels.v1`, documented in the
+/// README). With `--baseline <json>` the run additionally diffs ns/iter
+/// per kernel against that file and returns an error (nonzero exit) when
+/// any kernel regresses past `threshold`.
+fn bench_kernels(baseline: Option<&str>, threshold: f64) -> anyhow::Result<()> {
+    println!("== kernels: bitplane lane micro-benchmarks (BENCH_kernels.json) ==");
+    println!(
+        "(fixed iterations x {KERNEL_INVOCATIONS} invocations, \
+         {KERNEL_WARMUP} warmup invocation discarded; lane width {} words)\n",
+        bitplane::LANE_WORDS
+    );
+    let mut rng = Prng::new(42);
+    let mut results: Vec<KernelResult> = Vec::new();
+    let tern = |rng: &mut Prng, len: usize| -> Vec<f32> {
+        (0..len).map(|_| rng.below(3) as f32 - 1.0).collect()
+    };
+
+    // --- gated_dot width sweep: a single long ternary dot ---
+    let m = 16_384usize;
+    let dwords = bitplane::words_for(m);
+    let stride = bitplane::words_stride(m);
+    let (av, wv) = (tern(&mut rng, m), tern(&mut rng, m));
+    let (mut a_s, mut a_z) = (vec![0u64; stride], vec![0u64; stride]);
+    let (mut w_s, mut w_z) = (vec![0u64; stride], vec![0u64; stride]);
+    bitplane::pack_row_into(&av, &mut a_s, &mut a_z);
+    bitplane::pack_row_into(&wv, &mut w_s, &mut w_z);
+    let dshape = format!("m={m}");
+    const DOT_ITERS: usize = 2000;
+    let dot_sum = |d: i64, act: u64| d as f64 + act as f64;
+    results.push(run_kernel("dot/scalar", dshape.clone(), DOT_ITERS, dwords, || {
+        let (d, act) = bitplane::gated_dot_scalar(&a_s, &a_z, &w_s, &w_z);
+        dot_sum(d, act)
+    }));
+    results.push(run_kernel("dot/lane1", dshape.clone(), DOT_ITERS, dwords, || {
+        let (d, act) = bitplane::gated_dot_lanes::<1>(&a_s, &a_z, &w_s, &w_z);
+        dot_sum(d, act)
+    }));
+    results.push(run_kernel("dot/lane4", dshape.clone(), DOT_ITERS, dwords, || {
+        let (d, act) = bitplane::gated_dot_lanes::<4>(&a_s, &a_z, &w_s, &w_z);
+        dot_sum(d, act)
+    }));
+    results.push(run_kernel("dot/lane8", dshape.clone(), DOT_ITERS, dwords, || {
+        let (d, act) = bitplane::gated_dot_lanes::<8>(&a_s, &a_z, &w_s, &w_z);
+        dot_sum(d, act)
+    }));
+
+    // --- packed GEMM width sweep (the forward hot path) ---
+    let (rows, gm, gn) = (32usize, 2048usize, 128usize);
+    let aw = tern(&mut rng, rows * gm);
+    let ww = tern(&mut rng, gm * gn);
+    let cols = BitplaneCols::pack_cols(&ww, gm, gn);
+    let mut pack = PackScratch::new();
+    pack.pack_rows(&aw, rows, gm);
+    let mut out = vec![0.0f32; rows * gn];
+    let gwords = rows * gn * bitplane::words_for(gm);
+    let gshape = format!("{rows}x{gm}x{gn}");
+    let out_sum = |o: &[f32]| o.iter().map(|&v| v as f64).sum::<f64>();
+    results.push(run_kernel("gemm/scalar_oracle", gshape.clone(), 2, gwords, || {
+        bitplane::scalar_gemm(&aw, rows, &ww, gm, gn, &mut out);
+        out_sum(&out)
+    }));
+    results.push(run_kernel("gemm/lane1", gshape.clone(), 20, gwords, || {
+        let mut stats = GateStats::default();
+        bitplane::gated_packed_rows_range_width::<1>(&pack, 0, rows, &cols, &mut out, &mut stats);
+        out_sum(&out)
+    }));
+    results.push(run_kernel("gemm/lane4", gshape.clone(), 20, gwords, || {
+        let mut stats = GateStats::default();
+        bitplane::gated_packed_rows_range_width::<4>(&pack, 0, rows, &cols, &mut out, &mut stats);
+        out_sum(&out)
+    }));
+    results.push(run_kernel("gemm/lane8", gshape.clone(), 20, gwords, || {
+        let mut stats = GateStats::default();
+        bitplane::gated_packed_rows_range_width::<8>(&pack, 0, rows, &cols, &mut out, &mut stats);
+        out_sum(&out)
+    }));
+
+    // --- multi-bitplane GEMM (Z_N operands, digit planes live) ---
+    let space = DiscreteSpace::new(2);
+    let states = space.states();
+    let aq: Vec<f32> = (0..rows * gm).map(|_| states[rng.below(states.len())]).collect();
+    let wq: Vec<f32> = (0..gm * gn).map(|_| states[rng.below(states.len())]).collect();
+    let colsq = BitplaneCols::pack_cols_space(&wq, gm, gn, space);
+    let mut packq = PackScratch::new();
+    packq.pack_rows_spec(&aq, rows, gm, PlaneSpec::for_space(space));
+    results.push(run_kernel("gemm_multi/lane8", gshape.clone(), 10, gwords, || {
+        let mut stats = GateStats::default();
+        bitplane::gated_packed_rows_range(&packq, 0, rows, &colsq, &mut out, &mut stats);
+        out_sum(&out)
+    }));
+
+    // --- backward dX = dY·Wᵀ-shape kernel vs its f64 oracle ---
+    let af: Vec<f32> = (0..rows * gm).map(|_| rng.normal_f32()).collect();
+    results.push(run_kernel("dx/packed", gshape.clone(), 10, gwords, || {
+        backward::f32_rows_times_tern_cols(&af, rows, &cols, &mut out);
+        out_sum(&out)
+    }));
+    results.push(run_kernel("dx/scalar_oracle", gshape.clone(), 2, gwords, || {
+        backward::f32_rows_times_tern_cols_oracle(&af, rows, &ww, gm, gn, &mut out);
+        out_sum(&out)
+    }));
+
+    // --- backward dW accumulation vs its scalar oracle ---
+    let dy: Vec<f32> = (0..rows * gn).map(|_| rng.normal_f32()).collect();
+    let pwords = pack.words();
+    let mut dwp = vec![0.0f64; pwords * 64 * gn];
+    let dw_sum = |d: &[f64], lanes: usize| d[..lanes * gn].iter().sum::<f64>();
+    results.push(run_kernel("dw/packed", gshape.clone(), 5, rows * dwords_of(gm), || {
+        dwp.iter_mut().for_each(|d| *d = 0.0);
+        backward::accum_dw_packed(&pack, rows, &dy, gn, 0, pwords, &mut dwp);
+        dw_sum(&dwp, gm)
+    }));
+    let mut dws = vec![0.0f64; gm * gn];
+    results.push(run_kernel("dw/scalar_oracle", gshape.clone(), 2, rows * dwords_of(gm), || {
+        dws.iter_mut().for_each(|d| *d = 0.0);
+        backward::accum_dw_scalar(&aw, rows, gm, &dy, gn, 0, gm, &mut dws);
+        dw_sum(&dws, gm)
+    }));
+
+    // --- row packing throughput (activation boundary cost) ---
+    let mut pack2 = PackScratch::new();
+    results.push(run_kernel("pack/rows", gshape.clone(), 50, rows * dwords_of(gm), || {
+        pack2.pack_rows(&aw, rows, gm);
+        let (s, _) = pack2.row(0);
+        s[0] as f64
+    }));
+
+    println!(
+        "{:<20} {:>14} {:>7} {:>14} {:>14} {:>12}",
+        "kernel", "shape", "iters", "ns/iter", "min ns/iter", "Gwords/s"
+    );
+    for r in &results {
+        println!(
+            "{:<20} {:>14} {:>7} {:>14.0} {:>14.0} {:>12.3}",
+            r.name,
+            r.shape,
+            r.iters,
+            r.ns_per_iter,
+            r.min_ns_per_iter,
+            r.words_per_sec / 1e9
+        );
+    }
+
+    // the exactness contract, measured: every lane width (and the scalar
+    // fallback) produced bit-identical outputs to its reference
+    let sum_of = |name: &str| {
+        results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.checksum.to_bits())
+            .expect("kernel result present")
+    };
+    let exact_groups: &[&[&str]] = &[
+        &["dot/scalar", "dot/lane1", "dot/lane4", "dot/lane8"],
+        &["gemm/scalar_oracle", "gemm/lane1", "gemm/lane4", "gemm/lane8"],
+        &["dx/packed", "dx/scalar_oracle"],
+        &["dw/packed", "dw/scalar_oracle"],
+    ];
+    let mut exact = true;
+    for group in exact_groups {
+        let want = sum_of(group[0]);
+        for name in &group[1..] {
+            if sum_of(name) != want {
+                exact = false;
+                println!("EXACTNESS VIOLATION: {} != {}", name, group[0]);
+            }
+        }
+    }
+    println!("\nlane outputs bit-identical to scalar references: {exact}");
+
+    let ns_of = |name: &str| {
+        results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.ns_per_iter)
+            .unwrap_or(f64::NAN)
+    };
+    let speedups = [
+        ("dot_lane8_vs_scalar", ns_of("dot/scalar") / ns_of("dot/lane8")),
+        ("dot_lane8_vs_lane1", ns_of("dot/lane1") / ns_of("dot/lane8")),
+        ("gemm_lane8_vs_lane1", ns_of("gemm/lane1") / ns_of("gemm/lane8")),
+        ("gemm_lane8_vs_scalar_oracle", ns_of("gemm/scalar_oracle") / ns_of("gemm/lane8")),
+        ("dx_packed_vs_oracle", ns_of("dx/scalar_oracle") / ns_of("dx/packed")),
+        ("dw_packed_vs_oracle", ns_of("dw/scalar_oracle") / ns_of("dw/packed")),
+    ];
+    for (k, v) in &speedups {
+        println!("  {k:<30} {v:.2}x");
+    }
+
+    let doc = Json::Obj(vec![
+        ("schema".into(), Json::Str("bench_kernels.v1".into())),
+        ("provenance".into(), json::provenance(bitplane::LANE_WORDS)),
+        (
+            "method".into(),
+            Json::obj(vec![
+                ("invocations", Json::num(KERNEL_INVOCATIONS as f64)),
+                ("warmup_invocations", Json::num(KERNEL_WARMUP as f64)),
+                (
+                    "timing",
+                    Json::str(
+                        "per-iteration mean over kept invocations; \
+                         min_ns_per_iter is the best kept invocation",
+                    ),
+                ),
+            ]),
+        ),
+        ("lane_outputs_exact".into(), Json::Bool(exact)),
+        (
+            "kernels".into(),
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("name", Json::str(r.name)),
+                            ("shape", Json::str(&r.shape)),
+                            ("iterations", Json::num(r.iters as f64)),
+                            ("ns_per_iter", Json::num(r.ns_per_iter)),
+                            ("min_ns_per_iter", Json::num(r.min_ns_per_iter)),
+                            ("words_per_sec", Json::num(r.words_per_sec)),
+                            ("checksum", Json::num(r.checksum)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "speedups".into(),
+            Json::Obj(speedups.iter().map(|(k, v)| (k.to_string(), Json::Num(*v))).collect()),
+        ),
+    ]);
+    let text = doc.to_string();
+    std::fs::write("BENCH_kernels.json", &text)?;
+    if std::path::Path::new("../ROADMAP.md").exists() {
+        std::fs::write("../BENCH_kernels.json", &text)?;
+    }
+    println!("\nwrote BENCH_kernels.json (schema bench_kernels.v1)\n");
+
+    if !exact {
+        anyhow::bail!("lane kernels diverged from their scalar references (see above)");
+    }
+    if let Some(path) = baseline {
+        compare_with_baseline(&results, path, threshold)?;
+    }
+    Ok(())
+}
+
+/// Logical (unpadded) plane words of an `m`-lane operand — the work unit
+/// the words/s rates are normalized by.
+fn dwords_of(m: usize) -> usize {
+    bitplane::words_for(m)
+}
+
+/// Compare this run's per-kernel `ns_per_iter` against a previous
+/// `BENCH_kernels.json`. Kernels missing from the baseline (or recorded
+/// as `null` — the checked-in placeholder) are skipped *visibly*; any
+/// kernel slower than `baseline · (1 + threshold)` is a regression and
+/// the function errors, turning into a nonzero process exit for CI.
+fn compare_with_baseline(
+    results: &[KernelResult],
+    path: &str,
+    threshold: f64,
+) -> anyhow::Result<()> {
+    println!("-- baseline compare: {path} (threshold {:.0}%) --", 100.0 * threshold);
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read baseline {path}: {e}"))?;
+    let base = Json::parse(&text).map_err(anyhow::Error::msg)?;
+    let kernels: &[Json] = base.get("kernels").and_then(Json::as_arr).unwrap_or(&[]);
+    let lookup = |name: &str| -> Option<f64> {
+        kernels
+            .iter()
+            .find(|k| k.get("name").and_then(Json::as_str) == Some(name))
+            .and_then(|k| k.get("ns_per_iter"))
+            .and_then(Json::as_f64)
+    };
+    let mut compared = 0usize;
+    let mut regressions: Vec<String> = Vec::new();
+    for r in results {
+        match lookup(r.name) {
+            Some(b) if b > 0.0 => {
+                compared += 1;
+                let delta = r.ns_per_iter / b - 1.0;
+                let verdict = if delta > threshold { "REGRESSION" } else { "ok" };
+                println!(
+                    "  {:<20} {:>12.0} -> {:>12.0} ns/iter  {:>+7.1}%  {verdict}",
+                    r.name,
+                    b,
+                    r.ns_per_iter,
+                    100.0 * delta
+                );
+                if delta > threshold {
+                    regressions.push(format!("{} {:+.1}%", r.name, 100.0 * delta));
+                }
+            }
+            _ => println!("  {:<20} no baseline measurement — skipped", r.name),
+        }
+    }
+    if compared == 0 {
+        println!("  (baseline holds no measured kernels — placeholder file; nothing compared)");
+    }
+    if !regressions.is_empty() {
+        anyhow::bail!(
+            "kernel perf regression past the {:.0}% threshold: {}",
+            100.0 * threshold,
+            regressions.join(", ")
+        );
+    }
+    println!("  no regressions past the threshold ({compared} kernels compared)\n");
     Ok(())
 }

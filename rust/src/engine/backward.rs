@@ -39,69 +39,118 @@
 //! channel-sharded form, and max-pool gradient routing with XLA's
 //! first-max tie order.
 
-use super::bitplane::{BitplaneCols, PackScratch};
+use super::bitplane::{BitplaneCols, PackScratch, LANE_WORDS};
 use super::ActMode;
 
 // ---------------------------------------------------------------------------
 // Ternary-operand GEMM kernels
 // ---------------------------------------------------------------------------
 
+/// One word of the gated signed sum: walk the set gate bits, ±accumulate
+/// the f32 values. Shared by the lane body and the scalar tail so every
+/// lane width accumulates in the identical ascending order.
+#[inline(always)]
+fn signed_sum_word(sw: u64, zw: u64, base: usize, f: &[f32], acc: &mut f64) {
+    let mut gate = zw;
+    while gate != 0 {
+        let b = gate.trailing_zeros() as usize;
+        let v = f[base + b] as f64;
+        if (sw >> b) & 1 == 1 {
+            *acc += v;
+        } else {
+            *acc -= v;
+        }
+        gate &= gate - 1;
+    }
+}
+
 /// Gated signed sum of one packed plane pair against an f32 vector:
 /// `Σ_lane ±f[lane]` over set lanes, +/− by the sign plane, f64
-/// accumulation in ascending lane order, whole words skipped when their
-/// nonzero plane is empty. Lanes past `f.len()` must be clear (packing
-/// guarantees it).
+/// accumulation in ascending lane order. The zero-skip gate runs at
+/// kernel-lane granularity (the backward twin of the forward lane skip):
+/// one OR across [`LANE_WORDS`] nonzero words rests the whole lane. Lanes
+/// past `f.len()` must be clear (packing guarantees it up to the padded
+/// stride). Delegates to [`gated_signed_sum_lanes`] at the shipped width.
 #[inline]
 pub fn gated_signed_sum(sign: &[u64], nz: &[u64], f: &[f32]) -> f64 {
+    gated_signed_sum_lanes::<LANE_WORDS>(sign, nz, f)
+}
+
+/// [`gated_signed_sum`] at an explicit lane width `L` — public for the
+/// bench harness's width sweep; every width is bit-identical (the f64
+/// adds happen in the same ascending lane order regardless of grouping).
+pub fn gated_signed_sum_lanes<const L: usize>(sign: &[u64], nz: &[u64], f: &[f32]) -> f64 {
+    let n = nz.len();
+    debug_assert!(sign.len() >= n);
     let mut acc = 0.0f64;
-    for (wi, (&sw, &zw)) in sign.iter().zip(nz).enumerate() {
-        let mut gate = zw;
-        if gate == 0 {
-            continue; // every unit in this word rests
+    let main = n - n % L.max(1);
+    let mut k = 0;
+    while k < main {
+        let mut lane_or = 0u64;
+        for i in 0..L {
+            lane_or |= nz[k + i];
         }
-        let base = wi * 64;
-        while gate != 0 {
-            let b = gate.trailing_zeros() as usize;
-            let v = f[base + b] as f64;
-            if (sw >> b) & 1 == 1 {
-                acc += v;
-            } else {
-                acc -= v;
+        if lane_or != 0 {
+            for w in k..k + L {
+                signed_sum_word(sign[w], nz[w], w * 64, f, &mut acc);
             }
-            gate &= gate - 1;
         }
+        k += L;
+    }
+    for w in main..n {
+        signed_sum_word(sign[w], nz[w], w * 64, f, &mut acc);
     }
     acc
+}
+
+/// One word of the multi-bitplane signed sum: gather the digit magnitude
+/// `q` per set lane, ±accumulate `q·f`.
+#[inline(always)]
+fn signed_sum_word_multi(sw: u64, zw: u64, mag: &[&[u64]], wi: usize, f: &[f32], acc: &mut f64) {
+    let base = wi * 64;
+    let mut gate = zw;
+    while gate != 0 {
+        let b = gate.trailing_zeros() as usize;
+        let mut q = 0u64;
+        for (p, m) in mag.iter().enumerate() {
+            q |= ((m[wi] >> b) & 1) << p;
+        }
+        let v = f[base + b] as f64 * q as f64;
+        if (sw >> b) & 1 == 1 {
+            *acc += v;
+        } else {
+            *acc -= v;
+        }
+        gate &= gate - 1;
+    }
 }
 
 /// [`gated_signed_sum`] for a multi-bitplane operand: per set lane the
 /// integer magnitude `q` is gathered from the digit planes and the f32
 /// value accumulates with weight `±q` (f64, ascending lane order; the
 /// caller applies the grid scale once at the end — exact, the scale is a
-/// power of two and commutes with every rounding).
+/// power of two and commutes with every rounding). Same lane-granular
+/// zero skip as the single-plane kernel.
 #[inline]
 fn gated_signed_sum_multi(sign: &[u64], nz: &[u64], mag: &[&[u64]], f: &[f32]) -> f64 {
+    let n = nz.len();
     let mut acc = 0.0f64;
-    for (wi, (&sw, &zw)) in sign.iter().zip(nz).enumerate() {
-        let mut gate = zw;
-        if gate == 0 {
-            continue; // every unit in this word rests
+    let main = n - n % LANE_WORDS;
+    let mut k = 0;
+    while k < main {
+        let mut lane_or = 0u64;
+        for i in 0..LANE_WORDS {
+            lane_or |= nz[k + i];
         }
-        let base = wi * 64;
-        while gate != 0 {
-            let b = gate.trailing_zeros() as usize;
-            let mut q = 0u64;
-            for (p, m) in mag.iter().enumerate() {
-                q |= ((m[wi] >> b) & 1) << p;
+        if lane_or != 0 {
+            for w in k..k + LANE_WORDS {
+                signed_sum_word_multi(sign[w], nz[w], mag, w, f, &mut acc);
             }
-            let v = f[base + b] as f64 * q as f64;
-            if (sw >> b) & 1 == 1 {
-                acc += v;
-            } else {
-                acc -= v;
-            }
-            gate &= gate - 1;
         }
+        k += LANE_WORDS;
+    }
+    for w in main..n {
+        signed_sum_word_multi(sign[w], nz[w], mag, w, f, &mut acc);
     }
     acc
 }
@@ -182,7 +231,9 @@ pub fn f32_rows_times_tern_cols_oracle(
 /// the caller's `dw` block (row-major over `hi_lane − lo_lane` rows of
 /// `n`, f64). Rows are walked in ascending global order; a worker owns
 /// its lane range outright, so sharding the word ranges across threads
-/// changes nothing about any accumulated value.
+/// changes nothing about any accumulated value. The zero skip runs over
+/// [`LANE_WORDS`]-word groups: a whole group of resting activation words
+/// is stepped over with one OR.
 pub fn accum_dw_packed(
     pack: &PackScratch,
     rows: usize,
@@ -202,27 +253,40 @@ pub fn accum_dw_packed(
     for r in 0..rows {
         let (s, z) = pack.row(r);
         let dyr = &dy[r * n..(r + 1) * n];
-        for wi in word_lo..hi {
-            let mut gate = z[wi];
-            if gate == 0 {
+        let mut w0 = word_lo;
+        while w0 < hi {
+            let w1 = (w0 + LANE_WORDS).min(hi);
+            let mut group_or = 0u64;
+            for w in w0..w1 {
+                group_or |= z[w];
+            }
+            if group_or == 0 {
+                w0 = w1;
                 continue;
             }
-            let sw = s[wi];
-            let base = wi * 64 - lane_lo;
-            while gate != 0 {
-                let b = gate.trailing_zeros() as usize;
-                let drow = &mut dw[(base + b) * n..(base + b) * n + n];
-                if (sw >> b) & 1 == 1 {
-                    for (d, &g) in drow.iter_mut().zip(dyr) {
-                        *d += g as f64;
-                    }
-                } else {
-                    for (d, &g) in drow.iter_mut().zip(dyr) {
-                        *d -= g as f64;
-                    }
+            for wi in w0..w1 {
+                let mut gate = z[wi];
+                if gate == 0 {
+                    continue;
                 }
-                gate &= gate - 1;
+                let sw = s[wi];
+                let base = wi * 64 - lane_lo;
+                while gate != 0 {
+                    let b = gate.trailing_zeros() as usize;
+                    let drow = &mut dw[(base + b) * n..(base + b) * n + n];
+                    if (sw >> b) & 1 == 1 {
+                        for (d, &g) in drow.iter_mut().zip(dyr) {
+                            *d += g as f64;
+                        }
+                    } else {
+                        for (d, &g) in drow.iter_mut().zip(dyr) {
+                            *d -= g as f64;
+                        }
+                    }
+                    gate &= gate - 1;
+                }
             }
+            w0 = w1;
         }
     }
 }
@@ -247,30 +311,43 @@ fn accum_dw_packed_multi(
         let (s, z) = pack.row(r);
         pack.fill_row_mag(r, &mut mags);
         let dyr = &dy[r * n..(r + 1) * n];
-        for wi in word_lo..word_hi {
-            let mut gate = z[wi];
-            if gate == 0 {
+        let mut w0 = word_lo;
+        while w0 < word_hi {
+            let w1 = (w0 + LANE_WORDS).min(word_hi);
+            let mut group_or = 0u64;
+            for w in w0..w1 {
+                group_or |= z[w];
+            }
+            if group_or == 0 {
+                w0 = w1;
                 continue;
             }
-            let sw = s[wi];
-            let base = wi * 64 - lane_lo;
-            while gate != 0 {
-                let b = gate.trailing_zeros() as usize;
-                let mut q = 0u64;
-                for (p, m) in mags.iter().enumerate() {
-                    q |= ((m[wi] >> b) & 1) << p;
+            for wi in w0..w1 {
+                let mut gate = z[wi];
+                if gate == 0 {
+                    continue;
                 }
-                let coef = if (sw >> b) & 1 == 1 {
-                    q as f64 * scale
-                } else {
-                    -(q as f64) * scale
-                };
-                let drow = &mut dw[(base + b) * n..(base + b) * n + n];
-                for (d, &g) in drow.iter_mut().zip(dyr) {
-                    *d += coef * g as f64;
+                let sw = s[wi];
+                let base = wi * 64 - lane_lo;
+                while gate != 0 {
+                    let b = gate.trailing_zeros() as usize;
+                    let mut q = 0u64;
+                    for (p, m) in mags.iter().enumerate() {
+                        q |= ((m[wi] >> b) & 1) << p;
+                    }
+                    let coef = if (sw >> b) & 1 == 1 {
+                        q as f64 * scale
+                    } else {
+                        -(q as f64) * scale
+                    };
+                    let drow = &mut dw[(base + b) * n..(base + b) * n + n];
+                    for (d, &g) in drow.iter_mut().zip(dyr) {
+                        *d += coef * g as f64;
+                    }
+                    gate &= gate - 1;
                 }
-                gate &= gate - 1;
             }
+            w0 = w1;
         }
     }
 }
@@ -621,13 +698,15 @@ mod tests {
         accum_dw_scalar(&x, rows, m, &dy, n, 0, m, &mut oracle);
         assert_eq!(whole, oracle);
 
-        // word-range sharding must reproduce the same values bit for bit
-        for split in [1usize, 2] {
+        // word-range sharding must reproduce the same values bit for bit;
+        // `words` is the lane-padded stride, so shards past the logical
+        // fan-in clamp both lane bounds (their words carry no gate bits)
+        for split in [1usize, 2, 3] {
             let mut sharded = vec![0.0f64; m * n];
             let mut w0 = 0;
             while w0 < words {
                 let w1 = (w0 + split).min(words);
-                let lane_lo = w0 * 64;
+                let lane_lo = (w0 * 64).min(m);
                 let lane_hi = (w1 * 64).min(m);
                 accum_dw_packed(
                     &pack,
@@ -641,6 +720,23 @@ mod tests {
                 w0 = w1;
             }
             assert_eq!(sharded, whole, "split={split}");
+        }
+    }
+
+    /// Satellite: the backward signed sum is lane-width invariant — every
+    /// width groups the same ascending f64 adds, so results are `==`.
+    #[test]
+    fn gated_signed_sum_is_lane_width_invariant() {
+        let mut rng = Prng::new(29);
+        for m in [1usize, 63, 64, 65, 200, 513] {
+            let t = random_ternary(&mut rng, m);
+            let f: Vec<f32> = (0..m).map(|_| rng.normal_f32()).collect();
+            let planes = BitplaneCols::pack_rows_of(&t, 1, m);
+            let (s, z) = planes.col(0);
+            let whole = gated_signed_sum(s, z, &f);
+            assert_eq!(whole.to_bits(), gated_signed_sum_lanes::<1>(s, z, &f).to_bits(), "m={m}");
+            assert_eq!(whole.to_bits(), gated_signed_sum_lanes::<4>(s, z, &f).to_bits(), "m={m}");
+            assert_eq!(whole.to_bits(), gated_signed_sum_lanes::<8>(s, z, &f).to_bits(), "m={m}");
         }
     }
 

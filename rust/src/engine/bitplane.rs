@@ -38,21 +38,56 @@
 //! a side's layout; every integer partial dot is exact, so multi-level
 //! results equal the f64 scalar oracle bit for bit (the scale factors are
 //! powers of two and commute with rounding).
+//!
+//! # SIMD-wide lanes
+//!
+//! The kernels walk [`LANE_WORDS`] u64 words (one 64-byte cache line) per
+//! iteration with unrolled popcounts and hoist the zero-skip gate to lane
+//! granularity: one OR across the lane's gate words decides whether the
+//! whole lane rests. To make those lane loads aligned and branch-free,
+//! every plane buffer lives in a 64-byte-aligned [`AlignedWords`] and
+//! every per-row / per-column stride is padded to a whole lane
+//! ([`words_stride`]); padding words are kept zero, so they gate off and
+//! contribute nothing to dots or [`GateStats`]. The lane width is a const
+//! generic on [`gated_dot_lanes`] / [`gated_packed_rows_range_width`]
+//! (the bench harness sweeps 1/4/8); all public entry points use
+//! `LANE_WORDS`. Every lane width produces bit-identical results — the
+//! dot stays an exact integer — and the optional `portable-simd` feature
+//! (nightly `std::simd`) dispatches the 8-word lane body through
+//! explicit SIMD with the same contract.
 
 use crate::ternary::DiscreteSpace;
+use crate::util::align::AlignedWords;
 
 /// u64 words needed to hold `m` lanes.
 pub const fn words_for(m: usize) -> usize {
     crate::util::div_ceil(m, 64)
 }
 
+/// u64 words per kernel lane: one 64-byte cache line, matching the
+/// alignment of every plane buffer (`util::align`).
+pub const LANE_WORDS: usize = crate::util::align::LINE_WORDS;
+
+/// Plane stride (in words) for `m` lanes: [`words_for`] rounded up to a
+/// whole kernel lane, so per-row / per-column plane slices start and end
+/// on cache-line boundaries. The padding words are always packed to zero
+/// (they gate off), which keeps dots, stats, and backward accumulations
+/// exactly what the logical `m` lanes dictate.
+pub const fn words_stride(m: usize) -> usize {
+    crate::util::div_ceil(words_for(m), LANE_WORDS) * LANE_WORDS
+}
+
 /// Pack grid values into sign/nonzero planes. Values must lie in
-/// {-1.0, 0.0, +1.0}; lanes past `vals.len()` are cleared (they gate off).
+/// {-1.0, 0.0, +1.0}. The destination slices are cleared in full — not
+/// just the `words_for(vals.len())` prefix — so every lane up to the
+/// caller's (lane-padded) stride gates off even when a reused scratch
+/// previously held a wider pack; lane-granular reads never see stale
+/// gate bits.
 pub fn pack_row_into(vals: &[f32], sign: &mut [u64], nz: &mut [u64]) {
     let words = words_for(vals.len());
     debug_assert!(sign.len() >= words && nz.len() >= words);
-    sign[..words].fill(0);
-    nz[..words].fill(0);
+    sign.fill(0);
+    nz.fill(0);
     for (i, &v) in vals.iter().enumerate() {
         debug_assert!(
             v == -1.0 || v == 0.0 || v == 1.0,
@@ -129,8 +164,9 @@ fn lane_magnitude(v: f32, inv_scale: f32, planes: usize) -> u64 {
 
 /// [`pack_row_into`]'s multi-plane twin: grid values of spacing
 /// `1/inv_scale` become sign/nonzero planes plus the digit planes of the
-/// integer magnitude `q = |v|·inv_scale`. Lanes past `vals.len()` are
-/// cleared in every plane.
+/// integer magnitude `q = |v|·inv_scale`. Like [`pack_row_into`], every
+/// destination slice is cleared in full, so all lanes up to the padded
+/// stride gate off.
 pub fn pack_row_multi_into(
     vals: &[f32],
     inv_scale: f32,
@@ -138,11 +174,10 @@ pub fn pack_row_multi_into(
     nz: &mut [u64],
     mag: &mut [&mut [u64]],
 ) {
-    let words = words_for(vals.len());
-    sign[..words].fill(0);
-    nz[..words].fill(0);
+    sign.fill(0);
+    nz.fill(0);
     for m in mag.iter_mut() {
-        m[..words].fill(0);
+        m.fill(0);
     }
     for (i, &v) in vals.iter().enumerate() {
         let q = lane_magnitude(v, inv_scale, mag.len());
@@ -173,24 +208,26 @@ pub fn pack_row_multi_into(
 /// backward pass streams for `dX = dY·Wᵀ`, where each output element
 /// walks one weight row across its output-channel lanes.
 pub struct BitplaneCols {
-    sign: Vec<u64>,
-    nz: Vec<u64>,
+    sign: AlignedWords,
+    nz: AlignedWords,
     /// magnitude digit planes (LSB first), each `words * n` like `sign`;
     /// empty for the binary/ternary layout where `nz` is the digit plane
-    mag: Vec<Vec<u64>>,
+    mag: Vec<AlignedWords>,
     /// grid spacing dz of the packed values (1.0 for binary/ternary)
     scale: f32,
     pub m: usize,
     pub n: usize,
+    /// plane stride per column: `words_stride(m)` — lane-padded, padding
+    /// words zero
     pub words: usize,
 }
 
 impl BitplaneCols {
     pub fn pack_cols(w: &[f32], m: usize, n: usize) -> Self {
         assert_eq!(w.len(), m * n, "weight matrix shape mismatch");
-        let words = words_for(m);
-        let mut sign = vec![0u64; words * n];
-        let mut nz = vec![0u64; words * n];
+        let words = words_stride(m);
+        let mut sign = AlignedWords::zeroed(words * n);
+        let mut nz = AlignedWords::zeroed(words * n);
         for i in 0..m {
             let wi = i / 64;
             let b = 1u64 << (i % 64);
@@ -219,11 +256,11 @@ impl BitplaneCols {
             return Self::pack_cols(w, m, n);
         }
         assert_eq!(w.len(), m * n, "weight matrix shape mismatch");
-        let words = words_for(m);
+        let words = words_stride(m);
         let mut cols = BitplaneCols {
-            sign: vec![0u64; words * n],
-            nz: vec![0u64; words * n],
-            mag: vec![vec![0u64; words * n]; spec.mag_planes as usize],
+            sign: AlignedWords::zeroed(words * n),
+            nz: AlignedWords::zeroed(words * n),
+            mag: vec![AlignedWords::zeroed(words * n); spec.mag_planes as usize],
             scale: spec.scale,
             m,
             n,
@@ -244,11 +281,11 @@ impl BitplaneCols {
             return Self::pack_rows_of(w, rows, lanes);
         }
         assert_eq!(w.len(), rows * lanes, "weight matrix shape mismatch");
-        let words = words_for(lanes);
+        let words = words_stride(lanes);
         let mut cols = BitplaneCols {
-            sign: vec![0u64; words * rows],
-            nz: vec![0u64; words * rows],
-            mag: vec![vec![0u64; words * rows]; spec.mag_planes as usize],
+            sign: AlignedWords::zeroed(words * rows),
+            nz: AlignedWords::zeroed(words * rows),
+            mag: vec![AlignedWords::zeroed(words * rows); spec.mag_planes as usize],
             scale: spec.scale,
             m: lanes,
             n: rows,
@@ -289,9 +326,9 @@ impl BitplaneCols {
     /// planes. This is the weight layout of the backward `dX` kernel.
     pub fn pack_rows_of(w: &[f32], rows: usize, lanes: usize) -> Self {
         assert_eq!(w.len(), rows * lanes, "weight matrix shape mismatch");
-        let words = words_for(lanes);
-        let mut sign = vec![0u64; words * rows];
-        let mut nz = vec![0u64; words * rows];
+        let words = words_stride(lanes);
+        let mut sign = AlignedWords::zeroed(words * rows);
+        let mut nz = AlignedWords::zeroed(words * rows);
         for i in 0..rows {
             let (lo, hi) = (i * words, (i + 1) * words);
             pack_row_into(&w[i * lanes..(i + 1) * lanes], &mut sign[lo..hi], &mut nz[lo..hi]);
@@ -307,11 +344,11 @@ impl BitplaneCols {
     pub fn pack_cols_from_packed(p: &crate::ternary::PackedTensor, m: usize, n: usize) -> Self {
         assert_eq!(p.len(), m * n, "packed tensor shape mismatch");
         let spec = PlaneSpec::for_space(p.space());
-        let words = words_for(m);
+        let words = words_stride(m);
         let mut cols = BitplaneCols {
-            sign: vec![0u64; words * n],
-            nz: vec![0u64; words * n],
-            mag: vec![vec![0u64; words * n]; spec.mag_planes as usize],
+            sign: AlignedWords::zeroed(words * n),
+            nz: AlignedWords::zeroed(words * n),
+            mag: vec![AlignedWords::zeroed(words * n); spec.mag_planes as usize],
             scale: spec.scale,
             m,
             n,
@@ -347,11 +384,11 @@ impl BitplaneCols {
     ) -> Self {
         assert_eq!(p.len(), rows * lanes, "packed tensor shape mismatch");
         let spec = PlaneSpec::for_space(p.space());
-        let words = words_for(lanes);
+        let words = words_stride(lanes);
         let mut cols = BitplaneCols {
-            sign: vec![0u64; words * rows],
-            nz: vec![0u64; words * rows],
-            mag: vec![vec![0u64; words * rows]; spec.mag_planes as usize],
+            sign: AlignedWords::zeroed(words * rows),
+            nz: AlignedWords::zeroed(words * rows),
+            mag: vec![AlignedWords::zeroed(words * rows); spec.mag_planes as usize],
             scale: spec.scale,
             m: lanes,
             n: rows,
@@ -379,7 +416,7 @@ impl BitplaneCols {
 
     /// Bytes held by the sign + nonzero (+ magnitude) planes.
     pub fn plane_bytes(&self) -> usize {
-        (self.sign.len() + self.nz.len() + self.mag.iter().map(Vec::len).sum::<usize>()) * 8
+        (self.sign.len() + self.nz.len() + self.mag.iter().map(|m| m.len()).sum::<usize>()) * 8
     }
 
     /// (sign, nonzero) planes of column `j`.
@@ -426,8 +463,72 @@ impl BitplaneCols {
 /// Gated-XNOR dot product of one packed row against one packed column.
 /// Returns `(dot, active)`: the exact integer Σ aᵢ·wᵢ and the number of
 /// XNOR ops that fired (lanes where both operands were non-zero).
+/// Delegates to [`gated_dot_lanes`] at the shipped lane width.
 #[inline]
 pub fn gated_dot(a_sign: &[u64], a_nz: &[u64], w_sign: &[u64], w_nz: &[u64]) -> (i64, u64) {
+    gated_dot_lanes::<LANE_WORDS>(a_sign, a_nz, w_sign, w_nz)
+}
+
+/// [`gated_dot`] at an explicit lane width `L` (u64 words per iteration):
+/// the lane body ORs the `L` gate words once — if the whole lane rests it
+/// is skipped outright — and otherwise runs `L` unrolled popcount steps
+/// with no per-word branch. Slices shorter than a lane multiple finish in
+/// a scalar tail. Every `L` produces the same exact integer dot; the
+/// width is public so the bench harness can sweep 1/4/8 and the tests can
+/// pin width-invariance. With the `portable-simd` feature the
+/// `L == LANE_WORDS` body dispatches through `std::simd`.
+#[inline]
+pub fn gated_dot_lanes<const L: usize>(
+    a_sign: &[u64],
+    a_nz: &[u64],
+    w_sign: &[u64],
+    w_nz: &[u64],
+) -> (i64, u64) {
+    #[cfg(feature = "portable-simd")]
+    {
+        if L == LANE_WORDS {
+            return simd::gated_dot_simd(a_sign, a_nz, w_sign, w_nz);
+        }
+    }
+    let n = w_sign.len();
+    debug_assert!(a_sign.len() >= n && a_nz.len() >= n && w_nz.len() >= n);
+    let mut pos = 0u64; // popcount of gated sign agreements, all lanes
+    let mut active = 0u64;
+    let main = n - n % L.max(1);
+    let mut k = 0;
+    while k < main {
+        let mut gates = [0u64; L];
+        let mut lane_or = 0u64;
+        for i in 0..L {
+            gates[i] = a_nz[k + i] & w_nz[k + i];
+            lane_or |= gates[i];
+        }
+        if lane_or != 0 {
+            for i in 0..L {
+                let agree = !(a_sign[k + i] ^ w_sign[k + i]) & gates[i];
+                pos += agree.count_ones() as u64;
+                active += gates[i].count_ones() as u64;
+            }
+        }
+        k += L;
+    }
+    while k < n {
+        let gate = a_nz[k] & w_nz[k];
+        if gate != 0 {
+            let agree = !(a_sign[k] ^ w_sign[k]) & gate;
+            pos += agree.count_ones() as u64;
+            active += gate.count_ones() as u64;
+        }
+        k += 1;
+    }
+    // Σ_words (2·pop(agree) − pop(gate)) = 2·pos − active, exactly
+    (2 * pos as i64 - active as i64, active)
+}
+
+/// The pre-lane word-at-a-time kernel, kept as the scalar fallback the
+/// lane widths are pinned against (tests) and the bench's scalar
+/// baseline. Identical contract to [`gated_dot`].
+pub fn gated_dot_scalar(a_sign: &[u64], a_nz: &[u64], w_sign: &[u64], w_nz: &[u64]) -> (i64, u64) {
     let mut dot = 0i64;
     let mut active = 0u64;
     for k in 0..w_sign.len() {
@@ -444,13 +545,101 @@ pub fn gated_dot(a_sign: &[u64], a_nz: &[u64], w_sign: &[u64], w_nz: &[u64]) -> 
     (dot, active)
 }
 
+/// `std::simd` lane body for the 8-word kernel (nightly-only, behind the
+/// off-by-default `portable-simd` feature). Same exact-integer contract:
+/// popcounts are still taken per word, so results are bit-identical to
+/// the scalar lane body.
+#[cfg(feature = "portable-simd")]
+mod simd {
+    use super::LANE_WORDS;
+    use std::simd::{num::SimdUint, u64x8};
+
+    pub(super) fn gated_dot_simd(
+        a_sign: &[u64],
+        a_nz: &[u64],
+        w_sign: &[u64],
+        w_nz: &[u64],
+    ) -> (i64, u64) {
+        let n = w_sign.len();
+        debug_assert!(a_sign.len() >= n && a_nz.len() >= n && w_nz.len() >= n);
+        let mut pos = 0u64;
+        let mut active = 0u64;
+        let main = n - n % LANE_WORDS;
+        let mut k = 0;
+        while k < main {
+            let gate = u64x8::from_slice(&a_nz[k..]) & u64x8::from_slice(&w_nz[k..]);
+            if gate.reduce_or() != 0 {
+                let agree =
+                    !(u64x8::from_slice(&a_sign[k..]) ^ u64x8::from_slice(&w_sign[k..])) & gate;
+                for (g, a) in gate.to_array().into_iter().zip(agree.to_array()) {
+                    active += g.count_ones() as u64;
+                    pos += a.count_ones() as u64;
+                }
+            }
+            k += LANE_WORDS;
+        }
+        while k < n {
+            let gate = a_nz[k] & w_nz[k];
+            if gate != 0 {
+                let agree = !(a_sign[k] ^ w_sign[k]) & gate;
+                pos += agree.count_ones() as u64;
+                active += gate.count_ones() as u64;
+            }
+            k += 1;
+        }
+        (2 * pos as i64 - active as i64, active)
+    }
+}
+
+/// One word of the multi-bitplane dot: union-gate check, digit-pair
+/// partial dots. Shared by the lane body and the scalar tail of
+/// [`gated_dot_planes_lanes`] so every width runs the identical
+/// per-word arithmetic.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn dot_planes_word(
+    k: usize,
+    a_sign: &[u64],
+    a_nz: &[u64],
+    a_mag: &[&[u64]],
+    w_sign: &[u64],
+    w_nz: &[u64],
+    w_mag: &[&[u64]],
+    dot: &mut i64,
+    active: &mut u64,
+) {
+    let gate = a_nz[k] & w_nz[k];
+    if gate == 0 {
+        // every unit in this word rests: no XNOR, no accumulate
+        return;
+    }
+    *active += gate.count_ones() as u64;
+    let agree = !(a_sign[k] ^ w_sign[k]);
+    for (p, ap) in a_mag.iter().enumerate() {
+        let apk = ap[k];
+        if apk == 0 {
+            continue;
+        }
+        for (q, wq) in w_mag.iter().enumerate() {
+            let g = apk & wq[k];
+            if g == 0 {
+                continue;
+            }
+            let fired = g.count_ones() as i64;
+            let pos = (agree & g).count_ones() as i64;
+            *dot += (2 * pos - fired) << (p + q);
+        }
+    }
+}
+
 /// [`gated_dot`] generalized to multi-bitplane operands: `a_mag`/`w_mag`
 /// are the magnitude digit-plane lists (LSB first; pass the nonzero plane
 /// alone for a binary/ternary side). Returns the exact integer
 /// `Σᵢ signᵢ·qa_i·qw_i` — the dot in units of `scale_a · scale_w` — plus
 /// the active (both-nonzero) lane count. Whole words rest on the union
 /// gate exactly like the ternary kernel; the digit-pair loop is the
-/// "short sum of word kernels" of the module docs.
+/// "short sum of word kernels" of the module docs. Delegates to
+/// [`gated_dot_planes_lanes`] at the shipped lane width.
 pub fn gated_dot_planes(
     a_sign: &[u64],
     a_nz: &[u64],
@@ -459,31 +648,40 @@ pub fn gated_dot_planes(
     w_nz: &[u64],
     w_mag: &[&[u64]],
 ) -> (i64, u64) {
+    gated_dot_planes_lanes::<LANE_WORDS>(a_sign, a_nz, a_mag, w_sign, w_nz, w_mag)
+}
+
+/// [`gated_dot_planes`] at an explicit lane width `L`: the union gate is
+/// OR'd across the lane's words once, skipping whole resting lanes before
+/// any digit-pair work; a scalar tail covers non-multiple slices. Every
+/// width yields the identical exact integer dot.
+pub fn gated_dot_planes_lanes<const L: usize>(
+    a_sign: &[u64],
+    a_nz: &[u64],
+    a_mag: &[&[u64]],
+    w_sign: &[u64],
+    w_nz: &[u64],
+    w_mag: &[&[u64]],
+) -> (i64, u64) {
+    let n = w_sign.len();
     let mut dot = 0i64;
     let mut active = 0u64;
-    for k in 0..w_sign.len() {
-        let gate = a_nz[k] & w_nz[k];
-        if gate == 0 {
-            // every unit in this word rests: no XNOR, no accumulate
-            continue;
+    let main = n - n % L.max(1);
+    let mut k0 = 0;
+    while k0 < main {
+        let mut lane_or = 0u64;
+        for i in 0..L {
+            lane_or |= a_nz[k0 + i] & w_nz[k0 + i];
         }
-        active += gate.count_ones() as u64;
-        let agree = !(a_sign[k] ^ w_sign[k]);
-        for (p, ap) in a_mag.iter().enumerate() {
-            let apk = ap[k];
-            if apk == 0 {
-                continue;
-            }
-            for (q, wq) in w_mag.iter().enumerate() {
-                let g = apk & wq[k];
-                if g == 0 {
-                    continue;
-                }
-                let fired = g.count_ones() as i64;
-                let pos = (agree & g).count_ones() as i64;
-                dot += (2 * pos - fired) << (p + q);
+        if lane_or != 0 {
+            for k in k0..k0 + L {
+                dot_planes_word(k, a_sign, a_nz, a_mag, w_sign, w_nz, w_mag, &mut dot, &mut active);
             }
         }
+        k0 += L;
+    }
+    for k in main..n {
+        dot_planes_word(k, a_sign, a_nz, a_mag, w_sign, w_nz, w_mag, &mut dot, &mut active);
     }
     (dot, active)
 }
@@ -549,11 +747,11 @@ impl GateStats {
 /// same tiled kernel, [`gated_packed_rows`].
 #[derive(Default)]
 pub struct PackScratch {
-    sign: Vec<u64>,
-    nz: Vec<u64>,
+    sign: AlignedWords,
+    nz: AlignedWords,
     /// magnitude digit planes (multi-bitplane layouts only); capacity is
     /// kept across `reset_spec` calls like the sign/nz planes
-    mag: Vec<Vec<u64>>,
+    mag: Vec<AlignedWords>,
     /// current layout: 0 digit planes = binary/ternary
     n_mag: u32,
     scale: f32,
@@ -578,33 +776,29 @@ impl PackScratch {
     /// multi-level engine's activation spaces). Capacity only ever grows,
     /// including the digit-plane pool.
     pub fn reset_spec(&mut self, rows: usize, m: usize, spec: PlaneSpec) {
-        self.words = words_for(m);
+        self.words = words_stride(m);
         self.rows = rows;
         self.n_mag = spec.mag_planes;
         self.scale = spec.scale;
         self.inv_scale = spec.inv_scale;
         let need = rows * self.words;
-        if self.sign.len() < need {
-            self.sign.resize(need, 0);
-            self.nz.resize(need, 0);
-        }
+        self.sign.ensure(need);
+        self.nz.ensure(need);
         while self.mag.len() < spec.mag_planes as usize {
-            self.mag.push(Vec::new());
+            self.mag.push(AlignedWords::new());
         }
         for plane in &mut self.mag[..spec.mag_planes as usize] {
-            if plane.len() < need {
-                plane.resize(need, 0);
-            }
+            plane.ensure(need);
         }
     }
 
     /// Pack one row of grid values onto the current layout's planes;
-    /// `vals` must have exactly the lane count `reset` was given (tail
-    /// lanes of the last word are cleared, so stale bits from a previous,
-    /// wider use cannot leak).
+    /// `vals` must have exactly the lane count `reset` was given (the
+    /// whole lane-padded row stride is cleared first, so stale bits from
+    /// a previous, wider use cannot leak into lane-granular reads).
     pub fn set_row(&mut self, row: usize, vals: &[f32]) {
         debug_assert!(row < self.rows);
-        debug_assert_eq!(words_for(vals.len()), self.words, "row width mismatch");
+        debug_assert_eq!(words_stride(vals.len()), self.words, "row width mismatch");
         let (lo, hi) = (row * self.words, (row + 1) * self.words);
         if self.n_mag == 0 {
             pack_row_into(vals, &mut self.sign[lo..hi], &mut self.nz[lo..hi]);
@@ -674,7 +868,9 @@ impl PackScratch {
         self.rows
     }
 
-    /// Plane words per row (current `reset` width).
+    /// Plane words per row: the lane-padded stride `words_stride(m)` of
+    /// the current `reset` width. Callers sharding *logical* fan-in words
+    /// should use `words_for(m)` — the padding words carry no gate bits.
     pub fn words(&self) -> usize {
         self.words
     }
@@ -728,7 +924,7 @@ impl PackRowsMut<'_> {
     /// local to this view and `vals` must match the scratch's lane width.
     pub fn set_row(&mut self, row: usize, vals: &[f32]) {
         debug_assert!(row < self.rows());
-        debug_assert_eq!(words_for(vals.len()), self.words, "row width mismatch");
+        debug_assert_eq!(words_stride(vals.len()), self.words, "row width mismatch");
         let (lo, hi) = (row * self.words, (row + 1) * self.words);
         if self.mag.is_empty() {
             pack_row_into(vals, &mut self.sign[lo..hi], &mut self.nz[lo..hi]);
@@ -789,6 +985,23 @@ pub fn gated_packed_rows_range(
     out: &mut [f32],
     stats: &mut GateStats,
 ) {
+    gated_packed_rows_range_width::<LANE_WORDS>(pack, r0, r1, cols, out, stats);
+}
+
+/// [`gated_packed_rows_range`] at an explicit kernel lane width `L` —
+/// the same tiled walk over [`gated_dot_lanes`] /
+/// [`gated_dot_planes_lanes`]. Public for the bench harness's 1/4/8
+/// width sweep and the width-invariance tests; outputs and `GateStats`
+/// tallies are bit-identical for every `L` (the innermost kernel counts
+/// fired ops once, as exact integers).
+pub fn gated_packed_rows_range_width<const L: usize>(
+    pack: &PackScratch,
+    r0: usize,
+    r1: usize,
+    cols: &BitplaneCols,
+    out: &mut [f32],
+    stats: &mut GateStats,
+) {
     let rows = r1 - r0;
     let n = cols.n;
     debug_assert!(r1 <= pack.rows);
@@ -831,9 +1044,9 @@ pub fn gated_packed_rows_range(
                 let (ws, wn) = cols.col(j);
                 let (dot, active) = if multi {
                     let wmag = &wplanes[(j - j0) * wstride..(j - j0 + 1) * wstride];
-                    gated_dot_planes(rs, rn, &amag, ws, wn, wmag)
+                    gated_dot_planes_lanes::<L>(rs, rn, &amag, ws, wn, wmag)
                 } else {
-                    gated_dot(rs, rn, ws, wn)
+                    gated_dot_lanes::<L>(rs, rn, ws, wn)
                 };
                 // exact: the integer dot times a power-of-two scale rounds
                 // exactly like the f64 scalar oracle's sum of products
@@ -992,9 +1205,172 @@ mod tests {
         let narrow = vec![0.0f32, 1.0, -1.0];
         pack.pack_rows(&narrow, 1, 3);
         assert_eq!(pack.rows(), 1);
+        assert_eq!(pack.words(), words_stride(3));
         let (sign, nz) = pack.row(0);
-        assert_eq!(sign, &[0b010u64]);
-        assert_eq!(nz, &[0b110u64]);
+        assert_eq!(sign[0], 0b010u64);
+        assert_eq!(nz[0], 0b110u64);
+        // the rest of the lane-padded row stride must be cleared, or
+        // lane-granular reads would see the wide pack's stale gate bits
+        assert!(sign[1..].iter().all(|&w| w == 0));
+        assert!(nz[1..].iter().all(|&w| w == 0));
+    }
+
+    /// Satellite: reusing a scratch after a pack with a *larger* stride
+    /// must clear every word up to the new row's aligned lane boundary —
+    /// `pack_row_into` clears the full stride, not just `words_for(m)`.
+    #[test]
+    fn pack_reuse_clears_tail_words_to_lane_boundary() {
+        let mut pack = PackScratch::new();
+        // 600 lanes: words_for = 10, stride = 2 lanes -> words 0..16 dirty
+        pack.pack_rows(&vec![1.0f32; 600], 1, 600);
+        // 3 lanes: stride = 1 lane; words 1..8 held stale all-ones gates
+        pack.pack_rows(&[1.0, -1.0, 0.0], 1, 3);
+        assert_eq!(pack.words(), LANE_WORDS);
+        let (sign, nz) = pack.row(0);
+        assert_eq!((sign[0], nz[0]), (0b001u64, 0b011u64));
+        assert!(sign[1..].iter().all(|&w| w == 0) && nz[1..].iter().all(|&w| w == 0));
+        // and the packed planes must act clean through the kernel
+        let w = vec![1.0f32, 1.0, 1.0];
+        let cols = BitplaneCols::pack_cols(&w, 3, 1);
+        let mut out = vec![0.0f32; 1];
+        let mut stats = GateStats::default();
+        gated_packed_rows(&pack, &cols, &mut out, &mut stats);
+        assert_eq!(out[0], 0.0); // +1 - 1 + 0
+        assert_eq!(stats.xnor, 2);
+        // multi-plane layout: same guarantee for the digit planes
+        let space = DiscreteSpace::new(2);
+        let spec = PlaneSpec::for_space(space);
+        pack.pack_rows_spec(&vec![1.0f32; 600], 1, 600, spec);
+        pack.pack_rows_spec(&[0.5, -1.0, 0.0], 1, 3, spec);
+        let (sign, nz) = pack.row(0);
+        assert!(sign[1..].iter().all(|&w| w == 0) && nz[1..].iter().all(|&w| w == 0));
+        let mut mags: Vec<&[u64]> = Vec::new();
+        pack.fill_row_mag(0, &mut mags);
+        for m in &mags {
+            assert!(m[1..].iter().all(|&w| w == 0));
+        }
+    }
+
+    /// Satellite: every lane width — 1, 4, 8, plus the pre-lane scalar
+    /// kernel — must produce identical outputs *and* identical GateStats
+    /// tallies; the fired/rested counting happens once in the innermost
+    /// kernel, so it cannot depend on how many words a lane groups.
+    #[test]
+    fn gate_stats_are_lane_width_invariant() {
+        let mut rng = Prng::new(59);
+        for &(wn, an) in &[(1u32, 1u32), (2, 2), (0, 3)] {
+            let (wspace, aspace) = (DiscreteSpace::new(wn), DiscreteSpace::new(an));
+            // m straddles word and lane boundaries inside one shape set
+            for &(rows, m, n) in &[(3usize, 70usize, 9usize), (2, 513, 5), (1, 64, 3)] {
+                let a: Vec<f32> =
+                    (0..rows * m).map(|_| aspace.state(rng.below(aspace.n_states()))).collect();
+                let w: Vec<f32> =
+                    (0..m * n).map(|_| wspace.state(rng.below(wspace.n_states()))).collect();
+                let cols = BitplaneCols::pack_cols_space(&w, m, n, wspace);
+                let mut pack = PackScratch::new();
+                pack.pack_rows_spec(&a, rows, m, PlaneSpec::for_space(aspace));
+                let mut runs: Vec<(Vec<f32>, GateStats)> = Vec::new();
+                for width in [1usize, 4, 8] {
+                    let mut out = vec![0.0f32; rows * n];
+                    let mut stats = GateStats::default();
+                    match width {
+                        1 => gated_packed_rows_range_width::<1>(
+                            &pack, 0, rows, &cols, &mut out, &mut stats,
+                        ),
+                        4 => gated_packed_rows_range_width::<4>(
+                            &pack, 0, rows, &cols, &mut out, &mut stats,
+                        ),
+                        _ => gated_packed_rows_range_width::<8>(
+                            &pack, 0, rows, &cols, &mut out, &mut stats,
+                        ),
+                    }
+                    runs.push((out, stats));
+                }
+                // scalar fallback on the ternary hot path: per-element
+                // gated_dot_scalar must agree dot-for-dot and count-for-count
+                if wn <= 1 && an <= 1 {
+                    let mut xnor = 0u64;
+                    let mut out = vec![0.0f32; rows * n];
+                    for r in 0..rows {
+                        let (rs, rn) = pack.row(r);
+                        for j in 0..n {
+                            let (ws, wz) = cols.col(j);
+                            let (dot, active) = gated_dot_scalar(rs, rn, ws, wz);
+                            out[r * n + j] = dot as f32;
+                            xnor += active;
+                        }
+                    }
+                    assert_eq!(out, runs[0].0, "scalar vs lane1 w=Z_{wn} a=Z_{an} m={m}");
+                    assert_eq!(xnor, runs[0].1.xnor, "scalar xnor w=Z_{wn} a=Z_{an} m={m}");
+                }
+                for (out, stats) in &runs[1..] {
+                    assert_eq!(*out, runs[0].0, "outputs w=Z_{wn} a=Z_{an} m={m}");
+                    assert_eq!(*stats, runs[0].1, "tallies w=Z_{wn} a=Z_{an} m={m}");
+                }
+            }
+        }
+    }
+
+    /// Satellite: ragged tails straddling word and lane boundaries —
+    /// M % 512 ∈ {0, 1, 63, 64, 65, 511} — must stay exactly equal to the
+    /// f64 scalar oracle for every PlaneSpec layout (single-plane and
+    /// multi-bit digit planes) at every lane width.
+    #[test]
+    fn lane_kernels_match_oracle_at_ragged_tails() {
+        let mut rng = Prng::new(67);
+        let (rows, n) = (2usize, 5usize);
+        for &rem in &[0usize, 1, 63, 64, 65, 511] {
+            let m = 512 + rem; // m % 512 == rem (one full 8-word lane, then the tail)
+            for &(wn, an) in &[(1u32, 1u32), (2, 2), (0, 4), (3, 1)] {
+                let (wspace, aspace) = (DiscreteSpace::new(wn), DiscreteSpace::new(an));
+                let a: Vec<f32> =
+                    (0..rows * m).map(|_| aspace.state(rng.below(aspace.n_states()))).collect();
+                let w: Vec<f32> =
+                    (0..m * n).map(|_| wspace.state(rng.below(wspace.n_states()))).collect();
+                let cols = BitplaneCols::pack_cols_space(&w, m, n, wspace);
+                let mut pack = PackScratch::new();
+                pack.pack_rows_spec(&a, rows, m, PlaneSpec::for_space(aspace));
+                let mut want = vec![0.0f32; rows * n];
+                scalar_gemm(&a, rows, &w, m, n, &mut want);
+                for width in [1usize, 4, 8] {
+                    let mut got = vec![0.0f32; rows * n];
+                    let mut stats = GateStats::default();
+                    match width {
+                        1 => gated_packed_rows_range_width::<1>(
+                            &pack, 0, rows, &cols, &mut got, &mut stats,
+                        ),
+                        4 => gated_packed_rows_range_width::<4>(
+                            &pack, 0, rows, &cols, &mut got, &mut stats,
+                        ),
+                        _ => gated_packed_rows_range_width::<8>(
+                            &pack, 0, rows, &cols, &mut got, &mut stats,
+                        ),
+                    }
+                    assert_eq!(got, want, "m={m} w=Z_{wn} a=Z_{an} width={width}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strides_are_lane_padded_and_aligned() {
+        assert_eq!(words_stride(0), 0);
+        assert_eq!(words_stride(1), LANE_WORDS);
+        assert_eq!(words_stride(512), LANE_WORDS);
+        assert_eq!(words_stride(513), 2 * LANE_WORDS);
+        for m in [1usize, 63, 64, 65, 500, 513, 4096] {
+            assert!(words_stride(m) % LANE_WORDS == 0);
+            assert!(words_stride(m) >= words_for(m));
+            let cols = BitplaneCols::pack_cols(&vec![1.0f32; m], m, 1);
+            assert_eq!(cols.words, words_stride(m));
+            let (s, z) = cols.col(0);
+            assert_eq!(s.as_ptr() as usize % 64, 0, "m={m}: column plane unaligned");
+            assert_eq!(z.as_ptr() as usize % 64, 0);
+            // padding words gate off
+            for w in words_for(m)..words_stride(m) {
+                assert_eq!(z[w], 0, "m={m}: padding word {w} carries gates");
+            }
+        }
     }
 
     #[test]

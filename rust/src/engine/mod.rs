@@ -1882,12 +1882,20 @@ impl NativeTrainEngine {
                         let g = &ga[..rows * n];
                         if l.acts_packed {
                             let pack = &wc.x_pack;
-                            let words = pack.words();
-                            let wranges = shard_ranges(words, threads);
+                            // shard the *logical* fan-in words — the pack's
+                            // stride is lane-padded and the padding words
+                            // carry no gate bits, so they need no owner —
+                            // in whole kernel-lane blocks so every worker's
+                            // word range starts cache-line aligned
+                            let words = bitplane::words_for(m);
+                            let blocks = crate::util::div_ceil(words, bitplane::LANE_WORDS);
+                            let wranges = shard_ranges(blocks, threads);
                             let mut rest: &mut [f64] = wslot;
                             let mut tasks = Vec::with_capacity(wranges.len());
-                            for &(w0, w1) in &wranges {
-                                let lane_lo = w0 * 64;
+                            for &(b0, b1) in &wranges {
+                                let w0 = b0 * bitplane::LANE_WORDS;
+                                let w1 = (b1 * bitplane::LANE_WORDS).min(words);
+                                let lane_lo = (w0 * 64).min(m);
                                 let lane_hi = (w1 * 64).min(m);
                                 let (chunk, r2) = rest.split_at_mut((lane_hi - lane_lo) * n);
                                 rest = r2;

@@ -25,6 +25,10 @@
 //!   hidden copy — is implemented in [`ternary::dst`] and applied by the
 //!   [`coordinator`].
 
+// Nightly-only std::simd dispatch for the bitplane lane kernels; the
+// `portable-simd` cargo feature is off by default (see engine::bitplane).
+#![cfg_attr(feature = "portable-simd", feature(portable_simd))]
+
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -1,0 +1,146 @@
+//! Cache-line-aligned `u64` buffers for the bitplane kernels.
+//!
+//! The gated-XNOR kernels read sign/nonzero/digit planes in multi-word
+//! lanes (`engine::bitplane::LANE_WORDS` words per iteration). Lane loads
+//! only stay cache-line aligned if (a) every plane buffer *starts* on a
+//! 64-byte boundary and (b) every per-row / per-column stride is a whole
+//! number of lanes. This module provides (a); `bitplane::words_stride`
+//! provides (b). `AlignedWords` is the one aligned-alloc util shared by
+//! `PackScratch` and `BitplaneCols`.
+
+use std::ops::{Deref, DerefMut};
+
+/// Alignment of every plane buffer: one cache line.
+pub const LINE_BYTES: usize = 64;
+
+/// `u64` words per cache line — the kernel lane width derives from this.
+pub const LINE_WORDS: usize = LINE_BYTES / std::mem::size_of::<u64>();
+
+/// One cache line of words. `repr(C, align(64))` makes a `Vec<Line>`
+/// allocation 64-byte aligned with no unsafe raw-alloc plumbing; the
+/// buffer views it as a flat `[u64]`.
+#[repr(C, align(64))]
+#[derive(Clone, Copy, Default)]
+struct Line([u64; LINE_WORDS]);
+
+/// A contiguous `u64` buffer whose first word sits on a 64-byte boundary
+/// and whose length is always a whole number of cache lines. Derefs to
+/// `[u64]`, so call sites index and slice it like a `Vec<u64>`.
+#[derive(Clone, Default)]
+pub struct AlignedWords {
+    lines: Vec<Line>,
+}
+
+impl AlignedWords {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A zero-filled buffer of at least `words` words (rounded up to a
+    /// whole cache line).
+    pub fn zeroed(words: usize) -> Self {
+        let mut buf = Self::default();
+        buf.ensure(words);
+        buf
+    }
+
+    /// Grow to at least `words` words, zero-filling any new lines. Never
+    /// shrinks (scratch reuse keeps the high-water allocation, matching
+    /// the previous `Vec::resize`-if-shorter behaviour); existing word
+    /// contents are preserved, so packers must clear the slices they
+    /// write into (see `bitplane::pack_row_into`).
+    pub fn ensure(&mut self, words: usize) {
+        let lines = crate::util::div_ceil(words, LINE_WORDS);
+        if lines > self.lines.len() {
+            self.lines.resize(lines, Line([0; LINE_WORDS]));
+        }
+    }
+
+    /// Zero the whole buffer (all lines, not just a logical prefix).
+    pub fn clear(&mut self) {
+        self.lines.fill(Line([0; LINE_WORDS]));
+    }
+
+    pub fn as_slice(&self) -> &[u64] {
+        // SAFETY: `Line` is `repr(C)` over `[u64; LINE_WORDS]`, so a
+        // `Vec<Line>` of length L is exactly L*LINE_WORDS contiguous,
+        // initialised u64 words.
+        unsafe {
+            std::slice::from_raw_parts(self.lines.as_ptr().cast(), self.lines.len() * LINE_WORDS)
+        }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [u64] {
+        // SAFETY: as in `as_slice`; exclusive borrow of self.
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.lines.as_mut_ptr().cast(),
+                self.lines.len() * LINE_WORDS,
+            )
+        }
+    }
+}
+
+impl Deref for AlignedWords {
+    type Target = [u64];
+
+    #[inline]
+    fn deref(&self) -> &[u64] {
+        self.as_slice()
+    }
+}
+
+impl DerefMut for AlignedWords {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [u64] {
+        self.as_mut_slice()
+    }
+}
+
+impl std::fmt::Debug for AlignedWords {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AlignedWords").field("words", &self.len()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_are_line_aligned_and_line_granular() {
+        for words in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000] {
+            let buf = AlignedWords::zeroed(words);
+            assert_eq!(buf.as_slice().as_ptr() as usize % LINE_BYTES, 0, "words={words}");
+            assert_eq!(buf.len(), crate::util::div_ceil(words, LINE_WORDS) * LINE_WORDS);
+            assert!(buf.iter().all(|&w| w == 0));
+        }
+    }
+
+    #[test]
+    fn ensure_grows_zeroed_and_never_shrinks() {
+        let mut buf = AlignedWords::zeroed(3);
+        buf[0] = 0xAB;
+        buf[2] = 0xCD;
+        buf.ensure(20); // grow: old words kept, new lines zero
+        assert_eq!(buf.len(), 24);
+        assert_eq!((buf[0], buf[2]), (0xAB, 0xCD));
+        assert!(buf[8..].iter().all(|&w| w == 0));
+        buf.ensure(1); // "shrink": allocation and contents untouched
+        assert_eq!(buf.len(), 24);
+        assert_eq!(buf[0], 0xAB);
+        buf.clear();
+        assert!(buf.iter().all(|&w| w == 0));
+    }
+
+    #[test]
+    fn deref_slicing_works_like_a_vec() {
+        let mut buf = AlignedWords::zeroed(16);
+        buf[9] = 7;
+        assert_eq!(&buf[8..12], &[0, 7, 0, 0]);
+        for (i, w) in buf.as_mut_slice()[..4].iter_mut().enumerate() {
+            *w = i as u64;
+        }
+        assert_eq!(buf.iter().take(4).copied().collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+}

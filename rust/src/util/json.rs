@@ -313,6 +313,41 @@ fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json, String> {
         .map_err(|_| format!("bad number {s:?} at byte {start}"))
 }
 
+/// The shared provenance header every `BENCH_*.json` document embeds
+/// under the `"provenance"` key, so benchmark numbers are comparable
+/// build-to-build: git revision, rustc version, available hardware
+/// threads, the kernel lane width, and the feature flags that change
+/// codegen. `lane_words` is passed in (util cannot depend on the engine);
+/// callers hand it `engine::bitplane::LANE_WORDS`. Fields that cannot be
+/// determined (no git, no rustc on PATH) serialize as `null` rather than
+/// failing the bench run.
+pub fn provenance(lane_words: usize) -> Json {
+    fn cmd_line(prog: &str, args: &[&str]) -> Json {
+        std::process::Command::new(prog)
+            .args(args)
+            .output()
+            .ok()
+            .filter(|o| o.status.success())
+            .and_then(|o| String::from_utf8(o.stdout).ok())
+            .map(|s| Json::Str(s.trim().to_string()))
+            .unwrap_or(Json::Null)
+    }
+    let threads = std::thread::available_parallelism()
+        .map(|n| Json::Num(n.get() as f64))
+        .unwrap_or(Json::Null);
+    Json::obj(vec![
+        ("git_rev", cmd_line("git", &["rev-parse", "HEAD"])),
+        ("rustc", cmd_line("rustc", &["--version"])),
+        ("threads_available", threads),
+        ("lane_words", Json::Num(lane_words as f64)),
+        (
+            "features",
+            Json::obj(vec![("portable_simd", Json::Bool(cfg!(feature = "portable-simd")))]),
+        ),
+        ("debug_assertions", Json::Bool(cfg!(debug_assertions))),
+    ])
+}
+
 /// Flat "key -> f64" convenience for metrics files.
 pub fn to_f64_map(j: &Json) -> BTreeMap<String, f64> {
     let mut m = BTreeMap::new();
@@ -400,5 +435,21 @@ mod tests {
     fn usize_vec() {
         let j = Json::parse("[100, 784]").unwrap();
         assert_eq!(j.as_usize_vec(), Some(vec![100, 784]));
+    }
+
+    /// The provenance header always carries its full key set (missing
+    /// tools degrade to null, never to absent keys) and round-trips.
+    #[test]
+    fn provenance_header_is_structurally_complete() {
+        let p = provenance(8);
+        for key in
+            ["git_rev", "rustc", "threads_available", "lane_words", "features", "debug_assertions"]
+        {
+            assert!(p.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(p.get("lane_words").and_then(Json::as_usize), Some(8));
+        assert!(p.get("features").unwrap().get("portable_simd").is_some());
+        let back = Json::parse(&p.to_string()).unwrap();
+        assert_eq!(back.get("lane_words").and_then(Json::as_usize), Some(8));
     }
 }

@@ -1,6 +1,7 @@
 //! Foundation substrates built from scratch (the offline vendor set has no
 //! serde/rand/clap/criterion — see DESIGN.md §2): PRNG, JSON, timing.
 
+pub mod align;
 pub mod json;
 pub mod plot;
 pub mod pool;

@@ -242,7 +242,9 @@ fn prop_multi_backward_gemms_match_f64_oracle() {
             let mut w0 = 0usize;
             while w0 < words {
                 let w1 = (w0 + per).min(words);
-                let lane_lo = w0 * 64;
+                // `words` is the lane-padded stride: shards past the
+                // logical fan-in clamp to empty slices (no gate bits there)
+                let lane_lo = (w0 * 64).min(k);
                 let lane_hi = (w1 * 64).min(k);
                 accum_dw_packed(&pack, rows, &dy, n, w0, w1, &mut got[lane_lo * n..lane_hi * n]);
                 w0 = w1;
