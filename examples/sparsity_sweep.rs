@@ -4,24 +4,31 @@
 //! simulator to show the accuracy/energy trade-off the paper's Section 3.B
 //! discusses ("a sparser network can be more hardware friendly").
 //!
+//! It runs **device-free** on the native DST backend: no lowered
+//! artifacts and no PJRT client are needed (a manifest, when present,
+//! only contributes shapes/batch size).
+//!
 //! ```sh
-//! make artifacts && cargo run --release --example sparsity_sweep
+//! cargo run --release --example sparsity_sweep
 //! ```
 
 use gxnor::coordinator::trainer::{TrainBackend, TrainConfig};
 use gxnor::hwsim::{expected_counts, EnergyModel, NetArch};
-use gxnor::runtime::client::Runtime;
+use gxnor::runtime::exec::EngineKind;
 use gxnor::runtime::manifest::Manifest;
 use gxnor::sweep;
 
 fn main() -> anyhow::Result<()> {
-    let manifest = Manifest::load("artifacts").map_err(anyhow::Error::msg)?;
-    let mut rt = Runtime::new()?;
-    let mut backend = TrainBackend::Xla { rt: &mut rt, manifest: &manifest };
+    let manifest = Manifest::load("artifacts").ok();
+    if manifest.is_none() {
+        println!("no artifacts/manifest.json: using catalogue shapes (fully device-free)");
+    }
+    let mut backend = TrainBackend::Native { manifest: manifest.as_ref() };
     let base = TrainConfig {
         train_len: 3000,
         test_len: 800,
         epochs: 3,
+        engine: EngineKind::Native,
         verbose: false,
         ..Default::default()
     };

@@ -35,7 +35,9 @@ use gxnor::coordinator::trainer::{
 };
 use gxnor::data::Dataset;
 use gxnor::engine::backward;
-use gxnor::engine::bitplane::{self, BitplaneCols, GateStats, PackScratch, PlaneSpec};
+use gxnor::engine::bitplane::{
+    self, BitplaneCols, GateStats, KernelStrategy, PackScratch, PlaneSpec,
+};
 use gxnor::engine::NativeEngine;
 use gxnor::hwsim::report::{fig12_example, table2};
 use gxnor::metrics::Recorder;
@@ -595,7 +597,7 @@ fn bench_infer(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> {
     native_obj.push(("nominal_ops_per_sample".into(), Json::Num(gate.total as f64 / rows)));
     native_obj.push(("resting_fraction".into(), Json::Num(gate.resting_rate())));
     let doc = Json::Obj(vec![
-        ("schema".into(), Json::Str("bench_infer.v2".into())),
+        ("schema".into(), Json::Str("bench_infer.v3".into())),
         ("provenance".into(), json::provenance(gxnor::engine::bitplane::LANE_WORDS)),
         ("graph".into(), Json::Str(graph)),
         ("batch".into(), Json::Num(batch as f64)),
@@ -649,6 +651,24 @@ fn bench_infer(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<()> {
                             ("resting_rate".into(), Json::Num(r.stats.resting_rate())),
                             ("w_zero".into(), Json::Num(r.w_zero_fraction)),
                             ("x_zero".into(), Json::Num(r.stats.x_zero_fraction())),
+                            // v3: measured occupancy, the kernel the adaptive
+                            // dispatch picks for it, and the per-row histogram
+                            // (bins: <=0.02, <=0.1, <=0.5, <=0.9, >0.9)
+                            (
+                                "occupancy".into(),
+                                Json::Num(1.0 - r.stats.x_zero_fraction()),
+                            ),
+                            ("strategy".into(), Json::Str(r.strategy.name().into())),
+                            (
+                                "occupancy_histogram".into(),
+                                Json::Arr(
+                                    r.stats
+                                        .occ_hist
+                                        .iter()
+                                        .map(|&c| Json::Num(c as f64))
+                                        .collect(),
+                                ),
+                            ),
                         ])
                     })
                     .collect(),
@@ -1241,6 +1261,51 @@ fn bench_kernels(baseline: Option<&str>, threshold: f64) -> anyhow::Result<()> {
         s[0] as f64
     }));
 
+    // --- sparsity sweep: dense lane vs tile-skip vs event-list across
+    // synthetic occupancies. Rows are block-structured (live lanes first,
+    // then zeros), so whole tiles genuinely rest — the shape ReLU-like
+    // ternary activations take, and the one the occupancy maps exploit.
+    // All three kernels are pinned bit-identical via the checksum groups.
+    const SPARSE_CASES: [(f64, [&str; 3]); 4] = [
+        (0.90, ["sparse0.90/lane", "sparse0.90/tile_skip", "sparse0.90/event_list"]),
+        (0.50, ["sparse0.50/lane", "sparse0.50/tile_skip", "sparse0.50/event_list"]),
+        (0.10, ["sparse0.10/lane", "sparse0.10/tile_skip", "sparse0.10/event_list"]),
+        (0.02, ["sparse0.02/lane", "sparse0.02/tile_skip", "sparse0.02/event_list"]),
+    ];
+    let (srows, sm, sn) = (32usize, 4096usize, 64usize);
+    let swords = srows * sn * bitplane::words_for(sm);
+    let wsparse = tern(&mut rng, sm * sn);
+    let scols = BitplaneCols::pack_cols(&wsparse, sm, sn);
+    let mut sout = vec![0.0f32; srows * sn];
+    for (occ, [lane_name, tile_name, event_name]) in SPARSE_CASES {
+        let live = ((sm as f64 * occ).round() as usize).min(sm);
+        let act: Vec<f32> = (0..srows)
+            .flat_map(|_| {
+                let mut row = vec![0.0f32; sm];
+                for v in row[..live].iter_mut() {
+                    *v = if rng.below(2) == 0 { -1.0 } else { 1.0 };
+                }
+                row
+            })
+            .collect();
+        let mut spack = PackScratch::new();
+        spack.pack_rows(&act, srows, sm);
+        let sshape = format!("{srows}x{sm}x{sn} occ={occ:.2}");
+        for (name, strat) in [
+            (lane_name, KernelStrategy::Lane),
+            (tile_name, KernelStrategy::TileSkip),
+            (event_name, KernelStrategy::EventList),
+        ] {
+            results.push(run_kernel(name, sshape.clone(), 10, swords, || {
+                let mut stats = GateStats::default();
+                bitplane::gated_packed_rows_strategy(
+                    &spack, 0, srows, &scols, &mut sout, &mut stats, strat,
+                );
+                out_sum(&sout)
+            }));
+        }
+    }
+
     println!(
         "{:<20} {:>14} {:>7} {:>14} {:>14} {:>12}",
         "kernel", "shape", "iters", "ns/iter", "min ns/iter", "Gwords/s"
@@ -1271,6 +1336,10 @@ fn bench_kernels(baseline: Option<&str>, threshold: f64) -> anyhow::Result<()> {
         &["gemm/scalar_oracle", "gemm/lane1", "gemm/lane4", "gemm/lane8"],
         &["dx/packed", "dx/scalar_oracle"],
         &["dw/packed", "dw/scalar_oracle"],
+        &["sparse0.90/lane", "sparse0.90/tile_skip", "sparse0.90/event_list"],
+        &["sparse0.50/lane", "sparse0.50/tile_skip", "sparse0.50/event_list"],
+        &["sparse0.10/lane", "sparse0.10/tile_skip", "sparse0.10/event_list"],
+        &["sparse0.02/lane", "sparse0.02/tile_skip", "sparse0.02/event_list"],
     ];
     let mut exact = true;
     for group in exact_groups {
@@ -1302,6 +1371,28 @@ fn bench_kernels(baseline: Option<&str>, threshold: f64) -> anyhow::Result<()> {
     for (k, v) in &speedups {
         println!("  {k:<30} {v:.2}x");
     }
+
+    println!("\nsparsity sweep (vs dense lane path at the same occupancy):");
+    let sparsity_sweep: Vec<Json> = SPARSE_CASES
+        .iter()
+        .map(|(occ, [lane, tile, event])| {
+            let (l, t, e) = (ns_of(lane), ns_of(tile), ns_of(event));
+            println!(
+                "  occ {:>4.2}: tile_skip {:>5.2}x  event_list {:>5.2}x",
+                occ,
+                l / t.max(1e-9),
+                l / e.max(1e-9)
+            );
+            Json::obj(vec![
+                ("occupancy", Json::num(*occ)),
+                ("lane_ns_per_iter", Json::num(l)),
+                ("tile_skip_ns_per_iter", Json::num(t)),
+                ("event_list_ns_per_iter", Json::num(e)),
+                ("tile_skip_speedup", Json::num(l / t.max(1e-9))),
+                ("event_list_speedup", Json::num(l / e.max(1e-9))),
+            ])
+        })
+        .collect();
 
     let doc = Json::Obj(vec![
         ("schema".into(), Json::Str("bench_kernels.v1".into())),
@@ -1344,6 +1435,7 @@ fn bench_kernels(baseline: Option<&str>, threshold: f64) -> anyhow::Result<()> {
             "speedups".into(),
             Json::Obj(speedups.iter().map(|(k, v)| (k.to_string(), Json::Num(*v))).collect()),
         ),
+        ("sparsity_sweep".into(), Json::Arr(sparsity_sweep)),
     ]);
     let text = doc.to_string();
     std::fs::write("BENCH_kernels.json", &text)?;

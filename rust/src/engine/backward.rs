@@ -14,9 +14,10 @@
 //! * `dX = dY·Wᵀ` — [`f32_rows_times_tern_cols`]: each output element
 //!   streams one packed weight row (planes over the output-channel lanes,
 //!   [`BitplaneCols::pack_rows_of`]) against the f32 cotangent row,
-//!   adding/subtracting gated lanes. Words whose nonzero plane is empty
-//!   are skipped outright — the event-driven zero-state gate at word
-//!   granularity, now in the backward pass.
+//!   adding/subtracting gated lanes. Resting tiles are skipped outright
+//!   via the packers' occupancy maps (`BitplaneCols::col_occ`) before a
+//!   single plane word loads — the event-driven zero-state gate, now in
+//!   the backward pass.
 //! * `dW = Xᵀ·dY` — [`accum_dw_packed`]: the cached activation bitplanes
 //!   ([`PackScratch`], packed once in the forward) are walked row by row;
 //!   every set lane axpys the f32 `dY` row into its `dW` row with the
@@ -76,6 +77,34 @@ pub fn gated_signed_sum(sign: &[u64], nz: &[u64], f: &[f32]) -> f64 {
     gated_signed_sum_lanes::<LANE_WORDS>(sign, nz, f)
 }
 
+/// [`gated_signed_sum`] guided by a precomputed occupancy map (per-tile
+/// nonzero popcounts, [`BitplaneCols::col_occ`]): a tile whose map entry
+/// is zero is stepped over without loading a single plane word — the OR
+/// test the lane walk would have computed is already answered. The f64
+/// adds still happen at exactly the set gate bits in ascending lane
+/// order, so results stay bit-identical to the plain walk and the
+/// scalar oracle.
+fn gated_signed_sum_occ(sign: &[u64], nz: &[u64], occ: &[u32], f: &[f32]) -> f64 {
+    let n = nz.len();
+    debug_assert!(sign.len() >= n && occ.len() * LANE_WORDS >= n);
+    let mut acc = 0.0f64;
+    let mut k = 0;
+    while k + LANE_WORDS <= n {
+        if occ[k / LANE_WORDS] != 0 {
+            for w in k..k + LANE_WORDS {
+                signed_sum_word(sign[w], nz[w], w * 64, f, &mut acc);
+            }
+        }
+        k += LANE_WORDS;
+    }
+    // plane strides are lane-padded, so columns never leave a tail; keep
+    // the scalar finish for safety with ad-hoc slices
+    for w in k..n {
+        signed_sum_word(sign[w], nz[w], w * 64, f, &mut acc);
+    }
+    acc
+}
+
 /// [`gated_signed_sum`] at an explicit lane width `L` — public for the
 /// bench harness's width sweep; every width is bit-identical (the f64
 /// adds happen in the same ascending lane order regardless of grouping).
@@ -129,20 +158,18 @@ fn signed_sum_word_multi(sw: u64, zw: u64, mag: &[&[u64]], wi: usize, f: &[f32],
 /// integer magnitude `q` is gathered from the digit planes and the f32
 /// value accumulates with weight `±q` (f64, ascending lane order; the
 /// caller applies the grid scale once at the end — exact, the scale is a
-/// power of two and commutes with every rounding). Same lane-granular
-/// zero skip as the single-plane kernel.
+/// power of two and commutes with every rounding). The zero skip is
+/// answered by the occupancy map (`occ[t] == 0` ⟺ the lane OR the old
+/// walk computed is zero), so resting tiles cost two array reads.
 #[inline]
-fn gated_signed_sum_multi(sign: &[u64], nz: &[u64], mag: &[&[u64]], f: &[f32]) -> f64 {
+fn gated_signed_sum_multi(sign: &[u64], nz: &[u64], mag: &[&[u64]], occ: &[u32], f: &[f32]) -> f64 {
     let n = nz.len();
+    debug_assert!(occ.len() * LANE_WORDS >= n);
     let mut acc = 0.0f64;
     let main = n - n % LANE_WORDS;
     let mut k = 0;
     while k < main {
-        let mut lane_or = 0u64;
-        for i in 0..LANE_WORDS {
-            lane_or |= nz[k + i];
-        }
-        if lane_or != 0 {
+        if occ[k / LANE_WORDS] != 0 {
             for w in k..k + LANE_WORDS {
                 signed_sum_word_multi(sign[w], nz[w], mag, w, f, &mut acc);
             }
@@ -176,7 +203,9 @@ pub fn f32_rows_times_tern_cols(a: &[f32], rows: usize, planes: &BitplaneCols, o
             let orow = &mut out[r * n..(r + 1) * n];
             for (j, o) in orow.iter_mut().enumerate() {
                 let (s, z) = planes.col(j);
-                *o = gated_signed_sum(s, z, ar) as f32;
+                // resting weight rows/columns skip whole tiles via the
+                // occupancy map before any plane word loads
+                *o = gated_signed_sum_occ(s, z, planes.col_occ(j), ar) as f32;
             }
         }
         return;
@@ -188,9 +217,10 @@ pub fn f32_rows_times_tern_cols(a: &[f32], rows: usize, planes: &BitplaneCols, o
     for j in 0..n {
         let (s, z) = planes.col(j);
         planes.fill_col_mag(j, &mut mags);
+        let occ = planes.col_occ(j);
         for r in 0..rows {
             let ar = &a[r * k..(r + 1) * k];
-            out[r * n + j] = (gated_signed_sum_multi(s, z, &mags, ar) * scale) as f32;
+            out[r * n + j] = (gated_signed_sum_multi(s, z, &mags, occ, ar) * scale) as f32;
         }
     }
 }
@@ -232,8 +262,9 @@ pub fn f32_rows_times_tern_cols_oracle(
 /// `n`, f64). Rows are walked in ascending global order; a worker owns
 /// its lane range outright, so sharding the word ranges across threads
 /// changes nothing about any accumulated value. The zero skip runs over
-/// [`LANE_WORDS`]-word groups: a whole group of resting activation words
-/// is stepped over with one OR.
+/// [`LANE_WORDS`]-word groups: lane-aligned ranges (what the engine
+/// shards hand out) answer it from the activation occupancy map with two
+/// array reads, ragged ranges OR the group's words.
 pub fn accum_dw_packed(
     pack: &PackScratch,
     rows: usize,
@@ -250,17 +281,26 @@ pub fn accum_dw_packed(
     if pack.n_mag() > 0 {
         return accum_dw_packed_multi(pack, rows, dy, n, word_lo, hi, dw);
     }
+    // engine shards hand out lane-aligned word ranges, so each group maps
+    // onto one occupancy-map tile; ragged ranges (tests) keep the OR walk
+    let occ_aligned = word_lo % LANE_WORDS == 0;
     for r in 0..rows {
         let (s, z) = pack.row(r);
+        let occ = pack.row_occ(r);
         let dyr = &dy[r * n..(r + 1) * n];
         let mut w0 = word_lo;
         while w0 < hi {
             let w1 = (w0 + LANE_WORDS).min(hi);
-            let mut group_or = 0u64;
-            for w in w0..w1 {
-                group_or |= z[w];
-            }
-            if group_or == 0 {
+            // occ[t] == 0 means every word of the tile (a superset of
+            // this group) is zero — skipping is safe even for a partial
+            // trailing group; a nonzero map falls through to the
+            // per-word gate checks
+            let resting = if occ_aligned {
+                occ[w0 / LANE_WORDS] == 0
+            } else {
+                (w0..w1).fold(0u64, |o, w| o | z[w]) == 0
+            };
+            if resting {
                 w0 = w1;
                 continue;
             }
@@ -307,18 +347,21 @@ fn accum_dw_packed_multi(
     let lane_lo = word_lo * 64;
     let scale = pack.scale() as f64;
     let mut mags: Vec<&[u64]> = Vec::new();
+    let occ_aligned = word_lo % LANE_WORDS == 0;
     for r in 0..rows {
         let (s, z) = pack.row(r);
+        let occ = pack.row_occ(r);
         pack.fill_row_mag(r, &mut mags);
         let dyr = &dy[r * n..(r + 1) * n];
         let mut w0 = word_lo;
         while w0 < word_hi {
             let w1 = (w0 + LANE_WORDS).min(word_hi);
-            let mut group_or = 0u64;
-            for w in w0..w1 {
-                group_or |= z[w];
-            }
-            if group_or == 0 {
+            let resting = if occ_aligned {
+                occ[w0 / LANE_WORDS] == 0
+            } else {
+                (w0..w1).fold(0u64, |o, w| o | z[w]) == 0
+            };
+            if resting {
                 w0 = w1;
                 continue;
             }

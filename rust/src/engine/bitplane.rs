@@ -215,11 +215,30 @@ pub struct BitplaneCols {
     mag: Vec<AlignedWords>,
     /// grid spacing dz of the packed values (1.0 for binary/ternary)
     scale: f32,
+    /// occupancy map: popcount of nonzero-gate bits per `LANE_WORDS` tile,
+    /// `words / LANE_WORDS` entries per column — the tile-skip kernels
+    /// test it before touching a tile's plane words
+    occ: Vec<u32>,
     pub m: usize,
     pub n: usize,
     /// plane stride per column: `words_stride(m)` — lane-padded, padding
     /// words zero
     pub words: usize,
+}
+
+/// Per-lane-tile popcounts of a nonzero plane: one entry per
+/// [`LANE_WORDS`] words. Plane strides are lane-padded, so the chunks
+/// align to per-row / per-column tiles and padding words contribute zero.
+fn tile_occ(nz: &[u64]) -> Vec<u32> {
+    nz.chunks(LANE_WORDS).map(|c| c.iter().map(|w| w.count_ones()).sum()).collect()
+}
+
+/// [`tile_occ`] into caller-owned storage: refresh one row's occupancy
+/// entries after its nonzero plane was (re)packed.
+fn fill_row_occ(nz: &[u64], occ: &mut [u32]) {
+    for (chunk, c) in nz.chunks(LANE_WORDS).zip(occ.iter_mut()) {
+        *c = chunk.iter().map(|w| w.count_ones()).sum();
+    }
 }
 
 impl BitplaneCols {
@@ -244,7 +263,8 @@ impl BitplaneCols {
                 }
             }
         }
-        BitplaneCols { sign, nz, mag: Vec::new(), scale: 1.0, m, n, words }
+        let occ = tile_occ(&nz);
+        BitplaneCols { sign, nz, mag: Vec::new(), scale: 1.0, occ, m, n, words }
     }
 
     /// [`BitplaneCols::pack_cols`] for values on an arbitrary `Z_N` grid:
@@ -262,6 +282,7 @@ impl BitplaneCols {
             nz: AlignedWords::zeroed(words * n),
             mag: vec![AlignedWords::zeroed(words * n); spec.mag_planes as usize],
             scale: spec.scale,
+            occ: Vec::new(),
             m,
             n,
             words,
@@ -271,6 +292,7 @@ impl BitplaneCols {
                 cols.set_lane_multi(j * words, i, v, spec.inv_scale);
             }
         }
+        cols.occ = tile_occ(&cols.nz);
         cols
     }
 
@@ -287,6 +309,7 @@ impl BitplaneCols {
             nz: AlignedWords::zeroed(words * rows),
             mag: vec![AlignedWords::zeroed(words * rows); spec.mag_planes as usize],
             scale: spec.scale,
+            occ: Vec::new(),
             m: lanes,
             n: rows,
             words,
@@ -296,6 +319,7 @@ impl BitplaneCols {
                 cols.set_lane_multi(i * words, j, v, spec.inv_scale);
             }
         }
+        cols.occ = tile_occ(&cols.nz);
         cols
     }
 
@@ -333,7 +357,8 @@ impl BitplaneCols {
             let (lo, hi) = (i * words, (i + 1) * words);
             pack_row_into(&w[i * lanes..(i + 1) * lanes], &mut sign[lo..hi], &mut nz[lo..hi]);
         }
-        BitplaneCols { sign, nz, mag: Vec::new(), scale: 1.0, m: lanes, n: rows, words }
+        let occ = tile_occ(&nz);
+        BitplaneCols { sign, nz, mag: Vec::new(), scale: 1.0, occ, m: lanes, n: rows, words }
     }
 
     /// [`BitplaneCols::pack_cols`] reading grid values straight out of a
@@ -350,6 +375,7 @@ impl BitplaneCols {
             nz: AlignedWords::zeroed(words * n),
             mag: vec![AlignedWords::zeroed(words * n); spec.mag_planes as usize],
             scale: spec.scale,
+            occ: Vec::new(),
             m,
             n,
             words,
@@ -371,6 +397,7 @@ impl BitplaneCols {
                 }
             }
         }
+        cols.occ = tile_occ(&cols.nz);
         cols
     }
 
@@ -390,6 +417,7 @@ impl BitplaneCols {
             nz: AlignedWords::zeroed(words * rows),
             mag: vec![AlignedWords::zeroed(words * rows); spec.mag_planes as usize],
             scale: spec.scale,
+            occ: Vec::new(),
             m: lanes,
             n: rows,
             words,
@@ -411,6 +439,7 @@ impl BitplaneCols {
                 }
             }
         }
+        cols.occ = tile_occ(&cols.nz);
         cols
     }
 
@@ -457,6 +486,25 @@ impl BitplaneCols {
                 buf.push(&m[s..s + self.words]);
             }
         }
+    }
+
+    /// Occupancy map of column `j`: nonzero-gate popcount per
+    /// [`LANE_WORDS`] tile, `words / LANE_WORDS` entries.
+    #[inline]
+    pub fn col_occ(&self, j: usize) -> &[u32] {
+        let tiles = self.words / LANE_WORDS;
+        &self.occ[j * tiles..(j + 1) * tiles]
+    }
+
+    /// Fraction of non-zero lanes across the whole packed matrix
+    /// (1.0 for degenerate empty shapes — the dense lane path is the
+    /// safe default there).
+    pub fn occupancy(&self) -> f64 {
+        if self.m == 0 || self.n == 0 {
+            return 1.0;
+        }
+        let nzb: u64 = self.occ.iter().map(|&c| c as u64).sum();
+        nzb as f64 / (self.m * self.n) as f64
     }
 }
 
@@ -686,6 +734,74 @@ pub fn gated_dot_planes_lanes<const L: usize>(
     (dot, active)
 }
 
+/// Upper bin edges of [`GateStats::occ_hist`]: a row with activation
+/// occupancy `occ` lands in the first bin whose edge satisfies
+/// `occ <= edge`, or in the final catch-all bin. The edges match the
+/// bench harness's sparsity-sweep occupancy points, so the measured
+/// histogram reads directly against the calibration data.
+pub const OCC_HIST_EDGES: [f64; 4] = [0.02, 0.1, 0.5, 0.9];
+
+/// Histogram bin of one row-occupancy measurement (see [`OCC_HIST_EDGES`]).
+#[inline]
+pub fn occ_bin(occ: f64) -> usize {
+    OCC_HIST_EDGES.iter().position(|&e| occ <= e).unwrap_or(OCC_HIST_EDGES.len())
+}
+
+/// How a gated GEMM walks the packed operands. All three strategies are
+/// pinned `==` to the f64 scalar oracle — the choice is purely a matter
+/// of speed at the occupancy the batch actually has.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelStrategy {
+    /// Dense lane walk: every word visited, 8-word lane-OR zero skip.
+    Lane,
+    /// Occupancy-guided tile skip: a `LANE_WORDS` tile is passed over
+    /// when the row *or* column occupancy map says it is empty — resting
+    /// weight columns compound with resting activations.
+    TileSkip,
+    /// Event-driven: only the non-zero activation lanes (as sorted
+    /// `(index, signed magnitude)` events) are scattered against the
+    /// weight planes.
+    EventList,
+}
+
+impl KernelStrategy {
+    /// Stable lowercase name, used in bench JSON and layer reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelStrategy::Lane => "lane",
+            KernelStrategy::TileSkip => "tile_skip",
+            KernelStrategy::EventList => "event_list",
+        }
+    }
+}
+
+/// Below this measured occupancy the event-list kernel wins: the work it
+/// does is proportional to the events it visits, but it gives up the
+/// word-parallel popcounts, so it needs most lanes resting (~1/16 of a
+/// 64-lane word alive, calibrated with `cargo bench -- kernels`'s
+/// sparsity sweep) before the trade pays.
+pub const EVENT_LIST_CROSSOVER: f64 = 0.05;
+
+/// Below this measured occupancy the tile-skip walk beats the dense lane
+/// path: it only needs whole 512-lane tiles to rest occasionally, and
+/// its per-tile test is two array reads, so the crossover sits near even
+/// occupancy splits.
+pub const TILE_SKIP_CROSSOVER: f64 = 0.5;
+
+/// Pick the execution strategy for a batch whose measured activation
+/// occupancy (fraction of non-zero states, e.g.
+/// [`PackScratch::gate_occupancy`]) is `occupancy`. Every strategy is
+/// exact, so the dispatch can never change results — only speed.
+pub fn choose_strategy(occupancy: f64) -> KernelStrategy {
+    if occupancy <= EVENT_LIST_CROSSOVER {
+        KernelStrategy::EventList
+    } else if occupancy < TILE_SKIP_CROSSOVER {
+        KernelStrategy::TileSkip
+    } else {
+        KernelStrategy::Lane
+    }
+}
+
 /// Tallies of what the gated kernel actually executed (per layer).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct GateStats {
@@ -701,6 +817,9 @@ pub struct GateStats {
     pub x_nonzero: u64,
     /// Activation states packed (fan-in per row × rows).
     pub x_count: u64,
+    /// Histogram of per-row activation occupancy over the rows the
+    /// kernel consumed, binned by [`OCC_HIST_EDGES`].
+    pub occ_hist: [u64; 5],
 }
 
 impl GateStats {
@@ -734,6 +853,9 @@ impl GateStats {
         self.evals += o.evals;
         self.x_nonzero += o.x_nonzero;
         self.x_count += o.x_count;
+        for (a, b) in self.occ_hist.iter_mut().zip(o.occ_hist.iter()) {
+            *a += b;
+        }
     }
 }
 
@@ -756,6 +878,12 @@ pub struct PackScratch {
     n_mag: u32,
     scale: f32,
     inv_scale: f32,
+    /// occupancy map: nonzero-gate popcount per `LANE_WORDS` tile,
+    /// `words / LANE_WORDS` entries per row, maintained by `set_row` —
+    /// essentially free, since packing already wrote every plane word.
+    /// The adaptive dispatch reads it to measure a batch's occupancy and
+    /// the tile-skip kernels to pass over resting tiles.
+    occ: Vec<u32>,
     words: usize,
     rows: usize,
 }
@@ -784,6 +912,10 @@ impl PackScratch {
         let need = rows * self.words;
         self.sign.ensure(need);
         self.nz.ensure(need);
+        let need_occ = rows * (self.words / LANE_WORDS);
+        if self.occ.len() < need_occ {
+            self.occ.resize(need_occ, 0);
+        }
         while self.mag.len() < spec.mag_planes as usize {
             self.mag.push(AlignedWords::new());
         }
@@ -815,6 +947,8 @@ impl PackScratch {
                 &mut mags,
             );
         }
+        let tiles = self.words / LANE_WORDS;
+        fill_row_occ(&self.nz[lo..hi], &mut self.occ[row * tiles..(row + 1) * tiles]);
     }
 
     /// Pack a full row-major (rows × m) matrix (binary/ternary layout).
@@ -875,6 +1009,34 @@ impl PackScratch {
         self.words
     }
 
+    /// Occupancy map of row `i`: nonzero-gate popcount per [`LANE_WORDS`]
+    /// tile, `words / LANE_WORDS` entries. Valid once `set_row` wrote the
+    /// row (like the plane contents themselves).
+    #[inline]
+    pub fn row_occ(&self, i: usize) -> &[u32] {
+        let tiles = self.words / LANE_WORDS;
+        &self.occ[i * tiles..(i + 1) * tiles]
+    }
+
+    /// Total non-zero activation lanes packed into rows `[r0, r1)` — the
+    /// sum of their occupancy maps, no plane walk needed.
+    pub fn nz_bits(&self, r0: usize, r1: usize) -> u64 {
+        let tiles = self.words / LANE_WORDS;
+        self.occ[r0 * tiles..r1 * tiles].iter().map(|&c| c as u64).sum()
+    }
+
+    /// Measured activation occupancy of rows `[r0, r1)` at logical lane
+    /// count `m`: the fraction of non-zero states the kernels will see.
+    /// Degenerate empty ranges report 1.0 so the adaptive dispatch stays
+    /// on the dense lane path.
+    pub fn gate_occupancy(&self, r0: usize, r1: usize, m: usize) -> f64 {
+        let rows = r1 - r0;
+        if rows == 0 || m == 0 {
+            return 1.0;
+        }
+        self.nz_bits(r0, r1) as f64 / (rows * m) as f64
+    }
+
     /// Split the current `rows` into disjoint mutable row-range views of
     /// `rows_per_chunk` rows each (the last may be shorter), so scoped
     /// workers can pack disjoint row ranges of one shared scratch in
@@ -889,6 +1051,8 @@ impl PackScratch {
         if lim == 0 || words == 0 {
             return Vec::new();
         }
+        let tiles = words / LANE_WORDS;
+        let mut occ_chunks = self.occ[..self.rows * tiles].chunks_mut(rows_per_chunk.max(1) * tiles);
         let mut mag_chunks: Vec<_> = self.mag[..n_mag as usize]
             .iter_mut()
             .map(|m| m[..lim].chunks_mut(step))
@@ -899,7 +1063,8 @@ impl PackScratch {
             .map(|(sign, nz)| {
                 let mag: Vec<&mut [u64]> =
                     mag_chunks.iter_mut().map(|c| c.next().unwrap()).collect();
-                PackRowsMut { sign, nz, mag, words, inv_scale }
+                let occ = occ_chunks.next().unwrap();
+                PackRowsMut { sign, nz, mag, occ, words, inv_scale }
             })
             .collect()
     }
@@ -911,6 +1076,7 @@ pub struct PackRowsMut<'a> {
     sign: &'a mut [u64],
     nz: &'a mut [u64],
     mag: Vec<&'a mut [u64]>,
+    occ: &'a mut [u32],
     words: usize,
     inv_scale: f32,
 }
@@ -939,6 +1105,8 @@ impl PackRowsMut<'_> {
                 &mut mags,
             );
         }
+        let tiles = self.words / LANE_WORDS;
+        fill_row_occ(&self.nz[lo..hi], &mut self.occ[row * tiles..(row + 1) * tiles]);
     }
 }
 
@@ -971,12 +1139,36 @@ pub fn gated_packed_rows(
     gated_packed_rows_range(pack, 0, pack.rows, cols, out, stats);
 }
 
+/// [`gated_packed_rows`] with an optional forced strategy: `None` keeps
+/// the adaptive occupancy-measured dispatch, `Some(s)` pins strategy `s`
+/// (the engine's diagnostics hook and the bench harness's sweep).
+pub fn gated_packed_rows_with(
+    pack: &PackScratch,
+    cols: &BitplaneCols,
+    out: &mut [f32],
+    stats: &mut GateStats,
+    strategy: Option<KernelStrategy>,
+) {
+    match strategy {
+        Some(s) => gated_packed_rows_strategy(pack, 0, pack.rows, cols, out, stats, s),
+        None => gated_packed_rows_range(pack, 0, pack.rows, cols, out, stats),
+    }
+}
+
 /// [`gated_packed_rows`] over the row range `[r0, r1)` only, writing into
 /// `out` sized `(r1 − r0) × n`. This is the unit the training engine's
 /// data-parallel forward shards across workers: each shard runs the same
 /// tiled walk over its own rows, and because every dot is an exact
 /// integer, the concatenated result (and any stats merge) is identical to
 /// one full-range call for every split.
+///
+/// The strategy is chosen **adaptively per call**: the range's measured
+/// activation occupancy (read off the occupancy maps the packers already
+/// maintain) is compared against the calibrated crossover thresholds
+/// ([`choose_strategy`]) — very sparse batches run event-driven, mildly
+/// sparse ones tile-skip, dense ones keep the lane walk. All three are
+/// exact, so shards of one batch may legally pick different strategies
+/// and still concatenate to the bit-identical full-range answer.
 pub fn gated_packed_rows_range(
     pack: &PackScratch,
     r0: usize,
@@ -985,7 +1177,29 @@ pub fn gated_packed_rows_range(
     out: &mut [f32],
     stats: &mut GateStats,
 ) {
-    gated_packed_rows_range_width::<LANE_WORDS>(pack, r0, r1, cols, out, stats);
+    let strategy = choose_strategy(pack.gate_occupancy(r0, r1, cols.m));
+    gated_packed_rows_strategy(pack, r0, r1, cols, out, stats, strategy);
+}
+
+/// [`gated_packed_rows_range`] at an explicit [`KernelStrategy`] — the
+/// adaptive dispatch resolves here, and the bench harness / parity tests
+/// drive each strategy directly.
+pub fn gated_packed_rows_strategy(
+    pack: &PackScratch,
+    r0: usize,
+    r1: usize,
+    cols: &BitplaneCols,
+    out: &mut [f32],
+    stats: &mut GateStats,
+    strategy: KernelStrategy,
+) {
+    match strategy {
+        KernelStrategy::Lane => {
+            gated_packed_rows_range_width::<LANE_WORDS>(pack, r0, r1, cols, out, stats)
+        }
+        KernelStrategy::TileSkip => gated_packed_rows_tileskip(pack, r0, r1, cols, out, stats),
+        KernelStrategy::EventList => gated_packed_rows_events(pack, r0, r1, cols, out, stats),
+    }
 }
 
 /// [`gated_packed_rows_range`] at an explicit kernel lane width `L` —
@@ -1008,11 +1222,7 @@ pub fn gated_packed_rows_range_width<const L: usize>(
     debug_assert_eq!(pack.words, cols.words, "row/column plane width mismatch");
     assert_eq!(out.len(), rows * n);
     let m = cols.m as u64;
-    for row in r0..r1 {
-        let (_, nz) = pack.row(row);
-        stats.x_nonzero += nz.iter().map(|w| w.count_ones() as u64).sum::<u64>();
-        stats.x_count += m;
-    }
+    row_stats_preamble(pack, r0, r1, m, stats);
     // multi-bitplane operands carry a grid scale; the hot binary/ternary
     // case keeps the raw integer path (scale product is exactly 1.0 there)
     let multi = pack.n_mag() > 0 || cols.n_mag() > 0;
@@ -1064,6 +1274,243 @@ pub fn gated_packed_rows_range_width<const L: usize>(
     stats.evals += (rows * n) as u64;
 }
 
+/// Shared per-row stats preamble of every strategy kernel: activation
+/// zero-state tallies plus the occupancy-histogram bin of each consumed
+/// row, read off the occupancy maps (the per-tile popcounts sum to the
+/// plane's popcount, so no plane word is re-walked). Every strategy runs
+/// this identically — stats cannot depend on the dispatch choice.
+fn row_stats_preamble(pack: &PackScratch, r0: usize, r1: usize, m: u64, stats: &mut GateStats) {
+    for row in r0..r1 {
+        let nzb: u64 = pack.row_occ(row).iter().map(|&c| c as u64).sum();
+        stats.x_nonzero += nzb;
+        stats.x_count += m;
+        let occ = if m == 0 { 0.0 } else { nzb as f64 / m as f64 };
+        stats.occ_hist[occ_bin(occ)] += 1;
+    }
+}
+
+/// [`gated_packed_rows_range`]'s tile-skip strategy: per (row, column)
+/// pair the walk goes tile by tile ([`LANE_WORDS`] words each) and
+/// consults both occupancy maps first — a tile whose row map **or**
+/// column map reads zero cannot contain a set gate bit, so it is passed
+/// over before any plane word is loaded. Resting weight columns thereby
+/// compound with resting activations. A skipped tile has `gate ≡ 0` and
+/// would have contributed nothing to dots or tallies, so outputs and
+/// `GateStats` stay bit-identical to the lane walk (and the f64 scalar
+/// oracle).
+pub fn gated_packed_rows_tileskip(
+    pack: &PackScratch,
+    r0: usize,
+    r1: usize,
+    cols: &BitplaneCols,
+    out: &mut [f32],
+    stats: &mut GateStats,
+) {
+    let rows = r1 - r0;
+    let n = cols.n;
+    debug_assert!(r1 <= pack.rows);
+    debug_assert_eq!(pack.words, cols.words, "row/column plane width mismatch");
+    assert_eq!(out.len(), rows * n);
+    let m = cols.m as u64;
+    row_stats_preamble(pack, r0, r1, m, stats);
+    let multi = pack.n_mag() > 0 || cols.n_mag() > 0;
+    let scale = pack.scale() as f64 * cols.scale() as f64;
+    let mut amag: Vec<&[u64]> = Vec::new();
+    let wstride = (cols.n_mag() as usize).max(1);
+    let mut wplanes: Vec<&[u64]> = Vec::new();
+    let tiles = cols.words / LANE_WORDS;
+    // same L1 column tiling as the lane walk: the occupancy test decides
+    // *whether* a tile's words load, the tiling decides *when*
+    let tile = col_tile(cols.words, 2 + cols.n_mag() as usize);
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + tile).min(n);
+        if multi {
+            wplanes.clear();
+            for j in j0..j1 {
+                cols.append_col_mag(j, &mut wplanes);
+            }
+        }
+        for row in r0..r1 {
+            let (rs, rn) = pack.row(row);
+            let r_occ = pack.row_occ(row);
+            if multi {
+                pack.fill_row_mag(row, &mut amag);
+            }
+            let orow = &mut out[(row - r0) * n..(row - r0) * n + n];
+            for j in j0..j1 {
+                let (ws, wn) = cols.col(j);
+                let w_occ = cols.col_occ(j);
+                let mut dot = 0i64;
+                let mut active = 0u64;
+                for t in 0..tiles {
+                    // row×col tile intersection: either side resting
+                    // skips the tile outright
+                    if r_occ[t] == 0 || w_occ[t] == 0 {
+                        continue;
+                    }
+                    let (k0, k1) = (t * LANE_WORDS, (t + 1) * LANE_WORDS);
+                    if multi {
+                        let wmag = &wplanes[(j - j0) * wstride..(j - j0 + 1) * wstride];
+                        for k in k0..k1 {
+                            dot_planes_word(
+                                k, rs, rn, &amag, ws, wn, wmag, &mut dot, &mut active,
+                            );
+                        }
+                    } else {
+                        let (d, a) = gated_dot_lanes::<LANE_WORDS>(
+                            &rs[k0..k1],
+                            &rn[k0..k1],
+                            &ws[k0..k1],
+                            &wn[k0..k1],
+                        );
+                        dot += d;
+                        active += a;
+                    }
+                }
+                orow[j] = if multi { (dot as f64 * scale) as f32 } else { dot as f32 };
+                stats.xnor += active;
+                if active > 0 {
+                    stats.bitcount += 1;
+                }
+            }
+        }
+        j0 = j1;
+    }
+    stats.total += rows as u64 * n as u64 * m;
+    stats.evals += (rows * n) as u64;
+}
+
+/// One packed row range lowered to an event list: the sorted
+/// `(lane index, signed magnitude)` pairs of every non-zero activation,
+/// row-major with CSR-style row offsets. Built straight off the nonzero
+/// plane with a `trailing_zeros` bit walk; magnitudes come from the
+/// digit planes (always 1 for the single-plane layout).
+pub struct EventRows {
+    events: Vec<(u32, i32)>,
+    row_ptr: Vec<usize>,
+}
+
+impl EventRows {
+    /// Lower rows `[r0, r1)` of `pack` to events. Indices ascend within
+    /// each row; padding lanes never appear (their gate bits are zero).
+    pub fn from_pack(pack: &PackScratch, r0: usize, r1: usize) -> Self {
+        let n_mag = pack.n_mag() as usize;
+        let mut events = Vec::with_capacity(pack.nz_bits(r0, r1) as usize);
+        let mut row_ptr = Vec::with_capacity(r1 - r0 + 1);
+        row_ptr.push(0);
+        let mut mags: Vec<&[u64]> = Vec::new();
+        for row in r0..r1 {
+            let (sign, nz) = pack.row(row);
+            if n_mag > 0 {
+                pack.fill_row_mag(row, &mut mags);
+            }
+            for (wi, &zw) in nz.iter().enumerate() {
+                let mut z = zw;
+                while z != 0 {
+                    let b = z.trailing_zeros();
+                    let bit = 1u64 << b;
+                    let q = if n_mag == 0 {
+                        1i32
+                    } else {
+                        let mut q = 0i32;
+                        for (p, mp) in mags.iter().enumerate() {
+                            if mp[wi] & bit != 0 {
+                                q += 1 << p;
+                            }
+                        }
+                        q
+                    };
+                    let signed = if sign[wi] & bit != 0 { q } else { -q };
+                    events.push((wi as u32 * 64 + b, signed));
+                    z &= z - 1;
+                }
+            }
+            row_ptr.push(events.len());
+        }
+        EventRows { events, row_ptr }
+    }
+
+    /// Events of local row `i` (0 = `r0`), ascending by lane index.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[(u32, i32)] {
+        &self.events[self.row_ptr[i]..self.row_ptr[i + 1]]
+    }
+
+    /// Total events across the lowered range.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// [`gated_packed_rows_range`]'s event-driven strategy: the row range is
+/// lowered to its event list once ([`EventRows`]), then each
+/// (row, column) dot visits only the row's events, gating each lane
+/// against the column's nonzero plane and gathering the weight magnitude
+/// from the digit planes. Work scales with events × columns instead of
+/// plane words × columns — the win at very low occupancy. The per-event
+/// arithmetic reproduces the digit-plane dot exactly (integer products,
+/// same `multi`/scale output conversion), so outputs and `GateStats` are
+/// bit-identical to the lane walk and the f64 scalar oracle.
+pub fn gated_packed_rows_events(
+    pack: &PackScratch,
+    r0: usize,
+    r1: usize,
+    cols: &BitplaneCols,
+    out: &mut [f32],
+    stats: &mut GateStats,
+) {
+    let rows = r1 - r0;
+    let n = cols.n;
+    debug_assert!(r1 <= pack.rows);
+    debug_assert_eq!(pack.words, cols.words, "row/column plane width mismatch");
+    assert_eq!(out.len(), rows * n);
+    let m = cols.m as u64;
+    row_stats_preamble(pack, r0, r1, m, stats);
+    let events = EventRows::from_pack(pack, r0, r1);
+    let multi = pack.n_mag() > 0 || cols.n_mag() > 0;
+    let scale = pack.scale() as f64 * cols.scale() as f64;
+    let mut wmag: Vec<&[u64]> = Vec::new();
+    // column-outer: one column's planes load once while every row's
+    // events stream past them (the weight side is the reused operand)
+    for j in 0..n {
+        let (ws, wn) = cols.col(j);
+        cols.fill_col_mag(j, &mut wmag);
+        for row in 0..rows {
+            let mut dot = 0i64;
+            let mut active = 0u64;
+            for &(i, q) in events.row(row) {
+                let wi = (i >> 6) as usize;
+                let bit = 1u64 << (i & 63);
+                if wn[wi] & bit == 0 {
+                    continue;
+                }
+                active += 1;
+                let mut qw = 0i64;
+                for (p, mp) in wmag.iter().enumerate() {
+                    if mp[wi] & bit != 0 {
+                        qw += 1 << p;
+                    }
+                }
+                // the event carries the activation's signed magnitude;
+                // the weight sign applies to the gathered magnitude
+                dot += if ws[wi] & bit != 0 { q as i64 * qw } else { -(q as i64) * qw };
+            }
+            out[row * n + j] = if multi { (dot as f64 * scale) as f32 } else { dot as f32 };
+            stats.xnor += active;
+            if active > 0 {
+                stats.bitcount += 1;
+            }
+        }
+    }
+    stats.total += rows as u64 * n as u64 * m;
+    stats.evals += (rows * n) as u64;
+}
+
 /// Gated-XNOR GEMM: `out[row·n + col] = Σᵢ a[row·m + i]·w[i, col]` for
 /// ternary operands. Rows are packed into the caller-owned `pack` scratch
 /// (reused across calls — no per-call allocation), then run through the
@@ -1094,9 +1541,25 @@ pub fn gated_gemm_spec(
     stats: &mut GateStats,
     pack: &mut PackScratch,
 ) {
+    gated_gemm_spec_with(a, rows, spec, cols, out, stats, pack, None);
+}
+
+/// [`gated_gemm_spec`] with an optional forced [`KernelStrategy`]:
+/// `None` keeps the adaptive occupancy-measured dispatch.
+#[allow(clippy::too_many_arguments)]
+pub fn gated_gemm_spec_with(
+    a: &[f32],
+    rows: usize,
+    spec: PlaneSpec,
+    cols: &BitplaneCols,
+    out: &mut [f32],
+    stats: &mut GateStats,
+    pack: &mut PackScratch,
+    strategy: Option<KernelStrategy>,
+) {
     assert_eq!(a.len(), rows * cols.m);
     pack.pack_rows_spec(a, rows, cols.m, spec);
-    gated_packed_rows(pack, cols, out, stats);
+    gated_packed_rows_with(pack, cols, out, stats, strategy);
 }
 
 /// Scalar GEMM with f64 accumulation:
@@ -1621,12 +2084,188 @@ mod tests {
 
     #[test]
     fn stats_merge_accumulates() {
-        let mut a = GateStats { xnor: 3, total: 10, bitcount: 1, evals: 2, x_nonzero: 4, x_count: 5 };
-        let b = GateStats { xnor: 1, total: 10, bitcount: 1, evals: 2, x_nonzero: 1, x_count: 5 };
+        let mut a = GateStats {
+            xnor: 3,
+            total: 10,
+            bitcount: 1,
+            evals: 2,
+            x_nonzero: 4,
+            x_count: 5,
+            occ_hist: [1, 0, 0, 0, 1],
+        };
+        let b = GateStats {
+            xnor: 1,
+            total: 10,
+            bitcount: 1,
+            evals: 2,
+            x_nonzero: 1,
+            x_count: 5,
+            occ_hist: [0, 2, 0, 0, 1],
+        };
         a.merge(&b);
         assert_eq!(a.xnor, 4);
         assert_eq!(a.total, 20);
         assert_eq!(a.resting(), 16);
         assert_eq!(a.x_count, 10);
+        assert_eq!(a.occ_hist, [1, 2, 0, 0, 2]);
+    }
+
+    /// A ternary row at a target occupancy: lanes are zero except an
+    /// `occ` fraction, placed in runs so whole tiles genuinely rest.
+    fn sparse_ternary(rng: &mut Prng, len: usize, occ: f64) -> Vec<f32> {
+        let mut v = vec![0.0f32; len];
+        let live = (len as f64 * occ).round() as usize;
+        // block-structured: fill tiles front to back, so low occupancy
+        // leaves later tiles entirely resting (what the skip maps exploit)
+        for slot in v.iter_mut().take(live) {
+            *slot = if rng.below(2) == 0 { -1.0 } else { 1.0 };
+        }
+        v
+    }
+
+    /// Tentpole: all three execution strategies must be `==` to the f64
+    /// scalar oracle and to each other — outputs *and* GateStats — over
+    /// ragged tails, multi-bit spaces, and occupancies from dense to
+    /// near-empty (including fully-zero rows and columns).
+    #[test]
+    fn strategy_kernels_match_oracle_and_each_other() {
+        let mut rng = Prng::new(71);
+        let strategies =
+            [KernelStrategy::Lane, KernelStrategy::TileSkip, KernelStrategy::EventList];
+        for &(wn, an) in &[(1u32, 1u32), (2, 2), (0, 3), (3, 1)] {
+            let (wspace, aspace) = (DiscreteSpace::new(wn), DiscreteSpace::new(an));
+            for &(rows, m, n) in &[(3usize, 70usize, 9usize), (2, 513, 5), (2, 1100, 17)] {
+                for &occ in &[1.0f64, 0.5, 0.1, 0.02, 0.0] {
+                    let a: Vec<f32> = (0..rows)
+                        .flat_map(|_| {
+                            let keep = sparse_ternary(&mut rng, m, occ);
+                            // map the ternary mask through the space's grid
+                            keep.iter()
+                                .map(|&t| {
+                                    if t == 0.0 {
+                                        0.0
+                                    } else {
+                                        t * aspace.state(rng.below(aspace.n_states())).abs()
+                                    }
+                                })
+                                .collect::<Vec<f32>>()
+                        })
+                        .collect();
+                    let w: Vec<f32> = (0..m * n)
+                        .map(|_| wspace.state(rng.below(wspace.n_states())))
+                        .collect();
+                    let cols = BitplaneCols::pack_cols_space(&w, m, n, wspace);
+                    let mut pack = PackScratch::new();
+                    pack.pack_rows_spec(&a, rows, m, PlaneSpec::for_space(aspace));
+                    let mut want = vec![0.0f32; rows * n];
+                    scalar_gemm(&a, rows, &w, m, n, &mut want);
+                    let mut runs: Vec<(Vec<f32>, GateStats)> = Vec::new();
+                    for &s in &strategies {
+                        let mut got = vec![0.0f32; rows * n];
+                        let mut stats = GateStats::default();
+                        gated_packed_rows_strategy(&pack, 0, rows, &cols, &mut got, &mut stats, s);
+                        assert_eq!(
+                            got,
+                            want,
+                            "{} vs oracle w=Z_{wn} a=Z_{an} m={m} occ={occ}",
+                            s.name()
+                        );
+                        runs.push((got, stats));
+                    }
+                    for (out, stats) in &runs[1..] {
+                        assert_eq!(*out, runs[0].0);
+                        assert_eq!(*stats, runs[0].1, "tallies w=Z_{wn} a=Z_{an} occ={occ}");
+                    }
+                    // and the adaptive dispatch (whatever it picks) too
+                    let mut got = vec![0.0f32; rows * n];
+                    let mut stats = GateStats::default();
+                    gated_packed_rows_range(&pack, 0, rows, &cols, &mut got, &mut stats);
+                    assert_eq!(got, want);
+                    assert_eq!(stats, runs[0].1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn occupancy_maps_match_hand_counts() {
+        // row: lanes 0, 64 and 600 set -> tile 0 has 2 bits, tile 1 has 1
+        let m = 700; // words_for = 11, stride = 16 -> 2 tiles
+        let mut a = vec![0.0f32; m];
+        (a[0], a[64], a[600]) = (1.0, -1.0, 1.0);
+        let mut pack = PackScratch::new();
+        pack.pack_rows(&a, 1, m);
+        assert_eq!(pack.row_occ(0), &[2, 1]);
+        assert_eq!(pack.nz_bits(0, 1), 3);
+        assert!((pack.gate_occupancy(0, 1, m) - 3.0 / 700.0).abs() < 1e-12);
+        // column maps agree with the same layout
+        let cols = BitplaneCols::pack_cols(&a, m, 1);
+        assert_eq!(cols.col_occ(0), &[2, 1]);
+        assert!((cols.occupancy() - 3.0 / 700.0).abs() < 1e-12);
+        // split_rows_mut views maintain the map too
+        let b = vec![1.0f32; m];
+        let mut par = PackScratch::new();
+        par.reset(2, m);
+        for (ci, mut ch) in par.split_rows_mut(1).into_iter().enumerate() {
+            ch.set_row(0, if ci == 0 { &a } else { &b });
+        }
+        assert_eq!(par.row_occ(0), &[2, 1]);
+        // a tile spans LANE_WORDS * 64 = 512 lanes
+        assert_eq!(par.row_occ(1), &[512, 188]);
+        assert_eq!(par.nz_bits(0, 2), 703);
+    }
+
+    #[test]
+    fn strategy_crossovers_dispatch_as_documented() {
+        assert_eq!(choose_strategy(1.0), KernelStrategy::Lane);
+        assert_eq!(choose_strategy(TILE_SKIP_CROSSOVER), KernelStrategy::Lane);
+        assert_eq!(choose_strategy(0.3), KernelStrategy::TileSkip);
+        assert_eq!(choose_strategy(EVENT_LIST_CROSSOVER + 1e-9), KernelStrategy::TileSkip);
+        assert_eq!(choose_strategy(EVENT_LIST_CROSSOVER), KernelStrategy::EventList);
+        assert_eq!(choose_strategy(0.0), KernelStrategy::EventList);
+        assert_eq!(KernelStrategy::Lane.name(), "lane");
+        assert_eq!(KernelStrategy::TileSkip.name(), "tile_skip");
+        assert_eq!(KernelStrategy::EventList.name(), "event_list");
+        // degenerate empty ranges stay on the (always-correct) lane path
+        let pack = PackScratch::new();
+        assert_eq!(pack.gate_occupancy(0, 0, 100), 1.0);
+    }
+
+    #[test]
+    fn occ_hist_bins_rows_by_occupancy() {
+        assert_eq!(occ_bin(0.0), 0);
+        assert_eq!(occ_bin(0.02), 0);
+        assert_eq!(occ_bin(0.05), 1);
+        assert_eq!(occ_bin(0.3), 2);
+        assert_eq!(occ_bin(0.7), 3);
+        assert_eq!(occ_bin(1.0), 4);
+        let m = 100;
+        let mut rng = Prng::new(77);
+        let mut a = sparse_ternary(&mut rng, m, 1.0); // occ 1.0 -> bin 4
+        a.extend(vec![0.0f32; m]); // occ 0.0 -> bin 0
+        a.extend(sparse_ternary(&mut rng, m, 0.3)); // occ 0.3 -> bin 2
+        let w = vec![1.0f32; m];
+        let cols = BitplaneCols::pack_cols(&w, m, 1);
+        let mut out = vec![0.0f32; 3];
+        let mut stats = GateStats::default();
+        gated_xnor_gemm(&a, 3, &cols, &mut out, &mut stats, &mut PackScratch::new());
+        assert_eq!(stats.occ_hist, [1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn event_rows_lower_pack_exactly() {
+        let space = DiscreteSpace::new(2);
+        let mut pack = PackScratch::new();
+        let vals = [0.0f32, -1.0, 0.5, 0.0, 1.0];
+        pack.pack_rows_spec(&vals, 1, 5, PlaneSpec::for_space(space));
+        let ev = EventRows::from_pack(&pack, 0, 1);
+        // q = |v| * inv_scale (inv_scale = 2 for Z_2), signed
+        assert_eq!(ev.row(0), &[(1, -2), (2, 1), (4, 2)]);
+        assert_eq!(ev.len(), 3);
+        assert!(!ev.is_empty());
+        // ternary rows carry ±1 events
+        pack.pack_rows(&[1.0, 0.0, -1.0], 1, 3);
+        let ev = EventRows::from_pack(&pack, 0, 1);
+        assert_eq!(ev.row(0), &[(0, 1), (2, -1)]);
     }
 }

@@ -65,8 +65,8 @@ use crate::ternary::DiscreteSpace;
 use crate::util::pool;
 use crate::nn::params::ParamDesc;
 use bitplane::{
-    gated_gemm_spec, gated_packed_rows, scalar_gemm, BitplaneCols, GateStats, PackScratch,
-    PlaneSpec,
+    choose_strategy, gated_gemm_spec_with, gated_packed_rows_with, scalar_gemm, BitplaneCols,
+    GateStats, KernelStrategy, PackScratch, PlaneSpec,
 };
 
 /// Must match `python/compile/model.py::BN_EPS` (parity depends on it).
@@ -149,6 +149,13 @@ pub struct LayerGateReport {
     /// Zero-state fraction of this layer's packed weights.
     pub w_zero_fraction: f64,
     pub stats: GateStats,
+    /// Kernel strategy for this layer: the forced one if
+    /// [`NativeEngine::set_strategy`] pinned it, otherwise what the
+    /// adaptive dispatch picks for the layer's measured mean activation
+    /// occupancy. Derived from the merged stats, so it is identical for
+    /// every thread count even though individual shards may have
+    /// dispatched differently batch to batch.
+    pub strategy: KernelStrategy,
 }
 
 /// Reusable conv patch-gather scratch (one k·k·cin f32 row). Sized lazily
@@ -211,6 +218,11 @@ pub struct NativeEngine {
     gate: Vec<GateStats>,
     shards: Vec<ShardState>,
     logits: Vec<f32>,
+    /// `Some(s)` pins every packed GEMM to one kernel strategy (bench
+    /// A/Bs and the parity tests); `None` = adaptive per-shard dispatch
+    /// from measured occupancy. All strategies are exact, so this only
+    /// moves time, never bits.
+    force_strategy: Option<KernelStrategy>,
 }
 
 impl NativeEngine {
@@ -373,6 +385,7 @@ impl NativeEngine {
             layers,
             shards: Vec::new(),
             logits: vec![0.0; batch * n_classes],
+            force_strategy: None,
             arch,
         })
     }
@@ -424,6 +437,15 @@ impl NativeEngine {
         }
     }
 
+    /// Pin every packed GEMM to one kernel strategy, or restore adaptive
+    /// per-shard dispatch with `None`. Lane, tile-skip and event-list all
+    /// produce bit-identical logits and [`GateStats`] (pinned by the
+    /// parity tests), so forcing a strategy is purely a performance /
+    /// benchmarking knob.
+    pub fn set_strategy(&mut self, strategy: Option<KernelStrategy>) {
+        self.force_strategy = strategy;
+    }
+
     /// Per-layer gated-op tallies for the XNOR-path layers, accumulated
     /// since construction or the last [`NativeEngine::reset_gate_stats`].
     pub fn gate_report(&self) -> Vec<LayerGateReport> {
@@ -436,6 +458,9 @@ impl NativeEngine {
                 fan_in: l.op.fan_in(),
                 w_zero_fraction: l.w_zero_fraction,
                 stats: *g,
+                strategy: self
+                    .force_strategy
+                    .unwrap_or_else(|| choose_strategy(1.0 - g.x_zero_fraction())),
             })
             .collect()
     }
@@ -498,13 +523,26 @@ impl NativeEngine {
         let (mode, r, hl) = (self.mode, self.r, self.hl);
         let spec = self.act_spec;
         let (nc, sl) = (self.n_classes, self.sample_len);
+        let strat = self.force_strategy;
         let tasks: Vec<_> = x
             .chunks(chunk * sl)
             .zip(self.logits.chunks_mut(chunk * nc))
             .zip(self.shards[..n_shards].iter_mut())
             .map(|((xc, lc), shard)| {
                 move || {
-                    forward_range(arch, layers, mode, r, hl, spec, xc, xc.len() / sl, lc, shard)
+                    forward_range(
+                        arch,
+                        layers,
+                        mode,
+                        r,
+                        hl,
+                        spec,
+                        strat,
+                        xc,
+                        xc.len() / sl,
+                        lc,
+                        shard,
+                    )
                 }
             })
             .collect();
@@ -641,6 +679,7 @@ fn forward_range(
     r: f32,
     hl: f32,
     act_spec: PlaneSpec,
+    strategy: Option<KernelStrategy>,
     x: &[f32],
     b: usize,
     logits: &mut [f32],
@@ -677,6 +716,7 @@ fn forward_range(
                     w,
                     c,
                     act_spec,
+                    strategy,
                     &mut nxt,
                     &mut shard.gate[wi],
                     &mut shard.conv,
@@ -708,6 +748,7 @@ fn run_linear(
     w: usize,
     c: usize,
     act_spec: PlaneSpec,
+    strategy: Option<KernelStrategy>,
     nxt: &mut [f32],
     stats: &mut GateStats,
     conv: &mut ConvScratch,
@@ -717,7 +758,16 @@ fn run_linear(
         LinOp::Dense { m, n } => {
             debug_assert_eq!(h * w * c, m);
             if let Some(cols) = &el.cols {
-                gated_gemm_spec(cur, b, act_spec, cols, &mut nxt[..b * n], stats, pack);
+                gated_gemm_spec_with(
+                    cur,
+                    b,
+                    act_spec,
+                    cols,
+                    &mut nxt[..b * n],
+                    stats,
+                    pack,
+                    strategy,
+                );
             } else {
                 scalar_gemm(cur, b, &el.w, m, n, &mut nxt[..b * n]);
             }
@@ -748,7 +798,7 @@ fn run_linear(
                     // NHWC output: row = pixel, col = channel — exactly the
                     // GEMM's (rows × cout) layout, written in place
                     let out = &mut nxt[s * rows * cout..(s + 1) * rows * cout];
-                    gated_packed_rows(pack, cols, out, stats);
+                    gated_packed_rows_with(pack, cols, out, stats, strategy);
                 }
             } else {
                 // scalar oracle walk (also the fp / first-layer fallback)
@@ -2146,6 +2196,59 @@ mod tests {
             assert!(
                 (u - v).abs() < 1e-3,
                 "logit {i}: packed {u} vs dense {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn forced_strategies_are_bit_identical() {
+        // lane / tile-skip / event-list / adaptive must agree to the bit:
+        // same logits, same merged GateStats, for MLP and CNN shapes.
+        for (arch, model, len) in [
+            ("mlp", tiny_mlp(DiscreteSpace::TERNARY, 21), 784),
+            ("cnn_mnist", tiny_cnn(23), 784),
+        ] {
+            let x = random_batch(3, len, 13);
+            let mut base =
+                NativeEngine::from_model(arch, Method::Gxnor, &model, 0.5, 3, 10, 1).unwrap();
+            let ref_logits = base.infer_batch(&x).unwrap().to_vec();
+            let ref_stats = base.total_gate_stats();
+            for s in [
+                KernelStrategy::Lane,
+                KernelStrategy::TileSkip,
+                KernelStrategy::EventList,
+            ] {
+                let mut eng =
+                    NativeEngine::from_model(arch, Method::Gxnor, &model, 0.5, 3, 10, 1)
+                        .unwrap();
+                eng.set_strategy(Some(s));
+                let logits = eng.infer_batch(&x).unwrap().to_vec();
+                assert_eq!(logits, ref_logits, "{arch}/{s:?} logits");
+                assert_eq!(eng.total_gate_stats(), ref_stats, "{arch}/{s:?} stats");
+                for rep in eng.gate_report() {
+                    assert_eq!(rep.strategy, s, "{arch}/{s:?} report pins the forced kernel");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_report_strategy_tracks_occupancy() {
+        let model = tiny_mlp(DiscreteSpace::TERNARY, 5);
+        let mut eng =
+            NativeEngine::from_model("mlp", Method::Gxnor, &model, 0.5, 4, 10, 1).unwrap();
+        let x = random_batch(4, 784, 1);
+        eng.infer_batch(&x).unwrap();
+        for rep in eng.gate_report() {
+            let occ = 1.0 - rep.stats.x_zero_fraction();
+            assert_eq!(rep.strategy, choose_strategy(occ), "{}", rep.name);
+            // the occupancy histogram saw exactly the rows the kernel ran
+            // (x_count = rows × fan-in, one histogram entry per row)
+            assert_eq!(
+                rep.stats.occ_hist.iter().sum::<u64>(),
+                rep.stats.x_count / rep.fan_in as u64,
+                "{}",
+                rep.name
             );
         }
     }

@@ -140,6 +140,23 @@ pub fn gate_rate_matches(measured_resting_rate: f64, pw0: f64, px0: f64, tol: f6
     (measured_resting_rate - gxnor_resting_probability(pw0, px0)).abs() <= tol
 }
 
+/// Lower the packed kernel's *measured* [`GateStats`] into hwsim
+/// [`OpCounts`] — the bridge between what the engine actually executed
+/// (tile skips, event lists and all) and the Fig. 11 operation model.
+/// GXNOR execution does no multiplies or accumulates: every woken
+/// connection is one XNOR, every neuron evaluation that woke at least
+/// once is one bitcount, and everything else rested.
+pub fn ops_from_gate_stats(s: &crate::engine::bitplane::GateStats) -> OpCounts {
+    OpCounts {
+        mult: 0,
+        acc: 0,
+        xnor: s.xnor,
+        bitcount: s.bitcount,
+        resting: s.resting(),
+        total: s.total,
+    }
+}
+
 /// Table 2's analytic expectations for an M-input neuron, parameterized by
 /// the zero-state probabilities of weights (`pw0`) and activations (`px0`).
 /// The paper's uniform-state assumption is pw0 = px0 = 1/3.
@@ -303,6 +320,28 @@ mod tests {
         assert_eq!(gxnor_resting_probability(1.0, 0.0), 1.0);
         assert!(gate_rate_matches(0.56, 1.0 / 3.0, 1.0 / 3.0, 0.02));
         assert!(!gate_rate_matches(0.70, 1.0 / 3.0, 1.0 / 3.0, 0.02));
+    }
+
+    #[test]
+    fn ops_from_gate_stats_preserves_identities() {
+        use crate::engine::bitplane::GateStats;
+        let s = GateStats {
+            xnor: 40,
+            total: 90,
+            bitcount: 6,
+            evals: 6,
+            x_nonzero: 10,
+            x_count: 15,
+            occ_hist: [0; 5],
+        };
+        let c = ops_from_gate_stats(&s);
+        assert_eq!((c.mult, c.acc), (0, 0));
+        assert_eq!(c.xnor, 40);
+        assert_eq!(c.bitcount, 6);
+        assert_eq!(c.resting, 50);
+        assert_eq!(c.total, 90);
+        assert_eq!(c.xnor + c.resting, c.total);
+        assert_eq!(c.resting_probability(), s.resting_rate());
     }
 
     #[test]

@@ -14,7 +14,8 @@ pub mod network;
 pub mod report;
 
 pub use counts::{
-    count_neuron, expected_counts, gate_rate_matches, gxnor_resting_probability, NetArch, OpCounts,
+    count_neuron, expected_counts, gate_rate_matches, gxnor_resting_probability,
+    ops_from_gate_stats, NetArch, OpCounts,
 };
 pub use energy::EnergyModel;
-pub use network::{network_counts, render_network_table, LayerReport};
+pub use network::{measured_network_counts, network_counts, render_network_table, LayerReport};

@@ -5,6 +5,7 @@
 
 use std::fmt::Write as _;
 
+use crate::engine::LayerGateReport;
 use crate::hwsim::counts::{expected_counts, NetArch, OpCounts};
 use crate::hwsim::energy::EnergyModel;
 use crate::nn::arch::{geometry, Arch, LayerGeometry};
@@ -47,6 +48,74 @@ pub fn network_counts(
             c.resting *= n;
             c.total *= n;
             LayerReport { geometry: g, counts: c }
+        })
+        .collect()
+}
+
+/// Per-sample op counts from what the engine *actually executed*: each
+/// weighted layer whose name appears in `reports` (the native engine's
+/// [`crate::engine::NativeEngine::gate_report`]) contributes its measured
+/// gate tallies normalized to one sample; layers the engine ran unpacked
+/// (the first layer, which sees the real-valued input) fall back to the
+/// Table 2 analytic expectation with `pw0_fallback` weight sparsity and
+/// px0 = 0.
+///
+/// Normalization is exact for `total` and `evals` (both are
+/// samples × a per-sample constant); `xnor`/`bitcount` are per-sample
+/// *means* rounded to the nearest integer, and `resting` is re-derived as
+/// `total − xnor` so the resting identity survives rounding. Rates
+/// (`resting_probability`) are therefore within 1/total of the raw
+/// measured rate — indistinguishable at report precision.
+pub fn measured_network_counts(
+    arch: &Arch,
+    reports: &[LayerGateReport],
+    pw0_fallback: f64,
+) -> Vec<LayerReport> {
+    let geo = geometry(arch);
+    geo.into_iter()
+        .map(|g| {
+            let measured = reports
+                .iter()
+                .find(|r| r.name == g.name)
+                .filter(|r| r.stats.evals > 0);
+            let counts = match measured {
+                Some(rep) => {
+                    let s = &rep.stats;
+                    let ne = g.neuron_evals as u64;
+                    assert!(
+                        s.evals % ne == 0,
+                        "{}: {} neuron evals not a multiple of {} per sample",
+                        g.name,
+                        s.evals,
+                        ne
+                    );
+                    let samples = s.evals / ne;
+                    let total = s.total / samples;
+                    let xnor =
+                        ((s.xnor as f64 / samples as f64).round() as u64).min(total);
+                    let bitcount =
+                        ((s.bitcount as f64 / samples as f64).round() as u64).min(ne);
+                    OpCounts {
+                        mult: 0,
+                        acc: 0,
+                        xnor,
+                        bitcount,
+                        resting: total - xnor,
+                        total,
+                    }
+                }
+                None => {
+                    let mut c =
+                        expected_counts(NetArch::Gxnor, g.fan_in as u64, pw0_fallback, 0.0);
+                    let n = g.neuron_evals as u64;
+                    c.xnor *= n;
+                    c.bitcount *= n;
+                    c.resting *= n;
+                    c.total *= n;
+                    c
+                }
+            };
+            LayerReport { geometry: g, counts }
         })
         .collect()
 }
@@ -147,6 +216,65 @@ mod tests {
         assert!(t.contains("TOTAL"));
         assert!(t.contains("GXNOR-Nets"));
         assert!(t.contains("energy vs fp"));
+    }
+
+    #[test]
+    fn measured_counts_normalize_per_sample_and_fall_back() {
+        use crate::engine::bitplane::{GateStats, KernelStrategy};
+        let arch = build_arch("mlp").unwrap();
+        let geo = geometry(&arch);
+        // fake a 3-sample measurement of the two deep FC layers (the
+        // first layer runs unpacked, exactly like the real engine)
+        let samples = 3u64;
+        let reports: Vec<LayerGateReport> = geo[1..]
+            .iter()
+            .map(|g| {
+                let ne = g.neuron_evals as u64;
+                let m = g.fan_in as u64;
+                LayerGateReport {
+                    name: g.name.clone(),
+                    fan_in: g.fan_in,
+                    w_zero_fraction: 1.0 / 3.0,
+                    stats: GateStats {
+                        // deliberately not divisible by `samples`
+                        xnor: samples * ne * m / 2 + 1,
+                        total: samples * ne * m,
+                        bitcount: samples * ne,
+                        evals: samples * ne,
+                        x_nonzero: samples * m * 2 / 3,
+                        x_count: samples * m,
+                        occ_hist: [0, 0, 0, samples, 0],
+                    },
+                    strategy: KernelStrategy::TileSkip,
+                }
+            })
+            .collect();
+        let reps = measured_network_counts(&arch, &reports, 1.0 / 3.0);
+        assert_eq!(reps.len(), geo.len());
+        // unmeasured first layer: analytic fallback at px0 = 0
+        let g0 = &reps[0].geometry;
+        let mut want0 = expected_counts(NetArch::Gxnor, g0.fan_in as u64, 1.0 / 3.0, 0.0);
+        let n0 = g0.neuron_evals as u64;
+        want0.xnor *= n0;
+        want0.bitcount *= n0;
+        want0.resting *= n0;
+        want0.total *= n0;
+        assert_eq!(reps[0].counts, want0);
+        // measured layers: per-sample totals exact, identities survive
+        for (rep, raw) in reps[1..].iter().zip(&reports) {
+            let ne = rep.geometry.neuron_evals as u64;
+            let m = rep.geometry.fan_in as u64;
+            assert_eq!(rep.counts.total, ne * m);
+            assert_eq!(rep.counts.bitcount, ne);
+            assert_eq!(rep.counts.xnor + rep.counts.resting, rep.counts.total);
+            // rate within rounding of the raw measured rate
+            let raw_rate = raw.stats.resting_rate();
+            assert!(
+                (rep.counts.resting_probability() - raw_rate).abs() < 1.0 / (ne * m) as f64,
+                "{}",
+                rep.geometry.name
+            );
+        }
     }
 
     #[test]

@@ -2,8 +2,9 @@
 
 use std::fmt::Write as _;
 
+use crate::engine::LayerGateReport;
 use crate::hwsim::counts::{
-    count_neuron, expected_counts, gxnor_resting_probability, NetArch, OpCounts,
+    count_neuron, expected_counts, gate_rate_matches, gxnor_resting_probability, NetArch, OpCounts,
 };
 use crate::hwsim::energy::EnergyModel;
 use crate::util::prng::Prng;
@@ -81,6 +82,40 @@ pub fn fig12_example(trials: usize, seed: u64) -> (u64, f64) {
     (21, active as f64 / trials as f64)
 }
 
+/// Per-layer measured-vs-analytic gate comparison: for each packed layer
+/// the engine reported, print the kernel strategy it dispatched, the
+/// resting rate it *executed*, and the Table 2 analytic prediction for
+/// that layer's measured zero-state fractions. Returns the rendered table
+/// and whether every layer passed [`gate_rate_matches`] under `tol`
+/// (trained tensors correlate weights with activations, so a few percent
+/// of slack over the independence model is expected).
+pub fn measured_vs_analytic(reports: &[LayerGateReport], tol: f64) -> (String, bool) {
+    let mut out = String::new();
+    let mut all_ok = true;
+    let _ = writeln!(
+        out,
+        "{:<24} {:>11} {:>10} {:>10} {:>7}",
+        "layer", "strategy", "measured", "analytic", "match"
+    );
+    for rep in reports {
+        let pw0 = rep.w_zero_fraction;
+        let px0 = rep.stats.x_zero_fraction();
+        let measured = rep.stats.resting_rate();
+        let ok = gate_rate_matches(measured, pw0, px0, tol);
+        all_ok &= ok;
+        let _ = writeln!(
+            out,
+            "{:<24} {:>11} {:>9.1}% {:>9.1}% {:>7}",
+            rep.name,
+            rep.strategy.name(),
+            100.0 * measured,
+            100.0 * gxnor_resting_probability(pw0, px0),
+            if ok { "ok" } else { "MISS" }
+        );
+    }
+    (out, all_ok)
+}
+
 /// Measured-mode table: op counts from real weight/activation slices
 /// (e.g. a trained model's first FC layer against a test batch).
 pub fn measured_row(arch: NetArch, w: &[f32], x: &[f32]) -> OpCounts {
@@ -118,6 +153,37 @@ mod tests {
         let (nominal, mean) = fig12_example(5000, 1);
         assert_eq!(nominal, 21);
         assert!((mean - 9.33).abs() < 0.35, "mean={mean}");
+    }
+
+    #[test]
+    fn measured_vs_analytic_flags_divergence() {
+        use crate::engine::bitplane::{GateStats, KernelStrategy};
+        let rep = |xnor: u64, total: u64, x_nonzero: u64, x_count: u64| LayerGateReport {
+            name: "fc1 16->8".into(),
+            fan_in: 16,
+            w_zero_fraction: 1.0 / 3.0,
+            stats: GateStats {
+                xnor,
+                total,
+                bitcount: 8,
+                evals: 8,
+                x_nonzero,
+                x_count,
+                occ_hist: [0; 5],
+            },
+            strategy: KernelStrategy::EventList,
+        };
+        // independence holds exactly: rest = 1 - (2/3)(3/4) = 1/2
+        let good = rep(64, 128, 12, 16);
+        let (t, ok) = measured_vs_analytic(&[good], 0.02);
+        assert!(ok, "{t}");
+        assert!(t.contains("event_list"), "{t}");
+        assert!(t.contains("ok"), "{t}");
+        // wildly off: measured 0% resting vs analytic 50%
+        let bad = rep(128, 128, 12, 16);
+        let (t, ok) = measured_vs_analytic(&[bad], 0.02);
+        assert!(!ok, "{t}");
+        assert!(t.contains("MISS"), "{t}");
     }
 
     #[test]

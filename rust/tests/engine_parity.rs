@@ -111,6 +111,89 @@ fn prop_gate_rate_tracks_analytic_prediction() {
     });
 }
 
+/// GateStats invariants across every execution path: `xnor + resting ==
+/// total`, exact eval/activation tallies, and bit-identical stats *and*
+/// outputs across lane widths {1, 4, 8}, the three kernel strategies
+/// (lane, tile-skip, event-list), and multi-bit `PlaneSpec`s — with the
+/// f64 scalar GEMM as the output oracle. This is what keeps the sparse
+/// paths from silently miscounting the ops hwsim consumes.
+#[test]
+fn prop_gate_stats_invariant_across_widths_and_strategies() {
+    use gxnor::engine::bitplane::{
+        gated_packed_rows_range_width, gated_packed_rows_strategy, KernelStrategy, PlaneSpec,
+    };
+    property("GateStats width/strategy invariance", 60, |g: &mut Gen| {
+        // ternary and multi-bit spaces (all contain the zero state)
+        let n_space = g.usize_in(1, 4) as u32;
+        let space = DiscreteSpace::new(n_space);
+        let rows = g.usize_in(1, 5);
+        let m = g.usize_in(1, 700);
+        let n = g.usize_in(1, 20);
+        // extra zero bias so sparse rows — and fully resting tiles — occur
+        let p_zero = g.f32_in(0.0, 0.9);
+        let states = space.states();
+        let mut draw = |g: &mut Gen| {
+            if g.unit_f32() < p_zero {
+                0.0
+            } else {
+                states[g.usize_in(0, states.len())]
+            }
+        };
+        let a: Vec<f32> = (0..rows * m).map(|_| draw(g)).collect();
+        let w: Vec<f32> = (0..m * n).map(|_| draw(g)).collect();
+        let cols = BitplaneCols::pack_cols_space(&w, m, n, space);
+        let mut pack = PackScratch::new();
+        pack.pack_rows_spec(&a, rows, m, PlaneSpec::for_space(space));
+        let mut want = vec![0.0f32; rows * n];
+        scalar_gemm(&a, rows, &w, m, n, &mut want);
+
+        let mut variants: Vec<(&'static str, Vec<f32>, GateStats)> = Vec::new();
+        let mut out = vec![0.0f32; rows * n];
+        let mut stats = GateStats::default();
+        gated_packed_rows_range_width::<1>(&pack, 0, rows, &cols, &mut out, &mut stats);
+        variants.push(("width1", out.clone(), stats));
+        stats = GateStats::default();
+        gated_packed_rows_range_width::<4>(&pack, 0, rows, &cols, &mut out, &mut stats);
+        variants.push(("width4", out.clone(), stats));
+        stats = GateStats::default();
+        gated_packed_rows_range_width::<8>(&pack, 0, rows, &cols, &mut out, &mut stats);
+        variants.push(("width8", out.clone(), stats));
+        for (name, strat) in [
+            ("lane", KernelStrategy::Lane),
+            ("tile_skip", KernelStrategy::TileSkip),
+            ("event_list", KernelStrategy::EventList),
+        ] {
+            stats = GateStats::default();
+            gated_packed_rows_strategy(&pack, 0, rows, &cols, &mut out, &mut stats, strat);
+            variants.push((name, out.clone(), stats));
+        }
+
+        let x_nonzero = a.iter().filter(|&&v| v != 0.0).count() as u64;
+        for (name, o, s) in &variants {
+            let ctx = format!("N={n_space} rows={rows} m={m} n={n} {name}");
+            if o != &want {
+                return Err(format!("{ctx}: output != scalar oracle"));
+            }
+            if s.xnor + s.resting() != s.total {
+                return Err(format!("{ctx}: xnor + resting != total"));
+            }
+            if s.total != (rows * m * n) as u64 || s.evals != (rows * n) as u64 {
+                return Err(format!("{ctx}: total/evals miscounted"));
+            }
+            if s.x_count != (rows * m) as u64 || s.x_nonzero != x_nonzero {
+                return Err(format!("{ctx}: activation tallies miscounted"));
+            }
+            if s.occ_hist.iter().sum::<u64>() != rows as u64 {
+                return Err(format!("{ctx}: occupancy histogram lost rows"));
+            }
+            if s != &variants[0].2 {
+                return Err(format!("{ctx}: stats diverge from width1"));
+            }
+        }
+        Ok(())
+    });
+}
+
 // ---------------------------------------------------------------------------
 // evaluate_engine coverage (no artifacts needed)
 // ---------------------------------------------------------------------------
