@@ -16,6 +16,7 @@
 //! | fig13   | Fig. 13 — (N1, N2) discrete-space grid                    |
 //! | perf    | §Perf — DST throughput, packing, exec latency, data rate  |
 //! | kernels | bitplane lane micro-benches → BENCH_kernels.json          |
+//! | serve   | open-loop serving latency bench → BENCH_serve.json        |
 //!
 //! The `kernels` section is the perf-regression harness: fixed
 //! invocation/iteration counts with a warmup discard, a 1/4/8 lane-width
@@ -117,6 +118,9 @@ fn main() -> anyhow::Result<()> {
     }
     if want("perf") {
         bench_perf(rt.as_mut(), manifest.as_ref())?;
+    }
+    if want("serve") {
+        bench_serve()?;
     }
     Ok(())
 }
@@ -471,6 +475,70 @@ fn bench_perf(mut rt: Option<&mut Runtime>, manifest: Option<&Manifest>) -> anyh
     } else {
         println!("(inference A/B skipped: needs artifacts + a PJRT backend)\n");
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// serve: open-loop serving latency benchmark (BENCH_serve.json)
+// ---------------------------------------------------------------------------
+
+/// The `serve` bench section: an in-process `gxnor serve --bench` run at a
+/// modest sustained rate — fresh-init model (latency only, no accuracy
+/// claim), replica-per-core, Poisson open-loop arrivals with the warmup
+/// discarded on both the client and server side. Writes the
+/// `bench_serve.v1` document to `BENCH_serve.json`.
+fn bench_serve() -> anyhow::Result<()> {
+    use gxnor::serve::{run_bench, EngineSpec, LoadgenCfg, ServeConfig};
+    println!("== serve: open-loop serving latency (BENCH_serve.json) ==\n");
+    let spec = EngineSpec {
+        arch: "mlp".into(),
+        method: Method::Gxnor,
+        r: 0.5,
+        ckpt: None,
+        artifacts: "artifacts".into(),
+        seed: 42,
+    };
+    let serve_cfg = ServeConfig {
+        replicas: 0, // one per core
+        max_batch: 32,
+        max_wait_ms: 2.0,
+        queue_bound: 256,
+        deadline_ms: 0.0,
+    };
+    let load_cfg = LoadgenCfg {
+        rps: 300.0,
+        duration_s: 2.5,
+        warmup_s: 0.5,
+        conns: 16,
+        seed: 42,
+        sample_len: 0, // filled from the engine by run_bench
+        deadline_ms: 0,
+    };
+    let doc = run_bench(&spec, &serve_cfg, &load_cfg, 1)?;
+    let g = |path: &[&str]| {
+        let mut j = &doc;
+        for &k in path {
+            j = j.get(k)?;
+        }
+        j.as_f64()
+    };
+    println!(
+        "offered {:.0} rps -> completed {:.0} ({:.0} rps), shed {:.0}, \
+         p50 {:.2} ms, p99 {:.2} ms, mean batch fill {:.2}",
+        g(&["config", "rps"]).unwrap_or(0.0),
+        g(&["load", "completed"]).unwrap_or(0.0),
+        g(&["load", "throughput_rps"]).unwrap_or(0.0),
+        g(&["load", "shed"]).unwrap_or(0.0),
+        g(&["load", "latency_ms", "p50_ms"]).unwrap_or(0.0),
+        g(&["load", "latency_ms", "p99_ms"]).unwrap_or(0.0),
+        g(&["server", "mean_batch_fill"]).unwrap_or(0.0),
+    );
+    let text = doc.to_string();
+    std::fs::write("BENCH_serve.json", &text)?;
+    if std::path::Path::new("../ROADMAP.md").exists() {
+        std::fs::write("../BENCH_serve.json", &text)?;
+    }
+    println!("wrote BENCH_serve.json (schema bench_serve.v1)\n");
     Ok(())
 }
 

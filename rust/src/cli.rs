@@ -65,6 +65,20 @@ impl Args {
         self.opt_parsed(name, default, "a non-negative integer")
     }
 
+    /// Parse option `name` as a socket address (`host:port`), or `default`
+    /// when absent. Same error contract as the numeric `opt_*` helpers:
+    /// a present but unparsable value names the flag and the bad value.
+    pub fn opt_socket_addr(
+        &self,
+        name: &str,
+        default: &str,
+    ) -> Result<std::net::SocketAddr, String> {
+        let s = self.opt_or(name, default);
+        s.parse().map_err(|_| {
+            format!("--{name}: invalid value {s:?} (expected host:port, e.g. 127.0.0.1:7433)")
+        })
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -242,6 +256,23 @@ mod tests {
         let c = cmd().parse(&argv(&["--dataset", "x", "--epochs", "7"])).unwrap();
         assert_eq!(c.opt_usize("epochs", 0).unwrap(), 7);
         assert_eq!(c.opt_f32("epochs", 0.0).unwrap(), 7.0);
+    }
+
+    /// Same error contract for socket addresses: `--addr nonsense` names
+    /// the flag and the value instead of silently binding the default.
+    #[test]
+    fn socket_addr_parses_and_rejects() {
+        let a = Args::default();
+        assert_eq!(
+            a.opt_socket_addr("addr", "127.0.0.1:7433").unwrap(),
+            "127.0.0.1:7433".parse::<std::net::SocketAddr>().unwrap()
+        );
+        // port 0 (ephemeral, used by tests/bench) is valid
+        assert!(a.opt_socket_addr("addr", "127.0.0.1:0").is_ok());
+        let cmd = Command::new("serve", "serve").opt("addr", "127.0.0.1:7433", "listen address");
+        let b = cmd.parse(&argv(&["--addr", "localhost"])).unwrap();
+        let err = b.opt_socket_addr("addr", "127.0.0.1:7433").unwrap_err();
+        assert!(err.contains("--addr") && err.contains("localhost"), "{err}");
     }
 
     #[test]

@@ -41,7 +41,7 @@ use crate::coordinator::optimizer::{OptKind, Optimizer};
 use crate::coordinator::schedule::LrSchedule;
 use crate::data::{AugmentCfg, Batch, Dataset, Item, Prefetcher};
 use crate::engine::{NativeEngine, NativeTrainEngine};
-use crate::metrics::Recorder;
+use crate::metrics::{percentile, Recorder};
 use crate::nn::arch::{build_arch, param_descs};
 use crate::nn::init::init_model;
 use crate::nn::params::{ModelState, ParamDesc, ParamKind, ParamValue};
@@ -51,7 +51,7 @@ use crate::runtime::manifest::{GraphMeta, Manifest};
 use crate::ternary::{dst_update, dst_update_packed, DiscreteSpace, DstStats};
 use crate::util::argmax;
 use crate::util::prng::Prng;
-use crate::util::timer::{percentile, Stopwatch};
+use crate::util::timer::Stopwatch;
 
 /// Train-graph input layout: x, labels, r, a, hl, params…, bn….
 const TRAIN_FIXED_INPUTS: usize = 5;

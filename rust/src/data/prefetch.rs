@@ -102,6 +102,16 @@ impl<'scope> Prefetcher<'scope> {
         depth: usize,
         pad_final: bool,
     ) -> Prefetcher<'scope> {
+        if depth < 2 {
+            // Same degradation as spawn_eval: prime() clamps to one buffer,
+            // so the worker can only assemble batch k+1 after the consumer
+            // recycles batch k — the step loop loses all assembly overlap.
+            // Degrade loudly, not silently.
+            eprintln!(
+                "prefetch(train): ring depth {depth} < 2 — batch assembly degrades to \
+                 synchronous (no overlap with the step loop)"
+            );
+        }
         let (tx, rx) = channel::<Item>();
         let (tx_back, rx_back) = channel::<Batch>();
         prime(&tx_back, ds, batch, depth);

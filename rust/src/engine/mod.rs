@@ -56,7 +56,7 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::checkpoint;
 use crate::coordinator::method::Method;
-use crate::nn::arch::{arch_from_weights, geometry, Arch, Layer};
+use crate::nn::arch::{arch_from_weights, build_arch, geometry, param_descs, Arch, Layer};
 use crate::nn::init::init_model;
 use crate::nn::params::{ModelState, ParamKind, ParamValue};
 use crate::runtime::exec::ExecEngine;
@@ -499,14 +499,28 @@ impl NativeEngine {
         }
     }
 
-    fn forward(&mut self, x: &[f32]) -> Result<()> {
-        let b = self.batch;
-        if x.len() != b * self.sample_len {
+    /// Run 1..=`self.batch` samples and return how many ran. The batch
+    /// given at construction is a *capacity*, not a contract: the serving
+    /// layer coalesces arrivals into whatever fill the SLO allowed, so a
+    /// partial batch must run as-is. Per-sample independence (contiguous
+    /// sample-range shards, no cross-sample op) makes the logits for a
+    /// sample bit-identical regardless of how many neighbours ran with it
+    /// — pinned by `tests/serve.rs`.
+    fn forward(&mut self, x: &[f32]) -> Result<usize> {
+        let sl = self.sample_len;
+        if x.is_empty() || x.len() % sl != 0 {
             return Err(anyhow!(
-                "native engine: batch input {} != {}x{}",
+                "native engine: input {} is not a positive multiple of sample_len {}",
                 x.len(),
+                sl
+            ));
+        }
+        let b = x.len() / sl;
+        if b > self.batch {
+            return Err(anyhow!(
+                "native engine: {} samples exceed construction batch {}",
                 b,
-                self.sample_len
+                self.batch
             ));
         }
         // contiguous sample-range shards, at most one per worker thread;
@@ -526,7 +540,7 @@ impl NativeEngine {
         let strat = self.force_strategy;
         let tasks: Vec<_> = x
             .chunks(chunk * sl)
-            .zip(self.logits.chunks_mut(chunk * nc))
+            .zip(self.logits[..b * nc].chunks_mut(chunk * nc))
             .zip(self.shards[..n_shards].iter_mut())
             .map(|((xc, lc), shard)| {
                 move || {
@@ -554,7 +568,12 @@ impl NativeEngine {
                 g.merge(sg);
             }
         }
-        Ok(())
+        Ok(b)
+    }
+
+    /// Flattened per-sample input length (`h*w*c` of the arch input).
+    pub fn sample_len(&self) -> usize {
+        self.sample_len
     }
 }
 
@@ -575,9 +594,15 @@ impl ExecEngine for NativeEngine {
         self.effective_threads(self.batch)
     }
 
+    /// Partial batches are native here: `x` may hold any 1..=`batch()`
+    /// samples and the returned slice covers exactly the samples given.
+    fn supports_partial_batch(&self) -> bool {
+        true
+    }
+
     fn infer_batch(&mut self, x: &[f32]) -> Result<&[f32]> {
-        self.forward(x)?;
-        Ok(&self.logits)
+        let b = self.forward(x)?;
+        Ok(&self.logits[..b * self.n_classes])
     }
 }
 
@@ -615,6 +640,57 @@ pub fn native_engine_from_checkpoint(
     let mut model = init_model(infer_g.params.clone(), bn_names, &bn_shapes, space, 0);
     checkpoint::load(&mut model, ckpt_path).map_err(|e| anyhow!(e))?;
     NativeEngine::from_model(arch, method, &model, r, infer_g.batch, infer_g.n_classes, threads)
+}
+
+/// Assemble a `(ModelState, n_classes)` pair for device-free serving and
+/// eval without *requiring* lowered artifacts. Parameter descriptors come
+/// from the manifest's infer graph when one is available (same batch>16
+/// preference as [`native_engine_from_checkpoint`], so shapes match what
+/// the trainer produced) and from the catalogue architecture otherwise;
+/// tensor values come from the checkpoint when a path is given, else a
+/// seeded fresh init — the latter is only meaningful for latency benching,
+/// where logits are exercised but never inspected for accuracy. The
+/// serving replica pool builds one [`NativeEngine::from_model`] per
+/// replica from the returned state.
+pub fn model_from_checkpoint_or_init(
+    manifest: Option<&Manifest>,
+    arch: &str,
+    method: Method,
+    ckpt_path: Option<&str>,
+    seed: u64,
+) -> Result<(ModelState, usize)> {
+    let mode = method.graph_mode();
+    let space = method.weight_space().unwrap_or(DiscreteSpace::TERNARY);
+    let infer_g = manifest.and_then(|m| {
+        m.graphs
+            .iter()
+            .find(|g| g.arch == arch && g.mode == mode && g.kind == "infer" && g.batch > 16)
+            .or_else(|| {
+                m.graphs
+                    .iter()
+                    .find(|g| g.arch == arch && g.mode == mode && g.kind == "infer")
+            })
+    });
+    let (descs, bn_names, bn_shapes, n_classes) = match infer_g {
+        Some(g) => (
+            g.params.clone(),
+            g.bn_state.iter().map(|s| s.name.clone()).collect::<Vec<String>>(),
+            g.bn_state.iter().map(|s| s.numel()).collect::<Vec<usize>>(),
+            g.n_classes,
+        ),
+        None => {
+            let a = build_arch(arch).map_err(|e| anyhow!(e))?;
+            let (descs, bn_names, bn_shapes) = param_descs(&a);
+            // catalogue archs all end in a 10-way classifier (MNIST/CIFAR
+            // label space), same fallback the native trainer uses
+            (descs, bn_names, bn_shapes, 10)
+        }
+    };
+    let mut model = init_model(descs, bn_names, &bn_shapes, space, seed);
+    if let Some(p) = ckpt_path {
+        checkpoint::load(&mut model, p).map_err(|e| anyhow!(e))?;
+    }
+    Ok((model, n_classes))
 }
 
 /// Validate the shape walk and return the largest per-batch activation

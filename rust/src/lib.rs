@@ -39,6 +39,7 @@ pub mod metrics;
 pub mod nn;
 pub mod ptest;
 pub mod runtime;
+pub mod serve;
 pub mod sweep;
 pub mod ternary;
 pub mod util;

@@ -5,6 +5,8 @@
 //!            or multi:N1,N2) on a real or procedural dataset
 //!   eval     evaluate a checkpoint (--engine xla|native)
 //!   sweep    reproduce the ablation figures (m / a / r / levels)
+//!   serve    async inference service: dynamic batching over native-engine
+//!            replicas (server, client probes, loadgen, --bench)
 //!   hwsim    print Table 2 + the Fig. 12 gating example
 //!   info     list artifacts and their shapes
 //!   inspect  describe a checkpoint (tensors, spaces, histograms)
@@ -37,6 +39,7 @@ fn main() {
         "train" => cmd_train(rest),
         "eval" => cmd_eval(rest),
         "sweep" => cmd_sweep(rest),
+        "serve" => cmd_serve(rest),
         "hwsim" => cmd_hwsim(rest),
         "info" => cmd_info(rest),
         "inspect" => cmd_inspect(rest),
@@ -52,9 +55,17 @@ fn print_usage() {
     println!(
         "gxnor — ternary weights & activations without full-precision memory\n\
          (Deng et al., Neural Networks 2018 — unified discretization framework)\n\n\
-         usage: gxnor <train|eval|sweep|hwsim|info|inspect> [options]\n"
+         usage: gxnor <train|eval|sweep|serve|hwsim|info|inspect> [options]\n"
     );
-    let cmds = [train_cmd(), eval_cmd(), sweep_cmd(), hwsim_cmd(), info_cmd(), inspect_cmd()];
+    let cmds = [
+        train_cmd(),
+        eval_cmd(),
+        sweep_cmd(),
+        serve_cmd(),
+        hwsim_cmd(),
+        info_cmd(),
+        inspect_cmd(),
+    ];
     for c in cmds {
         println!("{}", c.help());
     }
@@ -403,6 +414,196 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         println!("wrote {csv}");
     }
     Ok(())
+}
+
+fn serve_cmd() -> Command {
+    Command::new("serve", "async inference service: dynamic batching over native replicas")
+        .opt("ckpt", "", "checkpoint to serve (empty = seeded fresh init, bench only)")
+        .opt("arch", "mlp", "mlp | cnn_mnist | cnn_cifar")
+        .opt("method", "gxnor", "fp|bwn|twn|bnn|gxnor|multi:N1,N2")
+        .opt("r", "0.5", "zero-window half width")
+        .opt("seed", "42", "init + loadgen RNG seed")
+        .opt("artifacts", "artifacts", "artifact dir (manifest supplies shapes when present)")
+        .opt("addr", "127.0.0.1:7433", "listen address (server) / target (client modes)")
+        .opt("replicas", "0", "engine replicas (0 = one per core)")
+        .opt("engine-threads", "1", "worker threads inside each replica engine")
+        .opt("max-batch", "64", "batch-cut size (SLO throughput knob)")
+        .opt("max-wait-ms", "2", "batch-cut max wait (SLO latency knob)")
+        .opt("queue-bound", "256", "queued-request bound; arrivals beyond it are shed")
+        .opt("deadline-ms", "0", "per-request deadline from enqueue (0 = none)")
+        .opt("rps", "500", "loadgen/bench offered load (Poisson arrivals/s)")
+        .opt("duration-s", "5", "loadgen/bench measured window")
+        .opt("warmup-s", "1", "loadgen/bench warmup discard")
+        .opt("conns", "32", "loadgen/bench connections (= max in-flight)")
+        .opt("out", "BENCH_serve.json", "bench report path")
+        .opt("probe", "", "client mode: health | ready | stats against --addr")
+        .flag("loadgen", "client mode: open-loop load against --addr (errors on 0 completions)")
+        .flag("shutdown", "client mode: ask the server at --addr to drain and exit")
+        .flag("bench", "in-process open-loop benchmark; writes --out")
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let a = serve_cmd().parse(argv).map_err(|e| anyhow!(e))?;
+    let addr = a.opt_socket_addr("addr", "127.0.0.1:7433").map_err(|e| anyhow!(e))?;
+    let arch = a.opt_or("arch", "mlp");
+    let method = Method::parse(&a.opt_or("method", "gxnor")).map_err(|e| anyhow!(e))?;
+    let seed = a.opt_u64("seed", 42).map_err(|e| anyhow!(e))?;
+    let spec = gxnor::serve::EngineSpec {
+        arch: arch.clone(),
+        method,
+        r: a.opt_f32("r", 0.5).map_err(|e| anyhow!(e))?,
+        ckpt: Some(a.opt_or("ckpt", "")).filter(|s| !s.is_empty()),
+        artifacts: a.opt_or("artifacts", "artifacts"),
+        seed,
+    };
+    let serve_cfg = gxnor::serve::ServeConfig {
+        replicas: a.opt_usize("replicas", 0).map_err(|e| anyhow!(e))?,
+        max_batch: a.opt_usize("max-batch", 64).map_err(|e| anyhow!(e))?,
+        max_wait_ms: a.opt_f64("max-wait-ms", 2.0).map_err(|e| anyhow!(e))?,
+        queue_bound: a.opt_usize("queue-bound", 256).map_err(|e| anyhow!(e))?,
+        deadline_ms: a.opt_f64("deadline-ms", 0.0).map_err(|e| anyhow!(e))?,
+    };
+    let load_cfg = gxnor::serve::LoadgenCfg {
+        rps: a.opt_f64("rps", 500.0).map_err(|e| anyhow!(e))?,
+        duration_s: a.opt_f64("duration-s", 5.0).map_err(|e| anyhow!(e))?,
+        warmup_s: a.opt_f64("warmup-s", 1.0).map_err(|e| anyhow!(e))?,
+        conns: a.opt_usize("conns", 32).map_err(|e| anyhow!(e))?,
+        seed,
+        sample_len: 0, // filled per mode below
+        deadline_ms: 0,
+    };
+    let engine_threads = a.opt_usize("engine-threads", 1).map_err(|e| anyhow!(e))?;
+
+    // ---- client modes -----------------------------------------------------
+    let probe = a.opt_or("probe", "");
+    if !probe.is_empty() {
+        let mut c = gxnor::serve::Client::connect(addr)?;
+        return match probe.as_str() {
+            "health" => {
+                let ok = c.health()?;
+                println!("health: {ok}");
+                if ok {
+                    Ok(())
+                } else {
+                    Err(anyhow!("server at {addr} is unhealthy"))
+                }
+            }
+            "ready" => {
+                let ok = c.ready()?;
+                println!("ready: {ok}");
+                if ok {
+                    Ok(())
+                } else {
+                    Err(anyhow!("server at {addr} is not ready"))
+                }
+            }
+            "stats" => {
+                println!("{}", c.stats()?);
+                Ok(())
+            }
+            other => Err(anyhow!("--probe: invalid value {other:?} (health|ready|stats)")),
+        };
+    }
+    if a.flag("shutdown") {
+        let mut c = gxnor::serve::Client::connect(addr)?;
+        c.shutdown_server()?;
+        println!("shutdown acknowledged by {addr}");
+        return Ok(());
+    }
+    if a.flag("loadgen") {
+        let load = gxnor::serve::LoadgenCfg {
+            sample_len: gxnor::serve::arch_sample_len(&arch)?,
+            // in client mode --deadline-ms rides each request (INFER_DL)
+            deadline_ms: serve_cfg.deadline_ms.max(0.0) as u32,
+            ..load_cfg
+        };
+        let report = gxnor::serve::loadgen::run(addr, &load).map_err(|e| anyhow!(e))?;
+        print_load_report(&report);
+        if report.errors > 0 {
+            return Err(anyhow!("loadgen: {} protocol/transport errors", report.errors));
+        }
+        if report.completed == 0 {
+            return Err(anyhow!("loadgen: no requests completed in the measured window"));
+        }
+        return Ok(());
+    }
+
+    // ---- bench mode -------------------------------------------------------
+    if a.flag("bench") {
+        let doc = gxnor::serve::run_bench(&spec, &serve_cfg, &load_cfg, engine_threads)?;
+        let out = a.opt_or("out", "BENCH_serve.json");
+        std::fs::write(&out, doc.to_string())?;
+        let load = doc.get("load");
+        let lat = load.and_then(|l| l.get("latency_ms"));
+        let g = |j: Option<&gxnor::util::json::Json>, k: &str| {
+            j.and_then(|v| v.get(k)).and_then(|v| v.as_f64()).unwrap_or(0.0)
+        };
+        println!(
+            "serve bench: {:.0} rps offered -> {:.0} rps served | p50 {:.2} ms p99 {:.2} ms | \
+             batch fill {:.1} | shed {:.1}%",
+            g(load, "offered_rps"),
+            g(load, "throughput_rps"),
+            g(lat, "p50_ms"),
+            g(lat, "p99_ms"),
+            g(doc.get("server"), "mean_batch_fill"),
+            100.0 * g(load, "shed_rate"),
+        );
+        println!("wrote {out}");
+        return Ok(());
+    }
+
+    // ---- server mode ------------------------------------------------------
+    let (engines, sample_len) = gxnor::serve::build_engines(
+        &spec,
+        serve_cfg.replicas,
+        serve_cfg.max_batch,
+        engine_threads,
+    )?;
+    let n_replicas = engines.len();
+    let svc = gxnor::serve::Service::start(addr, serve_cfg.clone(), engines, sample_len)
+        .map_err(|e| anyhow!(e))?;
+    let init_note = if spec.ckpt.is_none() {
+        " (fresh-init weights: latency bench only)"
+    } else {
+        ""
+    };
+    println!(
+        "serving arch={} method={} on {} | replicas={} max_batch={} max_wait={}ms \
+         queue_bound={} deadline={}ms{}",
+        arch,
+        method.name(),
+        svc.addr,
+        n_replicas,
+        serve_cfg.max_batch,
+        serve_cfg.max_wait_ms,
+        serve_cfg.queue_bound,
+        serve_cfg.deadline_ms,
+        init_note,
+    );
+    println!("ready — send SHUTDOWN (gxnor serve --shutdown --addr {}) to stop", svc.addr);
+    let stats = svc.stats_handle();
+    svc.join(); // blocks until a SHUTDOWN frame drains the service
+    println!("drained; final stats: {}", stats.lock().unwrap().to_json().to_string());
+    Ok(())
+}
+
+fn print_load_report(r: &gxnor::serve::LoadReport) {
+    println!(
+        "loadgen: sent={} completed={} shed={} deadline_missed={} errors={} \
+         (+{} warmup discarded)",
+        r.sent, r.completed, r.shed, r.deadline_missed, r.errors, r.warmup_discarded
+    );
+    println!(
+        "  offered {:.1} rps -> served {:.1} rps | latency p50 {:.2} ms p99 {:.2} ms \
+         mean {:.2} ms max {:.2} ms | shed rate {:.2}%",
+        r.offered_rps,
+        r.throughput_rps,
+        r.latency.p50_ms,
+        r.latency.p99_ms,
+        r.latency.mean_ms,
+        r.latency.max_ms,
+        100.0 * r.shed_rate()
+    );
 }
 
 fn hwsim_cmd() -> Command {

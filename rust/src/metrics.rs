@@ -4,6 +4,13 @@
 //! step time …) and renders them as CSV, JSON, summary statistics, or a
 //! terminal sparkline — the benches use the latter to show Fig. 7/8/9/10
 //! curves inline.
+//!
+//! This module is also the single home of the latency-percentile math:
+//! [`percentile_sorted`] / [`percentile`] implement exact nearest-rank
+//! selection, and [`LatencySummary`] bundles the count/mean/p50/p99/max
+//! digest that both `TrainReport` (step latency) and the serving stack
+//! (request latency, `BENCH_serve.json`) report — one definition, one set
+//! of edge-case tests.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -137,6 +144,72 @@ impl Recorder {
     }
 }
 
+// ---- latency percentiles ---------------------------------------------------
+
+/// Exact nearest-rank percentile on **already sorted** samples.
+///
+/// Returns the smallest element such that at least `⌈p/100 · n⌉` samples are
+/// ≤ it (rank clamped to `[1, n]`, so `p = 0` yields the minimum and
+/// `p = 100` the maximum). No interpolation: the result is always an observed
+/// sample, which is what a latency digest should report. Empty input → 0.0.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let n = sorted.len();
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+/// [`percentile_sorted`] on an unsorted slice (clones and sorts).
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    percentile_sorted(&v, p)
+}
+
+/// Count/mean/p50/p99/max digest of a latency sample set (milliseconds by
+/// convention — the field names say so). Shared by `TrainReport` step timing
+/// and the serve stats endpoint / `BENCH_serve.json`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencySummary {
+    pub fn from_unsorted(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Self::default();
+        }
+        let mut v = samples.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        LatencySummary {
+            count: v.len(),
+            mean_ms: v.iter().sum::<f64>() / v.len() as f64,
+            p50_ms: percentile_sorted(&v, 50.0),
+            p99_ms: percentile_sorted(&v, 99.0),
+            max_ms: *v.last().unwrap(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean_ms", Json::num(self.mean_ms)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("max_ms", Json::num(self.max_ms)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,6 +257,72 @@ mod tests {
             j.get("x").unwrap().as_arr().unwrap()[0].as_f64(),
             Some(0.5)
         );
+    }
+
+    // ---- percentile edge cases (satellite: one definition, tested) -------
+
+    #[test]
+    fn percentile_single_sample() {
+        // n=1: every percentile is that sample.
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[7.0], p), 7.0);
+        }
+        let s = LatencySummary::from_unsorted(&[7.0]);
+        assert_eq!(s.count, 1);
+        assert_eq!(s.p50_ms, 7.0);
+        assert_eq!(s.p99_ms, 7.0);
+        assert_eq!(s.max_ms, 7.0);
+        assert_eq!(s.mean_ms, 7.0);
+    }
+
+    #[test]
+    fn percentile_two_samples() {
+        // n=2: nearest-rank p50 is rank ⌈0.5·2⌉ = 1 → the smaller sample;
+        // anything above 50% needs rank 2 → the larger.
+        assert_eq!(percentile(&[2.0, 1.0], 50.0), 1.0);
+        assert_eq!(percentile(&[2.0, 1.0], 50.1), 2.0);
+        assert_eq!(percentile(&[2.0, 1.0], 99.0), 2.0);
+        assert_eq!(percentile(&[2.0, 1.0], 0.0), 1.0);
+        assert_eq!(percentile(&[2.0, 1.0], 100.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_ties() {
+        // Ties: the result is still an observed sample and rank selection
+        // is stable under duplicated values.
+        let xs = [3.0, 3.0, 3.0, 3.0, 9.0];
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 80.0), 3.0); // rank ⌈0.8·5⌉ = 4 → last tie
+        assert_eq!(percentile(&xs, 81.0), 9.0); // rank 5
+        let all_same = [5.0; 8];
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&all_same, p), 5.0);
+        }
+    }
+
+    #[test]
+    fn percentile_nearest_rank_hundred() {
+        // 1..=100: p50 → rank 50 → 50.0, p99 → rank 99 → 99.0, p100 → 100.0.
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn percentile_empty_and_unsorted_input() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(LatencySummary::from_unsorted(&[]), LatencySummary::default());
+        // `percentile` sorts internally; order of the input is irrelevant.
+        assert_eq!(percentile(&[9.0, 1.0, 5.0], 50.0), 5.0);
+    }
+
+    #[test]
+    fn latency_summary_json_fields() {
+        let j = LatencySummary::from_unsorted(&[1.0, 2.0, 3.0]).to_json();
+        assert_eq!(j.get("count").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(j.get("p50_ms").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(j.get("max_ms").and_then(|v| v.as_f64()), Some(3.0));
     }
 
     #[test]

@@ -40,9 +40,22 @@ pub trait ExecEngine {
         1
     }
 
+    /// Whether `infer_batch` accepts a *partial* batch: an input holding
+    /// any 1..=`batch()` samples, returning exactly that many logit rows.
+    /// The XLA backend bakes the batch dimension into the lowered program,
+    /// so the default is `false`; the native engine shards whatever it is
+    /// given and overrides to `true`. The serving layer requires this —
+    /// SLO-coalesced batches fill to at most `max-batch`, rarely exactly.
+    fn supports_partial_batch(&self) -> bool {
+        false
+    }
+
     /// Forward one batch (`batch × sample_len`, flattened NHWC) and return
     /// logits (`batch × n_classes`, row-major). The slice borrows the
     /// engine's pooled output buffer and is valid until the next call.
+    /// Engines reporting [`ExecEngine::supports_partial_batch`] also accept
+    /// any positive multiple of `sample_len` up to the full batch, and the
+    /// returned slice then covers exactly the samples given.
     fn infer_batch(&mut self, x: &[f32]) -> Result<&[f32]>;
 }
 
@@ -132,6 +145,9 @@ mod tests {
             }
         }
         assert_eq!(Dummy.threads(), 1);
+        // partial batches are opt-in: backends that don't override must
+        // never be handed a short input by the serving layer
+        assert!(!Dummy.supports_partial_batch());
     }
 
     #[test]

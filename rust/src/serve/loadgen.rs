@@ -1,0 +1,278 @@
+//! Open-loop synthetic load generator.
+//!
+//! Closed-loop drivers (send, wait, send again) hide overload: when the
+//! server slows down the driver slows down with it and latency looks
+//! flat. This generator is **open-loop**: arrival times follow a Poisson
+//! process at the configured RPS, pre-scheduled against a fixed origin,
+//! and every request's latency is measured from its *scheduled* arrival —
+//! not from when the connection got around to writing it — so time spent
+//! queued behind a slow response counts against the server (the standard
+//! coordinated-omission correction).
+//!
+//! Mechanics: arrivals are drawn once up front (exponential inter-arrival
+//! gaps, `-ln(1-u)/rps`, via the repo's deterministic [`Prng`]) and
+//! striped round-robin across a pool of connection workers. Each worker
+//! holds one TCP connection, sleeps until an arrival's scheduled instant,
+//! fires, and blocks for the reply — so `conns` bounds the generator's
+//! in-flight requests; size it above `rps × expected latency` or the
+//! generator itself becomes the bottleneck (the report can't tell you,
+//! but a mean latency far above p50 is the tell). Requests scheduled in
+//! the first `warmup_s` seconds are sent but discarded from the report,
+//! per the BENCH_kernels warmup methodology.
+
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use crate::metrics::LatencySummary;
+use crate::util::json::Json;
+use crate::util::pool;
+use crate::util::prng::Prng;
+
+use super::service::{Client, ClientReply};
+
+#[derive(Clone, Debug)]
+pub struct LoadgenCfg {
+    /// Offered load: Poisson arrival rate, requests/second.
+    pub rps: f64,
+    /// Measured window, after warmup.
+    pub duration_s: f64,
+    /// Requests scheduled before this offset are sent but not reported.
+    pub warmup_s: f64,
+    /// Connection workers = max in-flight requests.
+    pub conns: usize,
+    /// Arrival-process and sample-content seed (deterministic schedule).
+    pub seed: u64,
+    /// f32 values per request (must match the served model's input).
+    pub sample_len: usize,
+    /// Optional per-request deadline to send (0 = plain INFER frames).
+    pub deadline_ms: u32,
+}
+
+impl Default for LoadgenCfg {
+    fn default() -> Self {
+        LoadgenCfg {
+            rps: 500.0,
+            duration_s: 5.0,
+            warmup_s: 1.0,
+            conns: 32,
+            seed: 42,
+            sample_len: 784,
+            deadline_ms: 0,
+        }
+    }
+}
+
+/// Aggregated client-side view of one run (measured window only, except
+/// `warmup_discarded`).
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub sent: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub deadline_missed: u64,
+    /// Transport/protocol failures (io errors, ERROR frames, bad replies).
+    pub errors: u64,
+    pub warmup_discarded: u64,
+    /// Arrivals scheduled in the measured window / duration.
+    pub offered_rps: f64,
+    /// Completions in the measured window / duration.
+    pub throughput_rps: f64,
+    /// Scheduled-arrival → reply latency of completed requests.
+    pub latency: LatencySummary,
+}
+
+impl LoadReport {
+    /// Shed fraction of measured sends (queue sheds + deadline misses).
+    pub fn shed_rate(&self) -> f64 {
+        if self.sent == 0 {
+            0.0
+        } else {
+            (self.shed + self.deadline_missed) as f64 / self.sent as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sent", Json::num(self.sent as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("deadline_missed", Json::num(self.deadline_missed as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("warmup_discarded", Json::num(self.warmup_discarded as f64)),
+            ("offered_rps", Json::num(self.offered_rps)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("shed_rate", Json::num(self.shed_rate())),
+            ("latency_ms", self.latency.to_json()),
+        ])
+    }
+}
+
+/// Cap on the pre-drawn arrival schedule (memory guard; ~16 MB of f64).
+const MAX_ARRIVALS: usize = 2_000_000;
+
+/// Draw the Poisson arrival schedule: offsets in seconds from the run
+/// origin, strictly increasing, covering warmup + measured window.
+fn draw_arrivals(cfg: &LoadgenCfg) -> Result<Vec<f64>, String> {
+    if cfg.rps <= 0.0 {
+        return Err(format!("loadgen: rps must be > 0, got {}", cfg.rps));
+    }
+    if cfg.duration_s <= 0.0 {
+        return Err(format!("loadgen: duration must be > 0, got {}", cfg.duration_s));
+    }
+    let total_s = cfg.warmup_s.max(0.0) + cfg.duration_s;
+    let mut rng = Prng::new(cfg.seed);
+    let mut arrivals = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        let u = rng.uniform_f64(); // [0, 1) → 1-u in (0, 1], ln well-defined
+        t += -(1.0 - u).ln() / cfg.rps;
+        if t >= total_s {
+            break;
+        }
+        arrivals.push(t);
+        if arrivals.len() > MAX_ARRIVALS {
+            return Err(format!(
+                "loadgen: rps {} × {}s exceeds the {MAX_ARRIVALS}-request schedule cap",
+                cfg.rps, total_s
+            ));
+        }
+    }
+    Ok(arrivals)
+}
+
+#[derive(Default)]
+struct WorkerOut {
+    sent: u64,
+    completed: u64,
+    shed: u64,
+    deadline_missed: u64,
+    errors: u64,
+    warmup_discarded: u64,
+    latencies_ms: Vec<f64>,
+}
+
+/// Run one open-loop session against a serving endpoint.
+pub fn run(addr: SocketAddr, cfg: &LoadgenCfg) -> Result<LoadReport, String> {
+    if cfg.sample_len == 0 {
+        return Err("loadgen: sample_len must be > 0".into());
+    }
+    let arrivals = draw_arrivals(cfg)?;
+    let conns = cfg.conns.max(1);
+    let warmup_s = cfg.warmup_s.max(0.0);
+    // Connect everything before taking the origin so connection setup
+    // doesn't eat into the schedule (it would read as server latency).
+    let mut clients: Vec<Client> = Vec::with_capacity(conns);
+    for _ in 0..conns {
+        clients.push(Client::connect(addr).map_err(|e| format!("loadgen: connect {addr}: {e}"))?);
+    }
+    let t0 = Instant::now();
+    let mut seed_rng = Prng::new(cfg.seed ^ 0x5eed_10ad);
+    let tasks: Vec<_> = clients
+        .into_iter()
+        .enumerate()
+        .map(|(w, mut client)| {
+            let arrivals = &arrivals;
+            let mut rng = seed_rng.fork(w as u64);
+            let (sample_len, deadline_ms) = (cfg.sample_len, cfg.deadline_ms);
+            move || {
+                let mut out = WorkerOut::default();
+                let mut sample = vec![0.0f32; sample_len];
+                for sched_s in arrivals.iter().skip(w).step_by(conns) {
+                    let sched = t0 + Duration::from_secs_f64(*sched_s);
+                    if let Some(d) = sched.checked_duration_since(Instant::now()) {
+                        std::thread::sleep(d);
+                    } // else: behind schedule — fire immediately (open loop)
+                    for v in sample.iter_mut() {
+                        *v = rng.range_f32(-1.0, 1.0);
+                    }
+                    let measured = *sched_s >= warmup_s;
+                    if measured {
+                        out.sent += 1;
+                    } else {
+                        out.warmup_discarded += 1;
+                    }
+                    let reply = if deadline_ms > 0 {
+                        client.infer_deadline(&sample, deadline_ms)
+                    } else {
+                        client.infer(&sample)
+                    };
+                    let lat_ms =
+                        Instant::now().saturating_duration_since(sched).as_secs_f64() * 1e3;
+                    if !measured {
+                        continue;
+                    }
+                    match reply {
+                        Ok(ClientReply::Logits(_)) => {
+                            out.completed += 1;
+                            out.latencies_ms.push(lat_ms);
+                        }
+                        Ok(ClientReply::Shed { .. }) => out.shed += 1,
+                        Ok(ClientReply::Deadline) => out.deadline_missed += 1,
+                        Ok(ClientReply::Error(_)) | Err(_) => out.errors += 1,
+                    }
+                }
+                out
+            }
+        })
+        .collect();
+    let outs = pool::scope_map(tasks);
+
+    let mut report = LoadReport::default();
+    let mut lats: Vec<f64> = Vec::new();
+    for o in outs {
+        report.sent += o.sent;
+        report.completed += o.completed;
+        report.shed += o.shed;
+        report.deadline_missed += o.deadline_missed;
+        report.errors += o.errors;
+        report.warmup_discarded += o.warmup_discarded;
+        lats.extend(o.latencies_ms);
+    }
+    report.offered_rps = report.sent as f64 / cfg.duration_s;
+    report.throughput_rps = report.completed as f64 / cfg.duration_s;
+    report.latency = LatencySummary::from_unsorted(&lats);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_schedule_is_poisson_like() {
+        let cfg = LoadgenCfg {
+            rps: 1000.0,
+            duration_s: 4.0,
+            warmup_s: 1.0,
+            seed: 7,
+            ..LoadgenCfg::default()
+        };
+        let a = draw_arrivals(&cfg).unwrap();
+        // mean count = rps × total = 5000; Poisson σ ≈ 71 — ±6σ bounds
+        assert!((4500..=5500).contains(&a.len()), "{}", a.len());
+        // strictly increasing, inside [0, total)
+        assert!(a.windows(2).all(|w| w[0] < w[1]));
+        assert!(a.first().copied().unwrap_or(0.0) >= 0.0);
+        assert!(a.last().copied().unwrap_or(0.0) < 5.0);
+        // deterministic in the seed
+        assert_eq!(a, draw_arrivals(&cfg).unwrap());
+        let b = draw_arrivals(&LoadgenCfg { seed: 8, ..cfg }).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn arrival_schedule_rejects_bad_config() {
+        assert!(draw_arrivals(&LoadgenCfg { rps: 0.0, ..LoadgenCfg::default() }).is_err());
+        assert!(draw_arrivals(&LoadgenCfg { duration_s: 0.0, ..LoadgenCfg::default() }).is_err());
+        // schedule cap names the limit instead of OOMing
+        let huge = LoadgenCfg { rps: 1e9, duration_s: 1.0, ..LoadgenCfg::default() };
+        assert!(draw_arrivals(&huge).unwrap_err().contains("cap"));
+    }
+
+    #[test]
+    fn shed_rate_math() {
+        let r = LoadReport { sent: 100, shed: 5, deadline_missed: 5, ..LoadReport::default() };
+        assert!((r.shed_rate() - 0.1).abs() < 1e-12);
+        assert_eq!(LoadReport::default().shed_rate(), 0.0);
+    }
+}

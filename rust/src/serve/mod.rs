@@ -1,0 +1,182 @@
+//! The async inference service: dynamic batching over native-engine
+//! replicas, plus the open-loop benchmark that measures it.
+//!
+//! This is the production shape the packed ternary kernels exist for
+//! (paper §4: the efficiency argument assumes the kernels are *fed*):
+//! many concurrent single-sample requests, coalesced into engine batches
+//! under a latency SLO, sharded across one `NativeEngine` replica per
+//! core. The pieces, bottom-up:
+//!
+//! * [`queue`] — the pure batching/shedding/deadline logic on a virtual
+//!   clock (deterministically tested, no sockets).
+//! * [`replica`] — N engines on N worker threads behind one job channel.
+//! * [`service`] — the TCP accept loop, frame protocol, connection
+//!   handlers, and the dispatcher thread that owns the queue.
+//! * [`loadgen`] — the Poisson open-loop load generator and its report.
+//!
+//! Correctness anchor: serving must be a *scheduling* layer only. The
+//! native engine's per-sample independence means logits for a request are
+//! bit-identical no matter which replica ran it, how full its batch was,
+//! or how many threads the engine used — `tests/serve.rs` pins exactly
+//! that against direct `infer_batch` calls.
+
+pub mod loadgen;
+pub mod queue;
+pub mod replica;
+pub mod service;
+
+pub use loadgen::{LoadReport, LoadgenCfg};
+pub use queue::{BatchQueue, CutReason, Offer, QueueConfig, Ticket};
+pub use replica::ReplicaPool;
+pub use service::{Client, ClientReply, ServeConfig, Service};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::method::Method;
+use crate::engine::{bitplane, model_from_checkpoint_or_init, NativeEngine};
+use crate::nn::arch::build_arch;
+use crate::runtime::exec::ExecEngine;
+use crate::runtime::manifest::Manifest;
+use crate::util::json::{provenance, Json};
+use crate::util::pool;
+
+/// Everything needed to materialize identical engine replicas.
+#[derive(Clone, Debug)]
+pub struct EngineSpec {
+    pub arch: String,
+    pub method: Method,
+    /// Zero-window half width (the paper's `r`).
+    pub r: f32,
+    /// Checkpoint to serve; `None` = seeded fresh init (latency benching
+    /// only — logits are exercised, never accuracy-checked).
+    pub ckpt: Option<String>,
+    /// Artifact dir whose manifest, when present, supplies param shapes;
+    /// the catalogue arch is the device-free fallback.
+    pub artifacts: String,
+    pub seed: u64,
+}
+
+/// Per-request input length for an arch (flattened h×w×c), without
+/// building an engine — the client-side loadgen mode needs this.
+pub fn arch_sample_len(arch: &str) -> Result<usize> {
+    let a = build_arch(arch).map_err(|e| anyhow!(e))?;
+    let (h, w, c) = a.input;
+    Ok(h * w * c)
+}
+
+/// Build `replicas` identical native engines (shared `ModelState`, one
+/// engine each) with `max_batch` capacity and `engine_threads` intra-
+/// engine workers. Returns the engines plus the model's sample length.
+/// `replicas = 0` resolves to one per available core.
+pub fn build_engines(
+    spec: &EngineSpec,
+    replicas: usize,
+    max_batch: usize,
+    engine_threads: usize,
+) -> Result<(Vec<Box<dyn ExecEngine + Send>>, usize)> {
+    let n = if replicas == 0 {
+        pool::resolve_threads(0)
+    } else {
+        replicas
+    };
+    let manifest = Manifest::load(&spec.artifacts).ok();
+    let (model, n_classes) = model_from_checkpoint_or_init(
+        manifest.as_ref(),
+        &spec.arch,
+        spec.method,
+        spec.ckpt.as_deref(),
+        spec.seed,
+    )?;
+    let mut engines: Vec<Box<dyn ExecEngine + Send>> = Vec::with_capacity(n);
+    let mut sample_len = 0;
+    for _ in 0..n {
+        let eng = NativeEngine::from_model(
+            &spec.arch,
+            spec.method,
+            &model,
+            spec.r,
+            max_batch,
+            n_classes,
+            engine_threads,
+        )?;
+        sample_len = eng.sample_len();
+        engines.push(Box::new(eng));
+    }
+    Ok((engines, sample_len))
+}
+
+/// `serve --bench`: start an in-process service on an ephemeral loopback
+/// port, drive it with the open-loop generator, and assemble the
+/// `bench_serve.v1` document (client-side latency/throughput/shed-rate
+/// plus the server's own batch-fill and cut counters, stats-reset at the
+/// warmup boundary so both sides describe the measured window).
+pub fn run_bench(
+    spec: &EngineSpec,
+    serve_cfg: &ServeConfig,
+    load_cfg: &LoadgenCfg,
+    engine_threads: usize,
+) -> Result<Json> {
+    let (engines, sample_len) =
+        build_engines(spec, serve_cfg.replicas, serve_cfg.max_batch, engine_threads)?;
+    let n_replicas = engines.len();
+    let addr = "127.0.0.1:0".parse().expect("loopback literal");
+    let svc = Service::start(addr, serve_cfg.clone(), engines, sample_len)
+        .map_err(|e| anyhow!(e))?;
+    let bound = svc.addr;
+
+    let mut probe = Client::connect(bound).map_err(|e| anyhow!("bench: connect: {e}"))?;
+    if !probe.ready().map_err(|e| anyhow!("bench: ready probe: {e}"))? {
+        svc.shutdown_and_join();
+        return Err(anyhow!("bench: service reported not ready"));
+    }
+
+    // Reset server-side counters at the warmup boundary from a side
+    // thread, so the STATS we read afterwards cover (approximately) the
+    // measured window — same discard discipline as the client report.
+    let warmup = std::time::Duration::from_secs_f64(load_cfg.warmup_s.max(0.0));
+    let resetter = std::thread::spawn(move || {
+        std::thread::sleep(warmup);
+        let _ = probe.stats_reset();
+    });
+
+    let load = LoadgenCfg { sample_len, ..load_cfg.clone() };
+    let report = loadgen::run(bound, &load).map_err(|e| anyhow!(e));
+    let _ = resetter.join();
+    let server_stats = svc.stats_json();
+    svc.shutdown_and_join();
+    let report = report?;
+
+    Ok(Json::obj(vec![
+        ("schema", Json::str("bench_serve.v1")),
+        ("provenance", provenance(bitplane::LANE_WORDS)),
+        (
+            "config",
+            Json::obj(vec![
+                ("arch", Json::str(&spec.arch)),
+                ("method", Json::str(&spec.method.name())),
+                ("r", Json::num(spec.r as f64)),
+                (
+                    "ckpt",
+                    match &spec.ckpt {
+                        Some(p) => Json::str(p),
+                        None => Json::Null,
+                    },
+                ),
+                ("replicas", Json::num(n_replicas as f64)),
+                ("engine_threads", Json::num(engine_threads as f64)),
+                ("max_batch", Json::num(serve_cfg.max_batch as f64)),
+                ("max_wait_ms", Json::num(serve_cfg.max_wait_ms)),
+                ("queue_bound", Json::num(serve_cfg.queue_bound as f64)),
+                ("deadline_ms", Json::num(serve_cfg.deadline_ms)),
+                ("rps", Json::num(load.rps)),
+                ("duration_s", Json::num(load.duration_s)),
+                ("warmup_s", Json::num(load.warmup_s)),
+                ("conns", Json::num(load.conns as f64)),
+                ("sample_len", Json::num(sample_len as f64)),
+                ("seed", Json::num(load.seed as f64)),
+            ]),
+        ),
+        ("load", report.to_json()),
+        ("server", server_stats),
+    ]))
+}

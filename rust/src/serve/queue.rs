@@ -1,0 +1,238 @@
+//! The SLO batching queue, as pure logic.
+//!
+//! `BatchQueue` is the heart of the serving layer: a bounded FIFO of
+//! pending requests that coalesces arrivals into engine batches under a
+//! latency SLO. It knows nothing about sockets, threads, or wall clocks —
+//! time is a `u64` nanosecond counter the caller advances — so every cut
+//! decision (max-wait vs max-batch races, deadline expiry, bound
+//! rejection) is pinned by deterministic virtual-clock tests in
+//! `tests/serve.rs` rather than by sleeping in CI.
+//!
+//! Policy, in order:
+//!
+//! 1. **Bound** — `offer` rejects when the queue already holds `bound`
+//!    tickets, returning the payload *and the observed depth* so the
+//!    caller can shed with backpressure information instead of blocking.
+//! 2. **Deadline** — `poll` first expires tickets whose absolute deadline
+//!    has passed. An expired request never reaches a replica: spending
+//!    engine time on an answer nobody is waiting for only delays the
+//!    requests still inside their deadline.
+//! 3. **Cut** — a batch dispatches when `max_batch` tickets are waiting
+//!    (cut reason [`CutReason::MaxBatch`]) or when the *oldest* ticket has
+//!    waited `max_wait`, which flushes everything queued (reason
+//!    [`CutReason::MaxWait`]). When both hold at the same instant,
+//!    max-batch wins: the reason names the condition that bounded the
+//!    batch size.
+//!
+//! FIFO order is preserved within and across batches (`seq` is a
+//! monotonic arrival counter and the queue only ever drains from the
+//! front, deadline removals aside).
+
+use std::collections::VecDeque;
+
+/// Absolute-deadline sentinel for "no deadline".
+pub const NO_DEADLINE: u64 = u64::MAX;
+
+/// SLO knobs, all in the queue's virtual nanoseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct QueueConfig {
+    /// Cut a batch as soon as this many tickets are waiting (≥ 1).
+    pub max_batch: usize,
+    /// Cut whatever is queued once the oldest ticket has waited this long.
+    pub max_wait_ns: u64,
+    /// Shed arrivals once this many tickets are already queued.
+    pub bound: usize,
+    /// Default per-request deadline from enqueue (0 = none). `offer_deadline`
+    /// can tighten it per ticket.
+    pub deadline_ns: u64,
+}
+
+impl QueueConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_batch == 0 {
+            return Err("serve queue: max_batch must be >= 1".into());
+        }
+        if self.bound < self.max_batch {
+            return Err(format!(
+                "serve queue: bound {} < max_batch {} — a full batch could never assemble",
+                self.bound, self.max_batch
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One queued request: arrival bookkeeping plus the caller's payload.
+#[derive(Debug)]
+pub struct Ticket<T> {
+    /// Monotonic arrival number (FIFO witness).
+    pub seq: u64,
+    pub enqueued_ns: u64,
+    /// Absolute expiry ([`NO_DEADLINE`] when none applies).
+    pub deadline_ns: u64,
+    pub payload: T,
+}
+
+/// Outcome of an [`BatchQueue::offer`].
+#[derive(Debug)]
+pub enum Offer<T> {
+    /// Enqueued; `depth` is the queue length *after* insertion.
+    Accepted { depth: usize },
+    /// Bound hit: the payload comes back untouched together with the
+    /// depth observed, so the caller can reply "shed, N ahead of you".
+    Shed { payload: T, depth: usize },
+}
+
+/// Why a batch was cut.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CutReason {
+    /// `max_batch` tickets were waiting.
+    MaxBatch,
+    /// The oldest ticket hit `max_wait_ns`.
+    MaxWait,
+}
+
+/// A dispatched batch: tickets in FIFO order plus the cut reason.
+#[derive(Debug)]
+pub struct Cut<T> {
+    pub tickets: Vec<Ticket<T>>,
+    pub reason: CutReason,
+}
+
+/// Result of advancing the queue to a point in time.
+#[derive(Debug)]
+pub struct Poll<T> {
+    /// Tickets whose deadline passed — shed *before* any dispatch.
+    pub expired: Vec<Ticket<T>>,
+    /// At most one batch per call; callers loop until `None`.
+    pub batch: Option<Cut<T>>,
+    /// Earliest future instant at which `poll` could act again (the next
+    /// max-wait cut or deadline expiry), `None` when the queue is empty.
+    pub next_event_ns: Option<u64>,
+}
+
+pub struct BatchQueue<T> {
+    cfg: QueueConfig,
+    q: VecDeque<Ticket<T>>,
+    seq: u64,
+}
+
+impl<T> BatchQueue<T> {
+    /// Panics on an invalid config — validate at the CLI boundary first.
+    pub fn new(cfg: QueueConfig) -> Self {
+        if let Err(e) = cfg.validate() {
+            panic!("{e}");
+        }
+        BatchQueue { cfg, q: VecDeque::new(), seq: 0 }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Enqueue under the configured default deadline.
+    pub fn offer(&mut self, payload: T, now_ns: u64) -> Offer<T> {
+        let dl = match self.cfg.deadline_ns {
+            0 => NO_DEADLINE,
+            d => now_ns.saturating_add(d),
+        };
+        self.offer_deadline(payload, now_ns, dl)
+    }
+
+    /// Enqueue with an explicit absolute deadline (the per-request path;
+    /// the service clamps it to the configured default when one is set).
+    pub fn offer_deadline(&mut self, payload: T, now_ns: u64, deadline_ns: u64) -> Offer<T> {
+        if self.q.len() >= self.cfg.bound {
+            return Offer::Shed { payload, depth: self.q.len() };
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        self.q.push_back(Ticket { seq, enqueued_ns: now_ns, deadline_ns, payload });
+        Offer::Accepted { depth: self.q.len() }
+    }
+
+    /// Advance to `now_ns`: expire dead tickets, then cut at most one
+    /// batch. Callers loop while `batch` is `Some` (a burst can leave
+    /// several full batches queued), then sleep until `next_event_ns` or
+    /// the next arrival.
+    pub fn poll(&mut self, now_ns: u64) -> Poll<T> {
+        // deadline expiry first — an expired ticket must never be counted
+        // toward a cut or handed to a replica. Per-ticket deadlines need
+        // not be monotone in arrival order, hence the position scan.
+        let mut expired = Vec::new();
+        while let Some(i) = self.q.iter().position(|t| t.deadline_ns <= now_ns) {
+            if let Some(t) = self.q.remove(i) {
+                expired.push(t);
+            }
+        }
+
+        let batch = if self.q.len() >= self.cfg.max_batch {
+            let tickets: Vec<Ticket<T>> = self.q.drain(..self.cfg.max_batch).collect();
+            Some(Cut { tickets, reason: CutReason::MaxBatch })
+        } else if self
+            .q
+            .front()
+            .is_some_and(|t| now_ns >= t.enqueued_ns.saturating_add(self.cfg.max_wait_ns))
+        {
+            let tickets: Vec<Ticket<T>> = self.q.drain(..).collect();
+            Some(Cut { tickets, reason: CutReason::MaxWait })
+        } else {
+            None
+        };
+
+        let next_wait = self
+            .q
+            .front()
+            .map(|t| t.enqueued_ns.saturating_add(self.cfg.max_wait_ns));
+        let next_deadline = self
+            .q
+            .iter()
+            .map(|t| t.deadline_ns)
+            .filter(|&d| d != NO_DEADLINE)
+            .min();
+        let next_event_ns = match (next_wait, next_deadline) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        Poll { expired, batch, next_event_ns }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_batch: usize, max_wait_ns: u64, bound: usize, deadline_ns: u64) -> QueueConfig {
+        QueueConfig { max_batch, max_wait_ns, bound, deadline_ns }
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(cfg(0, 1, 1, 0).validate().is_err());
+        assert!(cfg(8, 1, 4, 0).validate().is_err()); // bound < max_batch
+        assert!(cfg(8, 1, 8, 0).validate().is_ok());
+    }
+
+    #[test]
+    fn empty_queue_is_quiet() {
+        let mut q: BatchQueue<u32> = BatchQueue::new(cfg(4, 100, 16, 0));
+        let p = q.poll(1_000);
+        assert!(p.expired.is_empty());
+        assert!(p.batch.is_none());
+        assert_eq!(p.next_event_ns, None);
+    }
+
+    #[test]
+    fn accept_reports_depth_after_insert() {
+        let mut q: BatchQueue<u32> = BatchQueue::new(cfg(4, 100, 16, 0));
+        match q.offer(7, 0) {
+            Offer::Accepted { depth } => assert_eq!(depth, 1),
+            Offer::Shed { .. } => panic!("shed below bound"),
+        }
+        assert_eq!(q.depth(), 1);
+    }
+}

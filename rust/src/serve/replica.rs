@@ -1,0 +1,144 @@
+//! The replica pool: N engines, each owned by its own worker thread,
+//! consuming batch jobs from one shared channel.
+//!
+//! Work distribution is the simplest thing that is correct: the single
+//! `Receiver<BatchJob>` sits behind a mutex and exactly one *idle*
+//! replica blocks in `recv` holding it at a time. When a job arrives that
+//! replica takes it, releases the lock (another idle replica immediately
+//! parks in `recv`), and runs inference outside the lock — so the lock is
+//! only ever held by a thread with nothing to do, and busy replicas never
+//! serialize each other. Batch affinity is whoever-is-free, which is also
+//! the right policy: replicas are interchangeable by construction
+//! (identical `ModelState`, and the engine's logits are bit-identical
+//! regardless of thread count or batch packing — pinned by the parity
+//! tests), so served results cannot depend on which replica ran them.
+//!
+//! Shutdown is by channel closure: the dispatcher drops the job sender
+//! once the queue is drained, every replica's `recv` errors out, and
+//! [`ReplicaPool::join`] reaps the threads — in-flight batches always
+//! finish and reply first.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::runtime::exec::ExecEngine;
+
+use super::queue::Ticket;
+use super::service::{Reply, ReqPayload, ServeStats};
+
+/// One cut batch, FIFO tickets included.
+pub struct BatchJob {
+    pub tickets: Vec<Ticket<ReqPayload>>,
+}
+
+pub struct ReplicaPool {
+    tx: Option<Sender<BatchJob>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ReplicaPool {
+    /// Spawn one worker thread per engine. Every engine must accept
+    /// partial batches — SLO cuts fill to at most `max_batch`, and padding
+    /// a short batch would burn replica time on ghost samples.
+    pub fn spawn(
+        engines: Vec<Box<dyn ExecEngine + Send>>,
+        stats: Arc<Mutex<ServeStats>>,
+        t0: Instant,
+    ) -> Result<ReplicaPool, String> {
+        if engines.is_empty() {
+            return Err("serve: replica pool needs at least one engine".into());
+        }
+        for (i, e) in engines.iter().enumerate() {
+            if !e.supports_partial_batch() {
+                return Err(format!(
+                    "serve: replica {i} (engine {:?}) does not support partial batches",
+                    e.name()
+                ));
+            }
+        }
+        let (tx, rx) = channel::<BatchJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = engines
+            .into_iter()
+            .map(|eng| {
+                let rx = Arc::clone(&rx);
+                let stats = Arc::clone(&stats);
+                std::thread::spawn(move || replica_loop(eng, rx, stats, t0))
+            })
+            .collect();
+        Ok(ReplicaPool { tx: Some(tx), handles })
+    }
+
+    /// A fresh job-submission handle (the dispatcher holds one; when every
+    /// clone is dropped the replicas drain and exit).
+    pub fn sender(&self) -> Sender<BatchJob> {
+        self.tx.as_ref().expect("pool not joined").clone()
+    }
+
+    /// Drop the pool's own sender and wait for every replica to exit.
+    /// Callers must drop their cloned senders first or this blocks.
+    pub fn join(mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn replica_loop(
+    mut eng: Box<dyn ExecEngine + Send>,
+    rx: Arc<Mutex<Receiver<BatchJob>>>,
+    stats: Arc<Mutex<ServeStats>>,
+    t0: Instant,
+) {
+    let nc = eng.n_classes();
+    let mut xbuf: Vec<f32> = Vec::new();
+    loop {
+        // hold the lock only while idle in recv — release before inference
+        let job = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let job = match job {
+            Ok(j) => j,
+            Err(_) => break, // channel closed: orderly shutdown
+        };
+        if job.tickets.is_empty() {
+            continue;
+        }
+        xbuf.clear();
+        for t in &job.tickets {
+            xbuf.extend_from_slice(&t.payload.input);
+        }
+        let fill = job.tickets.len();
+        match eng.infer_batch(&xbuf) {
+            Ok(logits) => {
+                let now_ns = t0.elapsed().as_nanos() as u64;
+                // reply first, account second — the requester should not
+                // wait on the stats mutex
+                let mut lats = Vec::with_capacity(fill);
+                for (i, t) in job.tickets.iter().enumerate() {
+                    let row = logits[i * nc..(i + 1) * nc].to_vec();
+                    let _ = t.payload.reply.send(Reply::Logits(row));
+                    lats.push(now_ns.saturating_sub(t.enqueued_ns) as f64 / 1e6);
+                }
+                let mut st = stats.lock().unwrap();
+                st.batches += 1;
+                st.batch_fill_sum += fill as f64;
+                st.completed += fill as u64;
+                for l in lats {
+                    st.record_latency(l);
+                }
+            }
+            Err(e) => {
+                let msg = format!("replica inference failed: {e}");
+                for t in &job.tickets {
+                    let _ = t.payload.reply.send(Reply::Error(msg.clone()));
+                }
+                stats.lock().unwrap().internal_errors += 1;
+            }
+        }
+    }
+}

@@ -1,0 +1,885 @@
+//! The TCP service: accept loop, connection handlers, and the dispatcher
+//! thread that owns the [`BatchQueue`].
+//!
+//! Thread topology (one `Service`):
+//!
+//! ```text
+//!            accept thread ── spawns ──► conn thread (per connection)
+//!                                             │  decode frame, validate
+//!                                             ▼
+//!                  mpsc ──────────────► dispatcher thread
+//!                                             │  BatchQueue: bound/deadline/cut
+//!                                             ▼
+//!                  mpsc (jobs) ───────► replica pool (serve::replica)
+//!                                             │  NativeEngine::infer_batch
+//!                                             ▼
+//!                  per-request mpsc ──► conn thread ──► response frame
+//! ```
+//!
+//! The accept loop never blocks on anything but `accept` itself (and that
+//! is non-blocking + poll, so shutdown is prompt): connection handlers
+//! hand requests to the dispatcher over an unbounded channel and the
+//! *bound* lives in the queue, which sheds with a depth report instead of
+//! applying backpressure to the socket.
+//!
+//! ## Frame protocol
+//!
+//! Every message is `u32le length | u8 type | payload`, where `length`
+//! counts the type byte plus payload. Request types:
+//!
+//! | type | name        | payload                                  |
+//! |------|-------------|------------------------------------------|
+//! | 0x01 | INFER       | `sample_len` f32le values                |
+//! | 0x02 | HEALTH      | empty                                    |
+//! | 0x03 | READY       | empty                                    |
+//! | 0x04 | STATS       | empty                                    |
+//! | 0x05 | SHUTDOWN    | empty (SIGTERM-equivalent, acked)        |
+//! | 0x06 | STATS_RESET | empty                                    |
+//! | 0x07 | INFER_DL    | u32le deadline_ms, then f32le samples    |
+//!
+//! Response types:
+//!
+//! | type | name       | payload                                   |
+//! |------|------------|-------------------------------------------|
+//! | 0x81 | LOGITS     | `n_classes` f32le values                  |
+//! | 0x82 | SHED       | u32le queue depth observed                |
+//! | 0x83 | ERROR      | utf-8 message                             |
+//! | 0x84 | HEALTH_OK  | u8 1                                      |
+//! | 0x85 | READY      | u8 0/1                                    |
+//! | 0x86 | STATS      | utf-8 JSON (see `ServeStats::to_json`)    |
+//! | 0x87 | DEADLINE   | empty (request expired before dispatch)   |
+//! | 0x88 | SHUTDOWN   | empty (ack; server is draining)           |
+//! | 0x89 | RESET_OK   | empty                                     |
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::metrics::LatencySummary;
+use crate::runtime::exec::ExecEngine;
+use crate::util::json::Json;
+
+use super::queue::{BatchQueue, CutReason, Offer, QueueConfig, NO_DEADLINE};
+use super::replica::{BatchJob, ReplicaPool};
+
+/// Frame type constants (see module docs for the table).
+pub mod frame {
+    pub const INFER: u8 = 0x01;
+    pub const HEALTH: u8 = 0x02;
+    pub const READY: u8 = 0x03;
+    pub const STATS: u8 = 0x04;
+    pub const SHUTDOWN: u8 = 0x05;
+    pub const STATS_RESET: u8 = 0x06;
+    pub const INFER_DL: u8 = 0x07;
+
+    pub const R_LOGITS: u8 = 0x81;
+    pub const R_SHED: u8 = 0x82;
+    pub const R_ERROR: u8 = 0x83;
+    pub const R_HEALTH: u8 = 0x84;
+    pub const R_READY: u8 = 0x85;
+    pub const R_STATS: u8 = 0x86;
+    pub const R_DEADLINE: u8 = 0x87;
+    pub const R_SHUTDOWN: u8 = 0x88;
+    pub const R_RESET: u8 = 0x89;
+
+    /// Hard cap on `length`; anything larger is a protocol error (a
+    /// sample is a few KB — 16 MiB means a corrupt or hostile header).
+    pub const MAX_FRAME: usize = 1 << 24;
+}
+
+/// Serving knobs, resolved (no zeros-meaning-auto left) by the CLI layer.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Engine replicas (each its own `NativeEngine` + worker thread).
+    pub replicas: usize,
+    /// Batch-cut size; every replica engine must be built with at least
+    /// this batch capacity.
+    pub max_batch: usize,
+    /// Batch-cut max wait — the queueing half of the latency SLO.
+    pub max_wait_ms: f64,
+    /// Queued-request bound; arrivals beyond it are shed with the depth.
+    pub queue_bound: usize,
+    /// Default per-request deadline from enqueue (0 = none).
+    pub deadline_ms: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            replicas: 1,
+            max_batch: 64,
+            max_wait_ms: 2.0,
+            queue_bound: 256,
+            deadline_ms: 0.0,
+        }
+    }
+}
+
+/// What a request ultimately resolves to (sent over the per-request
+/// reply channel from dispatcher or replica to the connection thread).
+#[derive(Debug)]
+pub enum Reply {
+    Logits(Vec<f32>),
+    Shed { depth: u32 },
+    Deadline,
+    Error(String),
+}
+
+/// Queue payload: the decoded sample plus the reply path. `deadline_ns`
+/// is absolute on the service clock ([`NO_DEADLINE`] when none applies).
+pub struct ReqPayload {
+    pub input: Vec<f32>,
+    pub deadline_ns: u64,
+    pub reply: Sender<Reply>,
+}
+
+/// Service-side counters, guarded by one mutex (touched per batch and per
+/// shed — far coarser than per-sample work, so contention is negligible).
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    pub completed: u64,
+    pub shed_queue: u64,
+    pub shed_deadline: u64,
+    pub protocol_errors: u64,
+    pub internal_errors: u64,
+    pub batches: u64,
+    pub batch_fill_sum: f64,
+    pub cut_max_batch: u64,
+    pub cut_max_wait: u64,
+    /// Enqueue→reply latency per completed request. Capped so a long-lived
+    /// server cannot grow without bound; the digest then covers the first
+    /// `LAT_CAP` completions since the last reset (counters keep counting).
+    pub service_latency_ms: Vec<f64>,
+}
+
+impl ServeStats {
+    /// Latency-sample cap (~8 MiB of f64 worst case).
+    pub const LAT_CAP: usize = 1 << 20;
+
+    pub fn record_latency(&mut self, ms: f64) {
+        if self.service_latency_ms.len() < Self::LAT_CAP {
+            self.service_latency_ms.push(ms);
+        }
+    }
+
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_fill_sum / self.batches as f64
+        }
+    }
+
+    pub fn reset(&mut self) {
+        *self = ServeStats::default();
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("completed", Json::num(self.completed as f64)),
+            ("shed_queue", Json::num(self.shed_queue as f64)),
+            ("shed_deadline", Json::num(self.shed_deadline as f64)),
+            ("protocol_errors", Json::num(self.protocol_errors as f64)),
+            ("internal_errors", Json::num(self.internal_errors as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("mean_batch_fill", Json::num(self.mean_batch_fill())),
+            ("cut_max_batch", Json::num(self.cut_max_batch as f64)),
+            ("cut_max_wait", Json::num(self.cut_max_wait as f64)),
+            (
+                "service_latency_ms",
+                LatencySummary::from_unsorted(&self.service_latency_ms).to_json(),
+            ),
+        ])
+    }
+}
+
+// ---- framing helpers --------------------------------------------------------
+
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut v = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        v.extend_from_slice(&x.to_le_bytes());
+    }
+    v
+}
+
+pub fn bytes_to_f32s(b: &[u8]) -> Option<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        return None;
+    }
+    Some(
+        b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+    )
+}
+
+pub fn write_frame(w: &mut impl Write, ty: u8, body: &[u8]) -> io::Result<()> {
+    let len = (body.len() + 1) as u32;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(&[ty])?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Blocking frame read (client side / tests — the server side uses the
+/// incremental [`FrameBuf`] so read timeouts can't split a frame).
+pub fn read_frame_blocking(r: &mut impl Read) -> io::Result<(u8, Vec<u8>)> {
+    let mut hdr = [0u8; 4];
+    r.read_exact(&mut hdr)?;
+    let len = u32::from_le_bytes(hdr) as usize;
+    if len == 0 || len > frame::MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("bad frame length {len}"),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    let payload = body.split_off(1);
+    Ok((body[0], payload))
+}
+
+/// Incremental frame parser: bytes go in as they arrive (including after
+/// read timeouts mid-frame), complete frames come out. This is what lets
+/// connection threads use short read timeouts to notice shutdown without
+/// ever corrupting the stream.
+#[derive(Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+}
+
+impl FrameBuf {
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// `Ok(None)` = need more bytes; `Err` = unrecoverable framing error
+    /// (caller should drop the connection).
+    pub fn next_frame(&mut self) -> Result<Option<(u8, Vec<u8>)>, String> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]]) as usize;
+        if len == 0 || len > frame::MAX_FRAME {
+            return Err(format!("bad frame length {len}"));
+        }
+        if self.buf.len() < 4 + len {
+            return Ok(None);
+        }
+        let rest = self.buf.split_off(4 + len);
+        let head = std::mem::replace(&mut self.buf, rest);
+        Ok(Some((head[4], head[5..].to_vec())))
+    }
+}
+
+// ---- the service ------------------------------------------------------------
+
+/// How long the dispatcher sleeps when idle (also bounds how fast every
+/// thread notices the shutdown flag).
+const IDLE_TICK: Duration = Duration::from_millis(25);
+/// Connection-thread read timeout (shutdown responsiveness).
+const CONN_READ_TIMEOUT: Duration = Duration::from_millis(100);
+/// How long a connection thread waits for the engine reply before giving
+/// up on a request (far beyond any sane SLO — a backstop, not a policy).
+const REPLY_TIMEOUT: Duration = Duration::from_secs(30);
+
+fn now_ns(t0: Instant) -> u64 {
+    t0.elapsed().as_nanos() as u64
+}
+
+/// A running inference service. Dropping it does **not** stop the
+/// threads; call [`Service::shutdown_and_join`] (or send a SHUTDOWN frame
+/// and call [`Service::join`]).
+pub struct Service {
+    /// Actual bound address (resolves port 0 to the ephemeral port).
+    pub addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<Mutex<ServeStats>>,
+    accept: Option<JoinHandle<()>>,
+    dispatcher: Option<JoinHandle<()>>,
+    pool: Option<ReplicaPool>,
+}
+
+impl Service {
+    /// Bind, spawn the replica pool + dispatcher + accept loop, and
+    /// return once the service is ready (readiness probes answer `true`
+    /// from that point on). `sample_len` is the per-request input length
+    /// every INFER frame must match exactly.
+    pub fn start(
+        addr: SocketAddr,
+        cfg: ServeConfig,
+        engines: Vec<Box<dyn ExecEngine + Send>>,
+        sample_len: usize,
+    ) -> Result<Service, String> {
+        if sample_len == 0 {
+            return Err("serve: sample_len must be > 0".into());
+        }
+        for (i, e) in engines.iter().enumerate() {
+            if e.batch() < cfg.max_batch {
+                return Err(format!(
+                    "serve: replica {i} batch capacity {} < max_batch {}",
+                    e.batch(),
+                    cfg.max_batch
+                ));
+            }
+        }
+        let qcfg = QueueConfig {
+            max_batch: cfg.max_batch,
+            max_wait_ns: (cfg.max_wait_ms.max(0.0) * 1e6) as u64,
+            bound: cfg.queue_bound,
+            deadline_ns: (cfg.deadline_ms.max(0.0) * 1e6) as u64,
+        };
+        qcfg.validate()?;
+
+        let t0 = Instant::now();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let ready = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(Mutex::new(ServeStats::default()));
+
+        let pool = ReplicaPool::spawn(engines, Arc::clone(&stats), t0)?;
+        let job_tx = pool.sender();
+
+        let (req_tx, req_rx) = channel::<ReqPayload>();
+        let dispatcher = {
+            let stats = Arc::clone(&stats);
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::spawn(move || {
+                dispatcher_loop(qcfg, req_rx, job_tx, stats, shutdown, t0);
+            })
+        };
+
+        let listener = TcpListener::bind(addr).map_err(|e| format!("serve: bind {addr}: {e}"))?;
+        let bound = listener
+            .local_addr()
+            .map_err(|e| format!("serve: local_addr: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("serve: set_nonblocking: {e}"))?;
+        ready.store(true, Ordering::Release);
+
+        let accept = {
+            let shutdown = Arc::clone(&shutdown);
+            let stats = Arc::clone(&stats);
+            let dl_default_ns = qcfg.deadline_ns;
+            std::thread::spawn(move || {
+                accept_loop(
+                    listener, req_tx, stats, shutdown, ready, t0, sample_len, dl_default_ns,
+                );
+            })
+        };
+
+        Ok(Service {
+            addr: bound,
+            shutdown,
+            stats,
+            accept: Some(accept),
+            dispatcher: Some(dispatcher),
+            pool: Some(pool),
+        })
+    }
+
+    /// Signal shutdown (idempotent; the SHUTDOWN frame does the same).
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+    }
+
+    /// Render the current stats (same JSON the STATS frame returns).
+    pub fn stats_json(&self) -> Json {
+        self.stats.lock().unwrap().to_json()
+    }
+
+    /// Shared handle to the live counters — lets a caller read final
+    /// stats *after* [`Service::join`] consumed the service.
+    pub fn stats_handle(&self) -> Arc<Mutex<ServeStats>> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Block until the service exits: the accept loop ends (shutdown flag),
+    /// connection threads drain, the dispatcher flushes the queue, and the
+    /// replica pool finishes in-flight batches — in that order, so every
+    /// accepted request gets *some* reply before the threads go away.
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+        if let Some(p) = self.pool.take() {
+            p.join();
+        }
+    }
+
+    pub fn shutdown_and_join(self) {
+        self.shutdown();
+        self.join();
+    }
+}
+
+fn dispatcher_loop(
+    qcfg: QueueConfig,
+    req_rx: Receiver<ReqPayload>,
+    job_tx: Sender<BatchJob>,
+    stats: Arc<Mutex<ServeStats>>,
+    shutdown: Arc<AtomicBool>,
+    t0: Instant,
+) {
+    let mut queue: BatchQueue<ReqPayload> = BatchQueue::new(qcfg);
+    'outer: loop {
+        // 1) act on everything already due: expire, then cut until quiet
+        let next_event;
+        loop {
+            let p = queue.poll(now_ns(t0));
+            if !p.expired.is_empty() {
+                stats.lock().unwrap().shed_deadline += p.expired.len() as u64;
+                for t in p.expired {
+                    let _ = t.payload.reply.send(Reply::Deadline);
+                }
+            }
+            match p.batch {
+                Some(cut) => {
+                    {
+                        let mut st = stats.lock().unwrap();
+                        match cut.reason {
+                            CutReason::MaxBatch => st.cut_max_batch += 1,
+                            CutReason::MaxWait => st.cut_max_wait += 1,
+                        }
+                    }
+                    if job_tx.send(BatchJob { tickets: cut.tickets }).is_err() {
+                        // replica pool is gone; nothing can be served
+                        break 'outer;
+                    }
+                }
+                None => {
+                    next_event = p.next_event_ns;
+                    break;
+                }
+            }
+        }
+        // 2) sleep until the next arrival or the next timer, whichever
+        //    comes first (capped so the shutdown flag is honored promptly)
+        let wait = match next_event {
+            Some(t) => Duration::from_nanos(t.saturating_sub(now_ns(t0))).min(IDLE_TICK),
+            None => IDLE_TICK,
+        };
+        match req_rx.recv_timeout(wait) {
+            Ok(req) => {
+                offer_one(&mut queue, &stats, req, t0);
+                // drain the burst that may have accumulated behind it
+                while let Ok(req) = req_rx.try_recv() {
+                    offer_one(&mut queue, &stats, req, t0);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if shutdown.load(Ordering::Acquire) && queue.is_empty() {
+                    break;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                if queue.is_empty() {
+                    break;
+                }
+                // all senders gone; let remaining tickets age into a
+                // max-wait cut instead of spinning on the dead channel
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+    // job_tx drops here; replicas exit after finishing in-flight batches
+}
+
+fn offer_one(
+    queue: &mut BatchQueue<ReqPayload>,
+    stats: &Mutex<ServeStats>,
+    req: ReqPayload,
+    t0: Instant,
+) {
+    let dl = req.deadline_ns;
+    match queue.offer_deadline(req, now_ns(t0), dl) {
+        Offer::Accepted { .. } => {}
+        Offer::Shed { payload, depth } => {
+            stats.lock().unwrap().shed_queue += 1;
+            let _ = payload.reply.send(Reply::Shed { depth: depth as u32 });
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn accept_loop(
+    listener: TcpListener,
+    req_tx: Sender<ReqPayload>,
+    stats: Arc<Mutex<ServeStats>>,
+    shutdown: Arc<AtomicBool>,
+    ready: Arc<AtomicBool>,
+    t0: Instant,
+    sample_len: usize,
+    dl_default_ns: u64,
+) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !shutdown.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nodelay(true);
+                let _ = stream.set_read_timeout(Some(CONN_READ_TIMEOUT));
+                let req_tx = req_tx.clone();
+                let stats = Arc::clone(&stats);
+                let shutdown = Arc::clone(&shutdown);
+                let ready = Arc::clone(&ready);
+                conns.push(std::thread::spawn(move || {
+                    conn_loop(
+                        stream, req_tx, stats, shutdown, ready, t0, sample_len, dl_default_ns,
+                    );
+                }));
+                // opportunistically reap finished handlers so a long-lived
+                // server doesn't accumulate one JoinHandle per past conn
+                conns.retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+    // master req_tx (and all conn clones, once they exit) must drop for
+    // the dispatcher to see Disconnected and drain out
+    drop(req_tx);
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conn_loop(
+    mut stream: TcpStream,
+    req_tx: Sender<ReqPayload>,
+    stats: Arc<Mutex<ServeStats>>,
+    shutdown: Arc<AtomicBool>,
+    ready: Arc<AtomicBool>,
+    t0: Instant,
+    sample_len: usize,
+    dl_default_ns: u64,
+) {
+    let mut fb = FrameBuf::default();
+    let mut tmp = [0u8; 64 * 1024];
+    loop {
+        // parse everything already buffered before touching the socket
+        loop {
+            match fb.next_frame() {
+                Ok(Some((ty, body))) => {
+                    let keep = handle_frame(
+                        &mut stream, ty, &body, &req_tx, &stats, &shutdown, &ready, t0,
+                        sample_len, dl_default_ns,
+                    );
+                    if !keep {
+                        return;
+                    }
+                }
+                Ok(None) => break,
+                Err(_) => {
+                    stats.lock().unwrap().protocol_errors += 1;
+                    let _ = write_frame(&mut stream, frame::R_ERROR, b"bad frame length");
+                    return;
+                }
+            }
+        }
+        if shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => return, // clean EOF
+            Ok(n) => fb.push(&tmp[..n]),
+            // read timeout: loop around (re-checks the shutdown flag)
+            Err(e) => match e.kind() {
+                io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => {}
+                _ => return,
+            },
+        }
+    }
+}
+
+/// Handle one decoded frame; returns `false` when the connection should
+/// close (fatal protocol error).
+#[allow(clippy::too_many_arguments)]
+fn handle_frame(
+    stream: &mut TcpStream,
+    ty: u8,
+    body: &[u8],
+    req_tx: &Sender<ReqPayload>,
+    stats: &Mutex<ServeStats>,
+    shutdown: &AtomicBool,
+    ready: &AtomicBool,
+    t0: Instant,
+    sample_len: usize,
+    dl_default_ns: u64,
+) -> bool {
+    match ty {
+        frame::INFER | frame::INFER_DL => {
+            let (dl_req_ns, sample_bytes) = if ty == frame::INFER_DL {
+                if body.len() < 4 {
+                    stats.lock().unwrap().protocol_errors += 1;
+                    let _ = write_frame(stream, frame::R_ERROR, b"INFER_DL: missing deadline");
+                    return true;
+                }
+                let ms = u32::from_le_bytes([body[0], body[1], body[2], body[3]]);
+                (u64::from(ms) * 1_000_000, &body[4..])
+            } else {
+                (0, body)
+            };
+            let input = match bytes_to_f32s(sample_bytes) {
+                Some(v) if v.len() == sample_len => v,
+                _ => {
+                    stats.lock().unwrap().protocol_errors += 1;
+                    let msg = format!(
+                        "INFER: expected {} f32 values ({} bytes), got {} bytes",
+                        sample_len,
+                        sample_len * 4,
+                        sample_bytes.len()
+                    );
+                    let _ = write_frame(stream, frame::R_ERROR, msg.as_bytes());
+                    return true;
+                }
+            };
+            // effective deadline: the tighter of the request's and the
+            // configured default (0 on either side = unconstrained)
+            let now = now_ns(t0);
+            let dl_abs = match (dl_default_ns, dl_req_ns) {
+                (0, 0) => NO_DEADLINE,
+                (0, r) => now.saturating_add(r),
+                (d, 0) => now.saturating_add(d),
+                (d, r) => now.saturating_add(d.min(r)),
+            };
+            let (reply_tx, reply_rx) = channel::<Reply>();
+            let req = ReqPayload { input, deadline_ns: dl_abs, reply: reply_tx };
+            if req_tx.send(req).is_err() {
+                let _ = write_frame(stream, frame::R_ERROR, b"service is shutting down");
+                return true;
+            }
+            match reply_rx.recv_timeout(REPLY_TIMEOUT) {
+                Ok(Reply::Logits(l)) => {
+                    let _ = write_frame(stream, frame::R_LOGITS, &f32s_to_bytes(&l));
+                }
+                Ok(Reply::Shed { depth }) => {
+                    let _ = write_frame(stream, frame::R_SHED, &depth.to_le_bytes());
+                }
+                Ok(Reply::Deadline) => {
+                    let _ = write_frame(stream, frame::R_DEADLINE, &[]);
+                }
+                Ok(Reply::Error(msg)) => {
+                    let _ = write_frame(stream, frame::R_ERROR, msg.as_bytes());
+                }
+                Err(_) => {
+                    let _ = write_frame(stream, frame::R_ERROR, b"timed out waiting for reply");
+                }
+            }
+            true
+        }
+        frame::HEALTH => {
+            let _ = write_frame(stream, frame::R_HEALTH, &[1]);
+            true
+        }
+        frame::READY => {
+            let ok = ready.load(Ordering::Acquire) && !shutdown.load(Ordering::Acquire);
+            let _ = write_frame(stream, frame::R_READY, &[u8::from(ok)]);
+            true
+        }
+        frame::STATS => {
+            let json = stats.lock().unwrap().to_json().to_string();
+            let _ = write_frame(stream, frame::R_STATS, json.as_bytes());
+            true
+        }
+        frame::STATS_RESET => {
+            stats.lock().unwrap().reset();
+            let _ = write_frame(stream, frame::R_RESET, &[]);
+            true
+        }
+        frame::SHUTDOWN => {
+            shutdown.store(true, Ordering::Release);
+            let _ = write_frame(stream, frame::R_SHUTDOWN, &[]);
+            true
+        }
+        other => {
+            stats.lock().unwrap().protocol_errors += 1;
+            let msg = format!("unknown frame type 0x{other:02x}");
+            let _ = write_frame(stream, frame::R_ERROR, msg.as_bytes());
+            true
+        }
+    }
+}
+
+// ---- client -----------------------------------------------------------------
+
+/// What the server answered an INFER with (client-side mirror of [`Reply`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientReply {
+    Logits(Vec<f32>),
+    Shed { depth: u32 },
+    Deadline,
+    Error(String),
+}
+
+/// Minimal blocking client over the frame protocol — used by the load
+/// generator, the probe/shutdown CLI modes, and the loopback tests.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: SocketAddr) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        Ok(Client { stream })
+    }
+
+    fn roundtrip(&mut self, ty: u8, body: &[u8]) -> io::Result<(u8, Vec<u8>)> {
+        write_frame(&mut self.stream, ty, body)?;
+        read_frame_blocking(&mut self.stream)
+    }
+
+    pub fn infer(&mut self, sample: &[f32]) -> io::Result<ClientReply> {
+        let (ty, body) = self.roundtrip(frame::INFER, &f32s_to_bytes(sample))?;
+        Ok(decode_reply(ty, body))
+    }
+
+    /// INFER with a per-request deadline in milliseconds.
+    pub fn infer_deadline(&mut self, sample: &[f32], deadline_ms: u32) -> io::Result<ClientReply> {
+        let mut body = deadline_ms.to_le_bytes().to_vec();
+        body.extend_from_slice(&f32s_to_bytes(sample));
+        let (ty, body) = self.roundtrip(frame::INFER_DL, &body)?;
+        Ok(decode_reply(ty, body))
+    }
+
+    pub fn health(&mut self) -> io::Result<bool> {
+        let (ty, body) = self.roundtrip(frame::HEALTH, &[])?;
+        Ok(ty == frame::R_HEALTH && body.first() == Some(&1))
+    }
+
+    pub fn ready(&mut self) -> io::Result<bool> {
+        let (ty, body) = self.roundtrip(frame::READY, &[])?;
+        Ok(ty == frame::R_READY && body.first() == Some(&1))
+    }
+
+    /// Raw stats JSON string.
+    pub fn stats(&mut self) -> io::Result<String> {
+        let (ty, body) = self.roundtrip(frame::STATS, &[])?;
+        if ty != frame::R_STATS {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("expected STATS reply, got 0x{ty:02x}"),
+            ));
+        }
+        String::from_utf8(body)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "stats not utf-8"))
+    }
+
+    pub fn stats_reset(&mut self) -> io::Result<()> {
+        let (ty, _) = self.roundtrip(frame::STATS_RESET, &[])?;
+        if ty != frame::R_RESET {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("expected RESET ack, got 0x{ty:02x}"),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Ask the server to exit (acked before the server drains).
+    pub fn shutdown_server(&mut self) -> io::Result<()> {
+        let (ty, _) = self.roundtrip(frame::SHUTDOWN, &[])?;
+        if ty != frame::R_SHUTDOWN {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("expected SHUTDOWN ack, got 0x{ty:02x}"),
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn decode_reply(ty: u8, body: Vec<u8>) -> ClientReply {
+    match ty {
+        frame::R_LOGITS => match bytes_to_f32s(&body) {
+            Some(l) => ClientReply::Logits(l),
+            None => ClientReply::Error("logits reply not a multiple of 4 bytes".into()),
+        },
+        frame::R_SHED => {
+            let depth = if body.len() >= 4 {
+                u32::from_le_bytes([body[0], body[1], body[2], body[3]])
+            } else {
+                0
+            };
+            ClientReply::Shed { depth }
+        }
+        frame::R_DEADLINE => ClientReply::Deadline,
+        frame::R_ERROR => ClientReply::Error(String::from_utf8_lossy(&body).into_owned()),
+        other => ClientReply::Error(format!("unexpected reply type 0x{other:02x}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_byte_roundtrip() {
+        let xs = [0.0f32, -1.5, 3.25, f32::MIN_POSITIVE];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&xs)).unwrap(), xs);
+        assert!(bytes_to_f32s(&[0, 1, 2]).is_none());
+    }
+
+    #[test]
+    fn frame_buf_reassembles_split_frames() {
+        // one frame delivered in three fragments, then two frames at once
+        let mut out = Vec::new();
+        write_frame(&mut out, frame::INFER, &[9, 9, 9, 9]).unwrap();
+        let mut fb = FrameBuf::default();
+        fb.push(&out[..2]);
+        assert!(fb.next_frame().unwrap().is_none());
+        fb.push(&out[2..6]);
+        assert!(fb.next_frame().unwrap().is_none());
+        fb.push(&out[6..]);
+        let (ty, body) = fb.next_frame().unwrap().unwrap();
+        assert_eq!((ty, body.as_slice()), (frame::INFER, &[9u8, 9, 9, 9][..]));
+
+        let mut two = Vec::new();
+        write_frame(&mut two, frame::HEALTH, &[]).unwrap();
+        write_frame(&mut two, frame::STATS, &[]).unwrap();
+        fb.push(&two);
+        assert_eq!(fb.next_frame().unwrap().unwrap().0, frame::HEALTH);
+        assert_eq!(fb.next_frame().unwrap().unwrap().0, frame::STATS);
+        assert!(fb.next_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn frame_buf_rejects_bad_lengths() {
+        let mut fb = FrameBuf::default();
+        fb.push(&0u32.to_le_bytes()); // length 0
+        assert!(fb.next_frame().is_err());
+        let mut fb = FrameBuf::default();
+        fb.push(&(frame::MAX_FRAME as u32 + 1).to_le_bytes());
+        assert!(fb.next_frame().is_err());
+    }
+
+    #[test]
+    fn stats_json_has_schema_fields() {
+        let mut st = ServeStats {
+            completed: 3,
+            batches: 2,
+            batch_fill_sum: 3.0,
+            ..ServeStats::default()
+        };
+        st.record_latency(1.0);
+        let j = st.to_json();
+        assert_eq!(j.get("completed").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(j.get("mean_batch_fill").and_then(|v| v.as_f64()), Some(1.5));
+        assert!(j.get("service_latency_ms").is_some());
+        st.reset();
+        assert_eq!(st.completed, 0);
+        assert!(st.service_latency_ms.is_empty());
+    }
+}

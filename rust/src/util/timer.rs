@@ -64,16 +64,12 @@ impl Stopwatch {
 }
 
 /// Nearest-rank percentile (`p` in [0, 100]) of unsorted samples; 0.0 on
-/// empty input. Used for the step-latency p50/p99 in `TrainReport` and
-/// `BENCH_step.json`.
+/// empty input. Thin re-export: the single definition (exact nearest-rank,
+/// shared with the serve stats and `BENCH_serve.json`) lives in
+/// [`crate::metrics::percentile`]; kept here so bench/timing call sites keep
+/// their historical import path.
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
-    if samples.is_empty() {
-        return 0.0;
-    }
-    let mut v = samples.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-    v[idx.min(v.len() - 1)]
+    crate::metrics::percentile(samples, p)
 }
 
 /// Run `f` `iters` times, returning (mean_ms, min_ms, max_ms).

@@ -1,0 +1,375 @@
+//! Serving-layer tests: the batching queue as pure virtual-clock logic,
+//! partial-batch engine parity, and loopback end-to-end bit-identity.
+//!
+//! The queue tests never sleep — time is a u64 the test advances — so
+//! every SLO race (max-wait vs max-batch, deadline expiry vs dispatch) is
+//! pinned deterministically. The loopback tests exercise the real TCP
+//! stack on 127.0.0.1:0 and assert the serving layer is *pure routing*:
+//! logits served through any replica count are bit-for-bit the logits of
+//! a direct `infer_batch` call on the same inputs.
+
+use gxnor::coordinator::method::Method;
+use gxnor::engine::NativeEngine;
+use gxnor::nn::init::init_model;
+use gxnor::nn::params::{ModelState, ParamDesc, ParamKind};
+use gxnor::runtime::exec::ExecEngine;
+use gxnor::serve::queue::{BatchQueue, CutReason, Offer, QueueConfig, NO_DEADLINE};
+use gxnor::serve::service::{Client, ClientReply, ServeConfig, Service};
+use gxnor::ternary::DiscreteSpace;
+use gxnor::util::json::Json;
+use gxnor::util::prng::Prng;
+
+// ---------------------------------------------------------------------------
+// BatchQueue: virtual-clock unit tests (no sockets, no sleeps)
+// ---------------------------------------------------------------------------
+
+fn qcfg(max_batch: usize, max_wait_ns: u64, bound: usize, deadline_ns: u64) -> QueueConfig {
+    QueueConfig { max_batch, max_wait_ns, bound, deadline_ns }
+}
+
+#[test]
+fn queue_cuts_on_max_batch_immediately() {
+    let mut q: BatchQueue<u32> = BatchQueue::new(qcfg(4, 1_000_000, 64, 0));
+    for i in 0..4u32 {
+        assert!(matches!(q.offer(i, 10), Offer::Accepted { .. }));
+    }
+    // same instant as the offers: the size condition alone cuts
+    let p = q.poll(10);
+    let cut = p.batch.expect("full batch must cut");
+    assert_eq!(cut.reason, CutReason::MaxBatch);
+    assert_eq!(cut.tickets.len(), 4);
+    assert!(q.is_empty());
+    assert!(p.expired.is_empty());
+    assert_eq!(p.next_event_ns, None);
+}
+
+#[test]
+fn queue_cuts_on_max_wait_deadline() {
+    let wait = 1_000u64;
+    let mut q: BatchQueue<u32> = BatchQueue::new(qcfg(8, wait, 64, 0));
+    q.offer(0, 100);
+    q.offer(1, 150);
+    q.offer(2, 400);
+    // one tick before the oldest ticket's wait expires: no cut, and the
+    // queue names exactly when it next needs attention
+    let p = q.poll(100 + wait - 1);
+    assert!(p.batch.is_none());
+    assert_eq!(p.next_event_ns, Some(100 + wait));
+    // at the deadline: everything queued flushes as one MaxWait cut
+    let p = q.poll(100 + wait);
+    let cut = p.batch.expect("max-wait must cut");
+    assert_eq!(cut.reason, CutReason::MaxWait);
+    assert_eq!(cut.tickets.len(), 3);
+    assert!(q.is_empty());
+}
+
+#[test]
+fn max_batch_wins_the_race_with_max_wait() {
+    // both conditions hold at the same instant: the cut is size-bounded
+    // (max_batch tickets, not "everything"), and labelled MaxBatch
+    let wait = 500u64;
+    let mut q: BatchQueue<u32> = BatchQueue::new(qcfg(2, wait, 64, 0));
+    q.offer(0, 0);
+    q.offer(1, 0);
+    q.offer(2, 0);
+    let p = q.poll(wait); // oldest has also waited exactly `wait`
+    let cut = p.batch.expect("batch due");
+    assert_eq!(cut.reason, CutReason::MaxBatch);
+    assert_eq!(cut.tickets.len(), 2);
+    assert_eq!(q.depth(), 1);
+    // the remainder cuts as MaxWait (it arrived at 0 too)
+    let p = q.poll(wait);
+    let cut = p.batch.expect("remainder due");
+    assert_eq!(cut.reason, CutReason::MaxWait);
+    assert_eq!(cut.tickets.len(), 1);
+}
+
+#[test]
+fn deadline_expiry_sheds_before_dispatch() {
+    // deadline tighter than max-wait: tickets die in the queue and must
+    // never appear in a cut
+    let mut q: BatchQueue<u32> = BatchQueue::new(qcfg(8, 10_000, 64, 1_000));
+    q.offer(0, 0); // expires at 1_000
+    q.offer(1, 600); // expires at 1_600
+    let p = q.poll(1_200);
+    assert_eq!(p.expired.len(), 1);
+    assert_eq!(p.expired[0].payload, 0);
+    assert!(p.batch.is_none());
+    assert_eq!(q.depth(), 1);
+    // the survivor's deadline is the next event (sooner than its wait cut)
+    assert_eq!(p.next_event_ns, Some(1_600));
+    let p = q.poll(1_600);
+    assert_eq!(p.expired.len(), 1);
+    assert_eq!(p.expired[0].payload, 1);
+    assert!(q.is_empty());
+}
+
+#[test]
+fn expired_tickets_do_not_count_toward_a_cut() {
+    // 4 queued, max_batch 4, but one is dead by poll time: the cut must
+    // not fire on stale size (3 live < 4)
+    let mut q: BatchQueue<u32> = BatchQueue::new(qcfg(4, 100_000, 64, 0));
+    let dl = 500u64;
+    q.offer_deadline(0, 0, dl);
+    q.offer_deadline(1, 0, NO_DEADLINE);
+    q.offer_deadline(2, 0, NO_DEADLINE);
+    q.offer_deadline(3, 0, NO_DEADLINE);
+    let p = q.poll(600);
+    assert_eq!(p.expired.len(), 1);
+    assert!(p.batch.is_none(), "3 live tickets must not cut as a 4-batch");
+    assert_eq!(q.depth(), 3);
+}
+
+#[test]
+fn queue_bound_rejects_with_depth_and_payload() {
+    let mut q: BatchQueue<u32> = BatchQueue::new(qcfg(2, 1_000, 3, 0));
+    for i in 0..3u32 {
+        assert!(matches!(q.offer(i, 0), Offer::Accepted { .. }));
+    }
+    match q.offer(99, 1) {
+        Offer::Shed { payload, depth } => {
+            // the payload comes back intact (the service replies on its
+            // channel) along with the depth the client is told about
+            assert_eq!(payload, 99);
+            assert_eq!(depth, 3);
+        }
+        Offer::Accepted { .. } => panic!("bound must shed"),
+    }
+    assert_eq!(q.depth(), 3, "shed arrival must not enter the queue");
+}
+
+#[test]
+fn fifo_order_within_and_across_batches() {
+    let mut q: BatchQueue<u64> = BatchQueue::new(qcfg(4, 1_000, 64, 0));
+    for i in 0..11u64 {
+        q.offer(i, i); // strictly increasing arrival times
+    }
+    let mut seen: Vec<u64> = Vec::new();
+    let p = q.poll(20);
+    let cut = p.batch.unwrap();
+    assert_eq!(cut.reason, CutReason::MaxBatch);
+    seen.extend(cut.tickets.iter().map(|t| t.payload));
+    let cut = q.poll(20).batch.unwrap();
+    seen.extend(cut.tickets.iter().map(|t| t.payload));
+    // 3 left, below max_batch: they flush when the oldest (arrived t=8)
+    // hits its wait deadline
+    assert!(q.poll(20).batch.is_none());
+    let cut = q.poll(8 + 1_000).batch.unwrap();
+    assert_eq!(cut.reason, CutReason::MaxWait);
+    seen.extend(cut.tickets.iter().map(|t| t.payload));
+    assert_eq!(seen, (0..11).collect::<Vec<u64>>());
+    // seq mirrors arrival order too
+    assert!(cut.tickets.windows(2).all(|w| w[0].seq < w[1].seq));
+}
+
+// ---------------------------------------------------------------------------
+// Engine: partial batches (the relaxation serving depends on)
+// ---------------------------------------------------------------------------
+
+fn tiny_mlp_model(seed: u64) -> ModelState {
+    let d = |name: &str, shape: Vec<usize>, kind, layer| ParamDesc {
+        name: name.into(),
+        shape,
+        kind,
+        layer,
+    };
+    use ParamKind::*;
+    init_model(
+        vec![
+            d("W0", vec![784, 24], Weight, 0),
+            d("gamma0", vec![24], Gamma, 0),
+            d("beta0", vec![24], Beta, 0),
+            d("W1", vec![24, 24], Weight, 1),
+            d("gamma1", vec![24], Gamma, 1),
+            d("beta1", vec![24], Beta, 1),
+            d("W2", vec![24, 10], Weight, 2),
+        ],
+        vec!["rmean0".into(), "rvar0".into(), "rmean1".into(), "rvar1".into()],
+        &[24, 24, 24, 24],
+        DiscreteSpace::TERNARY,
+        seed,
+    )
+}
+
+fn sample(idx: u64, len: usize) -> Vec<f32> {
+    let mut rng = Prng::new(0xA11CE ^ idx);
+    (0..len).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+}
+
+#[test]
+fn partial_batch_matches_full_batch_prefix() {
+    let model = tiny_mlp_model(3);
+    let mut eng = NativeEngine::from_model("mlp", Method::Gxnor, &model, 0.5, 8, 10, 1).unwrap();
+    let sl = eng.sample_len();
+    let full: Vec<f32> = (0..8).flat_map(|i| sample(i, sl)).collect();
+    let want = eng.infer_batch(&full).unwrap().to_vec();
+    assert_eq!(want.len(), 8 * 10);
+    for b in [1usize, 3, 5, 8] {
+        let part = &full[..b * sl];
+        let got = eng.infer_batch(part).unwrap().to_vec();
+        assert_eq!(got.len(), b * 10, "partial batch returns b x n_classes");
+        // bit-for-bit: per-sample independence means the prefix rows are
+        // identical no matter how many neighbours ran alongside
+        assert_eq!(got, want[..b * 10], "b={b}");
+    }
+    // shape errors stay errors
+    assert!(eng.infer_batch(&full[..sl - 1]).is_err(), "ragged input");
+    assert!(eng.infer_batch(&[]).is_err(), "empty input");
+    let over: Vec<f32> = (0..9).flat_map(|i| sample(i, sl)).collect();
+    assert!(eng.infer_batch(&over).is_err(), "over-capacity input");
+    assert!(eng.supports_partial_batch());
+}
+
+// ---------------------------------------------------------------------------
+// Loopback end-to-end: served logits == direct infer_batch, bit for bit
+// ---------------------------------------------------------------------------
+
+fn start_service(replicas: usize, cfg: ServeConfig) -> (Service, usize) {
+    let model = tiny_mlp_model(7);
+    let mut engines: Vec<Box<dyn ExecEngine + Send>> = Vec::new();
+    let mut sample_len = 0;
+    for _ in 0..replicas {
+        let eng =
+            NativeEngine::from_model("mlp", Method::Gxnor, &model, 0.5, cfg.max_batch, 10, 1)
+                .unwrap();
+        sample_len = eng.sample_len();
+        engines.push(Box::new(eng));
+    }
+    let svc = Service::start("127.0.0.1:0".parse().unwrap(), cfg, engines, sample_len).unwrap();
+    (svc, sample_len)
+}
+
+#[test]
+fn loopback_parity_replicas_1_2_4() {
+    // reference: one big engine, all samples in a single direct call
+    const N: usize = 24;
+    let model = tiny_mlp_model(7);
+    let mut reference =
+        NativeEngine::from_model("mlp", Method::Gxnor, &model, 0.5, N, 10, 1).unwrap();
+    let sl = reference.sample_len();
+    let all: Vec<f32> = (0..N as u64).flat_map(|i| sample(i, sl)).collect();
+    let want = reference.infer_batch(&all).unwrap().to_vec();
+
+    for replicas in [1usize, 2, 4] {
+        let cfg = ServeConfig {
+            replicas,
+            max_batch: 4,
+            max_wait_ms: 1.0,
+            queue_bound: 256,
+            deadline_ms: 0.0,
+        };
+        let (svc, sample_len) = start_service(replicas, cfg);
+        assert_eq!(sample_len, sl);
+        let addr = svc.addr;
+
+        // 3 concurrent clients, 8 samples each — arbitrary batch packing
+        // on the server side, exact logits expected regardless
+        let results: Vec<(usize, Vec<f32>)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..3usize)
+                .map(|c| {
+                    s.spawn(move || {
+                        let mut client = Client::connect(addr).unwrap();
+                        let mut out = Vec::new();
+                        for k in 0..8usize {
+                            let idx = c * 8 + k;
+                            let x = sample(idx as u64, sl);
+                            match client.infer(&x).unwrap() {
+                                ClientReply::Logits(l) => out.push((idx, l)),
+                                other => panic!("request {idx}: unexpected reply {other:?}"),
+                            }
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+
+        assert_eq!(results.len(), N, "replicas={replicas}");
+        for (idx, logits) in &results {
+            let expect = &want[idx * 10..(idx + 1) * 10];
+            // bit-for-bit (f32 ==): serving is scheduling, not arithmetic
+            assert_eq!(
+                logits.as_slice(),
+                expect,
+                "replicas={replicas} sample={idx}: served logits diverge"
+            );
+        }
+
+        // server-side accounting agrees before shutdown
+        let mut probe = Client::connect(addr).unwrap();
+        let stats = Json::parse(&probe.stats().unwrap()).unwrap();
+        let n = |k: &str| stats.get(k).and_then(|v| v.as_f64()).unwrap_or(-1.0);
+        assert_eq!(n("completed"), N as f64, "replicas={replicas}");
+        assert_eq!(n("protocol_errors"), 0.0);
+        assert_eq!(n("internal_errors"), 0.0);
+        assert_eq!(n("shed_queue"), 0.0);
+        assert!(n("batches") >= 1.0);
+        assert!(n("mean_batch_fill") >= 1.0 && n("mean_batch_fill") <= 4.0);
+        drop(probe);
+        svc.shutdown_and_join();
+    }
+}
+
+#[test]
+fn loopback_probes_stats_reset_and_shutdown_frame() {
+    let cfg = ServeConfig {
+        replicas: 1,
+        max_batch: 2,
+        max_wait_ms: 1.0,
+        queue_bound: 16,
+        deadline_ms: 0.0,
+    };
+    let (svc, sample_len) = start_service(1, cfg);
+    let addr = svc.addr;
+    let mut c = Client::connect(addr).unwrap();
+    assert!(c.health().unwrap());
+    assert!(c.ready().unwrap());
+
+    // malformed INFER (wrong length) is a protocol error, connection stays up
+    match c.infer(&vec![0.5f32; sample_len - 1]).unwrap() {
+        ClientReply::Error(msg) => assert!(msg.contains("expected"), "{msg}"),
+        other => panic!("unexpected {other:?}"),
+    }
+    // a good request still works on the same connection
+    assert!(matches!(c.infer(&sample(0, sample_len)).unwrap(), ClientReply::Logits(_)));
+
+    let stats = Json::parse(&c.stats().unwrap()).unwrap();
+    assert_eq!(stats.get("protocol_errors").and_then(|v| v.as_f64()), Some(1.0));
+    assert_eq!(stats.get("completed").and_then(|v| v.as_f64()), Some(1.0));
+
+    c.stats_reset().unwrap();
+    let stats = Json::parse(&c.stats().unwrap()).unwrap();
+    assert_eq!(stats.get("protocol_errors").and_then(|v| v.as_f64()), Some(0.0));
+    assert_eq!(stats.get("completed").and_then(|v| v.as_f64()), Some(0.0));
+
+    // SHUTDOWN frame acks, then the whole service drains
+    c.shutdown_server().unwrap();
+    svc.join();
+}
+
+#[test]
+fn loopback_per_request_deadline_expires_unserveable_work() {
+    // no replicas consuming fast enough is hard to stage reliably, so
+    // instead make the *wait* SLO looser than the request deadline: a
+    // deadline shorter than max-wait in an otherwise idle queue must come
+    // back DEADLINE (shed before dispatch), never a logits reply.
+    let cfg = ServeConfig {
+        replicas: 1,
+        max_batch: 64, // never fills from one request
+        max_wait_ms: 200.0,
+        queue_bound: 64,
+        deadline_ms: 0.0, // no server default; the request carries its own
+    };
+    let (svc, sample_len) = start_service(1, cfg);
+    let mut c = Client::connect(svc.addr).unwrap();
+    match c.infer_deadline(&sample(1, sample_len), 20).unwrap() {
+        ClientReply::Deadline => {}
+        other => panic!("expected DEADLINE, got {other:?}"),
+    }
+    let stats = Json::parse(&c.stats().unwrap()).unwrap();
+    assert_eq!(stats.get("shed_deadline").and_then(|v| v.as_f64()), Some(1.0));
+    assert_eq!(stats.get("completed").and_then(|v| v.as_f64()), Some(0.0));
+    drop(c);
+    svc.shutdown_and_join();
+}
