@@ -118,6 +118,128 @@ impl Optimizer {
             .map(|s| (s.m.len() + s.v.len()) * 4)
             .sum()
     }
+
+    /// Shared timestep (number of `begin_step` calls so far).
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    /// Append the full optimizer state (kind, timestep, per-tensor
+    /// moments) to `out` — the checkpoint section that makes resumed Adam
+    /// bias corrections and moment trajectories bit-identical.
+    ///
+    /// Layout: `kind u8 | t u64 | n_slots u32 | per slot:
+    /// present u8 | [len u64 | m f32s | v f32s]`.
+    pub fn serialize_state(&self, out: &mut Vec<u8>) {
+        out.push(match self.kind {
+            OptKind::Sgd => 0u8,
+            OptKind::Adam => 1u8,
+        });
+        out.extend_from_slice(&self.t.to_le_bytes());
+        out.extend_from_slice(&(self.slots.len() as u32).to_le_bytes());
+        for slot in &self.slots {
+            match slot {
+                None => out.push(0u8),
+                Some(s) => {
+                    out.push(1u8);
+                    out.extend_from_slice(&(s.m.len() as u64).to_le_bytes());
+                    for &x in &s.m {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                    for &x in &s.v {
+                        out.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Restore state written by [`Optimizer::serialize_state`], advancing
+    /// `pos` past the section. The optimizer must already be constructed
+    /// with the matching kind and tensor count (both are validated).
+    pub fn restore_state(&mut self, bytes: &[u8], pos: &mut usize) -> Result<(), String> {
+        fn take<'a>(bytes: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8], String> {
+            let end = pos
+                .checked_add(n)
+                .filter(|&e| e <= bytes.len())
+                .ok_or("truncated optimizer state")?;
+            let s = &bytes[*pos..end];
+            *pos = end;
+            Ok(s)
+        }
+        let kind_tag = take(bytes, pos, 1)?[0];
+        let want_tag = match self.kind {
+            OptKind::Sgd => 0u8,
+            OptKind::Adam => 1u8,
+        };
+        if kind_tag != want_tag {
+            return Err(format!(
+                "optimizer kind mismatch: checkpoint has tag {kind_tag}, run uses {:?}",
+                self.kind
+            ));
+        }
+        let t = u64::from_le_bytes(take(bytes, pos, 8)?.try_into().unwrap());
+        let n = u32::from_le_bytes(take(bytes, pos, 4)?.try_into().unwrap()) as usize;
+        if n != self.slots.len() {
+            return Err(format!(
+                "optimizer slot count mismatch: checkpoint has {n}, run has {}",
+                self.slots.len()
+            ));
+        }
+        let mut slots: Vec<Option<Slot>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let present = take(bytes, pos, 1)?[0];
+            match present {
+                0 => slots.push(None),
+                1 => {
+                    let len = u64::from_le_bytes(take(bytes, pos, 8)?.try_into().unwrap()) as usize;
+                    let mut read_f32s = |pos: &mut usize| -> Result<Vec<f32>, String> {
+                        let raw = take(bytes, pos, len * 4)?;
+                        Ok(raw
+                            .chunks_exact(4)
+                            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                            .collect())
+                    };
+                    let m = read_f32s(pos)?;
+                    let v = read_f32s(pos)?;
+                    slots.push(Some(Slot { m, v }));
+                }
+                other => return Err(format!("bad optimizer slot tag {other}")),
+            }
+        }
+        self.t = t;
+        self.slots = slots;
+        Ok(())
+    }
+
+    /// Skip over a serialized optimizer section without restoring it
+    /// (used when inspecting or when only model weights are wanted).
+    pub fn skip_state(bytes: &[u8], pos: &mut usize) -> Result<(), String> {
+        let need = |pos: usize, n: usize| -> Result<usize, String> {
+            pos.checked_add(n)
+                .filter(|&e| e <= bytes.len())
+                .ok_or_else(|| "truncated optimizer state".to_string())
+        };
+        *pos = need(*pos, 1 + 8)?;
+        let n = u32::from_le_bytes(
+            bytes[*pos..need(*pos, 4)?]
+                .try_into()
+                .map_err(|_| "truncated optimizer state")?,
+        ) as usize;
+        *pos = need(*pos, 4)?;
+        for _ in 0..n {
+            let present = bytes[*pos..need(*pos, 1)?][0];
+            *pos = need(*pos, 1)?;
+            if present == 1 {
+                let end = need(*pos, 8)?;
+                let len =
+                    u64::from_le_bytes(bytes[*pos..end].try_into().unwrap()) as usize;
+                *pos = end;
+                *pos = need(*pos, len * 8)?; // m + v, 4 bytes each
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -180,6 +302,58 @@ mod tests {
         let mut dw = vec![0.0; 10];
         o.increment(0, &[0.0; 10], 0.01, &mut dw);
         assert_eq!(o.state_bytes(), 10 * 2 * 4);
+    }
+
+    #[test]
+    fn state_roundtrip_is_bit_exact() {
+        // run a few steps, snapshot, run more; restored copy must match
+        let mut o = Optimizer::new(OptKind::Adam, 3);
+        let mut dw = vec![0.0f32; 5];
+        for t in 0..7 {
+            o.begin_step();
+            let g: Vec<f32> = (0..5).map(|i| (t * 5 + i) as f32 * 0.01 - 0.1).collect();
+            o.increment(0, &g, 0.01, &mut dw);
+            o.increment(2, &g, 0.01, &mut dw); // slot 1 never touched
+        }
+        let mut blob = Vec::new();
+        o.serialize_state(&mut blob);
+
+        let mut r = Optimizer::new(OptKind::Adam, 3);
+        let mut pos = 0usize;
+        r.restore_state(&blob, &mut pos).unwrap();
+        assert_eq!(pos, blob.len());
+        assert_eq!(r.t(), o.t());
+
+        // identical trajectories after restore
+        let g = vec![0.03f32; 5];
+        let (mut da, mut db) = (vec![0.0f32; 5], vec![0.0f32; 5]);
+        for _ in 0..3 {
+            o.begin_step();
+            r.begin_step();
+            o.increment(0, &g, 0.02, &mut da);
+            r.increment(0, &g, 0.02, &mut db);
+            assert_eq!(
+                da.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                db.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+
+        // skip_state walks the exact same extent
+        let mut skip_pos = 0usize;
+        Optimizer::skip_state(&blob, &mut skip_pos).unwrap();
+        assert_eq!(skip_pos, blob.len());
+
+        // mismatched shapes are rejected, not silently accepted
+        let mut wrong_n = Optimizer::new(OptKind::Adam, 2);
+        let mut p = 0usize;
+        assert!(wrong_n.restore_state(&blob, &mut p).is_err());
+        let mut wrong_kind = Optimizer::new(OptKind::Sgd, 3);
+        let mut p = 0usize;
+        assert!(wrong_kind.restore_state(&blob, &mut p).is_err());
+        // truncation is an error, never a panic
+        let mut p = 0usize;
+        let mut r2 = Optimizer::new(OptKind::Adam, 3);
+        assert!(r2.restore_state(&blob[..blob.len() - 3], &mut p).is_err());
     }
 
     #[test]

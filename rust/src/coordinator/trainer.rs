@@ -35,6 +35,7 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::coordinator::checkpoint::{self, RunMeta};
 use crate::coordinator::hidden::HiddenWeights;
 use crate::coordinator::method::Method;
 use crate::coordinator::optimizer::{OptKind, Optimizer};
@@ -50,6 +51,7 @@ use crate::runtime::exec::{EngineKind, ExecEngine, XlaInferEngine};
 use crate::runtime::manifest::{GraphMeta, Manifest};
 use crate::ternary::{dst_update, dst_update_packed, DiscreteSpace, DstStats};
 use crate::util::argmax;
+use crate::util::fault::Faults;
 use crate::util::prng::Prng;
 use crate::util::timer::Stopwatch;
 
@@ -118,6 +120,14 @@ pub struct TrainConfig {
     pub batch: usize,
     /// print progress lines
     pub verbose: bool,
+    /// save a v2 run checkpoint to `checkpoint_path` every N completed
+    /// epochs (`--checkpoint-every N`; 0 = off)
+    pub checkpoint_every: usize,
+    /// where periodic run checkpoints land (shares the `--save` path)
+    pub checkpoint_path: String,
+    /// armed fault-injection plan (`--faults` / `GXNOR_FAULTS`; `None` in
+    /// production — every injection point is a no-op then)
+    pub faults: Faults,
 }
 
 impl Default for TrainConfig {
@@ -143,7 +153,30 @@ impl Default for TrainConfig {
             threads: 0,
             batch: 0,
             verbose: false,
+            checkpoint_every: 0,
+            checkpoint_path: String::new(),
+            faults: None,
         }
+    }
+}
+
+/// The v2 checkpoint meta for a run at a given position. `global_step`
+/// is the optimizer's shared timestep — it survives resume because
+/// `Optimizer::restore_state` carries it.
+fn run_meta(cfg: &TrainConfig, batch: usize, epoch_next: u64, global_step: u64) -> RunMeta {
+    RunMeta {
+        epoch_next,
+        global_step,
+        epochs_total: cfg.epochs as u64,
+        batch: batch as u64,
+        seed: cfg.seed,
+        arch: cfg.arch.clone(),
+        method: cfg.method.name(),
+        m: cfg.m,
+        r: cfg.r,
+        a: cfg.a,
+        lr_start: cfg.lr_start,
+        lr_fin: cfg.lr_fin,
     }
 }
 
@@ -600,6 +633,25 @@ impl LoopBackend for Trainer<'_> {
     fn eval_split(&mut self, ds: &dyn Dataset) -> Result<f64> {
         self.evaluate(ds)
     }
+
+    fn save_run_checkpoint(&mut self, epoch_next: u64) -> Result<()> {
+        if self.cfg.update_rule == UpdateRule::Hidden {
+            return Err(anyhow!(
+                "--checkpoint-every captures DST run state only; the hidden-weight \
+                 baseline (Fig. 4a) keeps f32 masters a v2 checkpoint does not carry"
+            ));
+        }
+        let meta = run_meta(&self.cfg, self.train_g.batch, epoch_next, self.opt.t());
+        checkpoint::save_run(
+            &self.cfg.checkpoint_path,
+            &self.model,
+            &self.opt,
+            &self.rng,
+            &meta,
+            self.cfg.faults.as_deref(),
+        )
+        .map_err(|e| anyhow!(e.to_string()))
+    }
 }
 
 /// One training backend drivable by [`drive_epochs`]: the XLA-graph
@@ -614,6 +666,13 @@ trait LoopBackend {
     fn prepare_run(&mut self) -> Result<()>;
     fn step_batch(&mut self, b: &Batch, lr: f64) -> Result<StepStats>;
     fn eval_split(&mut self, ds: &dyn Dataset) -> Result<f64>;
+    /// First epoch to execute — non-zero when resuming from a checkpoint.
+    fn start_epoch(&self) -> u64 {
+        0
+    }
+    /// Persist a v2 run checkpoint after an epoch completes. `epoch_next`
+    /// is the first epoch a resumed run would execute.
+    fn save_run_checkpoint(&mut self, epoch_next: u64) -> Result<()>;
 }
 
 /// What [`drive_epochs`] hands back for report assembly.
@@ -644,6 +703,7 @@ fn drive_epochs<B: LoopBackend + ?Sized>(
     let epochs = cfg.epochs;
     let seed = cfg.seed;
     let verbose = cfg.verbose;
+    let start_epoch = be.start_epoch();
     be.prepare_run()?;
     let mut rec = Recorder::new();
     let mut steps = 0u64;
@@ -651,11 +711,15 @@ fn drive_epochs<B: LoopBackend + ?Sized>(
     let t0 = std::time::Instant::now();
     std::thread::scope(|scope| -> Result<()> {
         let mut pf = if be.pad_final_batch() {
-            Prefetcher::spawn_train_padded(scope, train, b, seed, aug, epochs, PREFETCH_DEPTH)
+            Prefetcher::spawn_train_padded_from(
+                scope, train, b, seed, aug, start_epoch, epochs, PREFETCH_DEPTH,
+            )
         } else {
-            Prefetcher::spawn_train(scope, train, b, seed, aug, epochs, PREFETCH_DEPTH)
+            Prefetcher::spawn_train_from(
+                scope, train, b, seed, aug, start_epoch, epochs, PREFETCH_DEPTH,
+            )
         };
-        let mut lr = schedule.lr_at(0);
+        let mut lr = schedule.lr_at(start_epoch as usize);
         let mut ep_loss = 0.0;
         let mut ep_acc = 0.0;
         let mut n = 0usize;
@@ -698,6 +762,20 @@ fn drive_epochs<B: LoopBackend + ?Sized>(
                     ep_acc = 0.0;
                     n = 0;
                     lr = schedule.lr_at(epoch as usize + 1);
+                    let done = epoch + 1;
+                    if cfg.checkpoint_every > 0
+                        && !cfg.checkpoint_path.is_empty()
+                        && done % cfg.checkpoint_every as u64 == 0
+                    {
+                        be.save_run_checkpoint(done)?;
+                    }
+                    if let Some(f) = cfg.faults.as_deref() {
+                        if f.fire_train_crash(done) {
+                            return Err(anyhow!(
+                                "injected fault: training aborted after epoch {done} (train_crash)"
+                            ));
+                        }
+                    }
                 }
             }
         }
@@ -785,6 +863,8 @@ pub struct NativeTrainer {
     dirty: Vec<bool>,
     batch: usize,
     n_classes: usize,
+    /// first epoch `run` executes (non-zero after [`NativeTrainer::resume_from`])
+    start_epoch: u64,
     /// discrete-tensor DST update events (steps × tensors)
     dst_updates: u64,
     /// update events that moved ≥ 1 state — the upper bound on repacks
@@ -874,6 +954,7 @@ impl NativeTrainer {
             dirty,
             batch,
             n_classes,
+            start_epoch: 0,
             dst_updates: 0,
             transitioned_updates: 0,
             sw_exec: Stopwatch::new(),
@@ -927,6 +1008,91 @@ impl NativeTrainer {
     /// invariant by one repack per discrete tensor.
     pub fn sync_from_model(&mut self) {
         self.dirty.fill(true);
+    }
+
+    /// Load a v2 run checkpoint and position this trainer to continue it:
+    /// model weights, BN/EMA state, optimizer moments + timestep, and the
+    /// Prng are all restored, and [`NativeTrainer::run`] will start at the
+    /// saved epoch. Because batch streams, LR and DST draws depend only on
+    /// (config, epoch, restored state), the continuation is bit-identical
+    /// to the uninterrupted run — the identity fields are validated here
+    /// precisely because a mismatch would silently break that.
+    ///
+    /// Returns the first epoch the resumed run will execute.
+    pub fn resume_from(&mut self, path: &str) -> Result<u64> {
+        let (rng, meta) = checkpoint::load_run(&mut self.model, &mut self.opt, path)
+            .map_err(|e| anyhow!(e.to_string()))?;
+        let cfg = &self.cfg;
+        if meta.arch != cfg.arch {
+            return Err(anyhow!("resume: checkpoint arch {} != run arch {}", meta.arch, cfg.arch));
+        }
+        if meta.method != cfg.method.name() {
+            return Err(anyhow!(
+                "resume: checkpoint method {} != run method {}",
+                meta.method,
+                cfg.method.name()
+            ));
+        }
+        if meta.seed != cfg.seed {
+            return Err(anyhow!("resume: checkpoint seed {} != run seed {}", meta.seed, cfg.seed));
+        }
+        if meta.epochs_total != cfg.epochs as u64 {
+            return Err(anyhow!(
+                "resume: checkpoint plans {} total epochs, run plans {}",
+                meta.epochs_total,
+                cfg.epochs
+            ));
+        }
+        if meta.batch != self.batch as u64 {
+            return Err(anyhow!(
+                "resume: checkpoint batch {} != run batch {}",
+                meta.batch,
+                self.batch
+            ));
+        }
+        if meta.m.to_bits() != cfg.m.to_bits()
+            || meta.r.to_bits() != cfg.r.to_bits()
+            || meta.a.to_bits() != cfg.a.to_bits()
+        {
+            return Err(anyhow!(
+                "resume: checkpoint (m,r,a)=({},{},{}) != run ({},{},{})",
+                meta.m,
+                meta.r,
+                meta.a,
+                cfg.m,
+                cfg.r,
+                cfg.a
+            ));
+        }
+        if meta.lr_start.to_bits() != cfg.lr_start.to_bits()
+            || meta.lr_fin.to_bits() != cfg.lr_fin.to_bits()
+        {
+            return Err(anyhow!(
+                "resume: checkpoint lr {}→{} != run lr {}→{}",
+                meta.lr_start,
+                meta.lr_fin,
+                cfg.lr_start,
+                cfg.lr_fin
+            ));
+        }
+        if meta.epoch_next >= cfg.epochs as u64 {
+            return Err(anyhow!(
+                "resume: checkpoint already covers all {} epochs (nothing to continue)",
+                cfg.epochs
+            ));
+        }
+        self.rng = rng;
+        self.start_epoch = meta.epoch_next;
+        self.sync_from_model();
+        Ok(meta.epoch_next)
+    }
+
+    /// Serialize the complete live run state as v2 checkpoint bytes —
+    /// the bit-equality witness the resume tests compare (model, BN/EMA,
+    /// optimizer moments + timestep, Prng, meta).
+    pub fn run_state_bytes(&self, epoch_next: u64) -> Vec<u8> {
+        let meta = run_meta(&self.cfg, self.batch, epoch_next, self.opt.t());
+        checkpoint::serialize_run(&self.model, &self.opt, &self.rng, &meta)
     }
 
     /// One native training step on the leading `valid` rows: forward with
@@ -1079,6 +1245,23 @@ impl LoopBackend for NativeTrainer {
 
     fn eval_split(&mut self, ds: &dyn Dataset) -> Result<f64> {
         self.evaluate(ds)
+    }
+
+    fn start_epoch(&self) -> u64 {
+        self.start_epoch
+    }
+
+    fn save_run_checkpoint(&mut self, epoch_next: u64) -> Result<()> {
+        let meta = run_meta(&self.cfg, self.batch, epoch_next, self.opt.t());
+        checkpoint::save_run(
+            &self.cfg.checkpoint_path,
+            &self.model,
+            &self.opt,
+            &self.rng,
+            &meta,
+            self.cfg.faults.as_deref(),
+        )
+        .map_err(|e| anyhow!(e.to_string()))
     }
 }
 

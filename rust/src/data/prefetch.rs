@@ -68,7 +68,25 @@ impl<'scope> Prefetcher<'scope> {
         epochs: usize,
         depth: usize,
     ) -> Prefetcher<'scope> {
-        Self::spawn_train_inner(scope, ds, batch, seed, aug, epochs, depth, false)
+        Self::spawn_train_inner(scope, ds, batch, seed, aug, 0, epochs, depth, false)
+    }
+
+    /// [`Prefetcher::spawn_train`] starting at `start_epoch` instead of 0
+    /// — the resume path. Because each epoch's stream is derived from
+    /// `seed.wrapping_add(epoch)` alone, epochs `start..total` here are
+    /// byte-identical to the tail of an uninterrupted run.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_train_from<'env>(
+        scope: &'scope Scope<'scope, 'env>,
+        ds: &'env dyn Dataset,
+        batch: usize,
+        seed: u64,
+        aug: AugmentCfg,
+        start_epoch: u64,
+        epochs: usize,
+        depth: usize,
+    ) -> Prefetcher<'scope> {
+        Self::spawn_train_inner(scope, ds, batch, seed, aug, start_epoch, epochs, depth, false)
     }
 
     /// [`Prefetcher::spawn_train`] with the epoch's final partial batch
@@ -88,7 +106,23 @@ impl<'scope> Prefetcher<'scope> {
         epochs: usize,
         depth: usize,
     ) -> Prefetcher<'scope> {
-        Self::spawn_train_inner(scope, ds, batch, seed, aug, epochs, depth, true)
+        Self::spawn_train_inner(scope, ds, batch, seed, aug, 0, epochs, depth, true)
+    }
+
+    /// [`Prefetcher::spawn_train_padded`] starting at `start_epoch` — see
+    /// [`Prefetcher::spawn_train_from`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_train_padded_from<'env>(
+        scope: &'scope Scope<'scope, 'env>,
+        ds: &'env dyn Dataset,
+        batch: usize,
+        seed: u64,
+        aug: AugmentCfg,
+        start_epoch: u64,
+        epochs: usize,
+        depth: usize,
+    ) -> Prefetcher<'scope> {
+        Self::spawn_train_inner(scope, ds, batch, seed, aug, start_epoch, epochs, depth, true)
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -98,6 +132,7 @@ impl<'scope> Prefetcher<'scope> {
         batch: usize,
         seed: u64,
         aug: AugmentCfg,
+        start_epoch: u64,
         epochs: usize,
         depth: usize,
         pad_final: bool,
@@ -117,7 +152,7 @@ impl<'scope> Prefetcher<'scope> {
         prime(&tx_back, ds, batch, depth);
         let handle = scope.spawn(move || {
             let mut spare: Option<Batch> = None;
-            for epoch in 0..epochs as u64 {
+            for epoch in start_epoch..epochs as u64 {
                 // identical stream to the serial loop's per-epoch iterator
                 let mut it = BatchIter::new(ds, batch, seed.wrapping_add(epoch), aug);
                 loop {
@@ -340,6 +375,37 @@ mod tests {
             }
         }
         assert_eq!(pi, plain.len());
+    }
+
+    /// The resume contract: a stream started at epoch `k` is byte-identical
+    /// to the tail of the full stream — per-epoch seeding means no batch
+    /// depends on history before its own epoch.
+    #[test]
+    fn spawn_train_from_matches_tail_of_full_run() {
+        let ds = SynthDigits::new(3, 50);
+        let batch = 16;
+        let seed = 11u64;
+        let aug = AugmentCfg::paper();
+        let collect = |start: u64| {
+            let mut got: Vec<(u64, usize, Vec<f32>, Vec<i32>)> = Vec::new();
+            std::thread::scope(|scope| {
+                let mut pf = Prefetcher::spawn_train_padded_from(
+                    scope, &ds, batch, seed, aug, start, 3, 2,
+                );
+                while let Some(item) = pf.next() {
+                    if let Item::Batch(b) = item {
+                        got.push((b.epoch, b.valid, b.x.clone(), b.y.clone()));
+                        pf.recycle(b);
+                    }
+                }
+            });
+            got
+        };
+        let full = collect(0);
+        let tail = collect(1);
+        let full_tail: Vec<_> = full.iter().filter(|b| b.0 >= 1).cloned().collect();
+        assert!(!tail.is_empty());
+        assert_eq!(tail, full_tail);
     }
 
     #[test]

@@ -94,6 +94,9 @@ fn train_cmd() -> Command {
         .opt("batch", "0", "native-engine batch size (0 = manifest batch, else 100)")
         .opt("artifacts", "artifacts", "artifact directory")
         .opt("save", "", "checkpoint path to write after training")
+        .opt("checkpoint-every", "0", "save a resumable run checkpoint to --save every N epochs")
+        .opt("resume", "", "resume a run checkpoint written by --checkpoint-every (native engine)")
+        .opt("faults", "", "fault-injection spec, e.g. train_crash=2 (or GXNOR_FAULTS env)")
         .flag("augment", "pad-4 + random crop + hflip (paper CIFAR recipe)")
         .flag("quiet", "suppress per-epoch lines")
 }
@@ -150,14 +153,34 @@ fn parse_train_cfg(a: &gxnor::cli::Args) -> Result<TrainConfig> {
         threads: f("threads", "train.threads", 0.0)? as usize,
         batch: f("batch", "train.batch", 0.0)? as usize,
         verbose: !a.flag("quiet"),
+        checkpoint_every: f("checkpoint-every", "train.checkpoint_every", 0.0)? as usize,
+        checkpoint_path: String::new(), // filled from --save in cmd_train
+        faults: None,                   // resolved from --faults in cmd_train
     })
 }
 
 fn cmd_train(argv: &[String]) -> Result<()> {
     let a = train_cmd().parse(argv).map_err(|e| anyhow!(e))?;
-    let cfg = parse_train_cfg(&a)?;
+    let mut cfg = parse_train_cfg(&a)?;
     let save = a.opt_or("save", "");
     let art = a.opt_or("artifacts", "artifacts");
+    let resume = a.opt_or("resume", "");
+    cfg.faults =
+        gxnor::util::fault::FaultPlan::resolve(&a.opt_or("faults", "")).map_err(|e| anyhow!(e))?;
+    if let Some(p) = cfg.faults.as_deref() {
+        println!("fault plan    : {p}");
+    }
+    if cfg.checkpoint_every > 0 {
+        if save.is_empty() {
+            return Err(anyhow!("--checkpoint-every requires --save <path> (the checkpoint file)"));
+        }
+        cfg.checkpoint_path = save.clone();
+    }
+    if !resume.is_empty() && cfg.engine != EngineKind::Native {
+        return Err(anyhow!(
+            "--resume requires --engine native (run checkpoints capture the native DST loop)"
+        ));
+    }
     let train = gxnor::data::open(&cfg.dataset, true, cfg.train_len).map_err(|e| anyhow!(e))?;
     let test = gxnor::data::open(&cfg.dataset, false, cfg.test_len).map_err(|e| anyhow!(e))?;
 
@@ -174,6 +197,10 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         );
         let mut trainer = NativeTrainer::new(manifest.as_ref(), cfg)?;
         println!("native batch {} ({} threads)", trainer.batch_size(), trainer.config().threads);
+        if !resume.is_empty() {
+            let next = trainer.resume_from(&resume)?;
+            println!("resumed       : {resume} (continuing at epoch {next})");
+        }
         let report = trainer.run(train.as_ref(), test.as_ref())?;
         print_train_report(&report);
         println!(
@@ -435,6 +462,8 @@ fn serve_cmd() -> Command {
         .opt("duration-s", "5", "loadgen/bench measured window")
         .opt("warmup-s", "1", "loadgen/bench warmup discard")
         .opt("conns", "32", "loadgen/bench connections (= max in-flight)")
+        .opt("retries", "0", "loadgen per-request retry budget (RETRY replies, dropped conns)")
+        .opt("faults", "", "fault-injection spec, e.g. replica_panic=3 (or GXNOR_FAULTS env)")
         .opt("out", "BENCH_serve.json", "bench report path")
         .opt("probe", "", "client mode: health | ready | stats against --addr")
         .flag("loadgen", "client mode: open-loop load against --addr (errors on 0 completions)")
@@ -471,8 +500,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         seed,
         sample_len: 0, // filled per mode below
         deadline_ms: 0,
+        retries: a.opt_usize("retries", 0).map_err(|e| anyhow!(e))? as u32,
     };
     let engine_threads = a.opt_usize("engine-threads", 1).map_err(|e| anyhow!(e))?;
+    let faults =
+        gxnor::util::fault::FaultPlan::resolve(&a.opt_or("faults", "")).map_err(|e| anyhow!(e))?;
 
     // ---- client modes -----------------------------------------------------
     let probe = a.opt_or("probe", "");
@@ -489,9 +521,19 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                 }
             }
             "ready" => {
-                let ok = c.ready()?;
-                println!("ready: {ok}");
-                if ok {
+                let info = c.ready_info()?;
+                if info.total > 0 {
+                    println!(
+                        "ready: {} (replicas {}/{}{})",
+                        info.ready,
+                        info.live,
+                        info.total,
+                        if info.degraded { ", degraded" } else { "" }
+                    );
+                } else {
+                    println!("ready: {}", info.ready);
+                }
+                if info.ready {
                     Ok(())
                 } else {
                     Err(anyhow!("server at {addr} is not ready"))
@@ -553,15 +595,25 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     }
 
     // ---- server mode ------------------------------------------------------
-    let (engines, sample_len) = gxnor::serve::build_engines(
+    let (engines, sample_len, factory) = gxnor::serve::build_engines(
         &spec,
         serve_cfg.replicas,
         serve_cfg.max_batch,
         engine_threads,
     )?;
     let n_replicas = engines.len();
-    let svc = gxnor::serve::Service::start(addr, serve_cfg.clone(), engines, sample_len)
-        .map_err(|e| anyhow!(e))?;
+    if let Some(p) = faults.as_deref() {
+        println!("fault plan: {p}");
+    }
+    let svc = gxnor::serve::Service::start_supervised(
+        addr,
+        serve_cfg.clone(),
+        engines,
+        Some(factory),
+        faults,
+        sample_len,
+    )
+    .map_err(|e| anyhow!(e))?;
     let init_note = if spec.ckpt.is_none() {
         " (fresh-init weights: latency bench only)"
     } else {
@@ -583,15 +635,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     println!("ready — send SHUTDOWN (gxnor serve --shutdown --addr {}) to stop", svc.addr);
     let stats = svc.stats_handle();
     svc.join(); // blocks until a SHUTDOWN frame drains the service
-    println!("drained; final stats: {}", stats.lock().unwrap().to_json().to_string());
+    println!("drained; final stats: {}", gxnor::util::lock_recover(&stats).to_json());
     Ok(())
 }
 
 fn print_load_report(r: &gxnor::serve::LoadReport) {
     println!(
-        "loadgen: sent={} completed={} shed={} deadline_missed={} errors={} \
+        "loadgen: sent={} completed={} shed={} deadline_missed={} errors={} retried={} \
          (+{} warmup discarded)",
-        r.sent, r.completed, r.shed, r.deadline_missed, r.errors, r.warmup_discarded
+        r.sent, r.completed, r.shed, r.deadline_missed, r.errors, r.retried, r.warmup_discarded
     );
     println!(
         "  offered {:.1} rps -> served {:.1} rps | latency p50 {:.2} ms p99 {:.2} ms \

@@ -28,7 +28,7 @@ use crate::util::json::Json;
 use crate::util::pool;
 use crate::util::prng::Prng;
 
-use super::service::{Client, ClientReply};
+use super::service::{ClientReply, RetryCfg, RetryClient};
 
 #[derive(Clone, Debug)]
 pub struct LoadgenCfg {
@@ -46,6 +46,9 @@ pub struct LoadgenCfg {
     pub sample_len: usize,
     /// Optional per-request deadline to send (0 = plain INFER frames).
     pub deadline_ms: u32,
+    /// Retry budget per request (0 = no retries): RETRY replies and
+    /// dropped connections are resubmitted under jittered backoff.
+    pub retries: u32,
 }
 
 impl Default for LoadgenCfg {
@@ -58,6 +61,7 @@ impl Default for LoadgenCfg {
             seed: 42,
             sample_len: 784,
             deadline_ms: 0,
+            retries: 0,
         }
     }
 }
@@ -70,8 +74,12 @@ pub struct LoadReport {
     pub completed: u64,
     pub shed: u64,
     pub deadline_missed: u64,
-    /// Transport/protocol failures (io errors, ERROR frames, bad replies).
+    /// Transport/protocol failures (io errors, ERROR frames, bad replies)
+    /// that survived the retry budget.
     pub errors: u64,
+    /// Retry attempts spent across measured requests (0 when retries are
+    /// off; a crash-free run keeps it 0 even with a budget).
+    pub retried: u64,
     pub warmup_discarded: u64,
     /// Arrivals scheduled in the measured window / duration.
     pub offered_rps: f64,
@@ -98,6 +106,7 @@ impl LoadReport {
             ("shed", Json::num(self.shed as f64)),
             ("deadline_missed", Json::num(self.deadline_missed as f64)),
             ("errors", Json::num(self.errors as f64)),
+            ("retried", Json::num(self.retried as f64)),
             ("warmup_discarded", Json::num(self.warmup_discarded as f64)),
             ("offered_rps", Json::num(self.offered_rps)),
             ("throughput_rps", Json::num(self.throughput_rps)),
@@ -147,6 +156,7 @@ struct WorkerOut {
     shed: u64,
     deadline_missed: u64,
     errors: u64,
+    retried: u64,
     warmup_discarded: u64,
     latencies_ms: Vec<f64>,
 }
@@ -161,9 +171,17 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenCfg) -> Result<LoadReport, String> {
     let warmup_s = cfg.warmup_s.max(0.0);
     // Connect everything before taking the origin so connection setup
     // doesn't eat into the schedule (it would read as server latency).
-    let mut clients: Vec<Client> = Vec::with_capacity(conns);
-    for _ in 0..conns {
-        clients.push(Client::connect(addr).map_err(|e| format!("loadgen: connect {addr}: {e}"))?);
+    let mut clients: Vec<RetryClient> = Vec::with_capacity(conns);
+    for w in 0..conns {
+        let rcfg = RetryCfg {
+            retries: cfg.retries,
+            seed: cfg.seed ^ w as u64,
+            ..RetryCfg::default()
+        };
+        let mut rc = RetryClient::new(addr, rcfg);
+        rc.preconnect()
+            .map_err(|e| format!("loadgen: connect {addr}: {e}"))?;
+        clients.push(rc);
     }
     let t0 = Instant::now();
     let mut seed_rng = Prng::new(cfg.seed ^ 0x5eed_10ad);
@@ -191,24 +209,28 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenCfg) -> Result<LoadReport, String> {
                     } else {
                         out.warmup_discarded += 1;
                     }
-                    let reply = if deadline_ms > 0 {
-                        client.infer_deadline(&sample, deadline_ms)
-                    } else {
-                        client.infer(&sample)
-                    };
+                    let reply = client.infer_retry(&sample, deadline_ms);
                     let lat_ms =
                         Instant::now().saturating_duration_since(sched).as_secs_f64() * 1e3;
                     if !measured {
                         continue;
                     }
                     match reply {
-                        Ok(ClientReply::Logits(_)) => {
-                            out.completed += 1;
-                            out.latencies_ms.push(lat_ms);
+                        Ok((r, attempts)) => {
+                            out.retried += u64::from(attempts);
+                            match r {
+                                ClientReply::Logits(_) => {
+                                    out.completed += 1;
+                                    out.latencies_ms.push(lat_ms);
+                                }
+                                ClientReply::Shed { .. } => out.shed += 1,
+                                ClientReply::Deadline => out.deadline_missed += 1,
+                                // a Retry that survived the whole budget is
+                                // a failed request
+                                ClientReply::Error(_) | ClientReply::Retry => out.errors += 1,
+                            }
                         }
-                        Ok(ClientReply::Shed { .. }) => out.shed += 1,
-                        Ok(ClientReply::Deadline) => out.deadline_missed += 1,
-                        Ok(ClientReply::Error(_)) | Err(_) => out.errors += 1,
+                        Err(_) => out.errors += 1,
                     }
                 }
                 out
@@ -225,6 +247,7 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenCfg) -> Result<LoadReport, String> {
         report.shed += o.shed;
         report.deadline_missed += o.deadline_missed;
         report.errors += o.errors;
+        report.retried += o.retried;
         report.warmup_discarded += o.warmup_discarded;
         lats.extend(o.latencies_ms);
     }

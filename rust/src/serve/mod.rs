@@ -27,8 +27,10 @@ pub mod service;
 
 pub use loadgen::{LoadReport, LoadgenCfg};
 pub use queue::{BatchQueue, CutReason, Offer, QueueConfig, Ticket};
-pub use replica::ReplicaPool;
-pub use service::{Client, ClientReply, ServeConfig, Service};
+pub use replica::{EngineFactory, ReplicaPool};
+pub use service::{Client, ClientReply, ReadyInfo, RetryCfg, RetryClient, ServeConfig, Service};
+
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
@@ -66,14 +68,16 @@ pub fn arch_sample_len(arch: &str) -> Result<usize> {
 
 /// Build `replicas` identical native engines (shared `ModelState`, one
 /// engine each) with `max_batch` capacity and `engine_threads` intra-
-/// engine workers. Returns the engines plus the model's sample length.
-/// `replicas = 0` resolves to one per available core.
+/// engine workers. Returns the engines, the model's sample length, and a
+/// factory that rebuilds an identical replica from the same model — the
+/// supervisor uses it to replace a crashed worker without re-reading the
+/// checkpoint. `replicas = 0` resolves to one per available core.
 pub fn build_engines(
     spec: &EngineSpec,
     replicas: usize,
     max_batch: usize,
     engine_threads: usize,
-) -> Result<(Vec<Box<dyn ExecEngine + Send>>, usize)> {
+) -> Result<(Vec<Box<dyn ExecEngine + Send>>, usize, EngineFactory)> {
     let n = if replicas == 0 {
         pool::resolve_threads(0)
     } else {
@@ -87,6 +91,7 @@ pub fn build_engines(
         spec.ckpt.as_deref(),
         spec.seed,
     )?;
+    let model = Arc::new(model);
     let mut engines: Vec<Box<dyn ExecEngine + Send>> = Vec::with_capacity(n);
     let mut sample_len = 0;
     for _ in 0..n {
@@ -102,7 +107,17 @@ pub fn build_engines(
         sample_len = eng.sample_len();
         engines.push(Box::new(eng));
     }
-    Ok((engines, sample_len))
+    let factory: EngineFactory = {
+        let arch = spec.arch.clone();
+        let method = spec.method;
+        let r = spec.r;
+        Arc::new(move || {
+            NativeEngine::from_model(&arch, method, &model, r, max_batch, n_classes, engine_threads)
+                .map(|e| Box::new(e) as Box<dyn ExecEngine + Send>)
+                .map_err(|e| e.to_string())
+        })
+    };
+    Ok((engines, sample_len, factory))
 }
 
 /// `serve --bench`: start an in-process service on an ephemeral loopback
@@ -116,12 +131,13 @@ pub fn run_bench(
     load_cfg: &LoadgenCfg,
     engine_threads: usize,
 ) -> Result<Json> {
-    let (engines, sample_len) =
+    let (engines, sample_len, factory) =
         build_engines(spec, serve_cfg.replicas, serve_cfg.max_batch, engine_threads)?;
     let n_replicas = engines.len();
     let addr = "127.0.0.1:0".parse().expect("loopback literal");
-    let svc = Service::start(addr, serve_cfg.clone(), engines, sample_len)
-        .map_err(|e| anyhow!(e))?;
+    let svc =
+        Service::start_supervised(addr, serve_cfg.clone(), engines, Some(factory), None, sample_len)
+            .map_err(|e| anyhow!(e))?;
     let bound = svc.addr;
 
     let mut probe = Client::connect(bound).map_err(|e| anyhow!("bench: connect: {e}"))?;

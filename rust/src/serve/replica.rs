@@ -1,5 +1,6 @@
 //! The replica pool: N engines, each owned by its own worker thread,
-//! consuming batch jobs from one shared channel.
+//! consuming batch jobs from one shared channel — supervised, so a
+//! replica crash degrades capacity instead of killing the service.
 //!
 //! Work distribution is the simplest thing that is correct: the single
 //! `Receiver<BatchJob>` sits behind a mutex and exactly one *idle*
@@ -13,39 +14,113 @@
 //! regardless of thread count or batch packing — pinned by the parity
 //! tests), so served results cannot depend on which replica ran them.
 //!
+//! ## Failure model
+//!
+//! `infer_batch` runs under `catch_unwind`. A panic retires the worker
+//! (its engine may hold arbitrarily corrupt state), answers the batch's
+//! tickets with [`Reply::Retry`] — the request was *not* served, and the
+//! client may idempotently resubmit — and hands the slot to the
+//! supervisor thread, which rebuilds a fresh engine via the
+//! [`EngineFactory`] under capped exponential backoff. While a slot is
+//! down the pool serves on the survivors; the live-replica count is
+//! exported for READY's degraded report. Without a factory (the legacy
+//! [`ReplicaPool::spawn`]), a crashed slot simply stays down.
+//!
 //! Shutdown is by channel closure: the dispatcher drops the job sender
 //! once the queue is drained, every replica's `recv` errors out, and
-//! [`ReplicaPool::join`] reaps the threads — in-flight batches always
+//! [`ReplicaPool::join`] reaps the supervisor — in-flight batches always
 //! finish and reply first.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::runtime::exec::ExecEngine;
+use crate::util::fault::FaultPlan;
+use crate::util::lock::lock_recover;
 
 use super::queue::Ticket;
 use super::service::{Reply, ReqPayload, ServeStats};
+
+/// Builds a fresh replica engine (used by the supervisor to replace a
+/// crashed one). Must produce engines interchangeable with the originals:
+/// same model, same batch capacity.
+pub type EngineFactory = Arc<dyn Fn() -> Result<Box<dyn ExecEngine + Send>, String> + Send + Sync>;
+
+/// First respawn delay after a crash.
+const RESPAWN_BACKOFF_BASE: Duration = Duration::from_millis(50);
+/// Backoff ceiling — a persistently crashing replica retries at this rate.
+const RESPAWN_BACKOFF_CAP: Duration = Duration::from_secs(5);
+/// A worker that survived this long resets its slot's backoff ladder.
+const RESPAWN_STABLE_UPTIME: Duration = Duration::from_secs(5);
+/// Supervisor poll cadence (reap exits, fire due respawns).
+const SUPERVISE_TICK: Duration = Duration::from_millis(25);
 
 /// One cut batch, FIFO tickets included.
 pub struct BatchJob {
     pub tickets: Vec<Ticket<ReqPayload>>,
 }
 
+/// How a worker thread ended.
+enum WorkerExit {
+    /// Job channel closed — orderly shutdown, never respawned.
+    Drained,
+    /// Panic during inference — respawn if a factory is available.
+    Crashed,
+}
+
+/// Decrements the live-replica gauge when the worker exits, however it
+/// exits.
+struct LiveGuard(Arc<AtomicUsize>);
+
+impl Drop for LiveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// One supervised worker slot.
+struct WorkerSlot {
+    handle: Option<JoinHandle<WorkerExit>>,
+    spawned: Instant,
+    backoff: Duration,
+    respawn_at: Option<Instant>,
+}
+
 pub struct ReplicaPool {
     tx: Option<Sender<BatchJob>>,
-    handles: Vec<JoinHandle<()>>,
+    supervisor: Option<JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+    live: Arc<AtomicUsize>,
+    total: usize,
 }
 
 impl ReplicaPool {
-    /// Spawn one worker thread per engine. Every engine must accept
-    /// partial batches — SLO cuts fill to at most `max_batch`, and padding
-    /// a short batch would burn replica time on ghost samples.
+    /// Spawn one worker thread per engine, unsupervised (a crashed slot
+    /// stays down). Every engine must accept partial batches — SLO cuts
+    /// fill to at most `max_batch`, and padding a short batch would burn
+    /// replica time on ghost samples.
     pub fn spawn(
         engines: Vec<Box<dyn ExecEngine + Send>>,
         stats: Arc<Mutex<ServeStats>>,
         t0: Instant,
+    ) -> Result<ReplicaPool, String> {
+        Self::spawn_supervised(engines, None, stats, t0, None)
+    }
+
+    /// [`ReplicaPool::spawn`] plus crash supervision: with a `factory`,
+    /// a panicked worker's slot is rebuilt with a fresh engine under
+    /// capped exponential backoff (base 50 ms, cap 5 s, ladder reset
+    /// after 5 s of stable uptime).
+    pub fn spawn_supervised(
+        engines: Vec<Box<dyn ExecEngine + Send>>,
+        factory: Option<EngineFactory>,
+        stats: Arc<Mutex<ServeStats>>,
+        t0: Instant,
+        faults: Option<Arc<FaultPlan>>,
     ) -> Result<ReplicaPool, String> {
         if engines.is_empty() {
             return Err("serve: replica pool needs at least one engine".into());
@@ -58,17 +133,97 @@ impl ReplicaPool {
                 ));
             }
         }
+        let total = engines.len();
         let (tx, rx) = channel::<BatchJob>();
         let rx = Arc::new(Mutex::new(rx));
-        let handles = engines
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let live = Arc::new(AtomicUsize::new(0));
+
+        let mut slots: Vec<WorkerSlot> = engines
             .into_iter()
-            .map(|eng| {
-                let rx = Arc::clone(&rx);
-                let stats = Arc::clone(&stats);
-                std::thread::spawn(move || replica_loop(eng, rx, stats, t0))
+            .map(|eng| WorkerSlot {
+                handle: Some(spawn_worker(
+                    eng,
+                    Arc::clone(&rx),
+                    Arc::clone(&stats),
+                    t0,
+                    Arc::clone(&live),
+                    faults.clone(),
+                )),
+                spawned: Instant::now(),
+                backoff: RESPAWN_BACKOFF_BASE,
+                respawn_at: None,
             })
             .collect();
-        Ok(ReplicaPool { tx: Some(tx), handles })
+
+        let supervisor = {
+            let shutdown = Arc::clone(&shutdown);
+            let live = Arc::clone(&live);
+            std::thread::spawn(move || loop {
+                for slot in slots.iter_mut() {
+                    if slot.handle.as_ref().is_some_and(|h| h.is_finished()) {
+                        let exit = slot
+                            .handle
+                            .take()
+                            .expect("checked is_some")
+                            .join()
+                            .unwrap_or(WorkerExit::Crashed);
+                        if matches!(exit, WorkerExit::Crashed)
+                            && factory.is_some()
+                            && !shutdown.load(Ordering::Acquire)
+                        {
+                            if slot.spawned.elapsed() >= RESPAWN_STABLE_UPTIME {
+                                slot.backoff = RESPAWN_BACKOFF_BASE;
+                            }
+                            slot.respawn_at = Some(Instant::now() + slot.backoff);
+                            slot.backoff = (slot.backoff * 2).min(RESPAWN_BACKOFF_CAP);
+                        }
+                    }
+                    if let Some(at) = slot.respawn_at {
+                        if shutdown.load(Ordering::Acquire) {
+                            slot.respawn_at = None;
+                        } else if Instant::now() >= at {
+                            let build = factory.as_ref().expect("respawn implies factory")();
+                            match build {
+                                Ok(eng) => {
+                                    slot.respawn_at = None;
+                                    slot.spawned = Instant::now();
+                                    slot.handle = Some(spawn_worker(
+                                        eng,
+                                        Arc::clone(&rx),
+                                        Arc::clone(&stats),
+                                        t0,
+                                        Arc::clone(&live),
+                                        faults.clone(),
+                                    ));
+                                    lock_recover(&stats).replica_restarts += 1;
+                                }
+                                Err(e) => {
+                                    eprintln!("serve: replica respawn failed: {e}");
+                                    slot.respawn_at = Some(Instant::now() + slot.backoff);
+                                    slot.backoff = (slot.backoff * 2).min(RESPAWN_BACKOFF_CAP);
+                                }
+                            }
+                        }
+                    }
+                }
+                let quiet = slots
+                    .iter()
+                    .all(|s| s.handle.is_none() && s.respawn_at.is_none());
+                if quiet {
+                    return;
+                }
+                std::thread::sleep(SUPERVISE_TICK);
+            })
+        };
+
+        Ok(ReplicaPool {
+            tx: Some(tx),
+            supervisor: Some(supervisor),
+            shutdown,
+            live,
+            total,
+        })
     }
 
     /// A fresh job-submission handle (the dispatcher holds one; when every
@@ -77,14 +232,43 @@ impl ReplicaPool {
         self.tx.as_ref().expect("pool not joined").clone()
     }
 
-    /// Drop the pool's own sender and wait for every replica to exit.
-    /// Callers must drop their cloned senders first or this blocks.
+    /// Live-replica gauge (READY's degraded report reads this).
+    pub fn live_handle(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.live)
+    }
+
+    /// Configured replica count (the denominator of the degraded report).
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Stop supervision, drop the pool's own sender, and wait for every
+    /// worker (via the supervisor) to exit. Callers must drop their
+    /// cloned senders first or this blocks.
     pub fn join(mut self) {
+        self.shutdown.store(true, Ordering::Release);
         drop(self.tx.take());
-        for h in self.handles.drain(..) {
+        if let Some(h) = self.supervisor.take() {
             let _ = h.join();
         }
     }
+}
+
+fn spawn_worker(
+    eng: Box<dyn ExecEngine + Send>,
+    rx: Arc<Mutex<Receiver<BatchJob>>>,
+    stats: Arc<Mutex<ServeStats>>,
+    t0: Instant,
+    live: Arc<AtomicUsize>,
+    faults: Option<Arc<FaultPlan>>,
+) -> JoinHandle<WorkerExit> {
+    // gauge up before the thread exists so READY can never observe a
+    // spawned-but-uncounted replica
+    live.fetch_add(1, Ordering::SeqCst);
+    std::thread::spawn(move || {
+        let _guard = LiveGuard(live);
+        replica_loop(eng, rx, stats, t0, faults)
+    })
 }
 
 fn replica_loop(
@@ -92,18 +276,19 @@ fn replica_loop(
     rx: Arc<Mutex<Receiver<BatchJob>>>,
     stats: Arc<Mutex<ServeStats>>,
     t0: Instant,
-) {
+    faults: Option<Arc<FaultPlan>>,
+) -> WorkerExit {
     let nc = eng.n_classes();
     let mut xbuf: Vec<f32> = Vec::new();
     loop {
         // hold the lock only while idle in recv — release before inference
         let job = {
-            let guard = rx.lock().unwrap();
+            let guard = lock_recover(&rx);
             guard.recv()
         };
         let job = match job {
             Ok(j) => j,
-            Err(_) => break, // channel closed: orderly shutdown
+            Err(_) => return WorkerExit::Drained, // channel closed: orderly shutdown
         };
         if job.tickets.is_empty() {
             continue;
@@ -113,8 +298,17 @@ fn replica_loop(
             xbuf.extend_from_slice(&t.payload.input);
         }
         let fill = job.tickets.len();
-        match eng.infer_batch(&xbuf) {
-            Ok(logits) => {
+        let inject = faults.as_deref().is_some_and(|f| f.fire_replica_panic());
+        // AssertUnwindSafe: on panic the engine is discarded, never reused,
+        // so torn internal state cannot leak into a later inference.
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            if inject {
+                panic!("injected replica panic (FaultPlan replica_panic)");
+            }
+            eng.infer_batch(&xbuf).map(|l| l[..fill * nc].to_vec())
+        }));
+        match result {
+            Ok(Ok(logits)) => {
                 let now_ns = t0.elapsed().as_nanos() as u64;
                 // reply first, account second — the requester should not
                 // wait on the stats mutex
@@ -124,7 +318,7 @@ fn replica_loop(
                     let _ = t.payload.reply.send(Reply::Logits(row));
                     lats.push(now_ns.saturating_sub(t.enqueued_ns) as f64 / 1e6);
                 }
-                let mut st = stats.lock().unwrap();
+                let mut st = lock_recover(&stats);
                 st.batches += 1;
                 st.batch_fill_sum += fill as f64;
                 st.completed += fill as u64;
@@ -132,12 +326,28 @@ fn replica_loop(
                     st.record_latency(l);
                 }
             }
-            Err(e) => {
+            Ok(Err(e)) => {
                 let msg = format!("replica inference failed: {e}");
                 for t in &job.tickets {
                     let _ = t.payload.reply.send(Reply::Error(msg.clone()));
                 }
-                stats.lock().unwrap().internal_errors += 1;
+                let mut st = lock_recover(&stats);
+                st.internal_errors += 1;
+                st.errored += fill as u64;
+            }
+            Err(_) => {
+                // Panic mid-inference: every ticket of this batch gets
+                // Retry (none were served — safe to resubmit), and the
+                // worker retires so the supervisor can rebuild a clean
+                // engine. Tickets are accounted so completed + shed +
+                // errored still explains every accepted request.
+                for t in &job.tickets {
+                    let _ = t.payload.reply.send(Reply::Retry);
+                }
+                let mut st = lock_recover(&stats);
+                st.replica_panics += 1;
+                st.errored += fill as u64;
+                return WorkerExit::Crashed;
             }
         }
     }

@@ -45,15 +45,18 @@
 //! | 0x82 | SHED       | u32le queue depth observed                |
 //! | 0x83 | ERROR      | utf-8 message                             |
 //! | 0x84 | HEALTH_OK  | u8 1                                      |
-//! | 0x85 | READY      | u8 0/1                                    |
+//! | 0x85 | READY      | u8 0/1, then optionally u8 degraded,      |
+//! |      |            | u32le live replicas, u32le total replicas |
 //! | 0x86 | STATS      | utf-8 JSON (see `ServeStats::to_json`)    |
 //! | 0x87 | DEADLINE   | empty (request expired before dispatch)   |
 //! | 0x88 | SHUTDOWN   | empty (ack; server is draining)           |
 //! | 0x89 | RESET_OK   | empty                                     |
+//! | 0x8A | RETRY      | empty (replica died mid-batch; the request|
+//! |      |            | was not served and is safe to resubmit)   |
 
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -61,10 +64,13 @@ use std::time::{Duration, Instant};
 
 use crate::metrics::LatencySummary;
 use crate::runtime::exec::ExecEngine;
+use crate::util::fault::Faults;
 use crate::util::json::Json;
+use crate::util::lock::lock_recover;
+use crate::util::prng::Prng;
 
 use super::queue::{BatchQueue, CutReason, Offer, QueueConfig, NO_DEADLINE};
-use super::replica::{BatchJob, ReplicaPool};
+use super::replica::{BatchJob, EngineFactory, ReplicaPool};
 
 /// Frame type constants (see module docs for the table).
 pub mod frame {
@@ -85,6 +91,7 @@ pub mod frame {
     pub const R_DEADLINE: u8 = 0x87;
     pub const R_SHUTDOWN: u8 = 0x88;
     pub const R_RESET: u8 = 0x89;
+    pub const R_RETRY: u8 = 0x8A;
 
     /// Hard cap on `length`; anything larger is a protocol error (a
     /// sample is a few KB — 16 MiB means a corrupt or hostile header).
@@ -127,6 +134,9 @@ pub enum Reply {
     Shed { depth: u32 },
     Deadline,
     Error(String),
+    /// The replica serving this request's batch panicked before producing
+    /// logits; the request was not served and is safe to resubmit.
+    Retry,
 }
 
 /// Queue payload: the decoded sample plus the reply path. `deadline_ns`
@@ -150,6 +160,14 @@ pub struct ServeStats {
     pub batch_fill_sum: f64,
     pub cut_max_batch: u64,
     pub cut_max_wait: u64,
+    /// Replica worker panics caught mid-batch (each retires one worker).
+    pub replica_panics: u64,
+    /// Crashed replicas rebuilt by the supervisor.
+    pub replica_restarts: u64,
+    /// Requests that reached a replica but got Error/Retry instead of
+    /// logits. Together with `completed`, `shed_*` this accounts for
+    /// every request accepted into the queue.
+    pub errored: u64,
     /// Enqueue→reply latency per completed request. Capped so a long-lived
     /// server cannot grow without bound; the digest then covers the first
     /// `LAT_CAP` completions since the last reset (counters keep counting).
@@ -189,6 +207,9 @@ impl ServeStats {
             ("mean_batch_fill", Json::num(self.mean_batch_fill())),
             ("cut_max_batch", Json::num(self.cut_max_batch as f64)),
             ("cut_max_wait", Json::num(self.cut_max_wait as f64)),
+            ("replica_panics", Json::num(self.replica_panics as f64)),
+            ("replica_restarts", Json::num(self.replica_restarts as f64)),
+            ("errored", Json::num(self.errored as f64)),
             (
                 "service_latency_ms",
                 LatencySummary::from_unsorted(&self.service_latency_ms).to_json(),
@@ -309,11 +330,28 @@ impl Service {
     /// Bind, spawn the replica pool + dispatcher + accept loop, and
     /// return once the service is ready (readiness probes answer `true`
     /// from that point on). `sample_len` is the per-request input length
-    /// every INFER frame must match exactly.
+    /// every INFER frame must match exactly. Unsupervised: a crashed
+    /// replica stays down (see [`Service::start_supervised`]).
     pub fn start(
         addr: SocketAddr,
         cfg: ServeConfig,
         engines: Vec<Box<dyn ExecEngine + Send>>,
+        sample_len: usize,
+    ) -> Result<Service, String> {
+        Self::start_supervised(addr, cfg, engines, None, None, sample_len)
+    }
+
+    /// [`Service::start`] plus fault tolerance: with a `factory`, crashed
+    /// replica workers are rebuilt under capped exponential backoff while
+    /// the pool keeps serving on the survivors, and READY reports the
+    /// degraded live/total replica counts. `faults` is the deterministic
+    /// fault-injection plan (`None` in production — zero cost).
+    pub fn start_supervised(
+        addr: SocketAddr,
+        cfg: ServeConfig,
+        engines: Vec<Box<dyn ExecEngine + Send>>,
+        factory: Option<EngineFactory>,
+        faults: Faults,
         sample_len: usize,
     ) -> Result<Service, String> {
         if sample_len == 0 {
@@ -341,15 +379,19 @@ impl Service {
         let ready = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(Mutex::new(ServeStats::default()));
 
-        let pool = ReplicaPool::spawn(engines, Arc::clone(&stats), t0)?;
+        let pool =
+            ReplicaPool::spawn_supervised(engines, factory, Arc::clone(&stats), t0, faults.clone())?;
+        let live = pool.live_handle();
+        let total = pool.total() as u32;
         let job_tx = pool.sender();
 
         let (req_tx, req_rx) = channel::<ReqPayload>();
         let dispatcher = {
             let stats = Arc::clone(&stats);
             let shutdown = Arc::clone(&shutdown);
+            let faults = faults.clone();
             std::thread::spawn(move || {
-                dispatcher_loop(qcfg, req_rx, job_tx, stats, shutdown, t0);
+                dispatcher_loop(qcfg, req_rx, job_tx, stats, shutdown, t0, faults);
             })
         };
 
@@ -363,13 +405,23 @@ impl Service {
         ready.store(true, Ordering::Release);
 
         let accept = {
-            let shutdown = Arc::clone(&shutdown);
-            let stats = Arc::clone(&stats);
-            let dl_default_ns = qcfg.deadline_ns;
+            let ctx = ConnCtx {
+                req_tx,
+                stats: Arc::clone(&stats),
+                shutdown: Arc::clone(&shutdown),
+                ready,
+                live,
+                total,
+                t0,
+                sample_len,
+                dl_default_ns: qcfg.deadline_ns,
+                conn_drop_frames: faults
+                    .as_deref()
+                    .and_then(|f| f.conn_drop_frames())
+                    .unwrap_or(0),
+            };
             std::thread::spawn(move || {
-                accept_loop(
-                    listener, req_tx, stats, shutdown, ready, t0, sample_len, dl_default_ns,
-                );
+                accept_loop(listener, ctx);
             })
         };
 
@@ -390,7 +442,7 @@ impl Service {
 
     /// Render the current stats (same JSON the STATS frame returns).
     pub fn stats_json(&self) -> Json {
-        self.stats.lock().unwrap().to_json()
+        lock_recover(&self.stats).to_json()
     }
 
     /// Shared handle to the live counters — lets a caller read final
@@ -428,6 +480,7 @@ fn dispatcher_loop(
     stats: Arc<Mutex<ServeStats>>,
     shutdown: Arc<AtomicBool>,
     t0: Instant,
+    faults: Faults,
 ) {
     let mut queue: BatchQueue<ReqPayload> = BatchQueue::new(qcfg);
     'outer: loop {
@@ -436,7 +489,7 @@ fn dispatcher_loop(
         loop {
             let p = queue.poll(now_ns(t0));
             if !p.expired.is_empty() {
-                stats.lock().unwrap().shed_deadline += p.expired.len() as u64;
+                lock_recover(&stats).shed_deadline += p.expired.len() as u64;
                 for t in p.expired {
                     let _ = t.payload.reply.send(Reply::Deadline);
                 }
@@ -444,11 +497,14 @@ fn dispatcher_loop(
             match p.batch {
                 Some(cut) => {
                     {
-                        let mut st = stats.lock().unwrap();
+                        let mut st = lock_recover(&stats);
                         match cut.reason {
                             CutReason::MaxBatch => st.cut_max_batch += 1,
                             CutReason::MaxWait => st.cut_max_wait += 1,
                         }
+                    }
+                    if let Some(d) = faults.as_deref().and_then(|f| f.dispatch_delay()) {
+                        std::thread::sleep(d);
                     }
                     if job_tx.send(BatchJob { tickets: cut.tickets }).is_err() {
                         // replica pool is gone; nothing can be served
@@ -503,37 +559,42 @@ fn offer_one(
     match queue.offer_deadline(req, now_ns(t0), dl) {
         Offer::Accepted { .. } => {}
         Offer::Shed { payload, depth } => {
-            stats.lock().unwrap().shed_queue += 1;
+            lock_recover(stats).shed_queue += 1;
             let _ = payload.reply.send(Reply::Shed { depth: depth as u32 });
         }
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn accept_loop(
-    listener: TcpListener,
+/// Everything a connection handler needs, bundled so the accept → conn →
+/// frame plumbing is one clone instead of eight loose arguments.
+#[derive(Clone)]
+struct ConnCtx {
     req_tx: Sender<ReqPayload>,
     stats: Arc<Mutex<ServeStats>>,
     shutdown: Arc<AtomicBool>,
     ready: Arc<AtomicBool>,
+    /// Live-replica gauge (owned by the pool supervisor).
+    live: Arc<AtomicUsize>,
+    /// Configured replica count.
+    total: u32,
     t0: Instant,
     sample_len: usize,
     dl_default_ns: u64,
-) {
+    /// Fault injection: drop each connection after this many handled
+    /// frames (0 = disabled).
+    conn_drop_frames: u64,
+}
+
+fn accept_loop(listener: TcpListener, ctx: ConnCtx) {
     let mut conns: Vec<JoinHandle<()>> = Vec::new();
-    while !shutdown.load(Ordering::Acquire) {
+    while !ctx.shutdown.load(Ordering::Acquire) {
         match listener.accept() {
             Ok((stream, _peer)) => {
                 let _ = stream.set_nodelay(true);
                 let _ = stream.set_read_timeout(Some(CONN_READ_TIMEOUT));
-                let req_tx = req_tx.clone();
-                let stats = Arc::clone(&stats);
-                let shutdown = Arc::clone(&shutdown);
-                let ready = Arc::clone(&ready);
+                let ctx = ctx.clone();
                 conns.push(std::thread::spawn(move || {
-                    conn_loop(
-                        stream, req_tx, stats, shutdown, ready, t0, sample_len, dl_default_ns,
-                    );
+                    conn_loop(stream, ctx);
                 }));
                 // opportunistically reap finished handlers so a long-lived
                 // server doesn't accumulate one JoinHandle per past conn
@@ -547,47 +608,40 @@ fn accept_loop(
     }
     // master req_tx (and all conn clones, once they exit) must drop for
     // the dispatcher to see Disconnected and drain out
-    drop(req_tx);
+    drop(ctx);
     for h in conns {
         let _ = h.join();
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn conn_loop(
-    mut stream: TcpStream,
-    req_tx: Sender<ReqPayload>,
-    stats: Arc<Mutex<ServeStats>>,
-    shutdown: Arc<AtomicBool>,
-    ready: Arc<AtomicBool>,
-    t0: Instant,
-    sample_len: usize,
-    dl_default_ns: u64,
-) {
+fn conn_loop(mut stream: TcpStream, ctx: ConnCtx) {
     let mut fb = FrameBuf::default();
     let mut tmp = [0u8; 64 * 1024];
+    let mut handled: u64 = 0;
     loop {
         // parse everything already buffered before touching the socket
         loop {
             match fb.next_frame() {
                 Ok(Some((ty, body))) => {
-                    let keep = handle_frame(
-                        &mut stream, ty, &body, &req_tx, &stats, &shutdown, &ready, t0,
-                        sample_len, dl_default_ns,
-                    );
+                    let keep = handle_frame(&mut stream, ty, &body, &ctx);
+                    handled += 1;
+                    if ctx.conn_drop_frames > 0 && handled >= ctx.conn_drop_frames {
+                        // injected fault: sever the connection mid-session
+                        return;
+                    }
                     if !keep {
                         return;
                     }
                 }
                 Ok(None) => break,
                 Err(_) => {
-                    stats.lock().unwrap().protocol_errors += 1;
+                    lock_recover(&ctx.stats).protocol_errors += 1;
                     let _ = write_frame(&mut stream, frame::R_ERROR, b"bad frame length");
                     return;
                 }
             }
         }
-        if shutdown.load(Ordering::Acquire) {
+        if ctx.shutdown.load(Ordering::Acquire) {
             return;
         }
         match stream.read(&mut tmp) {
@@ -604,24 +658,14 @@ fn conn_loop(
 
 /// Handle one decoded frame; returns `false` when the connection should
 /// close (fatal protocol error).
-#[allow(clippy::too_many_arguments)]
-fn handle_frame(
-    stream: &mut TcpStream,
-    ty: u8,
-    body: &[u8],
-    req_tx: &Sender<ReqPayload>,
-    stats: &Mutex<ServeStats>,
-    shutdown: &AtomicBool,
-    ready: &AtomicBool,
-    t0: Instant,
-    sample_len: usize,
-    dl_default_ns: u64,
-) -> bool {
+fn handle_frame(stream: &mut TcpStream, ty: u8, body: &[u8], ctx: &ConnCtx) -> bool {
+    let ConnCtx { stats, sample_len, dl_default_ns, t0, .. } = ctx;
+    let (sample_len, dl_default_ns, t0) = (*sample_len, *dl_default_ns, *t0);
     match ty {
         frame::INFER | frame::INFER_DL => {
             let (dl_req_ns, sample_bytes) = if ty == frame::INFER_DL {
                 if body.len() < 4 {
-                    stats.lock().unwrap().protocol_errors += 1;
+                    lock_recover(stats).protocol_errors += 1;
                     let _ = write_frame(stream, frame::R_ERROR, b"INFER_DL: missing deadline");
                     return true;
                 }
@@ -633,7 +677,7 @@ fn handle_frame(
             let input = match bytes_to_f32s(sample_bytes) {
                 Some(v) if v.len() == sample_len => v,
                 _ => {
-                    stats.lock().unwrap().protocol_errors += 1;
+                    lock_recover(stats).protocol_errors += 1;
                     let msg = format!(
                         "INFER: expected {} f32 values ({} bytes), got {} bytes",
                         sample_len,
@@ -655,7 +699,7 @@ fn handle_frame(
             };
             let (reply_tx, reply_rx) = channel::<Reply>();
             let req = ReqPayload { input, deadline_ns: dl_abs, reply: reply_tx };
-            if req_tx.send(req).is_err() {
+            if ctx.req_tx.send(req).is_err() {
                 let _ = write_frame(stream, frame::R_ERROR, b"service is shutting down");
                 return true;
             }
@@ -672,6 +716,9 @@ fn handle_frame(
                 Ok(Reply::Error(msg)) => {
                     let _ = write_frame(stream, frame::R_ERROR, msg.as_bytes());
                 }
+                Ok(Reply::Retry) => {
+                    let _ = write_frame(stream, frame::R_RETRY, &[]);
+                }
                 Err(_) => {
                     let _ = write_frame(stream, frame::R_ERROR, b"timed out waiting for reply");
                 }
@@ -683,27 +730,35 @@ fn handle_frame(
             true
         }
         frame::READY => {
-            let ok = ready.load(Ordering::Acquire) && !shutdown.load(Ordering::Acquire);
-            let _ = write_frame(stream, frame::R_READY, &[u8::from(ok)]);
+            let live = ctx.live.load(Ordering::Acquire) as u32;
+            let up = ctx.ready.load(Ordering::Acquire)
+                && !ctx.shutdown.load(Ordering::Acquire)
+                && live > 0;
+            // byte 0 keeps the legacy 0/1 meaning; the degraded flag and
+            // live/total counts ride behind it for newer probes
+            let mut out = vec![u8::from(up), u8::from(live < ctx.total)];
+            out.extend_from_slice(&live.to_le_bytes());
+            out.extend_from_slice(&ctx.total.to_le_bytes());
+            let _ = write_frame(stream, frame::R_READY, &out);
             true
         }
         frame::STATS => {
-            let json = stats.lock().unwrap().to_json().to_string();
+            let json = lock_recover(stats).to_json().to_string();
             let _ = write_frame(stream, frame::R_STATS, json.as_bytes());
             true
         }
         frame::STATS_RESET => {
-            stats.lock().unwrap().reset();
+            lock_recover(stats).reset();
             let _ = write_frame(stream, frame::R_RESET, &[]);
             true
         }
         frame::SHUTDOWN => {
-            shutdown.store(true, Ordering::Release);
+            ctx.shutdown.store(true, Ordering::Release);
             let _ = write_frame(stream, frame::R_SHUTDOWN, &[]);
             true
         }
         other => {
-            stats.lock().unwrap().protocol_errors += 1;
+            lock_recover(stats).protocol_errors += 1;
             let msg = format!("unknown frame type 0x{other:02x}");
             let _ = write_frame(stream, frame::R_ERROR, msg.as_bytes());
             true
@@ -720,6 +775,22 @@ pub enum ClientReply {
     Shed { depth: u32 },
     Deadline,
     Error(String),
+    /// The serving replica died mid-batch; the request was not served and
+    /// an idempotent resubmit is safe ([`RetryClient`] does this).
+    Retry,
+}
+
+/// Decoded READY reply: liveness plus the degradation report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReadyInfo {
+    /// Accepting traffic (false once shutdown begins or no replica lives).
+    pub ready: bool,
+    /// Some configured replicas are currently down.
+    pub degraded: bool,
+    /// Live replica count (0 when the server predates the extended reply).
+    pub live: u32,
+    /// Configured replica count (0 when unknown).
+    pub total: u32,
 }
 
 /// Minimal blocking client over the frame protocol — used by the load
@@ -762,6 +833,29 @@ impl Client {
     pub fn ready(&mut self) -> io::Result<bool> {
         let (ty, body) = self.roundtrip(frame::READY, &[])?;
         Ok(ty == frame::R_READY && body.first() == Some(&1))
+    }
+
+    /// READY with the degradation report (live/total replica counts). A
+    /// legacy 1-byte reply decodes with `degraded = false`, counts 0.
+    pub fn ready_info(&mut self) -> io::Result<ReadyInfo> {
+        let (ty, body) = self.roundtrip(frame::READY, &[])?;
+        if ty != frame::R_READY {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("expected READY reply, got 0x{ty:02x}"),
+            ));
+        }
+        let ready = body.first() == Some(&1);
+        if body.len() >= 10 {
+            Ok(ReadyInfo {
+                ready,
+                degraded: body[1] == 1,
+                live: u32::from_le_bytes([body[2], body[3], body[4], body[5]]),
+                total: u32::from_le_bytes([body[6], body[7], body[8], body[9]]),
+            })
+        } else {
+            Ok(ReadyInfo { ready, degraded: false, live: 0, total: 0 })
+        }
     }
 
     /// Raw stats JSON string.
@@ -816,8 +910,132 @@ fn decode_reply(ty: u8, body: Vec<u8>) -> ClientReply {
             ClientReply::Shed { depth }
         }
         frame::R_DEADLINE => ClientReply::Deadline,
+        frame::R_RETRY => ClientReply::Retry,
         frame::R_ERROR => ClientReply::Error(String::from_utf8_lossy(&body).into_owned()),
         other => ClientReply::Error(format!("unexpected reply type 0x{other:02x}")),
+    }
+}
+
+// ---- retrying client --------------------------------------------------------
+
+/// Retry policy for [`RetryClient`].
+#[derive(Clone, Copy, Debug)]
+pub struct RetryCfg {
+    /// Extra attempts after the first (0 = no retries).
+    pub retries: u32,
+    /// First backoff (before jitter), milliseconds.
+    pub backoff_base_ms: f64,
+    /// Backoff ceiling, milliseconds.
+    pub backoff_cap_ms: f64,
+    /// Jitter seed — same seed, same backoff sequence (determinism for
+    /// tests and reproducible load generation).
+    pub seed: u64,
+}
+
+impl Default for RetryCfg {
+    fn default() -> Self {
+        RetryCfg { retries: 0, backoff_base_ms: 10.0, backoff_cap_ms: 1_000.0, seed: 0 }
+    }
+}
+
+/// Equal-jitter exponential backoff: attempt `k` sleeps uniformly in
+/// `[cap_k/2, cap_k)` where `cap_k = min(base · 2^k, cap)`. The random
+/// half de-synchronizes clients that failed together (no retry stampede);
+/// the deterministic half keeps the mean predictable.
+pub fn backoff_ms(attempt: u32, base_ms: f64, cap_ms: f64, rng: &mut Prng) -> f64 {
+    let exp = base_ms * 2f64.powi(attempt.min(62) as i32);
+    let capped = exp.min(cap_ms);
+    capped / 2.0 + rng.uniform_f64() * (capped / 2.0)
+}
+
+/// A [`Client`] wrapper that survives the failures the service can now
+/// produce: RETRY replies (replica died mid-batch) and dropped
+/// connections both trigger an idempotent resubmit under equal-jitter
+/// exponential backoff — INFER is read-only, so resubmitting can never
+/// double-apply anything. A request deadline always wins over the retry
+/// budget: no attempt (or sleep) is started that the deadline can't fit.
+pub struct RetryClient {
+    addr: SocketAddr,
+    cfg: RetryCfg,
+    rng: Prng,
+    conn: Option<Client>,
+}
+
+impl RetryClient {
+    pub fn new(addr: SocketAddr, cfg: RetryCfg) -> RetryClient {
+        RetryClient { addr, cfg, rng: Prng::new(cfg.seed), conn: None }
+    }
+
+    /// Establish the connection eagerly (load generators call this before
+    /// the measurement window so connect cost isn't billed to a request).
+    pub fn preconnect(&mut self) -> io::Result<()> {
+        self.conn().map(|_| ())
+    }
+
+    fn conn(&mut self) -> io::Result<&mut Client> {
+        if self.conn.is_none() {
+            self.conn = Some(Client::connect(self.addr)?);
+        }
+        Ok(self.conn.as_mut().expect("just connected"))
+    }
+
+    /// INFER with retries; returns the final reply plus the number of
+    /// retry attempts used (0 = first try succeeded). `deadline_ms == 0`
+    /// means no deadline; otherwise the deadline spans *all* attempts and
+    /// each resubmit carries only the remaining budget.
+    pub fn infer_retry(
+        &mut self,
+        sample: &[f32],
+        deadline_ms: u32,
+    ) -> io::Result<(ClientReply, u32)> {
+        let start = Instant::now();
+        let mut attempt: u32 = 0;
+        loop {
+            let rem_ms = if deadline_ms == 0 {
+                0
+            } else {
+                let left = f64::from(deadline_ms) - start.elapsed().as_secs_f64() * 1e3;
+                if left <= 0.0 {
+                    return Ok((ClientReply::Deadline, attempt));
+                }
+                (left.ceil() as u32).max(1)
+            };
+            let res = match self.conn() {
+                Ok(c) => {
+                    if deadline_ms == 0 {
+                        c.infer(sample)
+                    } else {
+                        c.infer_deadline(sample, rem_ms)
+                    }
+                }
+                Err(e) => Err(e),
+            };
+            let retryable = match &res {
+                // transport failure: the connection is suspect — drop it
+                // so the next attempt reconnects from scratch
+                Err(_) => {
+                    self.conn = None;
+                    true
+                }
+                Ok(ClientReply::Retry) => true,
+                Ok(_) => false,
+            };
+            if !retryable || attempt >= self.cfg.retries {
+                return res.map(|r| (r, attempt));
+            }
+            let sleep_ms =
+                backoff_ms(attempt, self.cfg.backoff_base_ms, self.cfg.backoff_cap_ms, &mut self.rng);
+            if deadline_ms > 0 {
+                let after_ms = start.elapsed().as_secs_f64() * 1e3 + sleep_ms;
+                if after_ms >= f64::from(deadline_ms) {
+                    // the deadline would expire mid-backoff: report it now
+                    // rather than sleeping past it
+                    return Ok((ClientReply::Deadline, attempt));
+                }
+            }
+            std::thread::sleep(Duration::from_secs_f64(sleep_ms / 1e3));
+            attempt += 1;
+        }
     }
 }
 

@@ -1,0 +1,225 @@
+//! Deterministic fault injection.
+//!
+//! A `FaultPlan` names the exact fault to fire and when — "panic the
+//! replica handling the 3rd batch", "tear the 1st checkpoint write" —
+//! so recovery paths are *proved* by tests and CI smoke jobs instead of
+//! being trusted by inspection. Determinism comes from counting, not
+//! randomness: the Nth event fires, every run, every machine.
+//!
+//! Plans are carried as `Option<Arc<FaultPlan>>` and resolved once at
+//! startup from `--faults` / `GXNOR_FAULTS`; the disabled path is a
+//! `None` check at each injection point, so production costs nothing.
+//!
+//! Spec grammar: comma-separated `knob=N` pairs, `N = 0` disables.
+//!
+//! | knob                | fires                                        |
+//! |---------------------|----------------------------------------------|
+//! | `replica_panic=N`   | panic inside `infer_batch` on the Nth batch  |
+//! | `torn_ckpt=N`       | Nth checkpoint write stops halfway, no rename|
+//! | `conn_drop=K`       | server drops each connection after K frames  |
+//! | `delay_dispatch_ms=D` | dispatcher sleeps D ms before each batch   |
+//! | `train_crash=E`     | training aborts right after epoch E completes|
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A parsed, armed fault plan. Counters are process-global per plan:
+/// "the Nth batch" means the Nth across all replicas, in dispatch order.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// Panic the replica worker on the Nth inference batch (1-based).
+    pub replica_panic_batch: Option<u64>,
+    /// Truncate the Nth checkpoint write halfway and fail it (1-based).
+    pub torn_ckpt_write: Option<u64>,
+    /// Server drops each connection after K handled frames.
+    pub conn_drop_frames: Option<u64>,
+    /// Dispatcher sleeps this long before sending each batch to the pool.
+    pub delay_dispatch_ms: Option<u64>,
+    /// Abort training with an error right after this epoch completes
+    /// (1-based: `train_crash=2` dies after the 2nd epoch's checkpoint).
+    pub train_crash_epoch: Option<u64>,
+    batches: AtomicU64,
+    ckpt_writes: AtomicU64,
+}
+
+/// How fault plans travel through config structs: absent = disabled.
+pub type Faults = Option<Arc<FaultPlan>>;
+
+impl FaultPlan {
+    /// Parse a `knob=N,knob=N` spec. Unknown knobs are an error (a typo
+    /// must not silently disarm a fault the CI job depends on).
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec `{part}`: expected knob=N"))?;
+            let n: u64 = val
+                .trim()
+                .parse()
+                .map_err(|_| format!("fault spec `{part}`: `{val}` is not a count"))?;
+            let slot = match key.trim() {
+                "replica_panic" => &mut plan.replica_panic_batch,
+                "torn_ckpt" => &mut plan.torn_ckpt_write,
+                "conn_drop" => &mut plan.conn_drop_frames,
+                "delay_dispatch_ms" => &mut plan.delay_dispatch_ms,
+                "train_crash" => &mut plan.train_crash_epoch,
+                other => {
+                    return Err(format!(
+                        "unknown fault knob `{other}` (knobs: replica_panic, \
+                         torn_ckpt, conn_drop, delay_dispatch_ms, train_crash)"
+                    ))
+                }
+            };
+            *slot = (n != 0).then_some(n);
+        }
+        Ok(plan)
+    }
+
+    /// Resolve the effective plan: the CLI flag wins, else `GXNOR_FAULTS`,
+    /// else disabled. Empty specs resolve to `None` so `--faults ""` and
+    /// an unset env var mean "off", not "armed with nothing".
+    pub fn resolve(flag: &str) -> Result<Faults, String> {
+        let spec = if !flag.is_empty() {
+            flag.to_string()
+        } else {
+            std::env::var("GXNOR_FAULTS").unwrap_or_default()
+        };
+        if spec.trim().is_empty() {
+            return Ok(None);
+        }
+        let plan = Self::parse(&spec)?;
+        if plan.is_empty() {
+            return Ok(None);
+        }
+        Ok(Some(Arc::new(plan)))
+    }
+
+    fn is_empty(&self) -> bool {
+        self.replica_panic_batch.is_none()
+            && self.torn_ckpt_write.is_none()
+            && self.conn_drop_frames.is_none()
+            && self.delay_dispatch_ms.is_none()
+            && self.train_crash_epoch.is_none()
+    }
+
+    /// Advance the batch counter; true exactly once, on the Nth call.
+    /// Counts only advance while the knob is armed, so the fire point is
+    /// stable regardless of how many plans share a process.
+    pub fn fire_replica_panic(&self) -> bool {
+        match self.replica_panic_batch {
+            Some(n) => self.batches.fetch_add(1, Ordering::Relaxed) + 1 == n,
+            None => false,
+        }
+    }
+
+    /// Advance the checkpoint-write counter; true exactly once, on the
+    /// Nth call.
+    pub fn fire_torn_write(&self) -> bool {
+        match self.torn_ckpt_write {
+            Some(n) => self.ckpt_writes.fetch_add(1, Ordering::Relaxed) + 1 == n,
+            None => false,
+        }
+    }
+
+    /// Frames after which the server should drop a connection, if armed.
+    pub fn conn_drop_frames(&self) -> Option<u64> {
+        self.conn_drop_frames
+    }
+
+    /// Artificial dispatch latency, if armed.
+    pub fn dispatch_delay(&self) -> Option<Duration> {
+        self.delay_dispatch_ms.map(Duration::from_millis)
+    }
+
+    /// True when training should abort after completing `epoch_done`
+    /// (1-based count of finished epochs).
+    pub fn fire_train_crash(&self, epoch_done: u64) -> bool {
+        self.train_crash_epoch == Some(epoch_done)
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut knobs = Vec::new();
+        if let Some(n) = self.replica_panic_batch {
+            knobs.push(format!("replica_panic={n}"));
+        }
+        if let Some(n) = self.torn_ckpt_write {
+            knobs.push(format!("torn_ckpt={n}"));
+        }
+        if let Some(n) = self.conn_drop_frames {
+            knobs.push(format!("conn_drop={n}"));
+        }
+        if let Some(n) = self.delay_dispatch_ms {
+            knobs.push(format!("delay_dispatch_ms={n}"));
+        }
+        if let Some(n) = self.train_crash_epoch {
+            knobs.push(format!("train_crash={n}"));
+        }
+        write!(f, "{}", knobs.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::FaultPlan;
+
+    #[test]
+    fn parses_full_spec_and_roundtrips_display() {
+        let p = FaultPlan::parse(
+            "replica_panic=3, torn_ckpt=1,conn_drop=5,delay_dispatch_ms=20,train_crash=2",
+        )
+        .unwrap();
+        assert_eq!(p.replica_panic_batch, Some(3));
+        assert_eq!(p.torn_ckpt_write, Some(1));
+        assert_eq!(p.conn_drop_frames, Some(5));
+        assert_eq!(p.delay_dispatch_ms, Some(20));
+        assert_eq!(p.train_crash_epoch, Some(2));
+        let rt = FaultPlan::parse(&p.to_string()).unwrap();
+        assert_eq!(rt.replica_panic_batch, Some(3));
+        assert_eq!(rt.train_crash_epoch, Some(2));
+    }
+
+    #[test]
+    fn zero_disables_and_unknown_knob_errors() {
+        let p = FaultPlan::parse("replica_panic=0").unwrap();
+        assert!(p.replica_panic_batch.is_none());
+        assert!(p.is_empty());
+        assert!(FaultPlan::parse("replika_panic=1").is_err());
+        assert!(FaultPlan::parse("replica_panic").is_err());
+        assert!(FaultPlan::parse("replica_panic=lots").is_err());
+    }
+
+    #[test]
+    fn counters_fire_exactly_once_on_nth_event() {
+        let p = FaultPlan::parse("replica_panic=3,torn_ckpt=1").unwrap();
+        assert!(!p.fire_replica_panic());
+        assert!(!p.fire_replica_panic());
+        assert!(p.fire_replica_panic());
+        assert!(!p.fire_replica_panic());
+        assert!(p.fire_torn_write());
+        assert!(!p.fire_torn_write());
+        // disarmed knobs never fire and never advance
+        let off = FaultPlan::default();
+        for _ in 0..10 {
+            assert!(!off.fire_replica_panic());
+            assert!(!off.fire_torn_write());
+        }
+        assert!(!off.fire_train_crash(1));
+        assert!(!p.fire_train_crash(0));
+    }
+
+    #[test]
+    fn train_crash_matches_only_its_epoch() {
+        let p = FaultPlan::parse("train_crash=2").unwrap();
+        assert!(!p.fire_train_crash(1));
+        assert!(p.fire_train_crash(2));
+        assert!(!p.fire_train_crash(3));
+    }
+}

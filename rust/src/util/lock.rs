@@ -1,0 +1,39 @@
+//! Poison-recovering mutex acquisition.
+//!
+//! `Mutex::lock` returns `Err(PoisonError)` if a previous holder
+//! panicked. For the serving stack that default is exactly wrong: one
+//! replica panic would make every subsequent stats probe, dispatcher
+//! tick, and connection handler panic too, cascading a single bad batch
+//! into a dead service. All our guarded state (counters, job receivers)
+//! stays structurally valid across a panic — counts may be off by the
+//! in-flight increment, which we accept — so recovery is always safe.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock `m`, recovering the guard if the mutex is poisoned.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::lock_recover;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::Mutex;
+
+    #[test]
+    fn recovers_after_panic_poisons_mutex() {
+        let m = Mutex::new(7u32);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert!(r.is_err());
+        assert!(m.is_poisoned());
+        let mut g = lock_recover(&m);
+        assert_eq!(*g, 7);
+        *g += 1;
+        drop(g);
+        assert_eq!(*lock_recover(&m), 8);
+    }
+}

@@ -2,13 +2,18 @@
 //! serde/rand/clap/criterion — see DESIGN.md §2): PRNG, JSON, timing.
 
 pub mod align;
+pub mod crc32;
+pub mod fault;
 pub mod json;
+pub mod lock;
 pub mod plot;
 pub mod pool;
 pub mod prng;
 pub mod timer;
 
+pub use fault::FaultPlan;
 pub use json::Json;
+pub use lock::lock_recover;
 pub use prng::Prng;
 pub use timer::Stopwatch;
 

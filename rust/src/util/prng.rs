@@ -39,6 +39,18 @@ impl Prng {
         Prng::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 
+    /// Snapshot the full generator state (for checkpointing). Restoring
+    /// via [`Prng::from_state`] continues the exact draw sequence,
+    /// including the cached Box-Muller half.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.spare_normal)
+    }
+
+    /// Rebuild a generator from a [`Prng::state`] snapshot.
+    pub fn from_state(s: [u64; 4], spare_normal: Option<f64>) -> Prng {
+        Prng { s, spare_normal }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -211,6 +223,22 @@ mod tests {
         assert!(buf.iter().all(|&v| (0.0..1.0).contains(&v)));
         // lanes differ
         assert_ne!(buf[0], buf[1]);
+    }
+
+    #[test]
+    fn state_roundtrip_continues_sequence() {
+        let mut a = Prng::new(123);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        a.normal_f32(); // leaves a spare Box-Muller half cached
+        let (s, spare) = a.state();
+        assert!(spare.is_some());
+        let mut b = Prng::from_state(s, spare);
+        for _ in 0..5 {
+            assert_eq!(a.normal_f32().to_bits(), b.normal_f32().to_bits());
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

@@ -1,0 +1,452 @@
+//! Fault-tolerance suite: crash/resume bit-identity for training, the
+//! retrying client's backoff/deadline/reconnect contract, and the
+//! supervised serving path under an injected replica panic.
+//!
+//! Everything here is deterministic: faults come from a seeded
+//! [`FaultPlan`] (the Nth batch panics, training aborts after epoch E),
+//! backoff jitter from the repo's [`Prng`], and the resume tests compare
+//! full serialized run state (model + optimizer + Prng + meta) bit for
+//! bit — not just an accuracy number.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use gxnor::coordinator::method::Method;
+use gxnor::coordinator::trainer::{NativeTrainer, TrainConfig};
+use gxnor::engine::NativeEngine;
+use gxnor::nn::init::init_model;
+use gxnor::nn::params::{ModelState, ParamDesc, ParamKind};
+use gxnor::runtime::exec::ExecEngine;
+use gxnor::serve::replica::EngineFactory;
+use gxnor::serve::service::{
+    backoff_ms, f32s_to_bytes, frame, read_frame_blocking, write_frame, Client, ClientReply,
+    ReadyInfo, RetryCfg, RetryClient, ServeConfig, Service,
+};
+use gxnor::ternary::DiscreteSpace;
+use gxnor::util::fault::FaultPlan;
+use gxnor::util::json::Json;
+use gxnor::util::prng::Prng;
+
+// ---------------------------------------------------------------------------
+// Shared fixtures
+// ---------------------------------------------------------------------------
+
+fn d(name: &str, shape: Vec<usize>, kind: ParamKind, layer: usize) -> ParamDesc {
+    ParamDesc { name: name.into(), shape, kind, layer }
+}
+
+/// Narrow MLP (784-H-H-10) descriptors in graph order.
+fn mlp_descs(hidden: usize) -> (Vec<ParamDesc>, Vec<String>, Vec<usize>) {
+    use ParamKind::*;
+    (
+        vec![
+            d("W0", vec![784, hidden], Weight, 0),
+            d("gamma0", vec![hidden], Gamma, 0),
+            d("beta0", vec![hidden], Beta, 0),
+            d("W1", vec![hidden, hidden], Weight, 1),
+            d("gamma1", vec![hidden], Gamma, 1),
+            d("beta1", vec![hidden], Beta, 1),
+            d("W2", vec![hidden, 10], Weight, 2),
+        ],
+        vec!["rmean0".into(), "rvar0".into(), "rmean1".into(), "rvar1".into()],
+        vec![hidden, hidden, hidden, hidden],
+    )
+}
+
+/// 4-epoch native GXNOR run over the 160/64 synth split (5 steps/epoch).
+fn base_cfg(threads: usize, seed: u64) -> TrainConfig {
+    TrainConfig {
+        method: Method::Gxnor,
+        threads,
+        seed,
+        epochs: 4,
+        train_len: 160,
+        test_len: 64,
+        verbose: false,
+        ..TrainConfig::default()
+    }
+}
+
+fn ckpt_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("gxnor_resilience_{}_{tag}.ckpt", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+// ---------------------------------------------------------------------------
+// Crash / resume: bit-identical continuation across thread counts
+// ---------------------------------------------------------------------------
+
+/// The acceptance gate: train 4 epochs uninterrupted vs. crash after
+/// epoch 2 (injected) + resume from the periodic checkpoint. Final model
+/// fingerprints AND full serialized run state (optimizer moments +
+/// timestep, Prng, BN/EMA, meta) must match bit for bit — and the whole
+/// equality must hold at every engine thread count, since per-epoch batch
+/// streams and DST updates are thread-invariant by construction.
+#[test]
+fn resume_reproduces_uninterrupted_run_bit_for_bit() {
+    let (descs, names, lens) = mlp_descs(24);
+    let train = gxnor::data::open("synth_mnist", true, 160).unwrap();
+    let test = gxnor::data::open("synth_mnist", false, 64).unwrap();
+    let mut cross_thread: Option<(u64, Vec<u8>)> = None;
+
+    for threads in [1usize, 2, 7] {
+        // reference: the run nothing ever interrupted
+        let mut full = NativeTrainer::from_descs(
+            base_cfg(threads, 5),
+            descs.clone(),
+            names.clone(),
+            &lens,
+            32,
+            10,
+        )
+        .unwrap();
+        full.run(train.as_ref(), test.as_ref()).unwrap();
+        let want_fp = full.model.fingerprint();
+        let want_state = full.run_state_bytes(4);
+
+        // crashing run: checkpoint every epoch, injected abort after epoch 2
+        let path = ckpt_path(&format!("resume_t{threads}"));
+        let mut cfg = base_cfg(threads, 5);
+        cfg.checkpoint_every = 1;
+        cfg.checkpoint_path = path.clone();
+        cfg.faults = Some(Arc::new(FaultPlan::parse("train_crash=2").unwrap()));
+        let mut crashed =
+            NativeTrainer::from_descs(cfg, descs.clone(), names.clone(), &lens, 32, 10).unwrap();
+        let err = crashed.run(train.as_ref(), test.as_ref()).unwrap_err();
+        assert!(err.to_string().contains("train_crash"), "unexpected abort: {err}");
+
+        // resume in a fresh trainer (no faults, no memory of the crash)
+        let mut resumed = NativeTrainer::from_descs(
+            base_cfg(threads, 5),
+            descs.clone(),
+            names.clone(),
+            &lens,
+            32,
+            10,
+        )
+        .unwrap();
+        let next = resumed.resume_from(&path).unwrap();
+        assert_eq!(next, 2, "checkpoint should continue at epoch 2");
+        resumed.run(train.as_ref(), test.as_ref()).unwrap();
+
+        assert_eq!(resumed.model.fingerprint(), want_fp, "threads={threads}: fingerprint");
+        assert_eq!(resumed.run_state_bytes(4), want_state, "threads={threads}: run state");
+
+        // the run itself is thread-invariant, so all sweeps agree too
+        match &cross_thread {
+            None => cross_thread = Some((want_fp, want_state)),
+            Some((fp, st)) => {
+                assert_eq!(want_fp, *fp, "threads={threads}: cross-thread fingerprint");
+                assert_eq!(&want_state, st, "threads={threads}: cross-thread run state");
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// Resume refuses checkpoints from a different run identity — silently
+/// continuing someone else's training is worse than failing loudly.
+#[test]
+fn resume_rejects_mismatched_run_config() {
+    let (descs, names, lens) = mlp_descs(16);
+    let train = gxnor::data::open("synth_mnist", true, 160).unwrap();
+    let test = gxnor::data::open("synth_mnist", false, 64).unwrap();
+
+    let path = ckpt_path("mismatch");
+    let mut cfg = base_cfg(1, 5);
+    cfg.checkpoint_every = 1;
+    cfg.checkpoint_path = path.clone();
+    cfg.faults = Some(Arc::new(FaultPlan::parse("train_crash=1").unwrap()));
+    let mut tr =
+        NativeTrainer::from_descs(cfg, descs.clone(), names.clone(), &lens, 32, 10).unwrap();
+    tr.run(train.as_ref(), test.as_ref()).unwrap_err();
+
+    let try_resume = |cfg: TrainConfig| {
+        let mut tr =
+            NativeTrainer::from_descs(cfg, descs.clone(), names.clone(), &lens, 32, 10).unwrap();
+        tr.resume_from(&path).unwrap_err().to_string()
+    };
+    assert!(try_resume(base_cfg(1, 6)).contains("seed"), "wrong seed must be rejected");
+    let mut more_epochs = base_cfg(1, 5);
+    more_epochs.epochs = 9;
+    assert!(try_resume(more_epochs).contains("epochs"), "wrong epoch plan must be rejected");
+    let mut other_r = base_cfg(1, 5);
+    other_r.r = 0.75;
+    assert!(try_resume(other_r).contains("(m,r,a)"), "wrong hyperparams must be rejected");
+    // the matching config still resumes fine afterwards
+    let mut ok = NativeTrainer::from_descs(
+        base_cfg(1, 5),
+        descs.clone(),
+        names.clone(),
+        &lens,
+        32,
+        10,
+    )
+    .unwrap();
+    assert_eq!(ok.resume_from(&path).unwrap(), 1);
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Retry client: backoff math, budget, deadline, reconnect (fake servers)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn backoff_is_equal_jitter_capped_and_deterministic() {
+    // attempt k sleeps uniformly in [cap_k/2, cap_k), cap_k = min(base·2^k, cap)
+    let mut rng = Prng::new(7);
+    for attempt in 0..12u32 {
+        let capped = (10.0 * 2f64.powi(attempt as i32)).min(1_000.0);
+        let v = backoff_ms(attempt, 10.0, 1_000.0, &mut rng);
+        assert!(v >= capped / 2.0 && v < capped, "attempt {attempt}: {v} outside [{}, {capped})", capped / 2.0);
+    }
+    // absurd attempt counts stay finite at the cap (no 2^k overflow)
+    let mut rng = Prng::new(1);
+    let v = backoff_ms(u32::MAX, 10.0, 1_000.0, &mut rng);
+    assert!(v.is_finite() && (500.0..1_000.0).contains(&v));
+    // same seed → same sleep sequence (reproducible load runs); seeds diverge
+    let seq = |seed: u64| -> Vec<f64> {
+        let mut r = Prng::new(seed);
+        (0..8u32).map(|k| backoff_ms(k, 10.0, 1_000.0, &mut r)).collect()
+    };
+    assert_eq!(seq(42), seq(42));
+    assert_ne!(seq(42), seq(43));
+}
+
+/// A server that answers every INFER with RETRY exhausts exactly the
+/// configured budget: retries=2 → 3 attempts on the wire, final reply
+/// surfaces as `Retry` (the caller's signal that the budget is spent).
+#[test]
+fn retry_client_spends_exactly_its_budget() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut frames = 0u32;
+        while let Ok((ty, _)) = read_frame_blocking(&mut s) {
+            assert_eq!(ty, frame::INFER);
+            frames += 1;
+            write_frame(&mut s, frame::R_RETRY, &[]).unwrap();
+        }
+        frames // ends on client EOF
+    });
+
+    let rcfg = RetryCfg { retries: 2, backoff_base_ms: 1.0, backoff_cap_ms: 2.0, seed: 1 };
+    let mut c = RetryClient::new(addr, rcfg);
+    let (reply, attempts) = c.infer_retry(&[0.5f32; 4], 0).unwrap();
+    assert_eq!(reply, ClientReply::Retry, "exhausted budget surfaces the final RETRY");
+    assert_eq!(attempts, 2);
+    drop(c);
+    assert_eq!(server.join().unwrap(), 3, "first try + 2 retries on the wire");
+}
+
+/// The request deadline always beats the retry budget: a backoff sleep
+/// that would cross the deadline is never taken, the client reports
+/// DEADLINE instead of burning its (huge) budget.
+#[test]
+fn retry_client_deadline_wins_over_retry_budget() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        while read_frame_blocking(&mut s).is_ok() {
+            write_frame(&mut s, frame::R_RETRY, &[]).unwrap();
+        }
+    });
+
+    // backoff sleeps land in [100, 200) ms — always past the 60 ms deadline
+    let rcfg =
+        RetryCfg { retries: 100, backoff_base_ms: 200.0, backoff_cap_ms: 200.0, seed: 2 };
+    let mut c = RetryClient::new(addr, rcfg);
+    let t = Instant::now();
+    let (reply, attempts) = c.infer_retry(&[0.25f32; 4], 60).unwrap();
+    assert_eq!(reply, ClientReply::Deadline);
+    assert!(attempts <= 1, "deadline must cut the retry loop short, used {attempts}");
+    assert!(t.elapsed() < Duration::from_secs(5), "must not sleep through the budget");
+    drop(c);
+    server.join().unwrap();
+}
+
+/// Dropped connections are retryable: the client reconnects from scratch
+/// each time and the attempt that finally lands gets its logits.
+#[test]
+fn retry_client_reconnects_after_dropped_connections() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let want = [1.0f32, -2.5];
+    let server = thread::spawn(move || {
+        // two connections die mid-request; the third behaves
+        for conn in 0..3 {
+            let (mut s, _) = listener.accept().unwrap();
+            let (ty, _) = read_frame_blocking(&mut s).unwrap();
+            assert_eq!(ty, frame::INFER);
+            if conn == 2 {
+                write_frame(&mut s, frame::R_LOGITS, &f32s_to_bytes(&want)).unwrap();
+            } // else: drop without replying — the client sees EOF
+        }
+    });
+
+    let rcfg = RetryCfg { retries: 5, backoff_base_ms: 1.0, backoff_cap_ms: 2.0, seed: 3 };
+    let mut c = RetryClient::new(addr, rcfg);
+    let (reply, attempts) = c.infer_retry(&[0.0f32; 4], 0).unwrap();
+    assert_eq!(reply, ClientReply::Logits(want.to_vec()));
+    assert_eq!(attempts, 2, "two dead connections, one good one");
+    drop(c);
+    server.join().unwrap();
+}
+
+/// A legacy 1-byte READY reply still decodes (degradation fields zeroed),
+/// so old servers and new probes interoperate.
+#[test]
+fn ready_info_decodes_legacy_single_byte_reply() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let (ty, _) = read_frame_blocking(&mut s).unwrap();
+        assert_eq!(ty, frame::READY);
+        write_frame(&mut s, frame::R_READY, &[1]).unwrap();
+    });
+    let mut c = Client::connect(addr).unwrap();
+    let info = c.ready_info().unwrap();
+    assert_eq!(info, ReadyInfo { ready: true, degraded: false, live: 0, total: 0 });
+    drop(c);
+    server.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Supervised serving: injected replica panic, zero lost requests
+// ---------------------------------------------------------------------------
+
+fn tiny_mlp_model(seed: u64) -> ModelState {
+    let (descs, names, lens) = mlp_descs(24);
+    init_model(descs, names, &lens, DiscreteSpace::TERNARY, seed)
+}
+
+fn sample(idx: u64, len: usize) -> Vec<f32> {
+    let mut rng = Prng::new(0xA11CE ^ idx);
+    (0..len).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+}
+
+/// The issue's acceptance scenario end-to-end: 2 replicas, FaultPlan
+/// panics the worker serving the 2nd batch, and yet — through RETRY
+/// replies and the client's idempotent resubmit — every request completes
+/// with bit-exact logits, the accounting balances (nothing silently
+/// lost), and the supervisor respawns the dead replica until READY
+/// reports full strength again.
+#[test]
+fn supervised_service_survives_replica_panic_without_losing_requests() {
+    const N: usize = 8;
+    let model = Arc::new(tiny_mlp_model(7));
+
+    // bit-exact reference: one big engine, all samples at once
+    let mut reference =
+        NativeEngine::from_model("mlp", Method::Gxnor, &model, 0.5, N, 10, 1).unwrap();
+    let sl = reference.sample_len();
+    let all: Vec<f32> = (0..N as u64).flat_map(|i| sample(i, sl)).collect();
+    let want = reference.infer_batch(&all).unwrap().to_vec();
+
+    let mut engines: Vec<Box<dyn ExecEngine + Send>> = Vec::new();
+    let mut sample_len = 0;
+    for _ in 0..2 {
+        let eng = NativeEngine::from_model("mlp", Method::Gxnor, &model, 0.5, 4, 10, 1).unwrap();
+        sample_len = eng.sample_len();
+        engines.push(Box::new(eng));
+    }
+    let factory: EngineFactory = {
+        let model = Arc::clone(&model);
+        Arc::new(move || {
+            NativeEngine::from_model("mlp", Method::Gxnor, &model, 0.5, 4, 10, 1)
+                .map(|e| Box::new(e) as Box<dyn ExecEngine + Send>)
+                .map_err(|e| e.to_string())
+        })
+    };
+    let faults = Some(Arc::new(FaultPlan::parse("replica_panic=2").unwrap()));
+    let cfg = ServeConfig {
+        replicas: 2,
+        max_batch: 4,
+        max_wait_ms: 0.5,
+        queue_bound: 64,
+        deadline_ms: 0.0,
+    };
+    let svc = Service::start_supervised(
+        "127.0.0.1:0".parse().unwrap(),
+        cfg,
+        engines,
+        Some(factory),
+        faults,
+        sample_len,
+    )
+    .unwrap();
+    let addr = svc.addr;
+
+    let mut probe = Client::connect(addr).unwrap();
+    let info = probe.ready_info().unwrap();
+    assert_eq!((info.ready, info.degraded, info.live, info.total), (true, false, 2, 2));
+
+    // sequential requests: the 2nd dispatched batch panics its replica,
+    // the retrying client resubmits, everything completes bit-exactly
+    let rcfg = RetryCfg { retries: 3, backoff_base_ms: 1.0, backoff_cap_ms: 10.0, seed: 9 };
+    let mut client = RetryClient::new(addr, rcfg);
+    let mut retried = 0u64;
+    for idx in 0..N as u64 {
+        let x = sample(idx, sl);
+        let (reply, attempts) = client.infer_retry(&x, 0).unwrap();
+        retried += u64::from(attempts);
+        match reply {
+            ClientReply::Logits(l) => {
+                let i = idx as usize;
+                assert_eq!(l.as_slice(), &want[i * 10..(i + 1) * 10], "sample {idx} diverged");
+            }
+            other => panic!("request {idx}: unexpected reply {other:?}"),
+        }
+    }
+    assert_eq!(retried, 1, "exactly the panicked batch needed a resubmit");
+
+    // accounting balances: N completions, 1 errored attempt, 1 panic, and
+    // no protocol/internal errors anywhere
+    let stats = Json::parse(&probe.stats().unwrap()).unwrap();
+    let n = |k: &str| stats.get(k).and_then(|v| v.as_f64()).unwrap_or(-1.0);
+    assert_eq!(n("completed"), N as f64);
+    assert_eq!(n("errored"), 1.0);
+    assert_eq!(n("replica_panics"), 1.0);
+    assert_eq!(n("protocol_errors"), 0.0);
+    assert_eq!(n("internal_errors"), 0.0);
+
+    // the supervisor rebuilds the dead replica under backoff; READY
+    // returns to full strength (live == total, not degraded)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats = Json::parse(&probe.stats().unwrap()).unwrap();
+        let restarts = stats.get("replica_restarts").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let info = probe.ready_info().unwrap();
+        if restarts >= 1.0 && info.live == 2 && !info.degraded {
+            assert!(info.ready);
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "supervisor never recovered: restarts={restarts} info={info:?}"
+        );
+        thread::sleep(Duration::from_millis(20));
+    }
+
+    // the respawned replica serves the same bits (same model, new engine)
+    for idx in 0..N as u64 {
+        let (reply, _) = client.infer_retry(&sample(idx, sl), 0).unwrap();
+        let i = idx as usize;
+        assert_eq!(
+            reply,
+            ClientReply::Logits(want[i * 10..(i + 1) * 10].to_vec()),
+            "post-recovery sample {idx} diverged"
+        );
+    }
+
+    drop(client);
+    drop(probe);
+    svc.shutdown_and_join();
+}
