@@ -362,7 +362,7 @@ fn bench_perf(mut rt: Option<&mut Runtime>, manifest: Option<&Manifest>) -> anyh
     let mut w: Vec<f32> = (0..n).map(|_| space.state(rng.below(3))).collect();
     let dw: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 0.1).collect();
     let (mean_ms, min_ms, _) = time_iters(20, || {
-        dst_update(&mut w, &dw, space, 3.0, &mut rng);
+        dst_update(&mut w, &dw, space, 3.0, &mut rng, 1);
     });
     println!(
         "dst_update       : {:>8.2} ms / 1M weights  ({:.0} Mupd/s, min {:.2} ms)",

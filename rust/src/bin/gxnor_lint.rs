@@ -1,0 +1,175 @@
+//! `gxnor-lint` — CLI driver for the repo-invariant static analysis
+//! pass (see `gxnor::lint` for the engine and `rules::RULES` for the
+//! catalog).
+//!
+//! ```text
+//! gxnor-lint [--root <dir>] [--deny-all] [paths…]   lint the tree (or just paths)
+//! gxnor-lint --explain <RULE>                        print one rule's rationale
+//! gxnor-lint --list-rules                            one line per rule
+//! ```
+//!
+//! Exit status: 0 when clean (or advisory mode), 1 on diagnostics under
+//! `--deny-all` (the CI entry point), 2 on usage/IO errors.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use gxnor::lint::{self, rules};
+
+fn usage() -> &'static str {
+    "usage: gxnor-lint [--root <dir>] [--deny-all] [paths…]\n\
+     \x20      gxnor-lint --explain <RULE> | --list-rules\n\
+     \n\
+     Lints rust/src, rust/tests, rust/benches and examples/ under the\n\
+     repo root against the repo-invariant rules (determinism, kernel\n\
+     exactness, the Remark-2 mirror ban, serve robustness). With\n\
+     --deny-all any diagnostic is fatal (exit 1) — the CI entry point.\n\
+     Explicit [paths…] lint just those files, addressed relative to the\n\
+     root so scoped rules resolve."
+}
+
+fn explain(id: &str) -> ExitCode {
+    match rules::rule(id) {
+        Some(r) => {
+            println!("{}: {}", r.id, r.title);
+            println!("scope: {}", r.scope);
+            println!();
+            // rationale strings are continuation-joined; reflow to ~76 cols
+            let mut col = 0usize;
+            for w in r.rationale.split_whitespace() {
+                if col + w.len() + 1 > 76 && col > 0 {
+                    println!();
+                    col = 0;
+                }
+                if col > 0 {
+                    print!(" ");
+                    col += 1;
+                }
+                print!("{w}");
+                col += w.len();
+            }
+            println!();
+            ExitCode::SUCCESS
+        }
+        None => {
+            eprintln!("gxnor-lint: unknown rule `{id}` (try --list-rules)");
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// The repo root is the directory holding `rust/src`; accept being
+/// launched from the root itself or from inside `rust/` (where cargo
+/// puts the working directory for `cargo run`).
+fn detect_root() -> Option<PathBuf> {
+    let cwd = std::env::current_dir().ok()?;
+    for cand in [cwd.clone(), cwd.join(".."), cwd.join("../..")] {
+        if cand.join("rust/src").is_dir() {
+            return Some(cand);
+        }
+    }
+    None
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut deny_all = false;
+    let mut root: Option<PathBuf> = None;
+    let mut paths: Vec<String> = Vec::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--help" | "-h" => {
+                println!("{}", usage());
+                return ExitCode::SUCCESS;
+            }
+            "--list-rules" => {
+                for r in rules::RULES {
+                    println!("{:<3} {:<55} [{}]", r.id, r.title, r.scope);
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--explain" => {
+                let Some(id) = it.next() else {
+                    eprintln!("gxnor-lint: --explain needs a rule id");
+                    return ExitCode::from(2);
+                };
+                return explain(id);
+            }
+            "--deny-all" => deny_all = true,
+            "--root" => {
+                let Some(r) = it.next() else {
+                    eprintln!("gxnor-lint: --root needs a directory");
+                    return ExitCode::from(2);
+                };
+                root = Some(PathBuf::from(r));
+            }
+            p if !p.starts_with('-') => paths.push(p.to_string()),
+            other => {
+                eprintln!("gxnor-lint: unknown flag `{other}`\n{}", usage());
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let Some(root) = root.or_else(detect_root) else {
+        eprintln!("gxnor-lint: cannot find the repo root (no rust/src here); pass --root");
+        return ExitCode::from(2);
+    };
+
+    let diags = if paths.is_empty() {
+        match lint::lint_tree(&root) {
+            Ok(d) => d,
+            Err(e) => {
+                eprintln!("gxnor-lint: walking {}: {e}", root.display());
+                return ExitCode::from(2);
+            }
+        }
+    } else {
+        let mut d = Vec::new();
+        for rel in &paths {
+            let full = root.join(rel);
+            match std::fs::read_to_string(&full) {
+                Ok(src) => d.extend(lint::lint_source(rel, &src)),
+                Err(e) => {
+                    eprintln!("gxnor-lint: {}: {e}", full.display());
+                    return ExitCode::from(2);
+                }
+            }
+        }
+        d
+    };
+
+    for d in &diags {
+        println!("{d}");
+    }
+    summarize(&diags, &root);
+    if diags.is_empty() || !deny_all {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn summarize(diags: &[lint::Diag], root: &Path) {
+    if diags.is_empty() {
+        println!("gxnor-lint: clean ({})", root.display());
+        return;
+    }
+    let mut by_rule: Vec<(&str, usize)> = Vec::new();
+    for d in diags {
+        match by_rule.iter_mut().find(|(r, _)| *r == d.rule) {
+            Some((_, n)) => *n += 1,
+            None => by_rule.push((d.rule, 1)),
+        }
+    }
+    by_rule.sort();
+    let parts: Vec<String> =
+        by_rule.iter().map(|(r, n)| format!("{r}×{n}")).collect();
+    println!(
+        "gxnor-lint: {} diagnostic{} ({}) — see --explain <RULE>",
+        diags.len(),
+        if diags.len() == 1 { "" } else { "s" },
+        parts.join(", ")
+    );
+}

@@ -492,8 +492,14 @@ impl<'rt> Trainer<'rt> {
                         // the paper's DST: no master copy exists
                         let dw = &mut self.dw_buf[..grad.len()];
                         self.opt.increment(i, grad, lr, dw);
-                        let stats =
-                            dst_update(w, dw, packed.space(), self.cfg.m, &mut self.rng);
+                        let stats = dst_update(
+                            w,
+                            dw,
+                            packed.space(),
+                            self.cfg.m,
+                            &mut self.rng,
+                            self.cfg.threads,
+                        );
                         if force_repack || stats.transitions > 0 {
                             packed.repack_from(w);
                             self.dirty[i] = true;
@@ -581,7 +587,7 @@ impl<'rt> Trainer<'rt> {
         let out = drive_epochs(self, &cfg, train, test)?;
         let (packed, fp32) = self.model.weight_memory_bytes();
         // the PJRT boundary holds one f32 expansion per discrete tensor
-        let mirror: usize = self
+        let pjrt_f32_bytes: usize = self
             .model
             .values
             .iter()
@@ -597,7 +603,7 @@ impl<'rt> Trainer<'rt> {
             packed_bytes: packed,
             fp32_bytes: fp32,
             hidden_fp32_bytes: self.hidden.iter().flatten().map(|h| h.fp32_bytes()).sum(),
-            weight_f32_mirror_bytes: mirror,
+            weight_f32_mirror_bytes: pjrt_f32_bytes,
             step_time_ms: out.wall_ms / out.steps.max(1) as f64,
             exec_time_ms: self.sw_exec.mean_ms(),
             dst_time_ms: self.sw_update.mean_ms(),

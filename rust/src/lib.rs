@@ -28,6 +28,12 @@
 // Nightly-only std::simd dispatch for the bitplane lane kernels; the
 // `portable-simd` cargo feature is off by default (see engine::bitplane).
 #![cfg_attr(feature = "portable-simd", feature(portable_simd))]
+// Dropped Results hide I/O and poisoning failures; `pub` items invisible
+// outside the crate belong in `pub(crate)` so the API surface stays the
+// one README documents. Scoped repo invariants (determinism, kernel
+// exactness, the Remark-2 mirror ban) are enforced by `gxnor-lint` — see
+// the `lint` module and README §"Invariants & static analysis".
+#![deny(unused_must_use, unreachable_pub)]
 
 pub mod cli;
 pub mod config;
@@ -35,6 +41,7 @@ pub mod coordinator;
 pub mod data;
 pub mod engine;
 pub mod hwsim;
+pub mod lint;
 pub mod metrics;
 pub mod nn;
 pub mod ptest;

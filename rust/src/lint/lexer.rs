@@ -1,0 +1,451 @@
+//! A lightweight Rust tokenizer — just enough lexical structure for the
+//! repo's invariant checks, nothing more.
+//!
+//! The full grammar is irrelevant here: every `gxnor-lint` rule matches
+//! short token sequences (`thread :: spawn`, `. lock ( ) . unwrap`, a
+//! float literal inside a known function body). What *does* matter is
+//! never matching inside comments or string literals, and never mistaking
+//! a lifetime for a char literal or a range `0..n` for a float — those
+//! are exactly the mistakes a regex-based checker makes, and why this is
+//! a tokenizer and not a grep. Handled precisely:
+//!
+//! * line comments (`//`, `///`, `//!`) and *nested* block comments,
+//!   captured per line so suppression comments and `// SAFETY:` audits
+//!   can be located by line number;
+//! * string / raw string (`r"…"`, `r#"…"#`) / byte string / char
+//!   literals, with escapes and embedded newlines;
+//! * `'a` lifetimes vs `'a'` char literals;
+//! * numeric literals with radix prefixes, `_` separators, exponents and
+//!   suffixes — classified int vs float so `0..n`, `x.0` and `1.max(2)`
+//!   are ints/puncts while `1.0`, `1e3` and `1f32` are floats;
+//! * `::` fused into a single punct token (every path-pattern rule
+//!   matches it).
+//!
+//! Everything else (a byte of punctuation) is a one-character `Punct`.
+
+/// Token class. `Ident` includes keywords — rules match on text.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Int,
+    Float,
+    Punct,
+    Str,
+    Char,
+    Lifetime,
+}
+
+/// One token: class, verbatim text (empty for string/char bodies — no
+/// rule needs their content), and 1-based line of its first character.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// One comment line (block comments are split into one entry per line),
+/// with the leading `//`/`/*` markers stripped.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// Tokenized file: code tokens and comment lines, both line-addressed.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+pub fn lex(src: &str) -> Lexed {
+    Lexer { b: src.as_bytes(), src, i: 0, line: 1, out: Lexed::default() }.run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    src: &'a str,
+    i: usize,
+    line: u32,
+    out: Lexed,
+}
+
+impl<'a> Lexer<'a> {
+    fn run(mut self) -> Lexed {
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            match c {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                _ if c.is_ascii_whitespace() => self.i += 1,
+                b'/' if self.peek(1) == Some(b'/') => self.line_comment(),
+                b'/' if self.peek(1) == Some(b'*') => self.block_comment(),
+                b'"' => self.string(TokKind::Str),
+                b'\'' => self.lifetime_or_char(),
+                b'r' | b'b' if self.raw_or_byte() => {}
+                _ if c.is_ascii_digit() => self.number(),
+                _ if c == b'_' || c.is_ascii_alphabetic() => self.ident(),
+                _ => self.punct(),
+            }
+        }
+        self.out
+    }
+
+    fn peek(&self, k: usize) -> Option<u8> {
+        self.b.get(self.i + k).copied()
+    }
+
+    fn line_comment(&mut self) {
+        let start = self.i + 2;
+        while self.i < self.b.len() && self.b[self.i] != b'\n' {
+            self.i += 1;
+        }
+        // strip doc-comment extras: the third `/` of `///`, the `!` of `//!`
+        let text = self.src[start..self.i].trim_start_matches(['/', '!']).to_string();
+        self.out.comments.push(Comment { line: self.line, text });
+    }
+
+    fn block_comment(&mut self) {
+        let start_line = self.line;
+        let start = self.i + 2;
+        self.i += 2;
+        let mut depth = 1usize;
+        while self.i < self.b.len() && depth > 0 {
+            match (self.b[self.i], self.peek(1)) {
+                (b'/', Some(b'*')) => {
+                    depth += 1;
+                    self.i += 2;
+                }
+                (b'*', Some(b'/')) => {
+                    depth -= 1;
+                    self.i += 2;
+                }
+                (b'\n', _) => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                _ => self.i += 1,
+            }
+        }
+        let end = if depth == 0 { self.i - 2 } else { self.i };
+        for (k, l) in self.src[start..end].lines().enumerate() {
+            self.out
+                .comments
+                .push(Comment { line: start_line + k as u32, text: l.trim().to_string() });
+        }
+    }
+
+    /// Ordinary (escaped) string or byte-string body; `self.i` is at the
+    /// opening quote.
+    fn string(&mut self, kind: TokKind) {
+        let line = self.line;
+        self.i += 1;
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'\\' => {
+                    self.i += 1;
+                    if self.i < self.b.len() {
+                        if self.b[self.i] == b'\n' {
+                            self.line += 1;
+                        }
+                        self.i += 1;
+                    }
+                }
+                b'"' => {
+                    self.i += 1;
+                    break;
+                }
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                _ => self.i += 1,
+            }
+        }
+        self.out.toks.push(Tok { kind, text: String::new(), line });
+    }
+
+    /// Raw/byte literal starters: `r"`, `r#`, `b"`, `b'`, `br"`, `br#`.
+    /// Returns false (consuming nothing) when `r`/`b` begins an ident.
+    fn raw_or_byte(&mut self) -> bool {
+        let c0 = self.b[self.i];
+        let rest = &self.b[self.i + 1..];
+        match (c0, rest.first().copied()) {
+            (b'r', Some(b'"' | b'#')) => {
+                self.i += 1;
+                self.raw_string()
+            }
+            (b'b', Some(b'r')) if matches!(rest.get(1), Some(b'"' | b'#')) => {
+                self.i += 2;
+                self.raw_string()
+            }
+            (b'b', Some(b'"')) => {
+                self.i += 1;
+                self.string(TokKind::Str);
+                true
+            }
+            (b'b', Some(b'\'')) => {
+                self.i += 1;
+                self.char_literal();
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// `self.i` is at the `#`s or quote of a raw string. Returns false if
+    /// it turns out not to be one (e.g. `r#ident` raw identifiers).
+    fn raw_string(&mut self) -> bool {
+        let line = self.line;
+        let save = self.i;
+        let mut hashes = 0usize;
+        while self.peek(hashes) == Some(b'#') {
+            hashes += 1;
+        }
+        if self.peek(hashes) != Some(b'"') {
+            self.i = save; // raw identifier — re-lex as ident from the `#`
+            self.ident();
+            return true;
+        }
+        self.i += hashes + 1;
+        'scan: while self.i < self.b.len() {
+            if self.b[self.i] == b'\n' {
+                self.line += 1;
+            } else if self.b[self.i] == b'"' {
+                for k in 0..hashes {
+                    if self.peek(1 + k) != Some(b'#') {
+                        self.i += 1;
+                        continue 'scan;
+                    }
+                }
+                self.i += 1 + hashes;
+                break;
+            }
+            self.i += 1;
+        }
+        self.out.toks.push(Tok { kind: TokKind::Str, text: String::new(), line });
+        true
+    }
+
+    fn lifetime_or_char(&mut self) {
+        let line = self.line;
+        let c1 = self.peek(1);
+        let is_name = c1.is_some_and(|c| c == b'_' || c.is_ascii_alphanumeric());
+        // `'a` + no closing quote -> lifetime; `'a'` -> char literal
+        if is_name && self.peek(1) != Some(b'\\') && self.peek(2) != Some(b'\'') {
+            let start = self.i + 1;
+            self.i += 1;
+            while self.i < self.b.len()
+                && (self.b[self.i] == b'_' || self.b[self.i].is_ascii_alphanumeric())
+            {
+                self.i += 1;
+            }
+            self.out.toks.push(Tok {
+                kind: TokKind::Lifetime,
+                text: self.src[start..self.i].to_string(),
+                line,
+            });
+        } else {
+            self.char_literal();
+        }
+    }
+
+    /// `self.i` at the opening `'` of a char literal.
+    fn char_literal(&mut self) {
+        let line = self.line;
+        self.i += 1;
+        if self.peek(0) == Some(b'\\') {
+            self.i += 2; // escape introducer + escaped char (or first of \x..)
+        }
+        while self.i < self.b.len() && self.b[self.i] != b'\'' {
+            if self.b[self.i] == b'\n' {
+                self.line += 1;
+            }
+            self.i += 1;
+        }
+        self.i += 1; // closing quote
+        self.out.toks.push(Tok { kind: TokKind::Char, text: String::new(), line });
+    }
+
+    fn number(&mut self) {
+        let line = self.line;
+        let start = self.i;
+        let mut is_float = false;
+        if self.b[self.i] == b'0' && matches!(self.peek(1), Some(b'x' | b'o' | b'b')) {
+            // radix literal: digits+suffix, never a float (0x1e3 is hex)
+            self.i += 2;
+            while self.i < self.b.len()
+                && (self.b[self.i] == b'_' || self.b[self.i].is_ascii_alphanumeric())
+            {
+                self.i += 1;
+            }
+        } else {
+            self.digits();
+            if self.peek(0) == Some(b'.') && self.peek(1).is_some_and(|c| c.is_ascii_digit()) {
+                is_float = true; // 1.5
+                self.i += 1;
+                self.digits();
+            } else if self.peek(0) == Some(b'.')
+                && !self
+                    .peek(1)
+                    .is_some_and(|c| c == b'.' || c == b'_' || c.is_ascii_alphabetic())
+            {
+                is_float = true; // trailing-dot `1.` (not `0..n`, not `1.max(…)`)
+                self.i += 1;
+            }
+            if matches!(self.peek(0), Some(b'e' | b'E')) {
+                let mut j = 1usize;
+                if matches!(self.peek(j), Some(b'+' | b'-')) {
+                    j += 1;
+                }
+                if self.peek(j).is_some_and(|c| c.is_ascii_digit()) {
+                    is_float = true; // 1e3, 2.5e-4
+                    self.i += j;
+                    self.digits();
+                }
+            }
+            let sstart = self.i;
+            while self.i < self.b.len()
+                && (self.b[self.i] == b'_' || self.b[self.i].is_ascii_alphanumeric())
+            {
+                self.i += 1;
+            }
+            let suffix = &self.src[sstart..self.i];
+            if suffix.starts_with("f32") || suffix.starts_with("f64") {
+                is_float = true; // 1f32
+            }
+        }
+        self.out.toks.push(Tok {
+            kind: if is_float { TokKind::Float } else { TokKind::Int },
+            text: self.src[start..self.i].to_string(),
+            line,
+        });
+    }
+
+    fn digits(&mut self) {
+        while self.i < self.b.len() && (self.b[self.i] == b'_' || self.b[self.i].is_ascii_digit())
+        {
+            self.i += 1;
+        }
+    }
+
+    fn ident(&mut self) {
+        let line = self.line;
+        let start = self.i;
+        while self.i < self.b.len()
+            && (self.b[self.i] == b'_'
+                || self.b[self.i] == b'#' // raw-ident `r#match`
+                || self.b[self.i].is_ascii_alphanumeric())
+        {
+            self.i += 1;
+        }
+        self.out.toks.push(Tok {
+            kind: TokKind::Ident,
+            text: self.src[start..self.i].to_string(),
+            line,
+        });
+    }
+
+    fn punct(&mut self) {
+        let line = self.line;
+        let c = self.b[self.i];
+        if !c.is_ascii() {
+            self.i += 1; // stray non-ASCII outside strings/comments: skip
+            return;
+        }
+        if c == b':' && self.peek(1) == Some(b':') {
+            self.i += 2;
+            self.out.toks.push(Tok { kind: TokKind::Punct, text: "::".into(), line });
+        } else {
+            self.i += 1;
+            self.out
+                .toks
+                .push(Tok { kind: TokKind::Punct, text: (c as char).to_string(), line });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).toks.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn comments_are_captured_not_tokenized() {
+        let l = lex("let x = 1; // thread::spawn in a comment\n/* HashMap */ let y = 2;");
+        assert!(l.toks.iter().all(|t| t.text != "thread" && t.text != "HashMap"));
+        assert_eq!(l.comments.len(), 2);
+        assert!(l.comments[0].text.contains("thread::spawn"));
+        assert_eq!(l.comments[1].line, 2);
+    }
+
+    #[test]
+    fn nested_block_comments_and_doc_lines() {
+        let l = lex("/* a /* nested */ still comment */ fn f() {}\n/// doc Instant\nlet i = 0;");
+        assert!(l.toks.iter().all(|t| t.text != "Instant" && t.text != "still"));
+        assert!(l.comments.iter().any(|c| c.text.contains("doc Instant")));
+        // the fn after the comment is a token on line 1
+        assert!(l.toks.iter().any(|t| t.text == "fn" && t.line == 1));
+    }
+
+    #[test]
+    fn strings_hide_their_content() {
+        let l = lex("let s = \"unsafe { thread::spawn }\"; let e = \"esc \\\" quote\";");
+        assert!(l.toks.iter().all(|t| t.text != "unsafe" && t.text != "thread"));
+        assert_eq!(l.toks.iter().filter(|t| t.kind == TokKind::Str).count(), 2);
+        // raw strings: the closing quote must match the hash count
+        let raw = "let r = r##\"HashMap \"# still inside\"##; let after = 1;";
+        let l = lex(raw);
+        assert!(l.toks.iter().all(|t| t.text != "HashMap"));
+        assert!(l.toks.iter().any(|t| t.text == "after"));
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let ks = kinds("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert!(ks.iter().any(|(k, t)| *k == TokKind::Lifetime && t == "a"));
+        assert_eq!(ks.iter().filter(|(k, _)| *k == TokKind::Char).count(), 1);
+        let ks = kinds(r"let c = '\n'; let tick = '\''; ");
+        assert_eq!(ks.iter().filter(|(k, _)| *k == TokKind::Char).count(), 2);
+    }
+
+    #[test]
+    fn float_vs_int_classification() {
+        for (src, kind) in [
+            ("1.5", TokKind::Float),
+            ("1e3", TokKind::Float),
+            ("2.5e-4", TokKind::Float),
+            ("1f32", TokKind::Float),
+            ("3f64", TokKind::Float),
+            ("1.", TokKind::Float),
+            ("7", TokKind::Int),
+            ("7u64", TokKind::Int),
+            ("0x1e3", TokKind::Int),
+            ("0b1010", TokKind::Int),
+            ("1_000", TokKind::Int),
+        ] {
+            let first = &lex(src).toks[0];
+            assert_eq!(first.kind, kind, "{src}");
+        }
+        // ranges and tuple indexes stay integral
+        let ks = kinds("for i in 0..n { x.0 + 1.max(2) }");
+        assert!(ks.iter().all(|(k, _)| *k != TokKind::Float));
+    }
+
+    #[test]
+    fn double_colon_is_one_token_and_lines_track() {
+        let l = lex("std::thread::spawn(|| {});\nlet x\n= 3;");
+        let path: Vec<&str> = l.toks.iter().take(5).map(|t| t.text.as_str()).collect();
+        assert_eq!(path, vec!["std", "::", "thread", "::", "spawn"]);
+        let x = l.toks.iter().find(|t| t.text == "x").expect("x token");
+        assert_eq!(x.line, 2);
+        let three = l.toks.iter().find(|t| t.text == "3").expect("3 token");
+        assert_eq!(three.line, 3);
+    }
+}

@@ -1,0 +1,467 @@
+//! `gxnor-lint` — the repo-invariant static analysis pass.
+//!
+//! The compiler proves memory safety; the test suite spot-checks
+//! behavior. What neither can check are the *conventions* this repo's
+//! correctness arguments stand on: every parallel path sizes itself
+//! through `util::pool`, kernels stay exact-integer, no f32 weight
+//! mirror exists in the step loop (Remark 2 of the paper), serve request
+//! paths never panic. Those contracts only hold while every new line
+//! keeps holding them — so this module checks them mechanically, on
+//! every PR, with file:line diagnostics.
+//!
+//! Pipeline: [`lexer`] tokenizes (comments/strings can never match a
+//! rule), a structure pass finds `#[cfg(test)]` regions, function body
+//! spans, and suppression comments, then [`rules`] runs ~10 scoped
+//! token-pattern checks. See `rules::RULES` for the catalog and
+//! `gxnor-lint --explain <ID>` for rationale.
+//!
+//! ## Suppressions
+//!
+//! A diagnostic can be waived with a comment of the form
+//! `// <ns>:allow(RULE): justification` (where `<ns>` is `lint`) placed
+//! on, or directly above, the offending line. The justification is
+//! mandatory: an allow without one does not suppress — it raises S1
+//! instead. Suppressions are reviewed exceptions, not an off switch.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::io;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+
+use lexer::{lex, Lexed, TokKind};
+
+/// Minimum justification length for a suppression to count as justified
+/// (filters out `lint:allow(D1): x`-style rubber stamps).
+const MIN_JUSTIFICATION: usize = 8;
+
+/// A finalized diagnostic.
+#[derive(Clone, Debug)]
+pub struct Diag {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Diag {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Which rules apply to a file, derived from its repo-relative path.
+/// Fixture tests exercise rules by linting synthetic sources *as if*
+/// they lived at an in-scope path.
+#[derive(Clone, Debug, Default)]
+pub struct Scope {
+    /// Under `rust/src/` (D1/R1 and the scoped rules below).
+    pub in_src: bool,
+    /// Virtual-clock / kernel purity files (engine/, ternary/, serve/queue.rs).
+    pub d2: bool,
+    /// Determinism-critical accumulation dirs.
+    pub d3: bool,
+    /// Everything in src except the env-read homes.
+    pub d4: bool,
+    /// The bitplane kernel file.
+    pub e1: bool,
+    /// Step-loop files under the Remark-2 mirror ban.
+    pub m1: bool,
+    /// serve/ request paths.
+    pub r2: bool,
+    /// One of the two audited unsafe homes.
+    pub unsafe_home: bool,
+    /// Under `rust/tests/` — the whole file is test code.
+    pub all_test: bool,
+}
+
+impl Scope {
+    pub fn for_path(rel: &str) -> Scope {
+        let rel = rel.replace('\\', "/");
+        let src = rel.strip_prefix("rust/src/");
+        let in_src = src.is_some();
+        let p = src.unwrap_or("");
+        const D3_DIRS: &[&str] = &[
+            "engine/", "ternary/", "coordinator/", "serve/", "data/", "sweep/", "hwsim/",
+        ];
+        Scope {
+            in_src,
+            d2: in_src
+                && (p.starts_with("engine/")
+                    || p.starts_with("ternary/")
+                    || p == "serve/queue.rs"),
+            d3: in_src
+                && (D3_DIRS.iter().any(|d| p.starts_with(d))
+                    || p == "metrics.rs"
+                    || p.starts_with("metrics/")),
+            d4: in_src
+                && !matches!(p, "util/pool.rs" | "util/fault.rs" | "config.rs" | "cli.rs"),
+            e1: p == "engine/bitplane.rs",
+            m1: matches!(
+                p,
+                "engine/mod.rs"
+                    | "engine/backward.rs"
+                    | "ternary/dst.rs"
+                    | "ternary/packed.rs"
+                    | "coordinator/trainer.rs"
+            ),
+            r2: in_src && p.starts_with("serve/"),
+            unsafe_home: matches!(p, "util/align.rs" | "runtime/client.rs"),
+            all_test: rel.starts_with("rust/tests/"),
+        }
+    }
+}
+
+/// A function body located in the token stream (for E1's per-kernel scan).
+#[derive(Clone, Debug)]
+pub struct FnSpan {
+    pub name: String,
+    /// Token-index range of the body, braces included.
+    pub body: Range<usize>,
+}
+
+/// One parsed suppression comment.
+#[derive(Clone, Debug)]
+pub struct Suppression {
+    pub line: u32,
+    pub rules: Vec<String>,
+    pub justified: bool,
+    pub malformed: bool,
+}
+
+/// Everything the rule pass needs to know about one file.
+pub struct FileAnalysis {
+    pub rel: String,
+    pub scope: Scope,
+    pub lex: Lexed,
+    /// Inclusive line ranges of `#[cfg(test)]`-gated bodies.
+    pub test_ranges: Vec<(u32, u32)>,
+    pub fns: Vec<FnSpan>,
+    pub suppressions: Vec<Suppression>,
+}
+
+impl FileAnalysis {
+    /// Is `line` test code (a `#[cfg(test)]` body, or a `rust/tests/` file)?
+    pub fn in_test(&self, line: u32) -> bool {
+        self.scope.all_test || self.test_ranges.iter().any(|&(a, b)| (a..=b).contains(&line))
+    }
+
+    /// Is there a `SAFETY:` comment on `line` or the three lines above it?
+    pub fn has_safety_comment(&self, line: u32) -> bool {
+        self.lex
+            .comments
+            .iter()
+            .any(|c| c.line <= line && c.line + 3 >= line && c.text.contains("SAFETY:"))
+    }
+}
+
+pub fn analyze(rel: &str, src: &str) -> FileAnalysis {
+    let lex = lex(src);
+    let test_ranges = find_test_ranges(&lex);
+    let fns = find_fns(&lex);
+    let suppressions = parse_suppressions(&lex);
+    FileAnalysis {
+        rel: rel.replace('\\', "/"),
+        scope: Scope::for_path(rel),
+        lex,
+        test_ranges,
+        fns,
+        suppressions,
+    }
+}
+
+/// Token index of the `}` matching the `{` at `open`, if balanced.
+fn match_brace(lex: &Lexed, open: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (k, t) in lex.toks.iter().enumerate().skip(open) {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(k);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+/// `#[cfg(test)]` attribute occurrences → line ranges of the `{ … }`
+/// body that follows (a test module, almost always). An attribute on a
+/// braceless item (`#[cfg(test)] use …;`) gates nothing scannable and is
+/// skipped.
+fn find_test_ranges(lex: &Lexed) -> Vec<(u32, u32)> {
+    const PAT: &[&str] = &["#", "[", "cfg", "(", "test", ")", "]"];
+    let mut out = Vec::new();
+    let toks = &lex.toks;
+    let mut i = 0usize;
+    while i < toks.len() {
+        let hit = PAT
+            .iter()
+            .enumerate()
+            .all(|(k, want)| toks.get(i + k).is_some_and(|t| t.text == *want));
+        if hit {
+            let mut j = i + PAT.len();
+            while j < toks.len() && toks[j].text != "{" && toks[j].text != ";" {
+                j += 1;
+            }
+            if j < toks.len() && toks[j].text == "{" {
+                if let Some(close) = match_brace(lex, j) {
+                    out.push((toks[i].line, toks[close].line));
+                    i = j + 1;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Locate every `fn name … { body }` (nested functions included).
+fn find_fns(lex: &Lexed) -> Vec<FnSpan> {
+    let toks = &lex.toks;
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if !(toks[i].kind == TokKind::Ident && toks[i].text == "fn") {
+            continue;
+        }
+        let Some(name_tok) = toks.get(i + 1) else { continue };
+        if name_tok.kind != TokKind::Ident {
+            continue; // `fn(...)` pointer type
+        }
+        // body `{` is the first one outside parens/brackets; a `;` there
+        // instead means a bodyless declaration (trait method, extern)
+        let (mut pd, mut bd) = (0i64, 0i64);
+        let mut j = i + 2;
+        let mut open = None;
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "(" => pd += 1,
+                ")" => pd -= 1,
+                "[" => bd += 1,
+                "]" => bd -= 1,
+                "{" if pd == 0 && bd == 0 => {
+                    open = Some(j);
+                    break;
+                }
+                ";" if pd == 0 && bd == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        if let Some(o) = open {
+            if let Some(c) = match_brace(lex, o) {
+                out.push(FnSpan { name: name_tok.text.clone(), body: o..c + 1 });
+            }
+        }
+    }
+    out
+}
+
+/// Parse `<ns>:allow(RULE[, RULE…]): justification` comments (`<ns>` is
+/// `lint`; spelled indirectly here so this very comment isn't parsed).
+fn parse_suppressions(lex: &Lexed) -> Vec<Suppression> {
+    let marker = concat!("lint", ":allow(");
+    let mut out = Vec::new();
+    for c in &lex.comments {
+        let t = c.text.trim();
+        let Some(rest) = t.strip_prefix(marker) else { continue };
+        match rest.split_once(')') {
+            None => out.push(Suppression {
+                line: c.line,
+                rules: Vec::new(),
+                justified: false,
+                malformed: true,
+            }),
+            Some((ids, tail)) => {
+                let rules: Vec<String> = ids
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+                let justification = tail
+                    .trim_start()
+                    .strip_prefix(':')
+                    .map(str::trim)
+                    .unwrap_or_default();
+                out.push(Suppression {
+                    line: c.line,
+                    malformed: rules.is_empty(),
+                    justified: justification.chars().count() >= MIN_JUSTIFICATION,
+                    rules,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Lint one source text as if it lived at repo-relative path `rel`.
+/// This is the engine's core entry point — the tree walker and the
+/// fixture tests both come through here.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Diag> {
+    let a = analyze(rel, src);
+    let mut raw = rules::check(&a);
+
+    // S1: the suppressions themselves must be well-formed, name known
+    // rules, and justify themselves. S1 diagnostics are not suppressible.
+    for s in &a.suppressions {
+        if s.malformed {
+            raw.push(rules::RawDiag {
+                rule: "S1",
+                line: s.line,
+                msg: "malformed suppression: expected `allow(RULE): justification`".into(),
+            });
+            continue;
+        }
+        for r in &s.rules {
+            if rules::rule(r).is_none() {
+                raw.push(rules::RawDiag {
+                    rule: "S1",
+                    line: s.line,
+                    msg: format!("suppression names unknown rule `{r}`"),
+                });
+            }
+        }
+        if !s.justified {
+            raw.push(rules::RawDiag {
+                rule: "S1",
+                line: s.line,
+                msg: "suppression without a justification (`allow(RULE): <why>`); it does not suppress".into(),
+            });
+        }
+    }
+
+    let suppressed = |d: &rules::RawDiag| {
+        d.rule != "S1"
+            && a.suppressions.iter().any(|s| {
+                !s.malformed
+                    && s.justified
+                    && s.rules.iter().any(|r| r == d.rule)
+                    && (s.line == d.line || s.line + 1 == d.line)
+            })
+    };
+    let mut diags: Vec<Diag> = raw
+        .into_iter()
+        .filter(|d| !suppressed(d))
+        .map(|d| Diag { file: a.rel.clone(), line: d.line, rule: d.rule, msg: d.msg })
+        .collect();
+    diags.sort_by(|x, y| (x.line, x.rule).cmp(&(y.line, y.rule)));
+    diags
+}
+
+/// The subtrees a full run scans, relative to the repo root.
+pub const LINT_ROOTS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Path components that are never linted: fixture files are deliberate
+/// violations, vendor/ is third-party surface, target/ is build output.
+fn skip_component(name: &str) -> bool {
+    matches!(name, "lint_fixtures" | "vendor" | "target" | ".git")
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> =
+        std::fs::read_dir(dir)?.collect::<io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let name = e.file_name();
+        let name = name.to_string_lossy();
+        if skip_component(&name) {
+            continue;
+        }
+        let p = e.path();
+        let ty = e.file_type()?;
+        if ty.is_dir() {
+            walk_rs(&p, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the whole repo tree under `root` (the directory containing
+/// `rust/` and `examples/`). Returns diagnostics sorted by file, line,
+/// rule.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Diag>> {
+    let mut files = Vec::new();
+    for sub in LINT_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            walk_rs(&dir, &mut files)?;
+        }
+    }
+    let mut diags = Vec::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(f)?;
+        diags.extend(lint_source(&rel, &src));
+    }
+    diags.sort_by(|x, y| (&x.file, x.line, x.rule).cmp(&(&y.file, y.line, y.rule)));
+    Ok(diags)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_derivation() {
+        let s = Scope::for_path("rust/src/serve/queue.rs");
+        assert!(s.in_src && s.d2 && s.d3 && s.d4 && s.r2 && !s.e1 && !s.unsafe_home);
+        let s = Scope::for_path("rust/src/util/pool.rs");
+        assert!(s.in_src && !s.d2 && !s.d3 && !s.d4);
+        let s = Scope::for_path("rust/src/engine/bitplane.rs");
+        assert!(s.e1 && s.d2 && s.d3);
+        let s = Scope::for_path("rust/tests/integration.rs");
+        assert!(!s.in_src && s.all_test);
+        let s = Scope::for_path("examples/quickstart.rs");
+        assert!(!s.in_src && !s.all_test && !s.d4);
+    }
+
+    #[test]
+    fn test_region_detection() {
+        let src = "fn real() {}\n#[cfg(test)]\nmod tests {\n  fn t() {}\n}\nfn after() {}\n";
+        let a = analyze("rust/src/util/x.rs", src);
+        assert_eq!(a.test_ranges.len(), 1);
+        assert!(!a.in_test(1));
+        assert!(a.in_test(4));
+        assert!(!a.in_test(6));
+    }
+
+    #[test]
+    fn fn_span_detection() {
+        let src = "fn gated_dot(a: &[u64]) -> i64 {\n  let x = 1;\n  x\n}\nfn other() { 1.5; }\n";
+        let a = analyze("rust/src/engine/bitplane.rs", src);
+        let names: Vec<&str> = a.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["gated_dot", "other"]);
+    }
+
+    #[test]
+    fn suppression_parsing_and_justification() {
+        let src = concat!(
+            "// lint",
+            ":allow(D1): long enough reason here\nlet a = 1;\n",
+            "// lint",
+            ":allow(D2)\nlet b = 2;\n",
+            "// lint",
+            ":allow(D3): no\nlet c = 3;\n",
+        );
+        let a = analyze("rust/src/util/x.rs", src);
+        assert_eq!(a.suppressions.len(), 3);
+        assert!(a.suppressions[0].justified);
+        assert!(!a.suppressions[1].justified);
+        assert!(!a.suppressions[2].justified, "8-char floor filters rubber stamps");
+    }
+}

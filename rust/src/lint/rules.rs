@@ -1,0 +1,310 @@
+//! The repo-invariant rule set: what each rule forbids, where it
+//! applies, and the paper-level rationale `--explain` prints.
+//!
+//! Rules are deliberately *scoped*: `Instant::now` is fine in the bench
+//! harness and poison in the virtual-clock batch queue; a `HashMap` is
+//! fine as the runtime's executable cache and poison in an accumulation
+//! path. Scoping is why these live in `gxnor-lint` instead of clippy —
+//! clippy's `disallowed-methods` is crate-global (the globally bannable
+//! subset *is* mirrored in `clippy.toml`).
+
+use super::FileAnalysis;
+use crate::lint::lexer::TokKind;
+
+/// Static description of one rule (the `--explain` / README material).
+pub struct Rule {
+    pub id: &'static str,
+    pub title: &'static str,
+    /// Where it applies, as shown to humans.
+    pub scope: &'static str,
+    /// Why the invariant exists — the text behind `--explain <ID>`.
+    pub rationale: &'static str,
+}
+
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "D1",
+        title: "no raw parallelism probes or detached spawns",
+        scope: "rust/src (non-test); homes: util/pool.rs via justified lint:allow",
+        rationale: "Bit-identical results for any --threads value is a headline invariant: \
+                    every parallel path must size itself through util::pool::resolve_threads \
+                    (which honors --threads and GXNOR_THREADS) and spawn detached daemons \
+                    through pool::spawn_service. A raw std::thread::available_parallelism, \
+                    thread::spawn, or thread::Builder elsewhere silently forks the thread \
+                    policy — exactly the bug once shipped in ternary/dst.rs, where the f32 \
+                    DST path ignored the thread contract. Scoped std::thread::scope workers \
+                    are fine: they split work the caller already sized.",
+    },
+    Rule {
+        id: "D2",
+        title: "no wall-clock reads in kernel or virtual-clock code",
+        scope: "rust/src/engine/, rust/src/ternary/, rust/src/serve/queue.rs",
+        rationale: "The batch queue is specified against a virtual clock (now_ns is passed \
+                    in) so SLO cut decisions are replayable in tests, and the engine/ternary \
+                    layers are pure functions of their inputs so parity against the f64 \
+                    oracles is exact. An Instant::now or SystemTime inside them reintroduces \
+                    wall-clock nondeterminism where the design spent effort removing it. \
+                    Time belongs in the harness (bench/serve drivers), which passes it down.",
+    },
+    Rule {
+        id: "D3",
+        title: "no hash-ordered containers in accumulation paths",
+        scope: "rust/src: engine/, ternary/, coordinator/, serve/, data/, sweep/, hwsim/, \
+                metrics.rs (non-test)",
+        rationale: "Float accumulation order changes results; HashMap/HashSet iteration \
+                    order is arbitrary (and RandomState-seeded in general). Every reduction \
+                    in the determinism-critical layers iterates slices, fixed shard ranges, \
+                    or BTree containers so merged totals are identical for any thread count. \
+                    A hash container in these paths is a latent reordering bug even when \
+                    today's use never iterates — use a BTreeMap/BTreeSet or an indexed Vec.",
+    },
+    Rule {
+        id: "D4",
+        title: "environment reads only in configuration homes",
+        scope: "rust/src (non-test); homes: util/pool.rs, util/fault.rs, config.rs, cli.rs",
+        rationale: "Runs must be reproducible from their recorded configuration. env::var \
+                    reads scattered through the tree are invisible inputs: they do not \
+                    appear in sweep manifests or bench provenance. All environment input \
+                    flows through the config/cli layer (and the two sanctioned runtime \
+                    knobs, GXNOR_THREADS in util/pool.rs and GXNOR_FAULTS in util/fault.rs) \
+                    so a recorded config replays bit-identically.",
+    },
+    Rule {
+        id: "E1",
+        title: "exact-integer kernels stay float-free",
+        scope: "rust/src/engine/bitplane.rs: fn bodies gated_dot* and dot_planes_word",
+        rationale: "The gated-XNOR dot is an exact integer: popcounts over sign/nonzero \
+                    bitplanes, 2*pos - active. The kernel parity tests prove bit-equality \
+                    against f64 oracles precisely because no rounding exists to argue \
+                    about. A float literal or `as f32`/`as f64` cast inside these bodies \
+                    would turn an exactness proof into a tolerance argument. Scaling to \
+                    f32 happens in the GEMM wrappers, outside the exact core.",
+    },
+    Rule {
+        id: "M1",
+        title: "no full-precision weight mirror in the step loop",
+        scope: "rust/src: engine/mod.rs, engine/backward.rs, ternary/dst.rs, \
+                ternary/packed.rs, coordinator/trainer.rs (non-test)",
+        rationale: "Remark 2 of the paper (GXNOR-Net, arXiv:1705.09283): weights live \
+                    permanently in the discrete space; there is no full-precision hidden \
+                    copy to update and requantize. The packed update path keeps that \
+                    literal — states stream through bounded per-chunk buffers \
+                    (unpack_into), never a full-tensor f32 expansion. A `.unpack()` call \
+                    or a weight-mirror Vec<f32> in the step loop quietly reintroduces the \
+                    memory footprint the paper exists to eliminate.",
+    },
+    Rule {
+        id: "R1",
+        title: "lock acquisition goes through lock_recover",
+        scope: "rust/src (non-test)",
+        rationale: ".lock().unwrap() turns one panicked thread into a cascade: the mutex \
+                    is poisoned and every later .unwrap() panics too — in serving, that \
+                    converts a single replica crash into whole-service death. \
+                    util::lock::lock_recover takes the guard and shrugs off poisoning \
+                    (every protected value here — stats counters, a Receiver — is valid \
+                    regardless of where its holder panicked). There is no reason to \
+                    .lock().unwrap() anywhere lock_recover applies.",
+    },
+    Rule {
+        id: "R2",
+        title: "no bare unwrap/expect on serve request paths",
+        scope: "rust/src/serve/ (non-test)",
+        rationale: "The serving layer's failure model is classified replies (SHED, \
+                    DEADLINE, RETRY, ERROR) and supervised crash recovery — a panic is \
+                    never an error-handling strategy there, because one panicking \
+                    connection or replica thread takes state the whole service shares. \
+                    Return io::Result/classified errors instead; restructure Option \
+                    dances (if-let, ok_or_else) rather than asserting with expect.",
+    },
+    Rule {
+        id: "U1",
+        title: "unsafe only in audited homes, always with a SAFETY comment",
+        scope: "everywhere; homes: util/align.rs, runtime/client.rs",
+        rationale: "The crate needs exactly two unsafe capabilities: cache-line-aligned \
+                    word buffers (util/align.rs) and the byte-view at the PJRT FFI \
+                    boundary (runtime/client.rs). Keeping every unsafe block inside those \
+                    two audited files — each annotated with a `// SAFETY:` argument — \
+                    means the entire unsafe surface is re-reviewable in minutes. New \
+                    unsafe elsewhere needs a design conversation, not a suppression.",
+    },
+    Rule {
+        id: "S1",
+        title: "suppressions name a real rule and carry a justification",
+        scope: "everywhere",
+        rationale: "A suppression is a reviewed exception, not an off switch. \
+                    `// lint:allow(<RULE>): <why>` must name a known rule and give a \
+                    non-empty justification on the same comment line, placed on (or \
+                    directly above) the flagged line. Unjustified or malformed \
+                    suppressions are themselves diagnostics, and they do not suppress.",
+    },
+];
+
+pub fn rule(id: &str) -> Option<&'static Rule> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// Sequence-of-idents/puncts matcher: does `toks[i..]` start with `pat`
+/// (text equality; `Ident` and `Punct` both match on text)?
+fn seq(a: &FileAnalysis, i: usize, pat: &[&str]) -> bool {
+    pat.iter().enumerate().all(|(k, want)| {
+        a.lex.toks.get(i + k).is_some_and(|t| {
+            t.text == *want && matches!(t.kind, TokKind::Ident | TokKind::Punct)
+        })
+    })
+}
+
+/// A diagnostic before suppression filtering.
+pub struct RawDiag {
+    pub rule: &'static str,
+    pub line: u32,
+    pub msg: String,
+}
+
+fn diag(out: &mut Vec<RawDiag>, rule: &'static str, line: u32, msg: impl Into<String>) {
+    out.push(RawDiag { rule, line, msg: msg.into() });
+}
+
+/// Run every token-level rule over one analyzed file. (S1, which checks
+/// the suppressions themselves, lives in the engine: `lint_source`.)
+pub fn check(a: &FileAnalysis) -> Vec<RawDiag> {
+    let mut out = Vec::new();
+    let scope = &a.scope;
+    for (i, t) in a.lex.toks.iter().enumerate() {
+        let line = t.line;
+        let non_test = !a.in_test(line);
+
+        // D1 — raw parallelism probes / detached spawns (src, non-test)
+        if scope.in_src && non_test {
+            if t.text == "available_parallelism" {
+                diag(&mut out, "D1", line,
+                    "raw available_parallelism: size thread counts via util::pool::resolve_threads (honors --threads/GXNOR_THREADS)");
+            }
+            if seq(a, i, &["thread", "::", "spawn"]) {
+                diag(&mut out, "D1", line,
+                    "detached thread::spawn: route daemons through util::pool::spawn_service");
+            }
+            if seq(a, i, &["thread", "::", "Builder"]) {
+                diag(&mut out, "D1", line,
+                    "thread::Builder: route daemons through util::pool::spawn_service");
+            }
+        }
+
+        // D2 — wall-clock reads in virtual-clock / kernel code
+        if scope.d2 && matches!(t.text.as_str(), "Instant" | "SystemTime") {
+            diag(&mut out, "D2", line,
+                format!("{} in virtual-clock/kernel code: take now_ns (or no time at all) from the caller", t.text));
+        }
+
+        // D3 — hash-ordered containers in accumulation paths (non-test)
+        if scope.d3
+            && non_test
+            && matches!(t.text.as_str(), "HashMap" | "HashSet" | "hash_map" | "hash_set")
+        {
+            diag(&mut out, "D3", line,
+                format!("{} in a determinism-critical path: iteration order is arbitrary — use BTreeMap/BTreeSet or an indexed Vec", t.text));
+        }
+
+        // D4 — environment reads outside the configuration homes (non-test)
+        if scope.d4
+            && non_test
+            && seq(a, i, &["env", "::"])
+            && a.lex.toks.get(i + 2).is_some_and(|n| {
+                matches!(n.text.as_str(), "var" | "var_os" | "set_var" | "remove_var")
+            })
+        {
+            diag(&mut out, "D4", line,
+                "environment read outside the config homes (util/pool.rs, util/fault.rs, config.rs, cli.rs): invisible input breaks replayability");
+        }
+
+        // M1 — f32 weight mirrors in the step loop (non-test)
+        if scope.m1 && non_test {
+            if seq(a, i, &[".", "unpack", "(", ")"]) {
+                diag(&mut out, "M1", line,
+                    "full-tensor unpack() in the step loop: stream states through unpack_into chunk buffers (Remark 2: no f32 mirror)");
+            }
+            if t.text == "let" {
+                let name = match a.lex.toks.get(i + 1) {
+                    Some(m) if m.text == "mut" => a.lex.toks.get(i + 2),
+                    other => other,
+                };
+                if let Some(n) = name {
+                    if n.kind == TokKind::Ident && mirror_name(&n.text) {
+                        diag(&mut out, "M1", n.line,
+                            format!("binding `{}` looks like an f32 weight mirror: the packed state is the only weight storage (Remark 2)", n.text));
+                    }
+                }
+            }
+        }
+
+        // R1 — .lock().unwrap() where lock_recover applies (src, non-test)
+        if scope.in_src
+            && non_test
+            && seq(a, i, &[".", "lock", "(", ")", "."])
+            && a.lex.toks.get(i + 5).is_some_and(|n| {
+                matches!(n.text.as_str(), "unwrap" | "expect")
+            })
+        {
+            diag(&mut out, "R1", line,
+                ".lock().unwrap() cascades poisoning across threads: take the guard via util::lock::lock_recover");
+        }
+
+        // R2 — bare unwrap/expect on serve request paths (non-test)
+        if scope.r2 && non_test {
+            if seq(a, i, &[".", "unwrap", "(", ")"]) {
+                diag(&mut out, "R2", line,
+                    "bare unwrap() on a serve request path: classify the failure (io::Result / Reply variants) instead of panicking");
+            }
+            if seq(a, i, &[".", "expect", "("]) {
+                diag(&mut out, "R2", line,
+                    "bare expect() on a serve request path: restructure (if-let / ok_or_else) instead of asserting");
+            }
+        }
+
+        // U1 — unsafe placement and SAFETY audit comments
+        if t.text == "unsafe" && t.kind == TokKind::Ident {
+            if !scope.unsafe_home {
+                diag(&mut out, "U1", line,
+                    "unsafe outside the audited homes (util/align.rs, runtime/client.rs): the crate's unsafe surface is closed by design");
+            } else if !a.has_safety_comment(line) {
+                diag(&mut out, "U1", line,
+                    "unsafe block without a `// SAFETY:` comment on the preceding lines");
+            }
+        }
+    }
+
+    // E1 — float contamination inside the exact-integer kernel bodies
+    if scope.e1 {
+        for f in &a.fns {
+            if !(f.name.starts_with("gated_dot") || f.name == "dot_planes_word") {
+                continue;
+            }
+            for k in f.body.clone() {
+                let t = &a.lex.toks[k];
+                if t.kind == TokKind::Float {
+                    diag(&mut out, "E1", t.line,
+                        format!("float literal `{}` inside exact-integer kernel `{}`: the gated dot must stay an exact popcount integer", t.text, f.name));
+                }
+                if t.text == "as"
+                    && a.lex.toks.get(k + 1).is_some_and(|n| {
+                        matches!(n.text.as_str(), "f32" | "f64")
+                    })
+                {
+                    diag(&mut out, "E1", t.line,
+                        format!("float cast inside exact-integer kernel `{}`: scaling belongs in the GEMM wrappers", f.name));
+                }
+            }
+        }
+    }
+
+    out
+}
+
+/// Does a `let` binding name smell like a full-precision weight mirror?
+fn mirror_name(name: &str) -> bool {
+    let n = name.to_ascii_lowercase();
+    n.contains("mirror")
+        || (n.contains("f32") && (n.starts_with("w_") || n.starts_with("weight")))
+        || n == "full_weights"
+        || n == "w_full"
+        || n == "weights_full"
+}

@@ -33,14 +33,14 @@ pub enum Arg<'a> {
 }
 
 fn as_bytes<T>(data: &[T]) -> &[u8] {
-    // safety: T is f32/i32 (plain-old-data, no padding, align 4 >= 1)
+    // SAFETY: T is f32/i32 (plain-old-data, no padding, align 4 >= 1)
     unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
     }
 }
 
 fn as_bytes_mut<T>(data: &mut [T]) -> &mut [u8] {
-    // safety: as above, and any bit pattern is a valid f32/i32
+    // SAFETY: as above, and any bit pattern is a valid f32/i32
     unsafe {
         std::slice::from_raw_parts_mut(
             data.as_mut_ptr() as *mut u8,

@@ -134,7 +134,7 @@ pub fn run_bench(
     let (engines, sample_len, factory) =
         build_engines(spec, serve_cfg.replicas, serve_cfg.max_batch, engine_threads)?;
     let n_replicas = engines.len();
-    let addr = "127.0.0.1:0".parse().expect("loopback literal");
+    let addr = std::net::SocketAddr::from(([127, 0, 0, 1], 0));
     let svc =
         Service::start_supervised(addr, serve_cfg.clone(), engines, Some(factory), None, sample_len)
             .map_err(|e| anyhow!(e))?;
@@ -150,7 +150,7 @@ pub fn run_bench(
     // thread, so the STATS we read afterwards cover (approximately) the
     // measured window — same discard discipline as the client report.
     let warmup = std::time::Duration::from_secs_f64(load_cfg.warmup_s.max(0.0));
-    let resetter = std::thread::spawn(move || {
+    let resetter = pool::spawn_service("bench-reset", move || {
         std::thread::sleep(warmup);
         let _ = probe.stats_reset();
     });

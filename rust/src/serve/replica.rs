@@ -41,6 +41,7 @@ use std::time::{Duration, Instant};
 use crate::runtime::exec::ExecEngine;
 use crate::util::fault::FaultPlan;
 use crate::util::lock::lock_recover;
+use crate::util::pool;
 
 use super::queue::Ticket;
 use super::service::{Reply, ReqPayload, ServeStats};
@@ -91,8 +92,8 @@ struct WorkerSlot {
 }
 
 pub struct ReplicaPool {
-    tx: Option<Sender<BatchJob>>,
-    supervisor: Option<JoinHandle<()>>,
+    tx: Sender<BatchJob>,
+    supervisor: JoinHandle<()>,
     shutdown: Arc<AtomicBool>,
     live: Arc<AtomicUsize>,
     total: usize,
@@ -159,33 +160,31 @@ impl ReplicaPool {
         let supervisor = {
             let shutdown = Arc::clone(&shutdown);
             let live = Arc::clone(&live);
-            std::thread::spawn(move || loop {
+            pool::spawn_service("replica-supervisor", move || loop {
                 for slot in slots.iter_mut() {
                     if slot.handle.as_ref().is_some_and(|h| h.is_finished()) {
-                        let exit = slot
-                            .handle
-                            .take()
-                            .expect("checked is_some")
-                            .join()
-                            .unwrap_or(WorkerExit::Crashed);
-                        if matches!(exit, WorkerExit::Crashed)
-                            && factory.is_some()
-                            && !shutdown.load(Ordering::Acquire)
-                        {
-                            if slot.spawned.elapsed() >= RESPAWN_STABLE_UPTIME {
-                                slot.backoff = RESPAWN_BACKOFF_BASE;
+                        if let Some(h) = slot.handle.take() {
+                            let exit = h.join().unwrap_or(WorkerExit::Crashed);
+                            if matches!(exit, WorkerExit::Crashed)
+                                && factory.is_some()
+                                && !shutdown.load(Ordering::Acquire)
+                            {
+                                if slot.spawned.elapsed() >= RESPAWN_STABLE_UPTIME {
+                                    slot.backoff = RESPAWN_BACKOFF_BASE;
+                                }
+                                slot.respawn_at = Some(Instant::now() + slot.backoff);
+                                slot.backoff = (slot.backoff * 2).min(RESPAWN_BACKOFF_CAP);
                             }
-                            slot.respawn_at = Some(Instant::now() + slot.backoff);
-                            slot.backoff = (slot.backoff * 2).min(RESPAWN_BACKOFF_CAP);
                         }
                     }
                     if let Some(at) = slot.respawn_at {
                         if shutdown.load(Ordering::Acquire) {
                             slot.respawn_at = None;
                         } else if Instant::now() >= at {
-                            let build = factory.as_ref().expect("respawn implies factory")();
-                            match build {
-                                Ok(eng) => {
+                            // a respawn is only scheduled when a factory
+                            // exists; without one the slot stays down
+                            match factory.as_ref().map(|build| build()) {
+                                Some(Ok(eng)) => {
                                     slot.respawn_at = None;
                                     slot.spawned = Instant::now();
                                     slot.handle = Some(spawn_worker(
@@ -198,11 +197,12 @@ impl ReplicaPool {
                                     ));
                                     lock_recover(&stats).replica_restarts += 1;
                                 }
-                                Err(e) => {
+                                Some(Err(e)) => {
                                     eprintln!("serve: replica respawn failed: {e}");
                                     slot.respawn_at = Some(Instant::now() + slot.backoff);
                                     slot.backoff = (slot.backoff * 2).min(RESPAWN_BACKOFF_CAP);
                                 }
+                                None => slot.respawn_at = None,
                             }
                         }
                     }
@@ -218,8 +218,8 @@ impl ReplicaPool {
         };
 
         Ok(ReplicaPool {
-            tx: Some(tx),
-            supervisor: Some(supervisor),
+            tx,
+            supervisor,
             shutdown,
             live,
             total,
@@ -229,7 +229,7 @@ impl ReplicaPool {
     /// A fresh job-submission handle (the dispatcher holds one; when every
     /// clone is dropped the replicas drain and exit).
     pub fn sender(&self) -> Sender<BatchJob> {
-        self.tx.as_ref().expect("pool not joined").clone()
+        self.tx.clone()
     }
 
     /// Live-replica gauge (READY's degraded report reads this).
@@ -245,12 +245,11 @@ impl ReplicaPool {
     /// Stop supervision, drop the pool's own sender, and wait for every
     /// worker (via the supervisor) to exit. Callers must drop their
     /// cloned senders first or this blocks.
-    pub fn join(mut self) {
-        self.shutdown.store(true, Ordering::Release);
-        drop(self.tx.take());
-        if let Some(h) = self.supervisor.take() {
-            let _ = h.join();
-        }
+    pub fn join(self) {
+        let ReplicaPool { tx, supervisor, shutdown, .. } = self;
+        shutdown.store(true, Ordering::Release);
+        drop(tx);
+        let _ = supervisor.join();
     }
 }
 
@@ -265,7 +264,7 @@ fn spawn_worker(
     // gauge up before the thread exists so READY can never observe a
     // spawned-but-uncounted replica
     live.fetch_add(1, Ordering::SeqCst);
-    std::thread::spawn(move || {
+    pool::spawn_service("replica", move || {
         let _guard = LiveGuard(live);
         replica_loop(eng, rx, stats, t0, faults)
     })

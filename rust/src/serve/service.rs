@@ -67,6 +67,7 @@ use crate::runtime::exec::ExecEngine;
 use crate::util::fault::Faults;
 use crate::util::json::Json;
 use crate::util::lock::lock_recover;
+use crate::util::pool;
 use crate::util::prng::Prng;
 
 use super::queue::{BatchQueue, CutReason, Offer, QueueConfig, NO_DEADLINE};
@@ -390,7 +391,7 @@ impl Service {
             let stats = Arc::clone(&stats);
             let shutdown = Arc::clone(&shutdown);
             let faults = faults.clone();
-            std::thread::spawn(move || {
+            pool::spawn_service("dispatcher", move || {
                 dispatcher_loop(qcfg, req_rx, job_tx, stats, shutdown, t0, faults);
             })
         };
@@ -420,7 +421,7 @@ impl Service {
                     .and_then(|f| f.conn_drop_frames())
                     .unwrap_or(0),
             };
-            std::thread::spawn(move || {
+            pool::spawn_service("accept", move || {
                 accept_loop(listener, ctx);
             })
         };
@@ -593,7 +594,7 @@ fn accept_loop(listener: TcpListener, ctx: ConnCtx) {
                 let _ = stream.set_nodelay(true);
                 let _ = stream.set_read_timeout(Some(CONN_READ_TIMEOUT));
                 let ctx = ctx.clone();
-                conns.push(std::thread::spawn(move || {
+                conns.push(pool::spawn_service("conn", move || {
                     conn_loop(stream, ctx);
                 }));
                 // opportunistically reap finished handlers so a long-lived
@@ -976,7 +977,9 @@ impl RetryClient {
         if self.conn.is_none() {
             self.conn = Some(Client::connect(self.addr)?);
         }
-        Ok(self.conn.as_mut().expect("just connected"))
+        self.conn
+            .as_mut()
+            .ok_or_else(|| io::Error::new(io::ErrorKind::NotConnected, "retry client: no connection"))
     }
 
     /// INFER with retries; returns the final reply plus the number of

@@ -89,6 +89,7 @@ pub fn dst_update(
     space: DiscreteSpace,
     m: f32,
     rng: &mut Prng,
+    threads: usize,
 ) -> DstStats {
     // one uniform per weight, drawn up front: the xoshiro state update is a
     // serial dependency chain; pre-filling (4 interleaved lanes) lets the
@@ -98,26 +99,23 @@ pub fn dst_update(
 
     // large tensors: shard across threads — DST is embarrassingly parallel
     // (per-element, disjoint writes) and memory-bandwidth friendly
-    // (§Perf iteration 8: 17 ms -> ~5 ms / 1M on 4 cores)
+    // (§Perf iteration 8: 17 ms -> ~5 ms / 1M on 4 cores). The count comes
+    // from pool::resolve_threads so --threads/GXNOR_THREADS is honored, and
+    // because uniforms are pre-drawn and shards own disjoint ranges, the
+    // result is bit-identical for every thread count.
     const PAR_THRESHOLD: usize = 200_000;
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let threads = crate::util::pool::resolve_threads(threads);
     if w.len() >= PAR_THRESHOLD && threads > 1 {
-        let nchunks = threads.min(8);
-        let chunk = crate::util::div_ceil(w.len(), nchunks);
+        let chunk = crate::util::pool::shard_chunk(w.len(), threads.min(8));
+        let tasks: Vec<_> = w
+            .chunks_mut(chunk)
+            .zip(dw.chunks(chunk))
+            .zip(u.chunks(chunk))
+            .map(|((wc, dc), uc)| move || dst_update_with_uniforms(wc, dc, uc, space, m))
+            .collect();
         let mut total = DstStats::default();
-        let results: Vec<DstStats> = std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            for ((wc, dc), uc) in w
-                .chunks_mut(chunk)
-                .zip(dw.chunks(chunk))
-                .zip(u.chunks(chunk))
-            {
-                handles.push(s.spawn(move || dst_update_with_uniforms(wc, dc, uc, space, m)));
-            }
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        for r in &results {
-            total.merge(r);
+        for r in crate::util::pool::scope_map(tasks) {
+            total.merge(&r);
         }
         return total;
     }
@@ -278,7 +276,7 @@ mod tests {
         let mut w = vec![-1.0, 0.0, 1.0];
         let dw = vec![0.0; 3];
         let mut rng = Prng::new(0);
-        let stats = dst_update(&mut w, &dw, space, 3.0, &mut rng);
+        let stats = dst_update(&mut w, &dw, space, 3.0, &mut rng, 1);
         assert_eq!(w, vec![-1.0, 0.0, 1.0]);
         assert_eq!(stats.transitions, 0);
     }
@@ -292,7 +290,7 @@ mod tests {
                 .map(|_| space.state(rng.below(space.n_states())))
                 .collect();
             let dw: Vec<f32> = (0..2048).map(|_| rng.normal_f32() * 1.5).collect();
-            dst_update(&mut w, &dw, space, 3.0, &mut rng);
+            dst_update(&mut w, &dw, space, 3.0, &mut rng, 1);
             for &v in &w {
                 assert!(space.contains(v), "N={n}: {v} off grid");
             }
@@ -309,7 +307,7 @@ mod tests {
         let mut w = vec![0.0f32; n];
         let dw = vec![nu; n];
         let mut rng = Prng::new(7);
-        let stats = dst_update(&mut w, &dw, space, m, &mut rng);
+        let stats = dst_update(&mut w, &dw, space, m, &mut rng, 1);
         let freq = stats.transitions as f64 / n as f64;
         let tau = (m as f64 * nu as f64).tanh();
         assert!((freq - tau).abs() < 5e-3, "freq={freq} tau={tau}");
@@ -324,7 +322,7 @@ mod tests {
         let mut w = vec![-1.0f32];
         let dw = vec![0.5f32];
         let mut rng = Prng::new(1);
-        let stats = dst_update(&mut w, &dw, space, 3.0, &mut rng);
+        let stats = dst_update(&mut w, &dw, space, 3.0, &mut rng, 1);
         assert_eq!(w[0], -0.5);
         assert_eq!(stats.kappa_hops, 1);
     }
@@ -335,7 +333,7 @@ mod tests {
         let mut w = vec![1.0, -1.0];
         let dw = vec![100.0, -100.0];
         let mut rng = Prng::new(2);
-        dst_update(&mut w, &dw, space, 3.0, &mut rng);
+        dst_update(&mut w, &dw, space, 3.0, &mut rng, 1);
         assert_eq!(w, vec![1.0, -1.0]);
     }
 
@@ -348,7 +346,7 @@ mod tests {
         let mut w = vec![-1.0f32; n];
         let dw = vec![1.2f32; n];
         let mut rng = Prng::new(3);
-        dst_update(&mut w, &dw, space, 3.0, &mut rng);
+        dst_update(&mut w, &dw, space, 3.0, &mut rng, 1);
         let flipped = w.iter().filter(|&&v| v == 1.0).count() as f64 / n as f64;
         let tau = (3.0f64 * 1.2 / 2.0).tanh();
         assert!((flipped - tau).abs() < 0.01, "flipped={flipped} tau={tau}");
@@ -366,7 +364,7 @@ mod tests {
         let mut rng = Prng::new(4);
         for _ in 0..5 {
             let dw = vec![0.05f32; n];
-            dst_update(&mut w, &dw, space, 3.0, &mut rng);
+            dst_update(&mut w, &dw, space, 3.0, &mut rng, 1);
         }
         let mean: f32 = w.iter().sum::<f32>() / n as f32;
         assert!(mean > 0.2, "mean={mean}");
@@ -396,7 +394,7 @@ mod tests {
 
             let mut w = vals.clone();
             let mut rng_a = Prng::new(9);
-            let stats_f32 = dst_update(&mut w, &dw, space, 3.0, &mut rng_a);
+            let stats_f32 = dst_update(&mut w, &dw, space, 3.0, &mut rng_a, 1);
 
             let mut p = PackedTensor::pack(&vals, &[len], space);
             let mut rng_b = Prng::new(9);
@@ -404,6 +402,34 @@ mod tests {
 
             assert_eq!(stats_f32, stats_packed, "N={n} len={len}: stats diverge");
             assert_eq!(p.unpack(), w, "N={n} len={len}: states diverge");
+        }
+    }
+
+    /// Regression for the determinism-contract bug lint rule D1 exists to
+    /// catch: `dst_update` once sized its shards from a raw
+    /// `available_parallelism` probe, so the f32 path ignored the
+    /// `--threads`/`GXNOR_THREADS` contract. The update must be
+    /// bit-identical — next states *and* statistics — for every thread
+    /// count, on tensors large enough to take the parallel path.
+    #[test]
+    fn f32_update_is_thread_count_invariant() {
+        let space = DiscreteSpace::TERNARY;
+        let len = 250_007usize; // above PAR_THRESHOLD, not a multiple of 64
+        let mut rng = Prng::new(11);
+        let vals: Vec<f32> =
+            (0..len).map(|_| space.state(rng.below(space.n_states()))).collect();
+        let dw: Vec<f32> = (0..len).map(|_| rng.normal_f32() * 0.8).collect();
+
+        let mut want = vals.clone();
+        let mut rng_ref = Prng::new(77);
+        let want_stats = dst_update(&mut want, &dw, space, 3.0, &mut rng_ref, 1);
+
+        for threads in [2usize, 3, 5, 8, 13] {
+            let mut w = vals.clone();
+            let mut rng_t = Prng::new(77);
+            let stats = dst_update(&mut w, &dw, space, 3.0, &mut rng_t, threads);
+            assert_eq!(stats, want_stats, "threads={threads}: stats diverge");
+            assert_eq!(w, want, "threads={threads}: states diverge");
         }
     }
 

@@ -511,7 +511,7 @@ mod tests {
         let mut w = p.unpack();
         let dw: Vec<f32> = (0..256).map(|i| if i % 2 == 0 { 0.9 } else { -0.9 }).collect();
         let mut rng = Prng::new(5);
-        crate::ternary::dst::dst_update(&mut w, &dw, space, 3.0, &mut rng);
+        crate::ternary::dst::dst_update(&mut w, &dw, space, 3.0, &mut rng, 1);
         p.repack_from(&w);
         assert_eq!(p.unpack(), w);
     }

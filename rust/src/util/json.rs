@@ -332,9 +332,17 @@ pub fn provenance(lane_words: usize) -> Json {
             .map(|s| Json::Str(s.trim().to_string()))
             .unwrap_or(Json::Null)
     }
-    let threads = std::thread::available_parallelism()
-        .map(|n| Json::Num(n.get() as f64))
-        .unwrap_or(Json::Null);
+    // Provenance wants the machine's raw hardware-thread count, not the
+    // resolved work-splitting decision — a GXNOR_THREADS override must not
+    // masquerade as the host's parallelism in a bench record.
+    #[allow(clippy::disallowed_methods)]
+    fn hw_threads() -> Json {
+        // lint:allow(D1): provenance reports raw hardware parallelism, not a work-split choice
+        std::thread::available_parallelism()
+            .map(|n| Json::Num(n.get() as f64))
+            .unwrap_or(Json::Null)
+    }
+    let threads = hw_threads();
     Json::obj(vec![
         ("git_rev", cmd_line("git", &["rev-parse", "HEAD"])),
         ("rustc", cmd_line("rustc", &["--version"])),

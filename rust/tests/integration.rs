@@ -307,7 +307,7 @@ fn prop_dst_preserves_grid_and_bounds() {
             .collect();
         let dw = g.vec_normal(len, 2.0);
         let m = g.f32_in(0.1, 10.0);
-        dst_update(&mut w, &dw, space, m, g.rng());
+        dst_update(&mut w, &dw, space, m, g.rng(), 1);
         for &v in &w {
             if !space.contains(v) {
                 return Err(format!("N={n}: {v} off grid"));
@@ -328,7 +328,7 @@ fn prop_dst_zero_increment_fixed_point() {
             .collect();
         let mut w = w0.clone();
         let dw = vec![0.0f32; len];
-        dst_update(&mut w, &dw, space, 3.0, g.rng());
+        dst_update(&mut w, &dw, space, 3.0, g.rng(), 1);
         if w != w0 {
             return Err("zero increment moved weights".into());
         }
@@ -348,7 +348,7 @@ fn prop_dst_monotone_in_expectation() {
             .collect();
         let mut w = w0.clone();
         let dw: Vec<f32> = (0..len).map(|_| g.f32_in(0.0, 3.0)).collect();
-        dst_update(&mut w, &dw, space, 3.0, g.rng());
+        dst_update(&mut w, &dw, space, 3.0, g.rng(), 1);
         for (i, (&before, &after)) in w0.iter().zip(&w).enumerate() {
             if after < before - 1e-6 {
                 return Err(format!("w[{i}] moved against dw: {before} -> {after}"));

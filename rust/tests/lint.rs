@@ -1,0 +1,228 @@
+//! Tier-1 tests for `gxnor-lint`, the repo-invariant static analysis
+//! pass (src/lint/).
+//!
+//! Two halves:
+//!
+//! 1. **Fixtures** — each file under `tests/lint_fixtures/` seeds known
+//!    violations and tags every expected diagnostic with a
+//!    `seed:<RULE>` marker on the violating line. The fixture is linted
+//!    through `lint_source` under a pseudo-path that puts it in the
+//!    rule's scope, and the produced (rule, line) set must equal the
+//!    marker set exactly — extra diagnostics fail as loudly as missed
+//!    ones, and the untagged "good" lines double as negative controls.
+//!
+//! 2. **The real tree** — `lint_tree` over this repository must come
+//!    back empty. This is the same check CI runs via
+//!    `gxnor-lint --deny-all`.
+
+use std::path::Path;
+
+use gxnor::lint::{lint_source, lint_tree, rules, Scope};
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/lint_fixtures")
+        .join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("read fixture {}: {e}", p.display()))
+}
+
+/// Collect `seed:<RULE>` markers: the (rule, line) pairs the fixture
+/// declares as its expected diagnostics. Markers with no rule id (prose
+/// like "seed:<RULE>" in a doc header) are ignored.
+fn expected(src: &str) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    for (idx, line) in src.lines().enumerate() {
+        let mut rest = line;
+        while let Some(p) = rest.find("seed:") {
+            rest = &rest[p + 5..];
+            let id: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric())
+                .collect();
+            if !id.is_empty() {
+                assert!(
+                    rules::rule(&id).is_some(),
+                    "fixture marker names unknown rule `{id}` on line {}",
+                    idx + 1
+                );
+                out.push((id, (idx + 1) as u32));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Lint `name` as if it lived at `pseudo_rel` and require the diagnostic
+/// set to match the fixture's markers exactly.
+fn check_fixture(name: &str, pseudo_rel: &str) {
+    let src = fixture(name);
+    let want = expected(&src);
+    assert!(
+        !want.is_empty(),
+        "fixture {name} declares no expected diagnostics — marker rot?"
+    );
+    let mut got: Vec<(String, u32)> = lint_source(pseudo_rel, &src)
+        .into_iter()
+        .map(|d| (d.rule.to_string(), d.line))
+        .collect();
+    got.sort();
+    assert_eq!(
+        got, want,
+        "fixture {name} (as {pseudo_rel}): diagnostics != seed markers"
+    );
+}
+
+#[test]
+fn d1_parallelism_probes_and_spawns() {
+    check_fixture("fx_d1.rs", "rust/src/util/fx_d1.rs");
+}
+
+#[test]
+fn d2_wall_clock_reads() {
+    check_fixture("fx_d2.rs", "rust/src/serve/queue.rs");
+}
+
+#[test]
+fn d3_hash_ordered_containers() {
+    check_fixture("fx_d3.rs", "rust/src/engine/fx_d3.rs");
+}
+
+#[test]
+fn d4_env_reads_outside_homes() {
+    check_fixture("fx_d4.rs", "rust/src/data/fx_d4.rs");
+}
+
+#[test]
+fn e1_float_in_exact_kernels() {
+    check_fixture("fx_e1.rs", "rust/src/engine/bitplane.rs");
+}
+
+#[test]
+fn m1_weight_mirrors_in_step_loop() {
+    check_fixture("fx_m1.rs", "rust/src/coordinator/trainer.rs");
+}
+
+#[test]
+fn r1_lock_unwrap() {
+    check_fixture("fx_r1.rs", "rust/src/util/fx_r1.rs");
+}
+
+#[test]
+fn r2_serve_path_panics() {
+    check_fixture("fx_r2.rs", "rust/src/serve/fx_r2.rs");
+}
+
+#[test]
+fn u1_unsafe_outside_homes() {
+    check_fixture("fx_u1_outside.rs", "rust/src/hwsim/fx_u1.rs");
+}
+
+#[test]
+fn u1_unsafe_home_needs_safety_comment() {
+    check_fixture("fx_u1_home.rs", "rust/src/util/align.rs");
+}
+
+#[test]
+fn s1_suppression_hygiene() {
+    check_fixture("fx_s1.rs", "rust/src/util/fx_s1.rs");
+}
+
+/// The D4 fixture would be clean if it lived in a config home: the same
+/// source linted under util/pool.rs produces no D4 diagnostics.
+#[test]
+fn d4_homes_are_exempt() {
+    let src = fixture("fx_d4.rs");
+    let diags = lint_source("rust/src/util/pool.rs", &src);
+    assert!(
+        diags.iter().all(|d| d.rule != "D4"),
+        "D4 fired inside a config home: {diags:?}"
+    );
+}
+
+/// Moving the E1 fixture out of bitplane.rs disarms the kernel rule —
+/// it is scoped to the one file holding the exact-integer core.
+#[test]
+fn e1_is_scoped_to_bitplane() {
+    let src = fixture("fx_e1.rs");
+    let diags = lint_source("rust/src/engine/mod.rs", &src);
+    assert!(
+        diags.is_empty(),
+        "E1 escaped its file scope: {diags:?}"
+    );
+}
+
+/// S1 itself can never be suppressed: an allow targeting S1 placed on an
+/// unjustified allow still leaves the S1 diagnostic standing.
+#[test]
+fn s1_is_not_suppressible() {
+    // Build the comment markers at runtime so this file's own source
+    // never contains a parseable suppression.
+    let allow = |body: &str| format!("// lint{}allow({body})\n", ':');
+    let src = format!(
+        "{}{}fn f() {{}}\n",
+        allow("S1): trying to silence the suppression auditor itself"),
+        allow("D2") // unjustified -> S1 on this line
+    );
+    let diags = lint_source("rust/src/util/x.rs", &src);
+    assert!(
+        diags.iter().any(|d| d.rule == "S1" && d.line == 2),
+        "unjustified allow must raise S1 even under an S1-allow: {diags:?}"
+    );
+}
+
+/// Test code is exempt from the panic/determinism rules but suppressions
+/// are still audited there.
+#[test]
+fn test_files_keep_suppression_hygiene() {
+    let allow = |body: &str| format!("// lint{}allow({body})\n", ':');
+    let src = format!("{}fn f() {{}}\n", allow("QQ): not a rule that exists"));
+    let diags = lint_source("rust/tests/some_test.rs", &src);
+    assert_eq!(diags.len(), 1, "{diags:?}");
+    assert_eq!(diags[0].rule, "S1");
+}
+
+/// Rule catalog sanity: ids unique and non-empty rationale for
+/// `--explain`, and the scope derivation agrees with the catalog's two
+/// unsafe homes.
+#[test]
+fn rule_catalog_is_well_formed() {
+    let mut ids: Vec<&str> = rules::RULES.iter().map(|r| r.id).collect();
+    assert!(ids.len() >= 10, "catalog shrank to {} rules", ids.len());
+    ids.sort();
+    let before = ids.len();
+    ids.dedup();
+    assert_eq!(ids.len(), before, "duplicate rule ids");
+    for r in rules::RULES {
+        assert!(!r.title.is_empty() && !r.scope.is_empty(), "{}", r.id);
+        assert!(
+            r.rationale.len() > 100,
+            "{}: --explain rationale too thin",
+            r.id
+        );
+        assert!(rules::rule(r.id).is_some());
+    }
+    assert!(Scope::for_path("rust/src/util/align.rs").unsafe_home);
+    assert!(Scope::for_path("rust/src/runtime/client.rs").unsafe_home);
+    assert!(!Scope::for_path("rust/src/util/pool.rs").unsafe_home);
+}
+
+/// The check CI runs: the real tree, linted from the repo root, is
+/// clean. Any new violation must either be fixed or carry a justified
+/// `allow` — and this test names the exact file:line when it fails.
+#[test]
+fn real_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .to_path_buf();
+    let diags = lint_tree(&root).expect("walk repo tree");
+    if !diags.is_empty() {
+        let listing: Vec<String> = diags.iter().map(|d| d.to_string()).collect();
+        panic!(
+            "gxnor-lint found {} violation(s) in the real tree:\n{}",
+            diags.len(),
+            listing.join("\n")
+        );
+    }
+}

@@ -1,0 +1,36 @@
+//! D1 fixture: raw parallelism probes and detached spawns outside the
+//! pool homes. Never compiled — linted by tests/lint.rs under the
+//! pseudo-path `rust/src/util/fx_d1.rs`. Lines tagged `seed:<RULE>` are
+//! the expected diagnostics.
+
+pub fn bad_probe() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) // seed:D1
+}
+
+pub fn bad_spawn() {
+    std::thread::spawn(|| {}); // seed:D1
+}
+
+pub fn bad_builder() {
+    let b = std::thread::Builder::new(); // seed:D1
+    let _ = b;
+}
+
+pub fn fine_scoped_workers() {
+    // structured concurrency over caller-sized work is the sanctioned model
+    std::thread::scope(|s| {
+        s.spawn(|| {});
+    });
+}
+
+pub fn suppressed_probe() -> usize {
+    // lint:allow(D1): fixture proves a justified allow suppresses the probe
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    pub fn test_spawns_are_exempt() {
+        std::thread::spawn(|| {});
+    }
+}

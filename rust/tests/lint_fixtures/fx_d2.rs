@@ -1,0 +1,17 @@
+//! D2 fixture: wall-clock reads inside virtual-clock code. Linted under
+//! the pseudo-path `rust/src/serve/queue.rs`.
+
+use std::time::Instant; // seed:D2
+
+pub fn bad_now() -> u64 {
+    let t0 = Instant::now(); // seed:D2
+    t0.elapsed().as_nanos() as u64
+}
+
+pub fn bad_wall_clock() {
+    let _ = std::time::SystemTime::now(); // seed:D2
+}
+
+pub fn good_virtual_clock(now_ns: u64, deadline_ns: u64) -> bool {
+    now_ns >= deadline_ns
+}

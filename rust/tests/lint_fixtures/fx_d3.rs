@@ -1,0 +1,32 @@
+//! D3 fixture: hash-ordered containers in accumulation paths. Linted
+//! under the pseudo-path `rust/src/engine/fx_d3.rs`.
+
+use std::collections::HashMap; // seed:D3
+
+pub fn bad_sum(xs: &[(u32, f32)]) -> f32 {
+    let mut m = HashMap::new(); // seed:D3
+    for &(k, v) in xs {
+        m.insert(k, v);
+    }
+    m.values().sum() // iteration order decides float addition order
+}
+
+pub fn bad_set(ids: &[u32]) -> usize {
+    let s: std::collections::HashSet<u32> = ids.iter().copied().collect(); // seed:D3
+    s.len()
+}
+
+pub fn good_ordered(xs: &[(u32, f32)]) -> f32 {
+    let mut m = std::collections::BTreeMap::new();
+    for &(k, v) in xs {
+        m.insert(k, v);
+    }
+    m.values().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    pub fn assertion_maps_are_exempt() {
+        let _ = std::collections::HashMap::<u32, u32>::new();
+    }
+}

@@ -1,0 +1,15 @@
+//! D4 fixture: environment reads outside the configuration homes.
+//! Linted under the pseudo-path `rust/src/data/fx_d4.rs`.
+
+pub fn bad_env_read() -> Option<String> {
+    std::env::var("GXNOR_SECRET_KNOB").ok() // seed:D4
+}
+
+pub fn bad_env_write() {
+    std::env::set_var("GXNOR_MODE", "fast"); // seed:D4
+}
+
+pub fn fine_non_config_env() -> usize {
+    // args/temp_dir are not invisible run configuration
+    std::env::args().count() + std::env::temp_dir().components().count()
+}

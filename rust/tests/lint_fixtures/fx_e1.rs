@@ -1,0 +1,19 @@
+//! E1 fixture: float contamination inside the exact-integer kernel
+//! bodies. Linted under the pseudo-path `rust/src/engine/bitplane.rs`,
+//! where only `gated_dot*` and `dot_planes_word` bodies are scanned.
+
+pub fn gated_dot_fx(pos: u64, active: u64) -> i64 {
+    let leak = 0.5; // seed:E1
+    let _ = leak;
+    2 * (pos as i64) - (active as i64)
+}
+
+pub fn dot_planes_word(pos: u32, active: u32) -> u32 {
+    let _ = (pos + active) as f32; // seed:E1
+    pos
+}
+
+pub fn pack_row_scale_is_outside_the_exact_core(x: i64) -> f32 {
+    // packers and GEMM wrappers legitimately scale to f32
+    x as f32 * 0.0625
+}

@@ -1,0 +1,31 @@
+//! M1 fixture: f32 weight mirrors in the step loop (Remark 2). Linted
+//! under the pseudo-path `rust/src/coordinator/trainer.rs`.
+
+pub fn bad_full_unpack(p: &PackedTensor) -> Vec<f32> {
+    p.unpack() // seed:M1
+}
+
+pub fn bad_mirror_bindings(n: usize) {
+    let mut w_f32 = vec![0f32; n]; // seed:M1
+    let weight_mirror = make_buffer(n); // seed:M1
+    w_f32.clear();
+    drop(weight_mirror);
+}
+
+pub fn good_streaming(p: &PackedTensor, chunk: &mut [f32]) {
+    // bounded per-chunk expansion is the sanctioned path
+    p.unpack_into(chunk);
+}
+
+pub fn good_ordinary_bindings(n: usize) {
+    let w = vec![0u8; n]; // packed state, not a mirror
+    let dw_buf = vec![0f32; n]; // increments are legitimately f32
+    drop((w, dw_buf));
+}
+
+#[cfg(test)]
+mod tests {
+    pub fn oracle_unpacks_are_exempt(p: &PackedTensor) -> Vec<f32> {
+        p.unpack()
+    }
+}

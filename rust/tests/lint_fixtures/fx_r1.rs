@@ -1,0 +1,25 @@
+//! R1 fixture: poison-cascading lock acquisition. Linted under the
+//! pseudo-path `rust/src/util/fx_r1.rs`.
+
+use std::sync::Mutex;
+
+pub fn bad_lock_unwrap(m: &Mutex<u64>) -> u64 {
+    *m.lock().unwrap() // seed:R1
+}
+
+pub fn bad_lock_expect(m: &Mutex<u64>) -> u64 {
+    *m.lock().expect("not poisoned") // seed:R1
+}
+
+pub fn good_recover(m: &Mutex<u64>) -> u64 {
+    *crate::util::lock::lock_recover(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Mutex;
+
+    pub fn test_unwraps_are_exempt(m: &Mutex<u64>) -> u64 {
+        *m.lock().unwrap()
+    }
+}

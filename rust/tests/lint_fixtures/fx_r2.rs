@@ -1,0 +1,18 @@
+//! R2 fixture: panics on serve request paths. Linted under the
+//! pseudo-path `rust/src/serve/fx_r2.rs`.
+
+pub fn bad_unwrap(v: Option<u32>) -> u32 {
+    v.unwrap() // seed:R2
+}
+
+pub fn bad_expect(v: Option<u32>) -> u32 {
+    v.expect("always some") // seed:R2
+}
+
+pub fn good_classified(v: Option<u32>) -> Result<u32, String> {
+    v.ok_or_else(|| "empty request".to_string())
+}
+
+pub fn good_defaulted(v: Option<u32>) -> u32 {
+    v.unwrap_or(0)
+}

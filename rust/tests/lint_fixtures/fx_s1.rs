@@ -1,0 +1,18 @@
+//! S1 fixture: suppression hygiene. Linted under the pseudo-path
+//! `rust/src/util/fx_s1.rs`.
+
+pub fn unjustified_allow_does_not_suppress() -> usize {
+    // lint:allow(D1) // seed:S1
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) // seed:D1
+}
+
+// lint:allow(Z9): the rule Z9 does not exist in the catalog // seed:S1
+pub fn unknown_rule() {}
+
+// lint:allow(D1 — missing the closing parenthesis entirely // seed:S1
+pub fn malformed() {}
+
+pub fn justified_allow_suppresses() -> usize {
+    // lint:allow(D1): fixture demonstrates a reviewed, justified exception
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}

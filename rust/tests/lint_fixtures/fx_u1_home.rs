@@ -1,0 +1,12 @@
+//! U1 fixture: even inside an audit home, every unsafe block needs its
+//! own audit comment. Linted under the pseudo-path
+//! `rust/src/util/align.rs`.
+
+pub fn bad_missing_audit(x: &mut [u64]) -> *mut u64 {
+    unsafe { x.as_mut_ptr().add(0) } // seed:U1
+}
+
+pub fn good_audited(x: &[u64]) -> u64 {
+    // SAFETY: caller guarantees x is non-empty, so index 0 exists
+    unsafe { *x.as_ptr() }
+}

@@ -1,0 +1,8 @@
+//! U1 fixture: unsafe outside the audited homes. Linted under the
+//! pseudo-path `rust/src/hwsim/fx_u1.rs` — not an audit home, so the
+//! block is flagged even though it carries an audit comment.
+
+pub fn bad_new_unsafe_surface(x: &[u32]) -> &[u8] {
+    // SAFETY: a comment does not make a new unsafe home acceptable
+    unsafe { std::slice::from_raw_parts(x.as_ptr() as *const u8, x.len() * 4) } // seed:U1
+}

@@ -279,7 +279,7 @@ fn multi_bit_packed_dst_is_bit_identical_across_threads() {
 
         let mut w = vals.clone();
         let mut rng_ref = Prng::new(77);
-        let want_stats = dst_update(&mut w, &dw, space, 3.0, &mut rng_ref);
+        let want_stats = dst_update(&mut w, &dw, space, 3.0, &mut rng_ref, 1);
 
         for threads in thread_counts() {
             let mut p = PackedTensor::pack(&vals, &[len], space);
